@@ -1,0 +1,44 @@
+//! Accuracy study across matrix types, condition numbers and solvers —
+//! the programmatic companion to Fig. 17, useful when qualifying the
+//! library on a new machine.
+//!
+//!     cargo run --release --example accuracy_study
+
+use gcsvd::config::{Config, Solver};
+use gcsvd::gen::{generate, MatrixKind};
+use gcsvd::runtime::Device;
+use gcsvd::svd::{e_sigma, e_svd, gesvd};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let dev = Device::with_model(&cfg.artifacts, cfg.transfer)?;
+    let n = 256usize;
+
+    println!("n = {n}; E_sigma vs LAPACK-ref, E_svd = ||A - USV^T||_F/||A||_F\n");
+    println!("{:>12} {:>9} {:>14} {:>10} {:>10}", "type", "theta", "solver", "E_sigma", "E_svd");
+    for kind in MatrixKind::ALL {
+        let thetas: &[f64] = if kind == MatrixKind::Random {
+            &[1.0]
+        } else {
+            &[1e2, 1e5, 1e8]
+        };
+        for &theta in thetas {
+            let a = generate(kind, n, n, theta, 11);
+            let reference = gesvd(&dev, &a, &cfg, Solver::LapackRef)?;
+            for s in [Solver::Ours, Solver::RocSolverSim, Solver::MagmaSim, Solver::BdcV1] {
+                let r = gesvd(&dev, &a, &cfg, s)?;
+                println!(
+                    "{:>12} {:>9.1e} {:>14} {:>10.2e} {:>10.2e}",
+                    kind.name(),
+                    theta,
+                    s.name(),
+                    e_sigma(&reference.sigma, &r.sigma),
+                    e_svd(&a, &r)
+                );
+            }
+        }
+    }
+    println!("\nexpected shape (paper Fig. 17): all solvers near machine precision;");
+    println!("ours ~ MAGMA-sim ~ LAPACK; accuracy independent of theta.");
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Quickstart: compute the SVD of a random matrix with the GPU-centered
+//! solver and verify the factorization.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use gcsvd::config::Config;
+use gcsvd::gen::{generate, MatrixKind};
+use gcsvd::runtime::Device;
+use gcsvd::svd::{e_svd, gesvd};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let dev = Device::with_model(&cfg.artifacts, cfg.transfer)?;
+
+    // a 256 x 256 test matrix with geometrically distributed singular
+    // values and condition number 1e4 (the paper's SVD_geo type)
+    let a = generate(MatrixKind::SvdGeo, 256, 256, 1e4, 1);
+
+    let r = gesvd(&dev, &a, &cfg, gcsvd::config::Solver::Ours)?;
+
+    println!("largest singular values: {:?}", &r.sigma[..5]);
+    println!("smallest singular value: {:.3e}", r.sigma[255]);
+    println!("condition estimate: {:.3e}", r.sigma[0] / r.sigma[255]);
+    println!("||A - U S V^T||_F / ||A||_F = {:.3e}", e_svd(&a, &r));
+    println!("\nphase profile:\n{}", r.profile.table());
+    Ok(())
+}

@@ -1,0 +1,200 @@
+"""AOT emitter: lower every L2 graph of model.OPS for the configured shape
+grid to HLO *text* and write a manifest the Rust runtime resolves ops from.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Manifest format (plain text, one op per line — parsed by
+rust/src/runtime/registry.rs without a JSON dependency):
+
+    <op-name> <k>=<v> ... file=<relative-path>
+
+Usage:
+    python -m compile.aot --out ../artifacts [--large] [--quick]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# shape grid — mirrored by rust/src/config.rs::SUPPORTED_*
+# ---------------------------------------------------------------------------
+
+SQUARE = [128, 256, 512, 1024]
+SQUARE_LARGE = [2048]
+TS = [(1024, 128), (2048, 128), (2048, 256), (2048, 512), (4096, 256), (4096, 512)]
+TS_LARGE = [(8192, 512), (4096, 1024)]
+DEFAULT_B = 32
+TUNE_B = [8, 16, 64]            # extra block sizes for the tuning figures
+TUNE_SQUARE = 512               # fig. 4 / 15 tuning matrix
+TUNE_TS = (2048, 256)           # fig. 13 tuning matrix
+FIG5_M = [256, 512, 1024, 2048, 4096]
+FIG5_K = 32
+ROT_BATCH = 512
+ROT_BUCKETS = [8, 64, 512]
+LEAF = 32
+
+# secular / block-gemm bucket sizes (element counts, ~1.5x geometric)
+BUCKETS = [32, 64, 96, 128, 192, 256, 384, 512, 768, 1024, 1536, 2048]
+
+
+def buckets_upto(n):
+    return [k for k in BUCKETS if k <= n]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+class Emitter:
+    def __init__(self, outdir, verbose=True):
+        self.outdir = outdir
+        self.lines = []
+        self.seen = set()
+        self.verbose = verbose
+        os.makedirs(outdir, exist_ok=True)
+
+    def emit(self, opname, **params):
+        key = (opname, tuple(sorted(params.items())))
+        if key in self.seen:
+            return
+        self.seen.add(key)
+        builder, argnames = model.OPS[opname]
+        fn, specs = builder(*[params[a] for a in argnames])
+        fname = opname + "_" + "_".join(f"{k}{v}" for k, v in sorted(params.items())) + ".hlo.txt"
+        path = os.path.join(self.outdir, fname)
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        kv = " ".join(f"{k}={v}" for k, v in sorted(params.items()))
+        self.lines.append(f"{opname} {kv} file={fname}")
+        if self.verbose:
+            print(f"  {fname}  ({time.time() - t0:.1f}s, {len(text) // 1024} KiB)", flush=True)
+
+    def finish(self):
+        with open(os.path.join(self.outdir, "manifest.txt"), "w") as f:
+            f.write("\n".join(sorted(self.lines)) + "\n")
+        print(f"wrote {len(self.lines)} artifacts -> {self.outdir}/manifest.txt")
+
+
+def emit_matrix_ops(em, m, n, b):
+    """Everything a (m,n) SVD at block size b needs."""
+    em.emit("labrd", m=m, n=n, b=b)
+    em.emit("gebrd_update", m=m, n=n, b=b)          # pallas merged kernel
+    em.emit("gebrd_update_xla", m=m, n=n, b=b)      # vendor-BLAS analogue
+    em.emit("gebrd_update2", m=m, n=n, b=b)         # non-merged baseline
+    em.emit("extract_a", m=m, n=n, b=b)
+    em.emit("ws_head", m=m, n=n, b=b)
+    em.emit("qr_head", m=m, n=n, b=b)
+    em.emit("set_cols", m=m, n=n, b=b)
+    em.emit("set_rows", m=m, n=n, b=b)
+    em.emit("larfb_up", m=m, n=n, b=b)
+    em.emit("larfb_full", m=m, n=n, b=b)
+    em.emit("gebrd_update2_ws", m=m, n=n, b=b)
+    em.emit("geqrf_step", m=m, n=n, b=b)
+    em.emit("geqrf_extract_a", m=m, n=n, b=b)
+    em.emit("orgqr_step", m=m, n=n, b=b)
+    em.emit("ormqr_step", m=m, n=n, k=n, b=b)
+    em.emit("ormlq_step", m=m, n=n, k=n, b=b)
+    em.emit("geqrf_step_classic", m=m, n=n, b=b)
+    em.emit("orgqr_step_classic", m=m, n=n, b=b)
+    em.emit("ormqr_step_classic", m=m, n=n, k=n, b=b)
+    em.emit("ormlq_step_classic", m=m, n=n, k=n, b=b)
+
+
+def emit_bdc_ops(em, n):
+    em.emit("bdc_row", n=n)
+    for r in ROT_BUCKETS:
+        em.emit("bdc_rots", n=n, rmax=r)
+    em.emit("bdc_permute_cols", n=n)
+    # leaf blocks are up to (leaf+1)^2 (sqre=1), so the upload tile is 2*LEAF
+    em.emit("set_block", n=n, bs=2 * LEAF)
+    em.emit("zeros", n=n)
+    for kb in buckets_upto(n):
+        em.emit("bdc_block_gemm", n=n, kb=kb)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--large", action="store_true", help="include the 2048/8192 shapes")
+    ap.add_argument("--quick", action="store_true", help="minimal set for smoke tests")
+    args = ap.parse_args()
+
+    em = Emitter(args.out)
+    t0 = time.time()
+
+    square = list(SQUARE) + (SQUARE_LARGE if args.large else [])
+    ts = list(TS) + (TS_LARGE if args.large else [])
+    if args.quick:
+        square = [128, 256]
+        ts = [(1024, 128)]
+
+    ns = set()
+    for n in square:
+        emit_matrix_ops(em, n, n, DEFAULT_B)
+        em.emit("eye", m=n, n=n)
+        em.emit("gemv_t", m=n, n=n)
+        em.emit("gemv_n", m=n, n=n)
+        ns.add(n)
+    for (m, n) in ts:
+        emit_matrix_ops(em, m, n, DEFAULT_B)
+        em.emit("eye", m=m, n=n)
+        em.emit("gemv_t", m=m, n=n)
+        em.emit("gemv_n", m=m, n=n)
+        em.emit("gemm", m=m, k=n, n=n)             # final U = Q @ U0
+        ns.add(n)
+
+    # secular buckets are shared across all n
+    nmax = max(ns)
+    for nb in buckets_upto(nmax):
+        em.emit("bdc_secular", nb=nb)
+        em.emit("bdc_secular_xla", nb=nb)
+        em.emit("bdc_secular_u", nb=nb)
+        em.emit("bdc_secular_v", nb=nb)
+    for n in sorted(ns):
+        emit_bdc_ops(em, n)
+
+    if not args.quick:
+        # tuning figures: extra block sizes on the tuning shapes
+        for b in TUNE_B:
+            emit_matrix_ops(em, TUNE_SQUARE, TUNE_SQUARE, b)
+            emit_matrix_ops(em, TUNE_TS[0], TUNE_TS[1], b)
+        # Fig. 5 micro-benchmarks (merged vs per-call launches)
+        for m in FIG5_M:
+            em.emit("fig5_gemv4", m=m, k=FIG5_K)
+            em.emit("fig5_gemv2", m=m, k=FIG5_K)
+            em.emit("gemv_tall_t", m=m, k=FIG5_K)
+            em.emit("gemv_tall_n", m=m, k=FIG5_K)
+            em.emit("gemv_tall_n_acc", m=m, k=FIG5_K)
+            em.emit("gemv_tall_t", m=m, k=2 * FIG5_K)
+            em.emit("gemv_tall_n", m=m, k=2 * FIG5_K)
+            if m <= 2048:
+                em.emit("fig5_gemm2", m=m, k=FIG5_K)
+                em.emit("fig5_gemm1", m=m, k=FIG5_K)
+                em.emit("fig5_gemm1_xla", m=m, k=FIG5_K)
+                em.emit("rank_update", m=m, k=FIG5_K)
+
+    em.finish()
+    print(f"total {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: the paper's merged-rank-(2b) trailing update (eq. 10).
+
+    A  <-  A - P Q^T          (one gemm instead of A - V Y^T - X U^T's two)
+
+TPU-style adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles this
+for the GPU's threadblock hierarchy; here the HBM->VMEM schedule is expressed
+with a BlockSpec grid. Each grid step owns a (TM, TN) tile of A, streams the
+full (TM, 2b) strip of P and (TN, 2b) strip of Q into VMEM, and performs one
+MXU-shaped matmul. 2b <= 128 keeps the K dimension a single MXU pass.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic custom
+calls; numerics are identical (pytest checks against ref.gemm1_merged_ref).
+
+VMEM footprint per grid step (f64):
+    A tile   TM*TN*8      = 128*128*8  = 131 KiB
+    P strip  TM*2b*8      = 128*128*8  = 131 KiB  (b=64 worst case)
+    Q strip  TN*2b*8      = 131 KiB
+    out      131 KiB      -> ~0.5 MiB total, well under a 16 MiB VMEM budget,
+leaving room for double-buffering the P/Q strips.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 128
+
+
+def _kernel(a_ref, p_ref, q_ref, o_ref):
+    # One (TM, TN) tile: o = a - p @ q^T, contracted over the 2b axis.
+    a = a_ref[...]
+    p = p_ref[...]
+    q = q_ref[...]
+    o_ref[...] = a - jax.lax.dot_general(
+        p, q, (((1,), (1,)), ((), ())), preferred_element_type=a.dtype
+    )
+
+
+def merged_update(A, P, Q, tile=DEFAULT_TILE):
+    """A - P Q^T via the tiled Pallas kernel. Shapes: A (m,n), P (m,2b),
+    Q (n,2b); m and n must be divisible by the tile size."""
+    m, n = A.shape
+    k2 = P.shape[1]
+    tm = min(tile, m)
+    tn = min(tile, n)
+    assert m % tm == 0 and n % tn == 0, (m, n, tm, tn)
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, k2), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, k2), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), A.dtype),
+        interpret=True,
+    )(A, P, Q)

@@ -1,0 +1,495 @@
+"""Pure-numpy correctness oracles for every L1/L2 graph.
+
+These are straight transcriptions of the paper's algorithms (Algorithm 1,
+eqs. (3)-(10) for the merged-rank-(2b) bidiagonalisation; eqs. (24)-(32) for
+the modified-CWY QR; eqs. (17)-(19) for the secular stage of BDC) with *no*
+masking tricks: plain slices, plain loops. The JAX/Pallas implementations in
+`model.py` / `merged_update.py` / `secular.py` must match these bit-for-bit
+(up to fp roundoff) — pytest enforces it, and the Rust side re-checks the
+same conventions through the artifacts.
+
+Conventions (shared with the Rust coordinator — do not change casually):
+  * A is m x n with m >= n; reduction produces an UPPER bidiagonal B.
+  * Householder reflectors follow LAPACK dlarfg: v[0] = 1, H = I - tau*v*v^T,
+    beta = -sign(alpha) * ||x||.
+  * gebrd stores reflector tails inside A exactly like LAPACK dgebrd:
+    column reflector i in A[i+1:, i], row reflector i in A[i, i+2:];
+    d[i] = A[i, i], e[i] = A[i, i+1].
+  * P = [v_1, x_1, v_2, x_2, ...] (m x 2b), Q = [y_1, u_1, y_2, u_2, ...]
+    (n x 2b) — the paper's merged operand layout.
+"""
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Householder primitives
+# ---------------------------------------------------------------------------
+
+def larfg(x):
+    """LAPACK dlarfg. x: 1-D, len >= 1. Returns (v, tau, beta).
+
+    v[0] == 1; H = I - tau v v^T maps x to beta*e_1.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    alpha = x[0]
+    tail = x[1:]
+    xnorm = np.linalg.norm(tail)
+    if xnorm == 0.0:
+        return np.concatenate([[1.0], np.zeros_like(tail)]), 0.0, alpha
+    beta = -np.sign(alpha if alpha != 0.0 else 1.0) * np.hypot(alpha, xnorm)
+    tau = (beta - alpha) / beta
+    v = np.concatenate([[1.0], tail / (alpha - beta)])
+    return v, tau, beta
+
+
+def apply_house_left(A, v, tau):
+    """A <- (I - tau v v^T) A."""
+    w = tau * (v @ A)
+    return A - np.outer(v, w)
+
+
+def apply_house_right(A, v, tau):
+    """A <- A (I - tau v v^T)."""
+    w = tau * (A @ v)
+    return A - np.outer(w, v)
+
+
+# ---------------------------------------------------------------------------
+# labrd — the paper's merged-rank-(2b) panel reduction (Algorithm 1, lines
+# 6-20). Operates on the panel starting at global offset t; returns the
+# matrix with the panel columns/rows reduced (reflectors stored in place),
+# the merged operands P (m x 2b) and Q (n x 2b), and the bidiagonal chunk.
+# ---------------------------------------------------------------------------
+
+def labrd_ref(A, t, b):
+    """Reference panel bidiagonalisation at offset t, block size b.
+
+    Returns (A', P, Q, d, e, tauq, taup). P/Q columns are *full height*
+    vectors (zero outside their support) so that the merged trailing update
+    A - P Q^T applies directly.
+    """
+    A = np.array(A, dtype=np.float64)
+    m, n = A.shape
+    P = np.zeros((m, 2 * b))
+    Q = np.zeros((n, 2 * b))
+    d = np.zeros(b)
+    e = np.zeros(b)
+    tauq = np.zeros(b)
+    taup = np.zeros(b)
+
+    for i in range(b):
+        g = t + i
+        # (a) delayed update of column g with all prior (v,y)/(x,u) pairs.
+        if i > 0:
+            A[g:, g] -= P[g:, : 2 * i] @ Q[g, : 2 * i]
+        # (b) column Householder eliminating below the diagonal.
+        v, tau_i, beta = larfg(A[g:, g])
+        tauq[i] = tau_i
+        d[i] = beta
+        A[g, g] = beta
+        A[g + 1:, g] = v[1:]
+        vfull = np.zeros(m)
+        vfull[g:] = v
+        # (c) y_i by the merged two-gemv formula (8).
+        y = tau_i * (A.T @ vfull - Q[:, : 2 * i] @ (P[:, : 2 * i].T @ vfull))
+        y[: g + 1] = 0.0
+        P[:, 2 * i] = vfull
+        Q[:, 2 * i] = y
+        if g < n - 1:
+            # (d) delayed update of row g (uses pairs up to (v_i, y_i)).
+            A[g, g + 1:] -= P[g, : 2 * i + 1] @ Q[g + 1:, : 2 * i + 1].T
+            # (e) row Householder eliminating right of the superdiagonal.
+            u, pi_i, beta2 = larfg(A[g, g + 1:])
+            taup[i] = pi_i
+            e[i] = beta2
+            A[g, g + 1] = beta2
+            A[g, g + 2:] = u[1:]
+            ufull = np.zeros(n)
+            ufull[g + 1:] = u
+            # (f) x_i by the merged two-gemv formula (9).
+            x = pi_i * (A @ ufull - P[:, : 2 * i + 1] @ (Q[:, : 2 * i + 1].T @ ufull))
+            x[: g + 1] = 0.0
+            P[:, 2 * i + 1] = x
+            Q[:, 2 * i + 1] = ufull
+        else:
+            taup[i] = 0.0
+            e[i] = 0.0
+    return A, P, Q, d, e, tauq, taup
+
+
+def trailing_update_ref(A, P, Q, t, b):
+    """Merged-rank-(2b) trailing update, eq. (10): only rows/cols >= t+b."""
+    A = np.array(A, dtype=np.float64)
+    s = t + b
+    A[s:, s:] -= P[s:, :] @ Q[s:, :].T
+    return A
+
+
+def gebrd_ref(A, b):
+    """Full blocked bidiagonalisation. Returns (Afac, d, e, tauq, taup).
+
+    Afac holds reflectors LAPACK-style; d (n), e (n-1) form the upper
+    bidiagonal B.
+    """
+    A = np.array(A, dtype=np.float64)
+    m, n = A.shape
+    assert m >= n
+    d = np.zeros(n)
+    e = np.zeros(max(n - 1, 0))
+    tauq = np.zeros(n)
+    taup = np.zeros(n)
+    t = 0
+    while t < n:
+        bb = min(b, n - t)
+        A, P, Q, dd, ee, tq, tp = labrd_ref(A, t, bb)
+        d[t:t + bb] = dd
+        for k in range(bb):
+            if t + k < n - 1:
+                e[t + k] = ee[k]
+        tauq[t:t + bb] = tq
+        taup[t:t + bb] = tp
+        if t + bb < n:
+            A = trailing_update_ref(A, P, Q, t, bb)
+        t += bb
+    return A, d, e, tauq, taup
+
+
+def gebrd_unblocked_ref(A):
+    """Completely independent unblocked bidiagonalisation used to
+    cross-check gebrd_ref — applies each reflector to the full trailing
+    matrix immediately (eq. (3) without any deferral)."""
+    A = np.array(A, dtype=np.float64)
+    m, n = A.shape
+    d = np.zeros(n)
+    e = np.zeros(max(n - 1, 0))
+    tauq = np.zeros(n)
+    taup = np.zeros(n)
+    for g in range(n):
+        v, tau, beta = larfg(A[g:, g])
+        tauq[g] = tau
+        d[g] = beta
+        A[g:, g:] = apply_house_left(A[g:, g:], v, tau)
+        A[g, g] = beta
+        A[g + 1:, g] = v[1:]
+        if g < n - 1:
+            u, pi, beta2 = larfg(A[g, g + 1:])
+            taup[g] = pi
+            e[g] = beta2
+            A[g:, g + 1:] = apply_house_right(A[g:, g + 1:], u, pi)
+            A[g, g + 1] = beta2
+            A[g, g + 2:] = u[1:]
+    return A, d, e, tauq, taup
+
+
+def bidiag_matrix(d, e, n):
+    B = np.zeros((n, n))
+    for i in range(n):
+        B[i, i] = d[i]
+        if i < n - 1:
+            B[i, i + 1] = e[i]
+    return B
+
+
+def extract_q_reflector(Afac, tauq, m, n, i):
+    """Column reflector H_i from packed gebrd output."""
+    v = np.zeros(m)
+    v[i] = 1.0
+    v[i + 1:] = Afac[i + 1:, i]
+    return v, tauq[i]
+
+
+def extract_p_reflector(Afac, taup, m, n, i):
+    """Row reflector G_i from packed gebrd output (acts on columns)."""
+    u = np.zeros(n)
+    if i + 1 < n:
+        u[i + 1] = 1.0
+        u[i + 2:] = Afac[i, i + 2:]
+    return u, taup[i]
+
+
+def gebrd_reconstruct(Afac, d, e, tauq, taup, m, n):
+    """Rebuild U1 B V1^T from packed gebrd output (for tests)."""
+    B = np.zeros((m, n))
+    B[:n, :n] = bidiag_matrix(d, e, n)
+    # U1 = H_0 H_1 ... H_{n-1}; apply to B from the left in reverse.
+    M = B.copy()
+    for i in range(n - 1, -1, -1):
+        v, tau = extract_q_reflector(Afac, tauq, m, n, i)
+        M = apply_house_left(M, v, tau)
+    # V1 = G_0 ... G_{n-2}; B V1^T -> apply from right in reverse.
+    for i in range(n - 2, -1, -1):
+        u, pi = extract_p_reflector(Afac, taup, m, n, i)
+        M = apply_house_right(M, u, pi)
+    return M
+
+
+# ---------------------------------------------------------------------------
+# QR factorisation with the modified CWY transform (eqs. (24)-(32)).
+# ---------------------------------------------------------------------------
+
+def geqrf_panel_ref(A, t, b):
+    """Factor the b-column panel at offset t; returns (A', tau).
+
+    A' has R on/above the diagonal of the panel and reflector tails below.
+    Only the panel columns are touched (trailing update is separate).
+    """
+    A = np.array(A, dtype=np.float64)
+    tau = np.zeros(b)
+    for i in range(b):
+        g = t + i
+        v, tau_i, beta = larfg(A[g:, g])
+        tau[i] = tau_i
+        # apply to remaining panel columns only
+        A[g:, g + 1:t + b] = apply_house_left(A[g:, g + 1:t + b], v, tau_i)
+        A[g, g] = beta
+        A[g + 1:, g] = v[1:]
+    return A, tau
+
+
+def build_y(Afac, t, b, m):
+    """Unit-lower Y (m x b) from packed panel reflectors."""
+    Y = np.zeros((m, b))
+    for i in range(b):
+        g = t + i
+        Y[g, i] = 1.0
+        Y[g + 1:, i] = Afac[g + 1:, t + i]
+    return Y
+
+
+def tinv_ref(Y, tau):
+    """Modified CWY triangular factor, eqs. (27)-(29).
+
+    T^{-1} = triu(Y^T Y) with diagonal replaced by 1/tau.
+    """
+    b = Y.shape[1]
+    G = Y.T @ Y
+    Tinv = np.triu(G)
+    for i in range(b):
+        Tinv[i, i] = (1.0 / tau[i]) if tau[i] != 0.0 else 1e300
+    return Tinv
+
+
+def larfb_ref(C, Y, Tinv, trans=False):
+    """Block reflector application through the trsm formulation (30)-(32).
+
+    trans=False: C <- (I - Y T Y^T) C   = H_1 H_2 ... H_b C   (orgqr/ormqr)
+    trans=True:  C <- (I - Y T^T Y^T) C = H_b ... H_2 H_1 C   (geqrf update)
+    """
+    Z = Y.T @ C                       # gemm (30)
+    T = Tinv.T if trans else Tinv     # trsm (31) — Tinv is upper triangular
+    W = np.linalg.solve(T, Z)
+    return C - Y @ W                  # gemm (32)
+
+
+def geqrf_ref(A, b):
+    """Blocked QR, modified CWY. Returns (Afac, taus)."""
+    A = np.array(A, dtype=np.float64)
+    m, n = A.shape
+    taus = np.zeros(n)
+    t = 0
+    while t < n:
+        bb = min(b, n - t)
+        A, tau = geqrf_panel_ref(A, t, bb)
+        taus[t:t + bb] = tau
+        if t + bb < n:
+            Y = build_y(A, t, bb, m)
+            Tinv = tinv_ref(Y, tau)
+            A[:, t + bb:] = larfb_ref(A[:, t + bb:], Y, Tinv, trans=True)
+        t += bb
+    return A, taus
+
+
+def orgqr_ref(Afac, taus, m, n, b):
+    """Thin Q (m x n) from packed geqrf output, block-reverse application."""
+    Q = np.zeros((m, n))
+    for i in range(n):
+        Q[i, i] = 1.0
+    t = ((n - 1) // b) * b
+    while t >= 0:
+        bb = min(b, n - t)
+        Y = build_y(Afac, t, bb, m)
+        Tinv = tinv_ref(Y, taus[t:t + bb])
+        Q = larfb_ref(Q, Y, Tinv)
+        t -= b
+    return Q
+
+
+def ormqr_ref(Afac, tauq, C, b):
+    """C <- U1 C where U1 = H_0 ... H_{n-1} from gebrd's column reflectors.
+
+    Blocked application in reverse panel order (rightmost block first).
+    C is m x k.
+    """
+    C = np.array(C, dtype=np.float64)
+    m, n = Afac.shape
+    nb = n  # number of column reflectors
+    t = ((nb - 1) // b) * b
+    while t >= 0:
+        bb = min(b, nb - t)
+        Y = np.zeros((m, bb))
+        for i in range(bb):
+            g = t + i
+            Y[g, i] = 1.0
+            Y[g + 1:, i] = Afac[g + 1:, g]
+        tau = tauq[t:t + bb]
+        Tinv = np.triu(Y.T @ Y)
+        for i in range(bb):
+            Tinv[i, i] = (1.0 / tau[i]) if tau[i] != 0.0 else 1e300
+        C = larfb_ref(C, Y, Tinv)
+        t -= b
+    return C
+
+
+def ormlq_ref(Afac, taup, C, b):
+    """C <- V1 C where V1 = G_0 ... G_{n-2} from gebrd's row reflectors.
+
+    C is n x k. Row reflector i lives in Afac[i, i+2:] with unit at i+1.
+    """
+    C = np.array(C, dtype=np.float64)
+    n = Afac.shape[1]
+    nref = n - 1  # G_0 .. G_{n-2}
+    if nref <= 0:
+        return C
+    t = ((nref - 1) // b) * b
+    while t >= 0:
+        bb = min(b, nref - t)
+        Y = np.zeros((n, bb))
+        for i in range(bb):
+            g = t + i
+            if g + 1 < n:
+                Y[g + 1, i] = 1.0
+                Y[g + 2:, i] = Afac[g, g + 2:]
+        tau = taup[t:t + bb]
+        Tinv = np.triu(Y.T @ Y)
+        for i in range(bb):
+            Tinv[i, i] = (1.0 / tau[i]) if tau[i] != 0.0 else 1e300
+        C = larfb_ref(C, Y, Tinv)
+        t -= b
+    return C
+
+
+# ---------------------------------------------------------------------------
+# BDC secular stage oracles (eqs. (17)-(19)).
+# ---------------------------------------------------------------------------
+
+def secular_f(d, z, omega):
+    """f(omega) = 1 + sum z_j^2 / (d_j^2 - omega^2), eq. (17)."""
+    return 1.0 + np.sum(z * z / ((d - omega) * (d + omega)))
+
+
+def secular_roots_ref(d, z):
+    """All N roots of the secular equation by safeguarded bisection on
+    s = omega^2. Root k lives in (d_k^2, d_{k+1}^2); the last in
+    (d_N^2, d_N^2 + ||z||^2)."""
+    d = np.asarray(d, dtype=np.float64)
+    z = np.asarray(z, dtype=np.float64)
+    N = len(d)
+    d2 = d * d
+    roots = np.zeros(N)
+    znorm2 = float(z @ z)
+    for k in range(N):
+        lo = d2[k]
+        hi = d2[k + 1] if k + 1 < N else d2[-1] + znorm2
+        flo, fhi = lo, hi
+        for _ in range(200):
+            mid = 0.5 * (flo + fhi)
+            if mid == flo or mid == fhi:
+                break
+            val = 1.0 + np.sum(z * z / (d2 - mid))
+            if val < 0.0:
+                flo = mid
+            else:
+                fhi = mid
+        roots[k] = np.sqrt(0.5 * (flo + fhi))
+    return roots
+
+
+def secular_roots_base_ref(d, z):
+    """Roots in the dlasd4-style (omega, base, tau) representation used by
+    the device kernel: omega^2 = d[base]^2 + tau with base the nearer
+    endpoint."""
+    d = np.asarray(d, dtype=np.float64)
+    omega = secular_roots_ref(d, z)
+    d2 = d * d
+    N = len(d)
+    base = np.zeros(N, dtype=np.int64)
+    tau = np.zeros(N)
+    for k in range(N):
+        s = omega[k] * omega[k]
+        if k + 1 < N and (s - d2[k]) > (d2[k + 1] - s):
+            base[k] = k + 1
+        else:
+            base[k] = k
+        tau[k] = s - d2[base[k]]
+    return omega, base, tau
+
+
+def zhat_ref(d, omega):
+    """Gu-Eisenstat z-recomputation, eq. (18) (magnitudes; caller adds signs).
+
+    |z_i| = sqrt((w_N^2 - d_i^2) * prod_{k<i} (w_k^2-d_i^2)/(d_k^2-d_i^2)
+                                 * prod_{k>=i,k<N} (w_k^2-d_i^2)/(d_{k+1}^2-d_i^2))
+    """
+    d = np.asarray(d, dtype=np.float64)
+    omega = np.asarray(omega, dtype=np.float64)
+    N = len(d)
+    d2 = d * d
+    w2 = omega * omega
+    out = np.zeros(N)
+    for i in range(N):
+        acc = w2[N - 1] - d2[i]
+        for k in range(i):
+            acc *= (w2[k] - d2[i]) / (d2[k] - d2[i])
+        for k in range(i, N - 1):
+            acc *= (w2[k] - d2[i]) / (d2[k + 1] - d2[i])
+        out[i] = np.sqrt(max(acc, 0.0))
+    return out
+
+
+def secular_vectors_ref(d, zhat, omega):
+    """Left/right singular vectors of M, eq. (19). Returns (U, V) with
+    column i the vectors for omega_i. d[0] must be 0."""
+    d = np.asarray(d, dtype=np.float64)
+    N = len(d)
+    U = np.zeros((N, N))
+    V = np.zeros((N, N))
+    for i in range(N):
+        denom = (d - omega[i]) * (d + omega[i])
+        v = zhat / denom
+        V[:, i] = v / np.linalg.norm(v)
+        u = d * v
+        u[0] = -1.0
+        U[:, i] = u / np.linalg.norm(u)
+    return U, V
+
+
+def m_matrix(d, z):
+    """Dense M of eq. (16) for brute-force checks: first ROW is z, diagonal
+    d below (d[0] is implicitly 0)."""
+    N = len(d)
+    M = np.zeros((N, N))
+    M[0, :] = z
+    for i in range(1, N):
+        M[i, i] = d[i]
+    return M
+
+
+# ---------------------------------------------------------------------------
+# Merged vs non-merged micro-op oracles (Fig. 5).
+# ---------------------------------------------------------------------------
+
+def gemv4_ref(V, Y, X, U, u):
+    return V @ (Y.T @ u) + X @ (U.T @ u)
+
+
+def gemv2_merged_ref(P, Q, u):
+    return P @ (Q.T @ u)
+
+
+def gemm2_ref(A, V, Y, X, U):
+    return A - V @ Y.T - X @ U.T
+
+
+def gemm1_merged_ref(A, P, Q):
+    return A - P @ Q.T

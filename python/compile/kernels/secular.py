@@ -1,0 +1,164 @@
+"""L1 Pallas kernels for the BDC secular stage (lasd3's fused GPU kernel).
+
+The paper fuses three things into one GPU kernel (Sec. 4.2.2(2)):
+  1. the Gu-Eisenstat z-recomputation, eq. (18) — per-i product over all k,
+     done on the GPU with per-thread registers + warp-shuffle reduction;
+  2. the singular-vector formulas, eq. (19);
+  3. the column normalisations.
+
+Numerical contract: the roots arrive as the dlasd4-style pair
+(base index value `dbase_k = d[base_k]`, offset `tau_k = omega_k^2 -
+dbase_k^2`) so every delta is formed WITHOUT cancellation:
+
+    d_j^2 - omega_k^2  =  (d_j - dbase_k)(d_j + dbase_k) - tau_k.
+
+(Evaluating d^2 - omega^2 directly loses all accuracy when a root sits
+next to a pole and produces garbage singular vectors — found the hard way;
+see rust/src/linalg/secular.rs::SecularRoot.)
+
+TPU/Pallas adaptation: one grid step owns a block of I columns. The
+eq.-(18) product over k is computed as a vectorised (I x N) ratio table
+reduced with jnp.prod along the k axis — the in-block analogue of the
+warp-shuffle multiplication tree. The same block then materialises its I
+columns of both U-hat and V-hat, normalised in-register before the store.
+
+All kernels take the padded bucket size Nb as the static shape and the
+true problem size N as a runtime scalar; lanes with k >= N contribute
+neutral elements. Padded output columns i >= N are identity columns.
+
+interpret=True: see merged_update.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COL_BLOCK = 16
+
+
+def _pick_block(nb, want):
+    """Largest power-of-two divisor of nb that is <= want."""
+    cb = 1
+    while cb * 2 <= want and nb % (cb * 2) == 0:
+        cb *= 2
+    return cb
+
+
+def _delta(d_j, dbase_k, tau_k):
+    """d_j^2 - omega_k^2 in the factored, cancellation-free form.
+
+    Broadcasts: d_j and (dbase_k, tau_k) may be row/col vectors.
+    """
+    return (d_j - dbase_k) * (d_j + dbase_k) - tau_k
+
+
+def _zhat_kernel(d_ref, dbase_ref, tau_ref, n_ref, o_ref):
+    """|z~_i| for a block of I values of i (eq. 18).
+
+    For the i-th row the product runs over roots k = 0..N-2 with
+    denominator d_{sigma(k,i)}^2 - d_i^2, sigma = k if k < i else k+1,
+    plus the leading (omega_{N-1}^2 - d_i^2).
+    """
+    blk = o_ref.shape[0]
+    i0 = pl.program_id(0) * blk
+    d = d_ref[...]
+    dbase = dbase_ref[...]
+    tau = tau_ref[...]
+    n = n_ref[0]
+    nb = d.shape[0]
+    iidx = i0 + jax.lax.iota(jnp.int32, blk)          # (I,) global i
+    kidx = jax.lax.iota(jnp.int32, nb)                # (Nb,) global k
+    di = d[iidx]                                      # (I,)
+    # numerator table (I, Nb): omega_k^2 - d_i^2 = -delta(d_i; k)
+    num = -_delta(di[:, None], dbase[None, :], tau[None, :])
+    sigma = jnp.where(kidx[None, :] < iidx[:, None], kidx[None, :], kidx[None, :] + 1)
+    sigma = jnp.minimum(sigma, nb - 1)
+    ds = d[sigma]
+    den = (ds - di[:, None]) * (ds + di[:, None])     # d_sigma^2 - d_i^2
+    active = (kidx[None, :] < n - 1) & (iidx[:, None] < n)
+    ratio = jnp.where(active, num / den, 1.0)
+    prod = jnp.prod(ratio, axis=1)                    # warp-reduce analogue
+    # leading term: omega_{N-1}^2 - d_i^2
+    lead = -_delta(di, dbase[n - 1], tau[n - 1])
+    val = jnp.maximum(lead * prod, 0.0)
+    zhat = jnp.sqrt(val)
+    o_ref[...] = jnp.where(iidx < n, zhat, 0.0)
+
+
+def _vectors_kernel(d_ref, dbase_ref, tau_ref, zs_ref, n_ref, u_ref, v_ref):
+    """Columns [i0, i0+I) of U-hat and V-hat (eq. 19), normalised.
+
+    zs = signed z~. Column i: v_j = zs_j / (d_j^2 - omega_i^2) (factored),
+    normalised; u_j = d_j * v_j with u_0 = -1, normalised. Padded columns
+    are e_i.
+    """
+    blk = u_ref.shape[1]
+    i0 = pl.program_id(0) * blk
+    d = d_ref[...]
+    dbase = dbase_ref[...]
+    tau = tau_ref[...]
+    zs = zs_ref[...]
+    n = n_ref[0]
+    nb = d.shape[0]
+    iidx = i0 + jax.lax.iota(jnp.int32, blk)          # (I,) column ids
+    jidx = jax.lax.iota(jnp.int32, nb)                # (Nb,) row ids
+    jactive = (jidx[:, None] < n)
+    iactive = (iidx[None, :] < n)
+    denom = _delta(d[:, None], dbase[iidx][None, :], tau[iidx][None, :])  # (Nb, I)
+    denom = jnp.where(denom == 0.0, 1e-300, denom)
+    v = jnp.where(jactive & iactive, zs[:, None] / denom, 0.0)
+    vnorm = jnp.sqrt(jnp.sum(v * v, axis=0))
+    vnorm = jnp.where(vnorm == 0.0, 1.0, vnorm)
+    u = d[:, None] * v
+    u = jnp.where(jidx[:, None] == 0, -1.0, u)
+    u = jnp.where(jactive & iactive, u, 0.0)
+    unorm = jnp.sqrt(jnp.sum(u * u, axis=0))
+    unorm = jnp.where(unorm == 0.0, 1.0, unorm)
+    ident = (jidx[:, None] == iidx[None, :]).astype(d.dtype)
+    v_ref[...] = jnp.where(iactive, v / vnorm[None, :], ident)
+    u_ref[...] = jnp.where(iactive, u / unorm[None, :], ident)
+
+
+def secular_zhat(d, dbase, tau, n, col_block=COL_BLOCK):
+    """|z~| (padded length Nb) from padded d and root pairs; n true size."""
+    nb = d.shape[0]
+    cb = _pick_block(nb, col_block)
+    return pl.pallas_call(
+        _zhat_kernel,
+        grid=(nb // cb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((cb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), d.dtype),
+        interpret=True,
+    )(d, dbase, tau, n)
+
+
+def secular_vectors(d, dbase, tau, zs, n, col_block=COL_BLOCK):
+    """(U-hat, V-hat) padded to (Nb, Nb); identity beyond column n."""
+    nb = d.shape[0]
+    cb = _pick_block(nb, col_block)
+    return pl.pallas_call(
+        _vectors_kernel,
+        grid=(nb // cb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb, cb), lambda i: (0, i)),
+            pl.BlockSpec((nb, cb), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, nb), d.dtype),
+            jax.ShapeDtypeStruct((nb, nb), d.dtype),
+        ],
+        interpret=True,
+    )(d, dbase, tau, zs, n)

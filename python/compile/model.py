@@ -1,0 +1,934 @@
+"""L2 JAX compute graphs for every device-side operation of the SVD stack.
+
+Each public `op_*` builder returns a function with FIXED shapes suitable for
+`jax.jit(...).lower(...)` — the AOT path (aot.py) lowers them to HLO text
+that the Rust coordinator compiles once per shape and executes via PJRT.
+
+Hard constraints (from the PJRT probe — see DESIGN.md):
+  * every graph returns EXACTLY ONE f64 array (tuple outputs come back as a
+    single opaque tuple buffer the xla crate cannot consume). Multi-valued
+    ops therefore return a packed 1-D workspace with small host-readable
+    scalars FIRST (only offset-0 prefix reads are safe on the Rust side).
+  * matrix panels are addressed with a runtime `t` (s64 scalar) and iota
+    masks so one compiled executable serves every panel of a matrix size.
+
+Packing layouts (mirrored in rust/src/runtime/layout.rs):
+  labrd    ws = [d(b) | e(b) | tauq(b) | taup(b) | A(m*n) | P(m*2b) | Q(n*2b)]
+  geqrf    ws = [tau(b) | A(m*n)]
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import merged_update as mu
+from .kernels import secular as sec
+
+f64 = jnp.float64
+i64 = jnp.int64
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _larfg_masked(x, idx, mask_tail):
+    """Masked dlarfg over a full-length vector.
+
+    x: full vector; idx: dynamic position of alpha; mask_tail: bool mask of
+    the tail elements (strictly after idx). Returns (v, tau, beta) where v is
+    full-length with v[idx] == 1, zeros outside {idx} ∪ tail.
+    """
+    alpha = lax.dynamic_slice(x, (idx,), (1,))[0]
+    tail = jnp.where(mask_tail, x, 0.0)
+    tail2 = jnp.sum(tail * tail)
+    iszero = tail2 == 0.0
+    sgn = jnp.where(alpha >= 0.0, 1.0, -1.0)
+    nrm = jnp.sqrt(alpha * alpha + tail2)
+    beta = jnp.where(iszero, alpha, -sgn * nrm)
+    tau = jnp.where(iszero, 0.0, (beta - alpha) / jnp.where(beta == 0.0, 1.0, beta))
+    scale = jnp.where(iszero | (alpha == beta), 0.0, 1.0 / (alpha - beta))
+    n = x.shape[0]
+    pos = jnp.arange(n)
+    v = jnp.where(mask_tail, x * scale, 0.0)
+    v = jnp.where(pos == idx, 1.0, v)
+    return v, tau, beta
+
+
+def _set_col(A, col, j):
+    return lax.dynamic_update_slice(A, col[:, None], (0, j))
+
+
+def _set_row(A, row, i):
+    return lax.dynamic_update_slice(A, row[None, :], (i, 0))
+
+
+def _get_col(A, j):
+    return lax.dynamic_slice(A, (0, j), (A.shape[0], 1))[:, 0]
+
+
+def _get_row(A, i):
+    return lax.dynamic_slice(A, (i, 0), (1, A.shape[1]))[0]
+
+
+def _set1(vec, val, i):
+    return lax.dynamic_update_slice(vec, jnp.reshape(val, (1,)), (i,))
+
+
+# ---------------------------------------------------------------------------
+# gebrd: merged-rank-(2b) panel + trailing update (paper Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def op_labrd(m, n, b):
+    """Panel reduction at offset t. A (m,n), t scalar -> packed ws."""
+
+    def fn(A, t):
+        rows = jnp.arange(m, dtype=i64)
+        cols = jnp.arange(n, dtype=i64)
+        pair = jnp.arange(2 * b, dtype=i64)
+        P0 = jnp.zeros((m, 2 * b), f64)
+        Q0 = jnp.zeros((n, 2 * b), f64)
+        z4 = jnp.zeros((b,), f64)
+
+        def body(i, state):
+            A, P, Q, d, e, tauq, taup = state
+            i = i.astype(i64)
+            g = t + i
+            # (a) delayed column update (gemv x1, paper step (1))
+            acol = _get_col(A, g)
+            qrow = _get_row(Q, g)
+            pm2i = (pair < 2 * i).astype(f64)
+            delta = P @ (qrow * pm2i)
+            acol = jnp.where(rows >= g, acol - delta, acol)
+            # (b) column Householder
+            v, tau_i, beta = _larfg_masked(acol, g, rows > g)
+            newcol = jnp.where(rows < g, acol, jnp.where(rows == g, beta, v))
+            A = _set_col(A, newcol, g)
+            d = _set1(d, beta, i)
+            tauq = _set1(tauq, tau_i, i)
+            # (c) y_i: merged gemv x2 (paper eq. 8, step (4))
+            Av = A.T @ v
+            corr = Q @ (pm2i * (P.T @ v))
+            y = tau_i * (Av - corr)
+            y = jnp.where(cols > g, y, 0.0)
+            P = _set_col(P, v, 2 * i)
+            Q = _set_col(Q, y, 2 * i)
+            # (d) delayed row update (gemv x1, paper step (5))
+            active = g < n - 1
+            pm2i1 = (pair < 2 * i + 1).astype(f64)
+            arow = _get_row(A, g)
+            prow = _get_row(P, g) * pm2i1
+            deltar = Q @ prow
+            arow2 = jnp.where(cols > g, arow - deltar, arow)
+            # (e) row Householder at position g+1
+            gp1 = jnp.minimum(g + 1, n - 1)
+            u, pi_i, beta2 = _larfg_masked(arow2, gp1, cols > gp1)
+            pi_i = jnp.where(active, pi_i, 0.0)
+            beta2 = jnp.where(active, beta2, 0.0)
+            u = jnp.where(active, u, 0.0)
+            newrow = jnp.where(cols <= g, arow2, jnp.where(cols == gp1, beta2, u))
+            # row-level select instead of a full-matrix where: the inactive
+            # case writes the unchanged row back (EXPERIMENTS.md §Perf L2-1)
+            newrow = jnp.where(active, newrow, arow)
+            A = _set_row(A, newrow, g)
+            e = _set1(e, beta2, i)
+            taup = _set1(taup, pi_i, i)
+            # (f) x_i: merged gemv x2 (paper eq. 9, step (8))
+            Au = A @ u
+            corr2 = P @ (pm2i1 * (Q.T @ u))
+            x = pi_i * (Au - corr2)
+            x = jnp.where((rows > g) & active, x, 0.0)
+            P = _set_col(P, x, 2 * i + 1)
+            Q = _set_col(Q, u, 2 * i + 1)
+            return (A, P, Q, d, e, tauq, taup)
+
+        A, P, Q, d, e, tauq, taup = lax.fori_loop(
+            0, b, body, (A, P0, Q0, z4, z4, z4, z4)
+        )
+        return jnp.concatenate(
+            [d, e, tauq, taup, A.ravel(), P.ravel(), Q.ravel()]
+        )
+
+    return fn, [jax.ShapeDtypeStruct((m, n), f64), jax.ShapeDtypeStruct((), i64)]
+
+
+def labrd_ws_layout(m, n, b):
+    """Offsets of the labrd workspace pieces (elements)."""
+    o = {}
+    off = 0
+    for name, sz in [
+        ("d", b), ("e", b), ("tauq", b), ("taup", b),
+        ("A", m * n), ("P", m * 2 * b), ("Q", n * 2 * b),
+    ]:
+        o[name] = (off, sz)
+        off += sz
+    o["total"] = off
+    return o
+
+
+def _unpack_labrd(ws, m, n, b):
+    L = labrd_ws_layout(m, n, b)
+    A = ws[L["A"][0]:L["A"][0] + m * n].reshape(m, n)
+    P = ws[L["P"][0]:L["P"][0] + m * 2 * b].reshape(m, 2 * b)
+    Q = ws[L["Q"][0]:L["Q"][0] + n * 2 * b].reshape(n, 2 * b)
+    return A, P, Q
+
+
+def op_gebrd_update(m, n, b, kernel="pallas"):
+    """Merged trailing update from a labrd workspace: A - P Q^T on the
+    trailing block (rows/cols >= t+b). kernel: 'pallas' (the L1 merged
+    kernel) or 'xla' (vendor-BLAS analogue)."""
+
+    L = labrd_ws_layout(m, n, b)
+
+    def fn(ws, t):
+        A, P, Q = _unpack_labrd(ws, m, n, b)
+        s = t + b
+        P = jnp.where(jnp.arange(m, dtype=i64)[:, None] >= s, P, 0.0)
+        Q = jnp.where(jnp.arange(n, dtype=i64)[:, None] >= s, Q, 0.0)
+        if kernel == "pallas":
+            return mu.merged_update(A, P, Q)
+        return A - P @ Q.T
+
+    return fn, [jax.ShapeDtypeStruct((L["total"],), f64), jax.ShapeDtypeStruct((), i64)]
+
+
+def op_gebrd_update2(m, n, b):
+    """Non-merged trailing update (gemm x2): A - V Y^T - X U^T. Baseline for
+    Fig. 5b / the MAGMA-sim pipeline. Separate V,X (m,b) and Y,U (n,b)
+    inputs because MAGMA uploads the CPU-factored panel."""
+
+    def fn(A, V, Y, X, U, t):
+        s = t + b
+        rm = (jnp.arange(m, dtype=i64)[:, None] >= s)
+        cm = (jnp.arange(n, dtype=i64)[:, None] >= s)
+        V = jnp.where(rm, V, 0.0)
+        X = jnp.where(rm, X, 0.0)
+        Y = jnp.where(cm, Y, 0.0)
+        U = jnp.where(cm, U, 0.0)
+        return A - V @ Y.T - X @ U.T
+
+    return fn, [
+        jax.ShapeDtypeStruct((m, n), f64),
+        jax.ShapeDtypeStruct((m, b), f64),
+        jax.ShapeDtypeStruct((n, b), f64),
+        jax.ShapeDtypeStruct((m, b), f64),
+        jax.ShapeDtypeStruct((n, b), f64),
+        jax.ShapeDtypeStruct((), i64),
+    ]
+
+
+def op_extract_a(m, n, b):
+    """Pull A back out of a labrd workspace (used after the final panel)."""
+    L = labrd_ws_layout(m, n, b)
+
+    def fn(ws):
+        return ws[L["A"][0]:L["A"][0] + m * n].reshape(m, n)
+
+    return fn, [jax.ShapeDtypeStruct((L["total"],), f64)]
+
+
+def op_ws_head(m, n, b):
+    """First 4b elements of a labrd workspace (d|e|tauq|taup) — lets the
+    host read the bidiagonal chunk without a full-workspace literal copy."""
+    L = labrd_ws_layout(m, n, b)
+
+    def fn(ws):
+        return ws[:4 * b]
+
+    return fn, [jax.ShapeDtypeStruct((L["total"],), f64)]
+
+
+def op_qr_head(m, n, b):
+    """First b elements (tau) of a geqrf workspace."""
+
+    def fn(ws):
+        return ws[:b]
+
+    return fn, [jax.ShapeDtypeStruct((b + m * n,), f64)]
+
+
+def op_set_cols(m, n, b):
+    """Write a column strip back into A (MAGMA-sim panel writeback)."""
+
+    def fn(A, strip, t):
+        cols = jnp.arange(n, dtype=i64)[None, :]
+        padded = jnp.zeros((m, n), f64)
+        padded = lax.dynamic_update_slice(padded, strip, (0, t))
+        return jnp.where((cols >= t) & (cols < t + b), padded, A)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, n), f64), s((m, b), f64), s((), i64)]
+
+
+def op_set_rows(m, n, b):
+    """Write a row strip back into A (MAGMA-sim panel writeback)."""
+
+    def fn(A, strip, t):
+        rows = jnp.arange(m, dtype=i64)[:, None]
+        padded = jnp.zeros((m, n), f64)
+        padded = lax.dynamic_update_slice(padded, strip, (t, 0))
+        return jnp.where((rows >= t) & (rows < t + b), padded, A)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, n), f64), s((b, n), f64), s((), i64)]
+
+
+def op_larfb_up(m, n, b):
+    """MAGMA-sim trailing update: apply an UPLOADED panel's block reflector
+    (Y, T^{-1}) to A's columns >= t+b with the transposed product
+    H_b..H_1 (the geqrf update)."""
+
+    def fn(A, Y, Tinv, t):
+        Anew = _larfb(A, Y, Tinv, trans=True)
+        return jnp.where(jnp.arange(n, dtype=i64)[None, :] >= t + b, Anew, A)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, n), f64), s((m, b), f64), s((b, b), f64), s((), i64)]
+
+
+def op_larfb_full(m, n, b):
+    """C <- (I - Y T Y^T) C with uploaded Y, T^{-1} (MAGMA-sim orgqr/orm*)."""
+
+    def fn(C, Y, Tinv):
+        return _larfb(C, Y, Tinv, trans=False)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, n), f64), s((m, b), f64), s((b, b), f64)]
+
+
+def op_gemv_t(m, n):
+    """y = A^T v — the per-column trailing gemv of the MAGMA-sim panel."""
+
+    def fn(A, v):
+        return A.T @ v
+
+    return fn, [jax.ShapeDtypeStruct((m, n), f64), jax.ShapeDtypeStruct((m,), f64)]
+
+
+def op_gemv_n(m, n):
+    """x = A u."""
+
+    def fn(A, u):
+        return A @ u
+
+    return fn, [jax.ShapeDtypeStruct((m, n), f64), jax.ShapeDtypeStruct((n,), f64)]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 micro-ops: merged vs non-merged BLAS
+# ---------------------------------------------------------------------------
+
+def op_gemv_tall_t(m, k):
+    """w = A^T u for a tall-skinny operand — one BLAS2 'launch' of the
+    non-merged gemv x4 sequence (Fig. 5a is about call counts: the
+    baseline issues four of these, the merged form two)."""
+
+    def fn(A, u):
+        return A.T @ u
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, k), f64), s((m,), f64)]
+
+
+def op_gemv_tall_n(m, k):
+    """t = A w (tall-skinny)."""
+
+    def fn(A, w):
+        return A @ w
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, k), f64), s((k,), f64)]
+
+
+def op_gemv_tall_n_acc(m, k):
+    """t = acc + A w — the beta=1 accumulating gemv call."""
+
+    def fn(A, w, acc):
+        return acc + A @ w
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, k), f64), s((k,), f64), s((m,), f64)]
+
+
+def op_rank_update(m, k):
+    """A - V Y^T — one gemm 'launch' of the non-merged gemm x2 update."""
+
+    def fn(A, V, Y):
+        return A - V @ Y.T
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, m), f64), s((m, k), f64), s((m, k), f64)]
+
+
+def op_fig5_gemv4(m, k):
+    def fn(V, Y, X, U, u):
+        return V @ (Y.T @ u) + X @ (U.T @ u)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, k), f64)] * 4 + [s((m,), f64)]
+
+
+def op_fig5_gemv2(m, k):
+    def fn(P, Q, u):
+        return P @ (Q.T @ u)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, 2 * k), f64), s((m, 2 * k), f64), s((m,), f64)]
+
+
+def op_fig5_gemm2(m, k):
+    def fn(A, V, Y, X, U):
+        return A - V @ Y.T - X @ U.T
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, m), f64)] + [s((m, k), f64)] * 4
+
+
+def op_fig5_gemm1(m, k, kernel="pallas"):
+    def fn(A, P, Q):
+        if kernel == "pallas":
+            return mu.merged_update(A, P, Q)
+        return A - P @ Q.T
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, m), f64), s((m, 2 * k), f64), s((m, 2 * k), f64)]
+
+
+# ---------------------------------------------------------------------------
+# QR: geqrf / orgqr with the modified CWY transform (eqs. 24-32)
+# ---------------------------------------------------------------------------
+
+def _build_y_masked(A, t, b, taus=None):
+    """Unit-lower Y (m x b) for the panel at offset t from packed
+    reflectors stored in A's columns t..t+b-1."""
+    m = A.shape[0]
+    rows = jnp.arange(m, dtype=i64)[:, None]
+    j = jnp.arange(b, dtype=i64)[None, :]
+    panel = lax.dynamic_slice(A, (0, t), (m, b))
+    g = t + j
+    Y = jnp.where(rows > g, panel, 0.0)
+    Y = jnp.where(rows == g, 1.0, Y)
+    return Y
+
+
+def _tinv(Y, tau):
+    """T^{-1} = triu(Y^T Y), diag 1/tau (eqs. 27-29; gemm not syrk, as the
+    paper does for vendor-BLAS efficiency)."""
+    b = Y.shape[1]
+    G = Y.T @ Y
+    Tinv = jnp.triu(G)
+    idx = jnp.arange(b)
+    inv = jnp.where(tau != 0.0, 1.0 / jnp.where(tau == 0.0, 1.0, tau), 1e300)
+    return Tinv.at[idx, idx].set(inv)
+
+
+def _trisolve(Tinv, Z, trans):
+    """Substitution solve of T^{-1} W = Z (upper triangular T^{-1}) or
+    T^{-T} W = Z when trans. Hand-rolled row recurrence: jax's
+    solve_triangular lowers to a typed-FFI custom call that the AOT
+    runtime (xla_extension 0.5.1) cannot execute, so the trsm of eq. (31)
+    is expressed as b dependent axpy rows instead (b <= 64)."""
+    b = Tinv.shape[0]
+    idx = jnp.arange(b, dtype=i64)
+    W0 = jnp.zeros_like(Z)
+
+    if trans:
+        # T^{-T} is lower triangular: forward substitution.
+        def body(i, W):
+            i = i.astype(i64)
+            coeff = lax.dynamic_slice(Tinv, (0, i), (b, 1))[:, 0]  # column i
+            coeff = jnp.where(idx < i, coeff, 0.0)
+            acc = coeff @ W
+            tii = lax.dynamic_slice(Tinv, (i, i), (1, 1))[0, 0]
+            zi = lax.dynamic_slice(Z, (i, 0), (1, Z.shape[1]))[0]
+            wi = (zi - acc) / tii
+            return lax.dynamic_update_slice(W, wi[None, :], (i, 0))
+
+        return lax.fori_loop(0, b, body, W0)
+
+    # upper triangular: backward substitution.
+    def body(k, W):
+        i = (b - 1 - k).astype(i64)
+        coeff = lax.dynamic_slice(Tinv, (i, 0), (1, b))[0]  # row i
+        coeff = jnp.where(idx > i, coeff, 0.0)
+        acc = coeff @ W
+        tii = lax.dynamic_slice(Tinv, (i, i), (1, 1))[0, 0]
+        zi = lax.dynamic_slice(Z, (i, 0), (1, Z.shape[1]))[0]
+        wi = (zi - acc) / tii
+        return lax.dynamic_update_slice(W, wi[None, :], (i, 0))
+
+    return lax.fori_loop(0, b, body, W0)
+
+
+def _larfb(C, Y, Tinv, trans):
+    """(I - Y T Y^T)^(T?) C through gemm/trsm/gemm (eqs. 30-32)."""
+    Z = Y.T @ C
+    W = _trisolve(Tinv, Z, trans)
+    return C - Y @ W
+
+
+def _build_t_classic(Y, tau):
+    """CLASSIC CWY triangular factor (LAPACK dlarft, eqs. 24-26):
+    built column-by-column with BLAS2 gemv/trmv — the formulation the
+    paper replaces with the gemm-based T^{-1} (eq. 28). Kept as the
+    rocSOLVER/LAPACK-style baseline for Figs. 13-16."""
+    b = tau.shape[0]
+    idx = jnp.arange(b, dtype=i64)
+
+    def body(i, T):
+        i = i.astype(i64)
+        yi = lax.dynamic_slice(Y, (0, i), (Y.shape[0], 1))[:, 0]
+        col = Y.T @ yi                         # gemv (25)
+        col = jnp.where(idx < i, col, 0.0)
+        tau_i = tau[i]
+        w = -tau_i * (T @ col)                 # trmv (26)
+        w = jnp.where(idx < i, w, 0.0)
+        w = jnp.where(idx == i, tau_i, w)
+        return lax.dynamic_update_slice(T, w[:, None], (0, i))
+
+    return lax.fori_loop(0, b, body, jnp.zeros((b, b), f64))
+
+
+def _larfb_classic(C, Y, T, trans):
+    """Block reflector application with the explicit T (no trsm):
+    C <- (I - Y T^(T?) Y^T) C."""
+    Z = Y.T @ C
+    W = (T.T @ Z) if trans else (T @ Z)
+    return C - Y @ W
+
+
+def op_geqrf_step_classic(m, n, b):
+    """Blocked-QR step with the CLASSIC CWY transform (larft recurrence +
+    gemm application) — the vendor-library-style baseline."""
+
+    def fn(A, t):
+        rows = jnp.arange(m, dtype=i64)
+        cols = jnp.arange(n, dtype=i64)
+
+        def body(i, state):
+            A, tau = state
+            i = i.astype(i64)
+            g = t + i
+            acol = _get_col(A, g)
+            v, tau_i, beta = _larfg_masked(acol, g, rows > g)
+            w = tau_i * (A.T @ v)
+            w = jnp.where((cols > g) & (cols < t + b), w, 0.0)
+            A = A - jnp.outer(v, w)
+            newcol = jnp.where(rows < g, acol, jnp.where(rows == g, beta, v))
+            A = _set_col(A, newcol, g)
+            tau = _set1(tau, tau_i, i)
+            return (A, tau)
+
+        A, tau = lax.fori_loop(0, b, body, (A, jnp.zeros((b,), f64)))
+        Y = _build_y_masked(A, t, b)
+        T = _build_t_classic(Y, tau)
+        Anew = _larfb_classic(A, Y, T, trans=True)
+        A = jnp.where(jnp.arange(n, dtype=i64)[None, :] >= t + b, Anew, A)
+        return jnp.concatenate([tau, A.ravel()])
+
+    return fn, [jax.ShapeDtypeStruct((m, n), f64), jax.ShapeDtypeStruct((), i64)]
+
+
+def op_orgqr_step_classic(m, n, b):
+    def fn(Qm, Afac, tau, t):
+        Y = _build_y_masked(Afac, t, b)
+        T = _build_t_classic(Y, tau)
+        return _larfb_classic(Qm, Y, T, trans=False)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, n), f64), s((m, n), f64), s((b,), f64), s((), i64)]
+
+
+def op_ormqr_step_classic(m, n, k, b):
+    def fn(C, Afac, tau, t):
+        Y = _build_y_masked(Afac, t, b)
+        T = _build_t_classic(Y, tau)
+        return _larfb_classic(C, Y, T, trans=False)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, k), f64), s((m, n), f64), s((b,), f64), s((), i64)]
+
+
+def op_ormlq_step_classic(m, n, k, b):
+    def fn(C, Afac, tau, t):
+        rows = jnp.arange(n, dtype=i64)[:, None]
+        j = jnp.arange(b, dtype=i64)[None, :]
+        strip = lax.dynamic_slice(Afac, (t, 0), (b, n)).T
+        g = t + j
+        Y = jnp.where(rows > g + 1, strip, 0.0)
+        Y = jnp.where(rows == g + 1, 1.0, Y)
+        T = _build_t_classic(Y, tau)
+        return _larfb_classic(C, Y, T, trans=False)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((n, k), f64), s((m, n), f64), s((b,), f64), s((), i64)]
+
+
+def op_gebrd_update2_ws(m, n, b):
+    """NON-merged trailing update straight from a labrd workspace (gemm x2,
+    de-interleaved P/Q) — the rocSOLVER/LAPACK-style gebrd baseline."""
+    L = labrd_ws_layout(m, n, b)
+
+    def fn(ws, t):
+        A, P, Q = _unpack_labrd(ws, m, n, b)
+        s = t + b
+        P = jnp.where(jnp.arange(m, dtype=i64)[:, None] >= s, P, 0.0)
+        Q = jnp.where(jnp.arange(n, dtype=i64)[:, None] >= s, Q, 0.0)
+        V = P[:, 0::2]
+        X = P[:, 1::2]
+        Y = Q[:, 0::2]
+        U = Q[:, 1::2]
+        return A - V @ Y.T - X @ U.T
+
+    return fn, [jax.ShapeDtypeStruct((L["total"],), f64), jax.ShapeDtypeStruct((), i64)]
+
+
+def op_geqrf_step(m, n, b):
+    """One blocked-QR iteration at offset t: panel factor + T^{-1} + trsm
+    trailing update, all on device. Returns packed [tau(b) | A(m*n)]."""
+
+    def fn(A, t):
+        rows = jnp.arange(m, dtype=i64)
+        cols = jnp.arange(n, dtype=i64)
+
+        def body(i, state):
+            A, tau = state
+            i = i.astype(i64)
+            g = t + i
+            acol = _get_col(A, g)
+            v, tau_i, beta = _larfg_masked(acol, g, rows > g)
+            # apply H_i to the remaining panel columns (cols in (g, t+b))
+            w = tau_i * (A.T @ v)
+            w = jnp.where((cols > g) & (cols < t + b), w, 0.0)
+            A = A - jnp.outer(v, w)
+            newcol = jnp.where(rows < g, acol, jnp.where(rows == g, beta, v))
+            A = _set_col(A, newcol, g)
+            tau = _set1(tau, tau_i, i)
+            return (A, tau)
+
+        A, tau = lax.fori_loop(0, b, body, (A, jnp.zeros((b,), f64)))
+        # trailing update with the modified CWY transform
+        Y = _build_y_masked(A, t, b)
+        Tinv = _tinv(Y, tau)
+        Anew = _larfb(A, Y, Tinv, trans=True)
+        A = jnp.where(jnp.arange(n, dtype=i64)[None, :] >= t + b, Anew, A)
+        return jnp.concatenate([tau, A.ravel()])
+
+    return fn, [jax.ShapeDtypeStruct((m, n), f64), jax.ShapeDtypeStruct((), i64)]
+
+
+def geqrf_ws_layout(m, n, b):
+    return {"tau": (0, b), "A": (b, m * n), "total": b + m * n}
+
+
+def op_geqrf_extract_a(m, n, b):
+    def fn(ws):
+        return ws[b:b + m * n].reshape(m, n)
+
+    return fn, [jax.ShapeDtypeStruct((b + m * n,), f64)]
+
+
+def op_orgqr_step(m, n, b):
+    """Qm <- (I - Y T Y^T) Qm for the panel at offset t. T^{-1} is
+    recomputed from Y (the paper recomputes it so orgqr can use its own
+    optimal block size)."""
+
+    def fn(Qm, Afac, tau, t):
+        Y = _build_y_masked(Afac, t, b)
+        Tinv = _tinv(Y, tau)
+        return _larfb(Qm, Y, Tinv, trans=False)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, n), f64), s((m, n), f64), s((b,), f64), s((), i64)]
+
+
+def op_eye(m, n):
+    """Thin identity initialiser for orgqr."""
+
+    def fn():
+        return jnp.eye(m, n, dtype=f64)
+
+    return fn, []
+
+
+# ---------------------------------------------------------------------------
+# Back-transformations: ormqr (column reflectors) / ormlq (row reflectors)
+# ---------------------------------------------------------------------------
+
+def op_ormqr_step(m, n, k, b):
+    """C <- (I - Y T Y^T) C, Y from gebrd column reflectors at offset t.
+
+    C is (m,k); Afac is the gebrd-packed (m,n) matrix.
+    """
+
+    def fn(C, Afac, tau, t):
+        Y = _build_y_masked(Afac, t, b)
+        Tinv = _tinv(Y, tau)
+        return _larfb(C, Y, Tinv, trans=False)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, k), f64), s((m, n), f64), s((b,), f64), s((), i64)]
+
+
+def op_ormlq_step(m, n, k, b):
+    """C <- (I - Y T Y^T) C, Y from gebrd ROW reflectors at offset t.
+
+    Row reflector i lives in Afac[t+i, t+i+2:], unit at column t+i+1; as a
+    vector in R^n it is column i of Y (n x b). C is (n,k).
+    """
+
+    def fn(C, Afac, tau, t):
+        rows = jnp.arange(n, dtype=i64)[:, None]
+        j = jnp.arange(b, dtype=i64)[None, :]
+        strip = lax.dynamic_slice(Afac, (t, 0), (b, n)).T  # (n, b): col i = row t+i
+        g = t + j
+        Y = jnp.where(rows > g + 1, strip, 0.0)
+        Y = jnp.where(rows == g + 1, 1.0, Y)
+        Tinv = _tinv(Y, tau)
+        return _larfb(C, Y, Tinv, trans=False)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((n, k), f64), s((m, n), f64), s((b,), f64), s((), i64)]
+
+
+# ---------------------------------------------------------------------------
+# BDC device ops
+# ---------------------------------------------------------------------------
+
+def op_bdc_row(n):
+    """Read one row of an (n,n) device matrix (z-vector assembly)."""
+
+    def fn(M, g):
+        return _get_row(M, g)
+
+    return fn, [jax.ShapeDtypeStruct((n, n), f64), jax.ShapeDtypeStruct((), i64)]
+
+
+def op_bdc_rots(n, rmax):
+    """Apply a batch of Givens column rotations to an (n,n) matrix.
+
+    rots: (rmax, 4) rows [j1, j2, c, s] (indices as f64); nrot: live count.
+    Column pairs are full height — correct because per-node blocks are the
+    only nonzero rows (block-diagonal invariant).
+    """
+
+    def fn(M, rots, nrot):
+        def body(r, M):
+            j1 = rots[r, 0].astype(i64)
+            j2 = rots[r, 1].astype(i64)
+            c = rots[r, 2]
+            s = rots[r, 3]
+            active = r < nrot
+            c1 = _get_col(M, j1)
+            c2 = _get_col(M, j2)
+            n1 = c * c1 + s * c2
+            n2 = -s * c1 + c * c2
+            M = jnp.where(active, _set_col(M, n1, j1), M)
+            M = jnp.where(active, _set_col(M, n2, j2), M)
+            return M
+
+        return lax.fori_loop(0, rmax, body, M)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((n, n), f64), s((rmax, 4), f64), s((), i64)]
+
+
+def op_bdc_permute_cols(n):
+    """M[:, perm] — deflation reordering / final sort on device."""
+
+    def fn(M, perm):
+        return jnp.take(M, perm, axis=1)
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((n, n), f64), s((n,), i64)]
+
+
+def op_bdc_secular(nb, kernel="pallas"):
+    """Fused secular stage (the paper's custom lasd3 kernel): from padded
+    d, the (dbase, tau) root pairs (cancellation-free deltas — see
+    kernels/secular.py) and a sign vector, compute z~ (eq. 18) and the
+    normalised singular-vector blocks (eq. 19). Returns packed
+    [zhat(nb) | U(nb*nb) | V(nb*nb)].
+    """
+
+    def fn(d, dbase, tau, signs, nn):
+        nvec = jnp.reshape(nn, (1,))
+        if kernel == "pallas":
+            zh = sec.secular_zhat(d, dbase, tau, nvec)
+            zs = zh * signs
+            U, V = sec.secular_vectors(d, dbase, tau, zs, nvec)
+        else:
+            nbl = d.shape[0]
+            iidx = jnp.arange(nbl)
+            kidx = jnp.arange(nbl)
+            delta_ik = (d[:, None] - dbase[None, :]) * (d[:, None] + dbase[None, :]) - tau[None, :]
+            num = -delta_ik  # omega_k^2 - d_i^2, (i, k)
+            sigma = jnp.where(kidx[None, :] < iidx[:, None], kidx[None, :], kidx[None, :] + 1)
+            sigma = jnp.minimum(sigma, nbl - 1)
+            ds = d[sigma]
+            den = (ds - d[:, None]) * (ds + d[:, None])
+            active = (kidx[None, :] < nn - 1) & (iidx[:, None] < nn)
+            ratio = jnp.where(active, num / den, 1.0)
+            prod = jnp.prod(ratio, axis=1)
+            lead = -((d - dbase[nn - 1]) * (d + dbase[nn - 1]) - tau[nn - 1])
+            zh = jnp.sqrt(jnp.maximum(lead * prod, 0.0))
+            zh = jnp.where(iidx < nn, zh, 0.0)
+            zs = zh * signs
+            jact = iidx[:, None] < nn
+            iact = iidx[None, :] < nn
+            denom = delta_ik
+            denom = jnp.where(denom == 0.0, 1e-300, denom)
+            V = jnp.where(jact & iact, zs[:, None] / denom, 0.0)
+            vn = jnp.sqrt(jnp.sum(V * V, axis=0))
+            vn = jnp.where(vn == 0.0, 1.0, vn)
+            U = d[:, None] * V
+            U = jnp.where(iidx[:, None] == 0, -1.0, U)
+            U = jnp.where(jact & iact, U, 0.0)
+            un = jnp.sqrt(jnp.sum(U * U, axis=0))
+            un = jnp.where(un == 0.0, 1.0, un)
+            ident = (iidx[:, None] == iidx[None, :]).astype(f64)
+            V = jnp.where(iact, V / vn[None, :], ident)
+            U = jnp.where(iact, U / un[None, :], ident)
+        return jnp.concatenate([zs, U.ravel(), V.ravel()])
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((nb,), f64), s((nb,), f64), s((nb,), f64), s((nb,), f64), s((), i64)]
+
+
+def op_bdc_secular_u(nb):
+    """Slice S_U out of the packed bdc_secular output."""
+
+    def fn(packed):
+        return packed[nb:nb + nb * nb].reshape(nb, nb)
+
+    return fn, [jax.ShapeDtypeStruct((nb + 2 * nb * nb,), f64)]
+
+
+def op_bdc_secular_v(nb):
+    """Slice S_V out of the packed bdc_secular output."""
+
+    def fn(packed):
+        return packed[nb + nb * nb:].reshape(nb, nb)
+
+    return fn, [jax.ShapeDtypeStruct((nb + 2 * nb * nb,), f64)]
+
+
+def op_bdc_block_gemm(n, kb):
+    """Multiply the (len x len) diagonal block of M at offset woff+loc by
+    the secular factor S (whose live block sits at S[:len, :len], identity
+    beyond), in place:
+
+        M[o:o+len, o:o+len] <- M[o:o+len, o:o+len] @ S[:len, :len],
+        o = woff + loc.
+
+    The (kb,kb) window is anchored at (woff,woff) — Rust picks
+    woff = min(off, n-kb), loc = off-woff so blocks near the matrix edge
+    stay in range. S is embedded into an identity at [loc, loc+len) on both
+    axes; thanks to the BDC block-diagonal invariant (columns of a node are
+    zero outside the node's rows) the windowed product is then exact with
+    no masking of the result.
+    """
+
+    def fn(M, S, woff, loc, length):
+        rr = jnp.arange(kb, dtype=i64)
+        inb = (rr >= loc) & (rr < loc + length)
+        Ssh = jnp.roll(jnp.roll(S, loc, axis=0), loc, axis=1)
+        ident = jnp.eye(kb, dtype=f64)
+        Semb = jnp.where(inb[:, None] & inb[None, :], Ssh, ident)
+        W = lax.dynamic_slice(M, (woff, woff), (kb, kb))
+        return lax.dynamic_update_slice(M, W @ Semb, (woff, woff))
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((n, n), f64), s((kb, kb), f64), s((), i64), s((), i64), s((), i64)]
+
+
+def op_gemm(m, k, n):
+    """Plain device gemm (final TS back-multiply U = Q @ U0 and friends)."""
+
+    def fn(A, B):
+        return A @ B
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((m, k), f64), s((k, n), f64)]
+
+
+def op_set_block(n, bs):
+    """Write one (len x len) diagonal block into an (n,n) matrix — the
+    leaf-level lasdq upload (a vector-level transfer: sum of leaf block
+    areas is O(n * leaf), not O(n^2)).
+
+    The host places the live block at [loc, loc+len) inside the uploaded
+    (bs,bs) tile; the window is anchored at (woff,woff), woff+bs <= n.
+    """
+
+    def fn(M, blk, woff, loc, length):
+        rr = jnp.arange(bs, dtype=i64)
+        inb = (rr >= loc) & (rr < loc + length)
+        W = lax.dynamic_slice(M, (woff, woff), (bs, bs))
+        new = jnp.where(inb[:, None] & inb[None, :], blk, W)
+        return lax.dynamic_update_slice(M, new, (woff, woff))
+
+    s = jax.ShapeDtypeStruct
+    return fn, [s((n, n), f64), s((bs, bs), f64), s((), i64), s((), i64), s((), i64)]
+
+
+def op_zeros(n):
+    """Zero (n,n) device matrix initialiser (BDC vector accumulators)."""
+
+    def fn():
+        return jnp.zeros((n, n), f64)
+
+    return fn, []
+
+
+# ---------------------------------------------------------------------------
+# registry of op families — aot.py walks this
+# ---------------------------------------------------------------------------
+
+OPS = {
+    "labrd": (op_labrd, ("m", "n", "b")),
+    "gebrd_update": (op_gebrd_update, ("m", "n", "b")),
+    "gebrd_update_xla": (lambda m, n, b: op_gebrd_update(m, n, b, kernel="xla"), ("m", "n", "b")),
+    "gebrd_update2": (op_gebrd_update2, ("m", "n", "b")),
+    "extract_a": (op_extract_a, ("m", "n", "b")),
+    "ws_head": (op_ws_head, ("m", "n", "b")),
+    "qr_head": (op_qr_head, ("m", "n", "b")),
+    "set_cols": (op_set_cols, ("m", "n", "b")),
+    "set_rows": (op_set_rows, ("m", "n", "b")),
+    "larfb_up": (op_larfb_up, ("m", "n", "b")),
+    "larfb_full": (op_larfb_full, ("m", "n", "b")),
+    "gemv_t": (op_gemv_t, ("m", "n")),
+    "gemv_n": (op_gemv_n, ("m", "n")),
+    "gemv_tall_t": (op_gemv_tall_t, ("m", "k")),
+    "gemv_tall_n": (op_gemv_tall_n, ("m", "k")),
+    "gemv_tall_n_acc": (op_gemv_tall_n_acc, ("m", "k")),
+    "rank_update": (op_rank_update, ("m", "k")),
+    "fig5_gemv4": (op_fig5_gemv4, ("m", "k")),
+    "fig5_gemv2": (op_fig5_gemv2, ("m", "k")),
+    "fig5_gemm2": (op_fig5_gemm2, ("m", "k")),
+    "fig5_gemm1": (op_fig5_gemm1, ("m", "k")),
+    "fig5_gemm1_xla": (lambda m, k: op_fig5_gemm1(m, k, kernel="xla"), ("m", "k")),
+    "geqrf_step": (op_geqrf_step, ("m", "n", "b")),
+    "geqrf_step_classic": (op_geqrf_step_classic, ("m", "n", "b")),
+    "orgqr_step_classic": (op_orgqr_step_classic, ("m", "n", "b")),
+    "ormqr_step_classic": (op_ormqr_step_classic, ("m", "n", "k", "b")),
+    "ormlq_step_classic": (op_ormlq_step_classic, ("m", "n", "k", "b")),
+    "gebrd_update2_ws": (op_gebrd_update2_ws, ("m", "n", "b")),
+    "geqrf_extract_a": (op_geqrf_extract_a, ("m", "n", "b")),
+    "orgqr_step": (op_orgqr_step, ("m", "n", "b")),
+    "eye": (op_eye, ("m", "n")),
+    "ormqr_step": (op_ormqr_step, ("m", "n", "k", "b")),
+    "ormlq_step": (op_ormlq_step, ("m", "n", "k", "b")),
+    "bdc_row": (op_bdc_row, ("n",)),
+    "bdc_rots": (op_bdc_rots, ("n", "rmax")),
+    "bdc_permute_cols": (op_bdc_permute_cols, ("n",)),
+    "bdc_secular": (op_bdc_secular, ("nb",)),
+    "bdc_secular_xla": (lambda nb: op_bdc_secular(nb, kernel="xla"), ("nb",)),
+    "bdc_secular_u": (op_bdc_secular_u, ("nb",)),
+    "bdc_secular_v": (op_bdc_secular_v, ("nb",)),
+    "bdc_block_gemm": (op_bdc_block_gemm, ("n", "kb")),
+    "gemm": (op_gemm, ("m", "k", "n")),
+    "set_block": (op_set_block, ("n", "bs")),
+    "zeros": (op_zeros, ("n",)),
+}

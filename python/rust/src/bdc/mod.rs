@@ -1,0 +1,1 @@
+//! Bidiagonal divide-and-conquer (in progress).

@@ -1,0 +1,1 @@
+//! Paper figure/table regenerators (in progress).

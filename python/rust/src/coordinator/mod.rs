@@ -1,0 +1,1 @@
+//! Phase pipeline / metrics (in progress).

@@ -1,0 +1,1 @@
+//! SVD phase drivers (in progress).

@@ -1,0 +1,173 @@
+"""BDC device graphs (rots / permute / secular / block gemm) vs oracles."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_bdc_row():
+    rng = np.random.default_rng(1)
+    n = 10
+    M = rng.standard_normal((n, n))
+    fn, _ = model.op_bdc_row(n)
+    for g in (0, 3, n - 1):
+        got = np.asarray(jax.jit(fn)(M, jnp.int64(g)))
+        np.testing.assert_allclose(got, M[g], atol=0)
+
+
+def test_bdc_rots():
+    rng = np.random.default_rng(2)
+    n, rmax = 12, 8
+    M = rng.standard_normal((n, n))
+    rots = np.zeros((rmax, 4))
+    want = M.copy()
+    nrot = 5
+    for r in range(nrot):
+        j1, j2 = rng.choice(n, 2, replace=False)
+        th = rng.uniform(0, 2 * np.pi)
+        c, s = np.cos(th), np.sin(th)
+        rots[r] = [j1, j2, c, s]
+        c1, c2 = want[:, j1].copy(), want[:, j2].copy()
+        want[:, j1] = c * c1 + s * c2
+        want[:, j2] = -s * c1 + c * c2
+    fn, _ = model.op_bdc_rots(n, rmax)
+    got = np.asarray(jax.jit(fn)(M, rots, jnp.int64(nrot)))
+    np.testing.assert_allclose(got, want, atol=1e-12)
+
+
+def test_bdc_permute_cols():
+    rng = np.random.default_rng(3)
+    n = 9
+    M = rng.standard_normal((n, n))
+    perm = rng.permutation(n)
+    fn, _ = model.op_bdc_permute_cols(n)
+    got = np.asarray(jax.jit(fn)(M, jnp.asarray(perm, dtype=jnp.int64)))
+    np.testing.assert_allclose(got, M[:, perm], atol=0)
+
+
+def _secular_case(N, seed):
+    rng = np.random.default_rng(seed)
+    d = np.sort(rng.uniform(0.05, 3.0, N))
+    d[0] = 0.0
+    # enforce separation so the case is well-conditioned for the oracle
+    for i in range(1, N):
+        d[i] = max(d[i], d[i - 1] + 0.05)
+    z = rng.standard_normal(N)
+    z[np.abs(z) < 0.1] = 0.1
+    return d, z
+
+
+def _pad_secular_inputs(d, z, N, nb):
+    w, base, tau = ref.secular_roots_base_ref(d, z)
+    dpad = np.zeros(nb)
+    dpad[:N] = d
+    for i in range(N, nb):
+        dpad[i] = dpad[i - 1] + 1.0
+    bpad = dpad.copy()
+    bpad[:N] = d[base]
+    tpad = np.full(nb, 0.25)
+    tpad[:N] = tau
+    signs = np.ones(nb)
+    signs[:N] = np.sign(z)
+    return w, dpad, bpad, tpad, signs
+
+
+@pytest.mark.parametrize("kernel", ["pallas", "xla"])
+@pytest.mark.parametrize("N,nb", [(8, 8), (6, 8), (13, 16), (16, 16), (30, 32)])
+def test_bdc_secular(N, nb, kernel):
+    d, z = _secular_case(N, N * 7 + nb)
+    w, dpad, bpad, tpad, signs = _pad_secular_inputs(d, z, N, nb)
+    zh = ref.zhat_ref(d, w)
+    zs = zh * np.sign(z)
+    Uref, Vref = ref.secular_vectors_ref(d, zs, w)
+
+    fn, _ = model.op_bdc_secular(nb, kernel=kernel)
+    out = np.asarray(jax.jit(fn)(dpad, bpad, tpad, signs, jnp.int64(N)))
+    zs_got = out[:nb]
+    U = out[nb:nb + nb * nb].reshape(nb, nb)
+    V = out[nb + nb * nb:].reshape(nb, nb)
+    np.testing.assert_allclose(zs_got[:N], zs, atol=1e-9)
+    np.testing.assert_allclose(U[:N, :N], Uref, atol=1e-9)
+    np.testing.assert_allclose(V[:N, :N], Vref, atol=1e-9)
+    # padded region is identity (keeps block gemm exact)
+    np.testing.assert_allclose(U[:, N:], np.eye(nb)[:, N:], atol=0)
+    np.testing.assert_allclose(V[:, N:], np.eye(nb)[:, N:], atol=0)
+    # orthogonality of the padded blocks
+    np.testing.assert_allclose(U.T @ U, np.eye(nb), atol=1e-9)
+    np.testing.assert_allclose(V.T @ V, np.eye(nb), atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(N=st.integers(3, 20), seed=st.integers(0, 2**31))
+def test_bdc_secular_property(N, seed):
+    """Property: the fused kernel's (U, V, omega) diagonalise M exactly:
+    M V = U diag(omega)."""
+    d, z = _secular_case(N, seed)
+    nb = ((N + 7) // 8) * 8
+    w, dpad, bpad, tpad, signs = _pad_secular_inputs(d, z, N, nb)
+    fn, _ = model.op_bdc_secular(nb, kernel="pallas")
+    out = np.asarray(jax.jit(fn)(dpad, bpad, tpad, signs, jnp.int64(N)))
+    zs = out[:nb][:N]
+    U = out[nb:nb + nb * nb].reshape(nb, nb)[:N, :N]
+    V = out[nb + nb * nb:].reshape(nb, nb)[:N, :N]
+    M = ref.m_matrix(d, zs)
+    np.testing.assert_allclose(M @ V, U * w[None, :], atol=1e-8)
+
+
+@pytest.mark.parametrize("off,length,kb,n", [
+    (5, 3, 4, 12),   # interior block, plain anchor
+    (9, 3, 4, 12),   # block near the edge: woff shifts back, loc > 0
+    (0, 12, 12, 12), # root merge: whole matrix
+    (0, 2, 8, 12),   # small block, large bucket
+])
+def test_bdc_block_gemm(off, length, kb, n):
+    rng = np.random.default_rng(4)
+    # block-diagonal invariant: M's block columns have support only in
+    # block rows (mirrors the BDC U/V matrices).
+    M = np.zeros((n, n))
+    M[off:off + length, off:off + length] = rng.standard_normal((length, length))
+    other = np.setdiff1d(np.arange(n), np.arange(off, off + length))
+    for j in other:
+        M[j, j] = rng.standard_normal()
+    S = np.eye(kb)
+    S[:length, :length] = rng.standard_normal((length, length))
+    want = M.copy()
+    want[off:off + length, off:off + length] = (
+        M[off:off + length, off:off + length] @ S[:length, :length]
+    )
+    woff = min(off, n - kb)
+    loc = off - woff
+    fn, _ = model.op_bdc_block_gemm(n, kb)
+    got = np.asarray(jax.jit(fn)(
+        M, S, jnp.int64(woff), jnp.int64(loc), jnp.int64(length)))
+    np.testing.assert_allclose(got, want, atol=1e-12)
+
+
+@pytest.mark.parametrize("off,length", [(0, 4), (3, 2), (9, 3), (8, 4)])
+def test_set_block(off, length):
+    rng = np.random.default_rng(5)
+    n, bs = 12, 4
+    M = rng.standard_normal((n, n))
+    woff = min(off, n - bs)
+    loc = off - woff
+    blk = np.zeros((bs, bs))
+    blk[loc:loc + length, loc:loc + length] = rng.standard_normal((length, length))
+    fn, _ = model.op_set_block(n, bs)
+    got = np.asarray(jax.jit(fn)(
+        M, blk, jnp.int64(woff), jnp.int64(loc), jnp.int64(length)))
+    want = M.copy()
+    want[off:off + length, off:off + length] = blk[loc:loc + length, loc:loc + length]
+    np.testing.assert_allclose(got, want, atol=0)
+
+
+def test_zeros_op():
+    fn, _ = model.op_zeros(6)
+    np.testing.assert_allclose(np.asarray(jax.jit(fn)()), np.zeros((6, 6)), atol=0)

@@ -1,0 +1,25 @@
+//! `cargo bench` entrypoint: regenerates every paper figure/table through
+//! the bench harness (criterion is unavailable offline; this is a custom
+//! harness=false bench whose output is the paper-style rows).
+//!
+//! Scope control:
+//!   GCSVD_BENCH=fig12         run a single figure
+//!   GCSVD_BENCH_REPS=5        timing repetitions (default 3)
+
+use gcsvd::bench_harness::{self, Ctx};
+use gcsvd::config::Config;
+use gcsvd::runtime::Device;
+
+fn main() {
+    let cfg = Config::default();
+    let which = std::env::var("GCSVD_BENCH").unwrap_or_else(|_| "all".to_string());
+    let reps: usize = std::env::var("GCSVD_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let dev = Device::with_model(&cfg.artifacts, cfg.transfer).expect("device");
+    let ctx = Ctx::new(dev, cfg, reps).expect("ctx");
+    let t0 = std::time::Instant::now();
+    bench_harness::run(&ctx, &which).expect("bench run");
+    println!("\n[paper_figures: {which} done in {:.1}s]", t0.elapsed().as_secs_f64());
+}

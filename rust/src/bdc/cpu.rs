@@ -1,0 +1,238 @@
+//! Host-matrix BDC engine — the LAPACK-style reference implementation and
+//! the substrate the baselines build on.
+
+use crate::bdc::driver::{BdcEngine, Mat};
+use crate::linalg::bdsqr::rot_cols;
+use crate::linalg::givens::PlaneRot;
+use crate::linalg::secular::{self, SecularRoot};
+use crate::matrix::Matrix;
+
+pub struct CpuEngine {
+    pub u: Matrix,
+    pub v: Matrix,
+}
+
+impl CpuEngine {
+    pub fn new() -> Self {
+        CpuEngine { u: Matrix::zeros(0, 0), v: Matrix::zeros(0, 0) }
+    }
+}
+
+impl Default for CpuEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BdcEngine for CpuEngine {
+    fn init(&mut self, n: usize) {
+        self.u = Matrix::eye(n, n);
+        self.v = Matrix::eye(n, n);
+    }
+
+    fn set_leaf(&mut self, lo: usize, u: &Matrix, v: &Matrix) {
+        self.u.set_block(lo, lo, u);
+        self.v.set_block(lo, lo, v);
+    }
+
+    fn v_row(&mut self, row: usize, c0: usize, len: usize) -> Vec<f64> {
+        self.v.row(row)[c0..c0 + len].to_vec()
+    }
+
+    fn rot_cols(&mut self, which: Mat, rots: &[PlaneRot]) {
+        let m = match which {
+            Mat::U => &mut self.u,
+            Mat::V => &mut self.v,
+        };
+        for r in rots {
+            rot_cols(m, r.j1 as usize, r.j2 as usize, r.c, r.s);
+        }
+    }
+
+    fn permute(&mut self, which: Mat, lo: usize, perm_local: &[usize]) {
+        let m = match which {
+            Mat::U => &mut self.u,
+            Mat::V => &mut self.v,
+        };
+        permute_cols_range(m, lo, perm_local);
+    }
+
+    fn secular_apply(
+        &mut self,
+        lo: usize,
+        len: usize,
+        sqre: usize,
+        d: &[f64],
+        roots: &[SecularRoot],
+        z_live: &[f64],
+    ) {
+        let zh = secular::zhat(d, z_live, roots);
+        let (su, sv) = secular::secular_vectors(d, &zh, roots);
+        block_times_secular(&mut self.u, lo, len, len, &su);
+        block_times_secular(&mut self.v, lo, len + sqre, len, &sv);
+    }
+}
+
+/// M[:, lo+j] for j in perm range <- old columns (full height — the
+/// block-diagonal invariant makes rows outside [lo, lo+len) zeros, but we
+/// move full columns anyway, mirroring the device op).
+pub fn permute_cols_range(m: &mut Matrix, lo: usize, perm_local: &[usize]) {
+    let len = perm_local.len();
+    let rows = m.rows;
+    let mut tmp = vec![0.0; rows * len];
+    for (newj, &oldj) in perm_local.iter().enumerate() {
+        for i in 0..rows {
+            tmp[newj * rows + i] = m.at(i, lo + oldj);
+        }
+    }
+    for newj in 0..len {
+        for i in 0..rows {
+            m[(i, lo + newj)] = tmp[newj * rows + i];
+        }
+    }
+}
+
+/// The lasd3 gemm: M[lo:lo+rows, lo:lo+cols][:, :K] = block @ S (S: K x K),
+/// where `rows` may exceed `cols` by the node's sqre (the V block's extra
+/// row span). Columns >= K untouched.
+pub fn block_times_secular(m: &mut Matrix, lo: usize, rows: usize, cols: usize, s: &Matrix) {
+    let k = s.cols;
+    debug_assert!(k <= cols);
+    let blk = m.block(lo, lo, rows, cols);
+    for i in 0..rows {
+        for j in 0..k {
+            let mut acc = 0.0;
+            for t in 0..k {
+                acc += blk.at(i, t) * s.at(t, j);
+            }
+            m[(lo + i, lo + j)] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bdc::bdc_solve;
+    use crate::linalg::blas;
+    use crate::matrix::Bidiagonal;
+    use crate::util::Rng;
+
+    fn check_bdc(d: Vec<f64>, e: Vec<f64>, leaf: usize, tol: f64) {
+        let n = d.len();
+        let b = Bidiagonal::new(d, e);
+        let bd = b.to_dense();
+        let mut eng = CpuEngine::new();
+        let (sig, _stats) = bdc_solve(&b, &mut eng, leaf, 1);
+        // ascending non-negative
+        for i in 0..n {
+            assert!(sig[i] >= -1e-12, "sigma[{i}] negative: {}", sig[i]);
+            if i > 0 {
+                assert!(sig[i] >= sig[i - 1] - 1e-12, "not ascending at {i}");
+            }
+        }
+        // orthogonality
+        let ud = eng.u.orthonormality_defect();
+        let vd = eng.v.orthonormality_defect();
+        assert!(ud < tol, "U defect {ud:e}");
+        assert!(vd < tol, "V defect {vd:e}");
+        // reconstruction B = U diag V^T
+        let mut us = eng.u.clone();
+        for j in 0..n {
+            for i in 0..n {
+                us[(i, j)] *= sig[j];
+            }
+        }
+        let mut rec = Matrix::zeros(n, n);
+        blas::gemm_nt(&us, &eng.v, &mut rec, 1.0);
+        let scale = bd.max_abs().max(1.0);
+        let err = rec.max_diff(&bd) / scale;
+        assert!(err < tol, "reconstruction {err:e}");
+        // singular values match jacobi
+        let sv = crate::linalg::jacobi::singular_values(&bd);
+        for i in 0..n {
+            assert!(
+                (sig[i] - sv[n - 1 - i]).abs() <= tol * sv[0].max(1.0),
+                "sigma[{i}]: {} vs {}",
+                sig[i],
+                sv[n - 1 - i]
+            );
+        }
+    }
+
+    #[test]
+    fn single_merge() {
+        // n = 7, leaf 3 -> one level of merges
+        let mut rng = Rng::new(71);
+        let d: Vec<f64> = (0..7).map(|_| rng.gaussian()).collect();
+        let e: Vec<f64> = (0..6).map(|_| rng.gaussian()).collect();
+        check_bdc(d, e, 3, 1e-10);
+    }
+
+    #[test]
+    fn deeper_trees() {
+        let mut rng = Rng::new(72);
+        for n in [10usize, 16, 25, 40, 64] {
+            let d: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let e: Vec<f64> = (0..n - 1).map(|_| rng.gaussian()).collect();
+            check_bdc(d, e, 3, 1e-9);
+        }
+    }
+
+    #[test]
+    fn leaf_32_paper_default() {
+        let mut rng = Rng::new(73);
+        let n = 100;
+        let d: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let e: Vec<f64> = (0..n - 1).map(|_| rng.gaussian()).collect();
+        check_bdc(d, e, 32, 1e-9);
+    }
+
+    #[test]
+    fn deflation_rich_constant_diagonal() {
+        // equal diagonal, tiny couplings -> massive deflation
+        let n = 24;
+        let d = vec![1.0; n];
+        let e = vec![1e-14; n - 1];
+        check_bdc(d, e, 3, 1e-9);
+    }
+
+    #[test]
+    fn zero_couplings_fully_deflate() {
+        let n = 16;
+        let d: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+        let e = vec![0.0; n - 1];
+        check_bdc(d, e, 3, 1e-10);
+    }
+
+    #[test]
+    fn graded_bidiagonal() {
+        let n = 20;
+        let d: Vec<f64> = (0..n).map(|i| 2f64.powi(-(i as i32))).collect();
+        let e: Vec<f64> = (0..n - 1).map(|i| 0.3 * 2f64.powi(-(i as i32))).collect();
+        check_bdc(d, e, 3, 1e-9);
+    }
+
+    #[test]
+    fn negative_entries() {
+        let mut rng = Rng::new(74);
+        let n = 18;
+        let d: Vec<f64> = (0..n).map(|_| rng.gaussian() - 0.2).collect();
+        let e: Vec<f64> = (0..n - 1).map(|_| rng.gaussian() + 0.1).collect();
+        check_bdc(d, e, 3, 1e-9);
+    }
+
+    #[test]
+    fn stats_populated() {
+        let mut rng = Rng::new(75);
+        let n = 32;
+        let d: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let e: Vec<f64> = (0..n - 1).map(|_| rng.gaussian()).collect();
+        let b = Bidiagonal::new(d, e);
+        let mut eng = CpuEngine::new();
+        let (_, stats) = bdc_solve(&b, &mut eng, 4, 1);
+        assert!(stats.leaves >= 4);
+        assert!(stats.merges >= 3);
+        assert_eq!(stats.secular_sizes.len(), stats.merges);
+    }
+}

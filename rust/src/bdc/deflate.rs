@@ -1,0 +1,203 @@
+//! Deflation (LAPACK dlasd2 analogue) — paper Section 4.2.1, the two
+//! scenarios of eq. (20):
+//!
+//!   1. small z-component: |z_j| <= tol  ->  column j deflates as-is;
+//!   2. close singular values: d_j - d_i <= tol  ->  one Givens rotation
+//!      moves the whole z-mass to one column, the other deflates.
+//!
+//! This module is PURE bookkeeping over (d, z): it emits the rotation list
+//! and the final local permutation; the engine applies them to the vector
+//! matrices (on host or device) — which is exactly what enables the
+//! paper's Algorithm 3 overlap (CPU scans while the device applies).
+
+use crate::linalg::givens::PlaneRot;
+
+/// Outcome of deflating one merge problem.
+#[derive(Debug, Clone)]
+pub struct Deflation {
+    /// Rotations on LOCAL column pairs (apply to U and V alike, offset by
+    /// the node base), in order.
+    pub rots: Vec<PlaneRot>,
+    /// Local permutation (new -> old) grouping [undeflated | deflated],
+    /// both ascending in d.
+    pub perm: Vec<usize>,
+    /// Number of undeflated entries K (the secular problem size).
+    pub k: usize,
+    /// d values of the undeflated set, ascending (d[0] == 0).
+    pub d_live: Vec<f64>,
+    /// z values of the undeflated set (aligned with d_live).
+    pub z_live: Vec<f64>,
+    /// Singular values of the deflated set, ascending (aligned with
+    /// perm[k..]).
+    pub d_dead: Vec<f64>,
+}
+
+/// Deflate the (d, z) merge problem. `d` ascending with d[0] == 0; `nrm`
+/// the scale of the merged matrix (max(|alpha|, |beta|, d.max())).
+pub fn lasd2(d: &[f64], z: &[f64], nrm: f64) -> Deflation {
+    let n = d.len();
+    let eps = f64::EPSILON;
+    let tol = 8.0 * eps * nrm.max(1e-300);
+
+    let mut d = d.to_vec();
+    let mut z = z.to_vec();
+    let mut rots = Vec::new();
+    // status: true = deflated
+    let mut dead = vec![false; n];
+
+    // scenario 1 guard for z_1 (cannot deflate the first column)
+    if z[0].abs() < tol {
+        z[0] = tol;
+    }
+
+    // single pass in ascending-d order; `piv` is the last live column with
+    // which close-value rotations combine (LAPACK's two-pointer scheme).
+    let mut piv: usize = 0; // column 0 (d = 0) is always live
+    for j in 1..n {
+        if z[j].abs() <= tol {
+            // scenario 1: tiny coupling
+            z[j] = 0.0;
+            dead[j] = true;
+            continue;
+        }
+        if j > piv && (d[j] - d[piv]) <= tol && piv > 0 {
+            // scenario 2 (both >= 1): combine z mass into j, deflate piv
+            // with sigma = d[piv]; set d[j] := d[piv] so later neighbours
+            // compare against the shared value.
+            let r = z[piv].hypot(z[j]);
+            let c = z[j] / r;
+            let s = z[piv] / r;
+            // zero z[piv]: rotate cols (j, piv): new z_j = c z_j + s z_piv = r,
+            // new z_piv = -s z_j + c z_piv = 0
+            rots.push(PlaneRot { j1: j as u32, j2: piv as u32, c, s });
+            z[j] = r;
+            z[piv] = 0.0;
+            d[j] = d[piv];
+            dead[piv] = true;
+        } else if d[j] <= tol && piv == 0 {
+            // scenario 2 with the d=0 column: d_j ~ 0; combine into col 0
+            // (which must stay), deflate j with sigma = 0.
+            let r = z[0].hypot(z[j]);
+            let c = z[0] / r;
+            let s = z[j] / r;
+            rots.push(PlaneRot { j1: 0, j2: j as u32, c, s });
+            z[0] = r;
+            z[j] = 0.0;
+            d[j] = 0.0;
+            dead[j] = true;
+            continue;
+        }
+        if !dead[j] {
+            piv = j;
+        }
+    }
+
+    // group [live | dead]; both orders remain ascending in d because the
+    // scan preserved relative order.
+    let mut perm: Vec<usize> = Vec::with_capacity(n);
+    let mut d_live = Vec::new();
+    let mut z_live = Vec::new();
+    for j in 0..n {
+        if !dead[j] {
+            perm.push(j);
+            d_live.push(d[j]);
+            z_live.push(z[j]);
+        }
+    }
+    let k = perm.len();
+    let mut dead_pairs: Vec<(f64, usize)> = (0..n)
+        .filter(|&j| dead[j])
+        .map(|j| (d[j], j))
+        .collect();
+    dead_pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let d_dead: Vec<f64> = dead_pairs.iter().map(|p| p.0).collect();
+    perm.extend(dead_pairs.iter().map(|p| p.1));
+
+    Deflation { rots, perm, k, d_live, z_live, d_dead }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_deflation_when_separated() {
+        let d = vec![0.0, 1.0, 2.0, 3.0];
+        let z = vec![0.5, 0.5, 0.5, 0.5];
+        let out = lasd2(&d, &z, 3.0);
+        assert_eq!(out.k, 4);
+        assert!(out.rots.is_empty());
+        assert_eq!(out.perm, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn small_z_deflates() {
+        let d = vec![0.0, 1.0, 2.0, 3.0];
+        let z = vec![0.5, 1e-300, 0.5, 0.5];
+        let out = lasd2(&d, &z, 3.0);
+        assert_eq!(out.k, 3);
+        assert_eq!(out.d_live, vec![0.0, 2.0, 3.0]);
+        assert_eq!(out.d_dead, vec![1.0]);
+        assert_eq!(out.perm, vec![0, 2, 3, 1]);
+    }
+
+    #[test]
+    fn close_values_rotate_and_deflate() {
+        let d = vec![0.0, 1.0, 1.0 + 1e-18, 3.0];
+        let z = vec![0.5, 0.6, 0.8, 0.5];
+        let out = lasd2(&d, &z, 3.0);
+        assert_eq!(out.k, 3);
+        assert_eq!(out.rots.len(), 1);
+        let r = out.rots[0];
+        assert_eq!((r.j1, r.j2), (2, 1)); // combine into col 2, deflate col 1
+        // z mass preserved
+        let live_norm: f64 = out.z_live.iter().map(|x| x * x).sum();
+        assert!((live_norm - (0.25 + 0.36 + 0.64 + 0.25)).abs() < 1e-12);
+        assert_eq!(out.d_dead, vec![1.0]);
+    }
+
+    #[test]
+    fn tiny_d_rotates_into_zero_column() {
+        let d = vec![0.0, 1e-300, 2.0];
+        let z = vec![0.3, 0.4, 0.5];
+        let out = lasd2(&d, &z, 2.0);
+        assert_eq!(out.k, 2);
+        assert_eq!(out.rots.len(), 1);
+        assert_eq!((out.rots[0].j1, out.rots[0].j2), (0, 1));
+        assert!((out.z_live[0] - 0.5).abs() < 1e-12); // hypot(.3,.4)
+        assert_eq!(out.d_dead, vec![0.0]);
+    }
+
+    #[test]
+    fn z1_floor_applied() {
+        let d = vec![0.0, 1.0];
+        let z = vec![0.0, 0.5];
+        let out = lasd2(&d, &z, 1.0);
+        assert!(out.z_live[0] > 0.0);
+        assert_eq!(out.k, 2);
+    }
+
+    #[test]
+    fn chain_of_close_values() {
+        // three nearly-equal values collapse to one live column
+        let t = 1e-18;
+        let d = vec![0.0, 1.0, 1.0 + t, 1.0 + 2.0 * t];
+        let z = vec![0.5, 0.3, 0.4, 0.2];
+        let out = lasd2(&d, &z, 1.0);
+        assert_eq!(out.k, 2);
+        assert_eq!(out.rots.len(), 2);
+        let mass: f64 = out.z_live.iter().map(|x| x * x).sum();
+        assert!((mass - (0.25 + 0.09 + 0.16 + 0.04)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perm_is_permutation() {
+        let d = vec![0.0, 0.5, 0.5 + 1e-18, 1.0, 1.0 + 1e-17, 2.0];
+        let z = vec![0.1, 1e-300, 0.2, 0.3, 0.4, 1e-300];
+        let out = lasd2(&d, &z, 2.0);
+        let mut p = out.perm.clone();
+        p.sort_unstable();
+        assert_eq!(p, (0..6).collect::<Vec<_>>());
+        assert_eq!(out.k + out.d_dead.len(), 6);
+    }
+}

@@ -1,0 +1,294 @@
+//! The BDC driver (lasd0/lasd1 analogue) — generic over the vector engine.
+//!
+//! `bdc_solve` computes the SVD of a square upper bidiagonal matrix:
+//! B = U diag(sigma) V^T, with sigma returned ASCENDING and the engine's
+//! U/V matrices holding the vectors in matching column order.
+
+use crate::bdc::deflate::{lasd2, Deflation};
+use crate::bdc::lasdq::lasdq;
+use crate::linalg::givens::PlaneRot;
+use crate::linalg::secular::{self, SecularRoot};
+use crate::matrix::{Bidiagonal, Matrix};
+
+/// Which vector matrix an operation targets.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mat {
+    U,
+    V,
+}
+
+/// Engine owning the singular-vector matrices (host or device resident).
+///
+/// All column indices are GLOBAL. The driver guarantees the block-diagonal
+/// invariant documented in `bdc/mod.rs`, so engines may apply column
+/// operations at full height.
+pub trait BdcEngine {
+    /// Matrices start as n x n identity.
+    fn init(&mut self, n: usize);
+
+    /// Write a leaf result: U block (nn x nn) at (lo, lo), V block
+    /// ((nn+sqre) x (nn+sqre)) at (lo, lo).
+    fn set_leaf(&mut self, lo: usize, u: &Matrix, v: &Matrix);
+
+    /// Read row `row` of V, columns [c0, c0+len).
+    fn v_row(&mut self, row: usize, c0: usize, len: usize) -> Vec<f64>;
+
+    /// Apply Givens rotations to columns of `which` (global pairs).
+    fn rot_cols(&mut self, which: Mat, rots: &[PlaneRot]);
+
+    /// Permute columns [lo, lo+len) by the LOCAL perm (new -> old).
+    fn permute(&mut self, which: Mat, lo: usize, perm_local: &[usize]);
+
+    /// The lasd3 vector update: for the node block at `lo` of length
+    /// `len` (= N, plus `sqre` extra V rows), with K undeflated entries
+    /// described by (d, roots, zhat), compute the secular vectors
+    /// (eqs. 18-19) and multiply in place:
+    ///
+    ///   U[lo:lo+len,      lo:lo+len][:, :K] *= S_U,
+    ///   V[lo:lo+len+sqre, lo:lo+len][:, :K] *= S_V,
+    ///
+    /// columns >= K stay (deflated vectors and, for V, the q column).
+    ///
+    /// `z_live` is the deflated z-vector; engines recompute the
+    /// Gu-Eisenstat z-hat (eq. 18) themselves — on the CPU for host
+    /// engines, inside the fused device kernel for the device engine —
+    /// so the driver never does O(K^2) work on the coordinator thread.
+    fn secular_apply(
+        &mut self,
+        lo: usize,
+        len: usize,
+        sqre: usize,
+        d: &[f64],
+        roots: &[SecularRoot],
+        z_live: &[f64],
+    );
+
+    /// Flush any queued asynchronous work (end of a merge level).
+    fn sync(&mut self) {}
+}
+
+/// Per-solve counters for the profiling figures (Figs. 7-12).
+#[derive(Clone, Debug, Default)]
+pub struct BdcStats {
+    pub merges: usize,
+    pub leaves: usize,
+    /// total undeflated secular size per merge level (root last)
+    pub secular_sizes: Vec<usize>,
+    /// total deflated count
+    pub deflated: usize,
+    /// seconds in deflation scans (lasd2, CPU part)
+    pub lasd2_sec: f64,
+    /// seconds in secular solve (lasd4, CPU part)
+    pub lasd4_sec: f64,
+    /// seconds in vector updates (lasd3: kernel + gemms)
+    pub lasd3_sec: f64,
+    /// seconds in leaf solves
+    pub lasdq_sec: f64,
+}
+
+/// Solve the BDC problem. `leaf` is the maximum leaf size (paper: 32);
+/// `threads` parallelises the secular roots.
+///
+/// Returns sigma ASCENDING; the engine's U (n x n) and V (n x n) columns
+/// hold the corresponding vectors.
+pub fn bdc_solve<E: BdcEngine>(
+    b: &Bidiagonal,
+    engine: &mut E,
+    leaf: usize,
+    threads: usize,
+) -> (Vec<f64>, BdcStats) {
+    let n = b.n();
+    let mut stats = BdcStats::default();
+    engine.init(n);
+    if n == 0 {
+        return (vec![], stats);
+    }
+    let leaf = leaf.max(3);
+    let sig = solve_node(b, engine, 0, n, 0, leaf, threads, &mut stats);
+    engine.sync();
+    (sig, stats)
+}
+
+/// Recursive node solve: rows [lo, lo+nn), right block (nn+sqre)^2.
+/// Returns the node's singular values ascending.
+#[allow(clippy::too_many_arguments)]
+fn solve_node<E: BdcEngine>(
+    b: &Bidiagonal,
+    engine: &mut E,
+    lo: usize,
+    nn: usize,
+    sqre: usize,
+    leaf: usize,
+    threads: usize,
+    stats: &mut BdcStats,
+) -> Vec<f64> {
+    // leaf?
+    if nn <= leaf {
+        let t0 = crate::util::Stopwatch::start();
+        let d = &b.d[lo..lo + nn];
+        // e entries: nn-1 interior + sqre coupling
+        let e: Vec<f64> = (0..nn - 1 + sqre).map(|i| b.e[lo + i]).collect();
+        let (sig, u, v) = lasdq(d, &e, sqre);
+        engine.set_leaf(lo, &u, &v);
+        stats.leaves += 1;
+        stats.lasdq_sec += t0.secs();
+        return sig;
+    }
+
+    // divide
+    let k = nn / 2; // coupling row ik = lo+k-1 (local row k, 1-based)
+    let d1 = solve_node(b, engine, lo, k - 1, 1, leaf, threads, stats);
+    let d2 = solve_node(b, engine, lo + k, nn - k, sqre, leaf, threads, stats);
+    merge_node(b, engine, lo, nn, sqre, k, &d1, &d2, threads, stats)
+}
+
+/// The lasd1 merge at a node whose children are solved.
+#[allow(clippy::too_many_arguments)]
+fn merge_node<E: BdcEngine>(
+    b: &Bidiagonal,
+    engine: &mut E,
+    lo: usize,
+    nn: usize,
+    sqre: usize,
+    k: usize,
+    d1: &[f64],
+    d2: &[f64],
+    threads: usize,
+    stats: &mut BdcStats,
+) -> Vec<f64> {
+    stats.merges += 1;
+    let _m = nn + sqre;
+    let ik = lo + k - 1; // global coupling row
+    let alpha = b.d[ik];
+    let beta = b.e[ik];
+
+    // ---- z construction from V rows (device: vector-level reads) ----
+    // z over child1's basis: alpha * (last row of child1's V block)
+    let r1 = engine.v_row(ik, lo, k);
+    // z over child2's basis: beta * (first row of child2's V block)
+    let r2 = engine.v_row(lo + k, lo + k, nn - k + sqre);
+
+    // local column c in [0, nn): global col lo+c.
+    //   c in [0, k-1)  -> Q1 (d1[c])         z = alpha * r1[c]
+    //   c == k-1       -> q1 (d=0)           z = alpha * r1[k-1]
+    //   c in [k, nn)   -> Q2 (d2[c-k])       z = beta * r2[c-k]
+    // (sqre==1: q2 at global col lo+nn carries beta*r2[nn-k]; combined
+    //  into the q1 column by one rotation below.)
+    let mut d_nat = vec![0.0; nn];
+    let mut z_nat = vec![0.0; nn];
+    for c in 0..k - 1 {
+        d_nat[c] = d1[c];
+        z_nat[c] = alpha * r1[c];
+    }
+    d_nat[k - 1] = 0.0;
+    z_nat[k - 1] = alpha * r1[k - 1];
+    for c in k..nn {
+        d_nat[c] = d2[c - k];
+        z_nat[c] = beta * r2[c - k];
+    }
+
+    if sqre == 1 {
+        // fold the q2 z-mass into the q1 column; q2 becomes the node's
+        // null vector (stays at global col lo+nn = block's last column).
+        let zq2 = beta * r2[nn - k];
+        let zq1 = z_nat[k - 1];
+        let r = zq1.hypot(zq2);
+        if r > 0.0 {
+            let (c, s) = (zq1 / r, zq2 / r);
+            engine.rot_cols(
+                Mat::V,
+                &[PlaneRot { j1: (lo + k - 1) as u32, j2: (lo + nn) as u32, c, s }],
+            );
+            z_nat[k - 1] = r;
+        }
+    }
+
+    // ---- sort columns by d ascending (q1 first since d>=0) ----
+    // children are each ascending: merge-sort of [k-1] ++ merge(0..k-1, k..nn)
+    let mut order: Vec<usize> = Vec::with_capacity(nn);
+    order.push(k - 1);
+    let (mut i1, mut i2) = (0usize, k);
+    while i1 < k - 1 || i2 < nn {
+        if i1 < k - 1 && (i2 >= nn || d_nat[i1] <= d_nat[i2]) {
+            order.push(i1);
+            i1 += 1;
+        } else {
+            order.push(i2);
+            i2 += 1;
+        }
+    }
+    let d_sorted: Vec<f64> = order.iter().map(|&c| d_nat[c]).collect();
+    let z_sorted: Vec<f64> = order.iter().map(|&c| z_nat[c]).collect();
+    engine.permute(Mat::U, lo, &order);
+    engine.permute(Mat::V, lo, &order);
+
+    // ---- scale to unit norm (dlasd1's ORGNRM) ----
+    let orgnrm = alpha
+        .abs()
+        .max(beta.abs())
+        .max(d_sorted.iter().fold(0.0f64, |a, &x| a.max(x)));
+    let inv = if orgnrm > 0.0 { 1.0 / orgnrm } else { 1.0 };
+    let ds: Vec<f64> = d_sorted.iter().map(|x| x * inv).collect();
+    let zs: Vec<f64> = z_sorted.iter().map(|x| x * inv).collect();
+
+    // ---- deflation (lasd2, CPU) + vector rotations (device) ----
+    let t0 = crate::util::Stopwatch::start();
+    let defl: Deflation = lasd2(&ds, &zs, 1.0);
+    stats.lasd2_sec += t0.secs();
+    stats.deflated += nn - defl.k;
+
+    // apply rotations (global pairs) to both U and V
+    if !defl.rots.is_empty() {
+        let grots: Vec<PlaneRot> = defl
+            .rots
+            .iter()
+            .map(|r| PlaneRot {
+                j1: (lo + r.j1 as usize) as u32,
+                j2: (lo + r.j2 as usize) as u32,
+                c: r.c,
+                s: r.s,
+            })
+            .collect();
+        engine.rot_cols(Mat::U, &grots);
+        engine.rot_cols(Mat::V, &grots);
+    }
+    engine.permute(Mat::U, lo, &defl.perm);
+    engine.permute(Mat::V, lo, &defl.perm);
+
+    // ---- secular solve (lasd4, CPU threads) ----
+    let t1 = crate::util::Stopwatch::start();
+    let roots = secular::solve_all(&defl.d_live, &defl.z_live, threads);
+    stats.lasd4_sec += t1.secs();
+    stats.secular_sizes.push(defl.k);
+
+    // ---- vector update (lasd3: z-hat + vectors + gemms) ----
+    let t2 = crate::util::Stopwatch::start();
+    engine.secular_apply(lo, nn, sqre, &defl.d_live, &roots, &defl.z_live);
+    stats.lasd3_sec += t2.secs();
+
+    // ---- new singular values; final node ordering ----
+    let mut sig: Vec<f64> = roots.iter().map(|r| r.omega * orgnrm).collect();
+    let dead: Vec<f64> = defl.d_dead.iter().map(|x| x * orgnrm).collect();
+    // merge ascending [sig (ascending) | dead (ascending)]
+    let mut final_perm: Vec<usize> = Vec::with_capacity(nn);
+    {
+        let (mut a, mut bidx) = (0usize, 0usize);
+        while a < sig.len() || bidx < dead.len() {
+            if a < sig.len() && (bidx >= dead.len() || sig[a] <= dead[bidx]) {
+                final_perm.push(a);
+                a += 1;
+            } else {
+                final_perm.push(defl.k + bidx);
+                bidx += 1;
+            }
+        }
+    }
+    engine.permute(Mat::U, lo, &final_perm);
+    engine.permute(Mat::V, lo, &final_perm);
+    let mut out: Vec<f64> = Vec::with_capacity(nn);
+    for &p in &final_perm {
+        out.push(if p < defl.k { sig[p] } else { dead[p - defl.k] });
+    }
+    sig.clear();
+    out
+}

@@ -1,0 +1,69 @@
+//! DualEngine: forwards every BdcEngine call to two engines and lets a
+//! callback compare their states after each step — the debugging /
+//! equivalence-testing harness for CPU vs device BDC.
+
+use crate::bdc::driver::{BdcEngine, Mat};
+use crate::linalg::givens::PlaneRot;
+use crate::linalg::secular::SecularRoot;
+use crate::matrix::Matrix;
+
+pub struct DualEngine<A: BdcEngine, B: BdcEngine, F: FnMut(&str, &mut A, &mut B)> {
+    pub a: A,
+    pub b: B,
+    pub check: F,
+}
+
+impl<A: BdcEngine, B: BdcEngine, F: FnMut(&str, &mut A, &mut B)> BdcEngine
+    for DualEngine<A, B, F>
+{
+    fn init(&mut self, n: usize) {
+        self.a.init(n);
+        self.b.init(n);
+        (self.check)("init", &mut self.a, &mut self.b);
+    }
+
+    fn set_leaf(&mut self, lo: usize, u: &Matrix, v: &Matrix) {
+        self.a.set_leaf(lo, u, v);
+        self.b.set_leaf(lo, u, v);
+        (self.check)("set_leaf", &mut self.a, &mut self.b);
+    }
+
+    fn v_row(&mut self, row: usize, c0: usize, len: usize) -> Vec<f64> {
+        let ra = self.a.v_row(row, c0, len);
+        let rb = self.b.v_row(row, c0, len);
+        let d = crate::util::max_abs_diff(&ra, &rb);
+        assert!(d < 1e-9, "v_row({row}) diverged: {d:e}");
+        ra
+    }
+
+    fn rot_cols(&mut self, which: Mat, rots: &[PlaneRot]) {
+        self.a.rot_cols(which, rots);
+        self.b.rot_cols(which, rots);
+        (self.check)("rot_cols", &mut self.a, &mut self.b);
+    }
+
+    fn permute(&mut self, which: Mat, lo: usize, perm_local: &[usize]) {
+        self.a.permute(which, lo, perm_local);
+        self.b.permute(which, lo, perm_local);
+        (self.check)("permute", &mut self.a, &mut self.b);
+    }
+
+    fn secular_apply(
+        &mut self,
+        lo: usize,
+        len: usize,
+        sqre: usize,
+        d: &[f64],
+        roots: &[SecularRoot],
+        z_live: &[f64],
+    ) {
+        self.a.secular_apply(lo, len, sqre, d, roots, z_live);
+        self.b.secular_apply(lo, len, sqre, d, roots, z_live);
+        (self.check)("secular_apply", &mut self.a, &mut self.b);
+    }
+
+    fn sync(&mut self) {
+        self.a.sync();
+        self.b.sync();
+    }
+}

@@ -1,0 +1,171 @@
+//! Leaf solver (LAPACK dlasdq analogue): SVD of a small bidiagonal block
+//! by QR iteration, including the sqre=1 "squaring" rotation chain that
+//! eliminates the extra column while accumulating it into the right-vector
+//! block (whose LAST column becomes the node's null vector q).
+
+use crate::linalg::bdsqr::{bdsqr, permute_cols, rot_cols, BdsqrOpts};
+use crate::linalg::givens::lartg;
+use crate::matrix::Matrix;
+
+/// SVD of the leaf bidiagonal: `d` (nn), `e` (nn entries when sqre==1 —
+/// the last one couples to the extra column — else nn-1).
+///
+/// Returns (sigma ascending, U (nn x nn), V ((nn+sqre) x (nn+sqre))).
+/// When sqre==1 the last column of V is the null vector q (B q = 0).
+pub fn lasdq(d: &[f64], e: &[f64], sqre: usize) -> (Vec<f64>, Matrix, Matrix) {
+    let nn = d.len();
+    assert!(sqre == 0 || sqre == 1);
+    assert_eq!(e.len(), nn - 1 + sqre);
+    let m = nn + sqre;
+
+    let mut dd = d.to_vec();
+    let mut ee: Vec<f64>;
+    let mut v = Matrix::eye(m, m);
+
+    if sqre == 1 {
+        // Squaring chain: zero the last column (entries bulge upward) with
+        // right rotations on columns (i, nn), i = nn-1 .. 0 (local).
+        ee = e[..nn - 1].to_vec();
+        let mut f = e[nn - 1]; // entry at (nn-1, nn)
+        for i in (0..nn).rev() {
+            let (c, s, r) = lartg(dd[i], f);
+            dd[i] = r;
+            rot_cols(&mut v, i, nn, c, s);
+            if i > 0 {
+                f = -s * ee[i - 1];
+                ee[i - 1] *= c;
+            }
+        }
+    } else {
+        ee = e.to_vec();
+    }
+
+    let mut u = Matrix::eye(nn, nn);
+    // bdsqr sorts descending; restrict its V accumulation to the square part
+    let mut vsq = Matrix::eye(nn, nn);
+    bdsqr(
+        &mut dd,
+        &mut ee,
+        BdsqrOpts { u: Some(&mut u), v: Some(&mut vsq), log: None },
+    );
+
+    // fold the square right-vector factor into v's first nn columns:
+    // V_total[:, :nn] = V_chain[:, :nn] * Vsq
+    let mut vout = Matrix::zeros(m, m);
+    for i in 0..m {
+        for j in 0..nn {
+            let mut acc = 0.0;
+            for k in 0..nn {
+                acc += v.at(i, k) * vsq.at(k, j);
+            }
+            vout[(i, j)] = acc;
+        }
+        if sqre == 1 {
+            vout[(i, nn)] = v.at(i, nn);
+        }
+    }
+
+    // ascending order (BDC convention)
+    let perm: Vec<usize> = (0..nn).rev().collect();
+    dd.reverse();
+    permute_cols(&mut u, &perm);
+    let mut vperm: Vec<usize> = (0..nn).rev().collect();
+    if sqre == 1 {
+        vperm.push(nn);
+    }
+    permute_cols(&mut vout, &vperm);
+
+    (dd, u, vout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::util::Rng;
+
+    fn leaf_b(d: &[f64], e: &[f64], sqre: usize) -> Matrix {
+        let nn = d.len();
+        let mut b = Matrix::zeros(nn, nn + sqre);
+        for i in 0..nn {
+            b[(i, i)] = d[i];
+            if i + 1 < nn + sqre {
+                if i < e.len() {
+                    b[(i, i + 1)] = e[i];
+                }
+            }
+        }
+        b
+    }
+
+    fn check(d: &[f64], e: &[f64], sqre: usize, tol: f64) {
+        let nn = d.len();
+        let m = nn + sqre;
+        let b = leaf_b(d, e, sqre);
+        let (sig, u, v) = lasdq(d, e, sqre);
+        // ascending
+        for k in 1..nn {
+            assert!(sig[k] >= sig[k - 1] - 1e-14);
+        }
+        assert!(u.orthonormality_defect() < tol);
+        assert!(v.orthonormality_defect() < tol);
+        // B = U [diag(sig) 0] V^T -> B V = U [diag 0]
+        let bv = blas::matmul(&b, &v);
+        for k in 0..nn {
+            for i in 0..nn {
+                let want = u.at(i, k) * sig[k];
+                assert!(
+                    (bv.at(i, k) - want).abs() < tol * sig[nn - 1].max(1.0),
+                    "(sqre={sqre}) BV[{i},{k}]"
+                );
+            }
+        }
+        if sqre == 1 {
+            // null column
+            for i in 0..nn {
+                assert!(bv.at(i, m - 1).abs() < tol, "q not null: {}", bv.at(i, m - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn square_leaves() {
+        let mut rng = Rng::new(61);
+        for nn in [1usize, 2, 3, 8, 17] {
+            let d: Vec<f64> = (0..nn).map(|_| rng.gaussian()).collect();
+            let e: Vec<f64> = (0..nn - 1).map(|_| rng.gaussian()).collect();
+            check(&d, &e, 0, 1e-10);
+        }
+    }
+
+    #[test]
+    fn sqre_leaves() {
+        let mut rng = Rng::new(62);
+        for nn in [1usize, 2, 3, 8, 17] {
+            let d: Vec<f64> = (0..nn).map(|_| rng.gaussian()).collect();
+            let e: Vec<f64> = (0..nn).map(|_| rng.gaussian()).collect();
+            check(&d, &e, 1, 1e-10);
+        }
+    }
+
+    #[test]
+    fn sigma_matches_jacobi() {
+        let mut rng = Rng::new(63);
+        let nn = 10;
+        let d: Vec<f64> = (0..nn).map(|_| rng.gaussian()).collect();
+        let e: Vec<f64> = (0..nn).map(|_| rng.gaussian()).collect();
+        let b = leaf_b(&d, &e, 1);
+        // jacobi on B^T (m x n with m >= n)
+        let bt = b.transpose();
+        let sv = crate::linalg::jacobi::singular_values(&bt);
+        let (sig, _, _) = lasdq(&d, &e, 1);
+        for k in 0..nn {
+            assert!(
+                (sig[k] - sv[nn - 1 - k]).abs() < 1e-10 * sv[0].max(1.0),
+                "sigma {k}: {} vs {}",
+                sig[k],
+                sv[nn - 1 - k]
+            );
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Bidiagonal divide-and-conquer (the paper's Section 4.2).
+//!
+//! Architecture: one generic driver (`driver.rs`) implements the LAPACK
+//! dlasd0/dlasd1-style recursion — divide, leaf-solve (`lasdq.rs`),
+//! deflate (`deflate.rs` = lasd2), secular solve + vector update (lasd3) —
+//! parameterised over a [`BdcEngine`] that owns the singular-vector
+//! matrices. Three engines exist:
+//!
+//!   * [`cpu::CpuEngine`] — host matrices, host gemms (the LAPACK-style
+//!     reference and the CPU half of every baseline);
+//!   * `runtime::bdc_engine::DeviceEngine` — the paper's contribution:
+//!     U/V resident in PJRT buffers, Givens/permutations/secular-vector
+//!     kernel/gemms all on the device, vector-level transfers only,
+//!     CPU deflation overlapped with device execution;
+//!   * the BDC-V1 engine — CPU everything except the lasd3 gemms,
+//!     with full matrix round-trips per merge (Gates et al. [12]).
+//!
+//! Index conventions: the tree is built over the square upper bidiagonal
+//! root (n x n). A node covers rows [lo, lo+nn) and, for its right-vector
+//! block, columns [lo, lo+nn+sqre). Children: left = (lo, k-1, sqre=1),
+//! coupling row ik = lo+k-1, right = (lo+k, nn-k, sqre). Every vector
+//! matrix keeps the block-diagonal invariant: a node's columns are zero
+//! outside its rows — which is what lets the device apply full-height
+//! column rotations exactly.
+
+pub mod cpu;
+pub mod dual;
+pub mod deflate;
+pub mod driver;
+pub mod lasdq;
+
+pub use driver::{bdc_solve, BdcEngine, BdcStats};

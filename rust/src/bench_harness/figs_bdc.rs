@@ -1,0 +1,193 @@
+//! Figures 7-12: BDC internals — lasd2/lasd3 profiles and bdsdc
+//! comparisons across the paper's four matrix types.
+
+use anyhow::Result;
+
+use crate::bdc::{bdc_solve, cpu::CpuEngine, BdcStats};
+use crate::bench_harness::{header, Ctx};
+use crate::gen::{generate, MatrixKind};
+use crate::linalg::gebrd_cpu;
+use crate::matrix::Bidiagonal;
+use crate::runtime::bdc_engine::DeviceEngine;
+use crate::svd::baselines::bdc_v1::BdcV1Engine;
+
+/// Bidiagonal of a generated test matrix (shared workload for Figs 7-12).
+fn test_bidiagonal(kind: MatrixKind, n: usize, theta: f64) -> Bidiagonal {
+    let a = generate(kind, n, n, theta, 12);
+    let f = gebrd_cpu::gebrd(a, 32);
+    f.bidiagonal()
+}
+
+fn biggest_n(ctx: &Ctx) -> usize {
+    *ctx.square_sizes().last().expect("no square shapes in manifest")
+}
+
+struct Run {
+    total: f64,
+    stats: BdcStats,
+    transfer_sec: f64,
+}
+
+/// Run twice, keep the second — excludes one-time executable compiles
+/// (the paper's comparators are long-lived library handles).
+fn warm<F: FnMut() -> Run>(mut f: F) -> Run {
+    let _ = f();
+    f()
+}
+
+fn run_cpu(ctx: &Ctx, bd: &Bidiagonal) -> Run {
+    let t0 = std::time::Instant::now();
+    let mut eng = CpuEngine::new();
+    let (_, stats) = bdc_solve(bd, &mut eng, ctx.cfg.leaf, ctx.cfg.threads);
+    Run { total: t0.elapsed().as_secs_f64(), stats, transfer_sec: 0.0 }
+}
+
+fn run_v1(ctx: &Ctx, bd: &Bidiagonal) -> Run {
+    ctx.dev.reset_transfer_stats();
+    let t0 = std::time::Instant::now();
+    let mut eng = BdcV1Engine::new(ctx.dev.clone());
+    let (_, stats) = bdc_solve(bd, &mut eng, ctx.cfg.leaf, ctx.cfg.threads);
+    Run {
+        total: t0.elapsed().as_secs_f64(),
+        stats,
+        transfer_sec: ctx.dev.transfer_stats().modelled_sec,
+    }
+}
+
+fn run_ours(ctx: &Ctx, bd: &Bidiagonal) -> Run {
+    let t0 = std::time::Instant::now();
+    let mut eng = DeviceEngine::new(ctx.dev.clone());
+    let (_, stats) = bdc_solve(bd, &mut eng, ctx.cfg.leaf, ctx.cfg.threads);
+    Run { total: t0.elapsed().as_secs_f64(), stats, transfer_sec: 0.0 }
+}
+
+/// Fig. 7: lasd3 decomposition for BDC-V1 — CPU+memcpy share vs gemm.
+pub fn fig7(ctx: &Ctx) -> Result<()> {
+    header("Fig. 7 — BDC-V1 lasd3 profile (CPU+memcpy share of lasd3)");
+    let n = biggest_n(ctx);
+    for kind in MatrixKind::ALL {
+        let bd = test_bidiagonal(kind, n, 1e4);
+        let v1 = warm(|| run_v1(ctx, &bd));
+        // device gemm time for the v1 run:
+        let gemm_sec = ctx.dev.stats().per_op_sec.get("bdc_block_gemm").copied().unwrap_or(0.0);
+        let cpu_memcpy = (v1.stats.lasd3_sec - gemm_sec).max(0.0) + v1.transfer_sec;
+        let share = 100.0 * cpu_memcpy / v1.stats.lasd3_sec.max(1e-12);
+        println!(
+            "  {:>12} n={n}: lasd3 {:7.3}s  (cpu+memcpy {:5.1}%, device gemm {:5.1}%)",
+            kind.name(),
+            v1.stats.lasd3_sec,
+            share,
+            100.0 - share
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 8: lasd2's share of BDC runtime (LAPACK-style CPU vs BDC-V1).
+pub fn fig8(ctx: &Ctx) -> Result<()> {
+    header("Fig. 8 — lasd2 share of bdsdc runtime (%)");
+    let n = biggest_n(ctx);
+    for kind in MatrixKind::ALL {
+        for theta in [1e2, 1e6] {
+            let bd = test_bidiagonal(kind, n, theta);
+            let cpu = warm(|| run_cpu(ctx, &bd));
+            let v1 = warm(|| run_v1(ctx, &bd));
+            println!(
+                "  {:>12} theta={theta:>7.0e}: LAPACK lasd2 {:5.1}% of {:7.3}s | BDC-V1 lasd2 {:5.1}% of {:7.3}s",
+                kind.name(),
+                100.0 * cpu.stats.lasd2_sec / cpu.total.max(1e-12),
+                cpu.total,
+                100.0 * v1.stats.lasd2_sec / v1.total.max(1e-12),
+                v1.total,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 9 / Algorithm 3: CPU-device overlap in our lasd2 — device busy
+/// time vs coordinator wall time (overlap means busy > blocked).
+pub fn fig9(ctx: &Ctx) -> Result<()> {
+    header("Fig. 9 — lasd2/3 async overlap (ours): device busy vs wall");
+    let n = biggest_n(ctx);
+    let bd = test_bidiagonal(MatrixKind::Random, n, 1e4);
+    let before = ctx.dev.stats().exec_sec;
+    let ours = warm(|| run_ours(ctx, &bd));
+    let busy = ctx.dev.stats().exec_sec - before;
+    println!(
+        "  n={n}: wall {:7.3}s, device busy {:7.3}s, cpu lasd2+lasd4 {:7.3}s -> overlap ratio {:4.2}",
+        ours.total,
+        busy,
+        ours.stats.lasd2_sec + ours.stats.lasd4_sec,
+        (busy + ours.stats.lasd2_sec + ours.stats.lasd4_sec) / ours.total.max(1e-12)
+    );
+    println!("  (ratio > 1 means CPU scans and device kernels overlapped)");
+    Ok(())
+}
+
+/// Fig. 10: lasd2 — LAPACK (CPU) vs ours (device-overlapped), per type.
+pub fn fig10(ctx: &Ctx) -> Result<()> {
+    header("Fig. 10 — lasd2: LAPACK vs ours (seconds at the root level)");
+    let n = biggest_n(ctx);
+    for kind in MatrixKind::ALL {
+        let bd = test_bidiagonal(kind, n, 1e4);
+        let cpu = warm(|| run_cpu(ctx, &bd));
+        let ours = warm(|| run_ours(ctx, &bd));
+        // CPU engine pays rot/permute on the host inside lasd2-adjacent
+        // work; ours enqueues — compare the deflation-path wall time.
+        let lap = cpu.stats.lasd2_sec + cpu.total - cpu.stats.lasd3_sec - cpu.stats.lasd4_sec
+            - cpu.stats.lasdq_sec;
+        let our = ours.stats.lasd2_sec + ours.total
+            - ours.stats.lasd3_sec
+            - ours.stats.lasd4_sec
+            - ours.stats.lasdq_sec;
+        println!(
+            "  {:>12}: LAPACK {:7.3}s | ours {:7.3}s | speedup {:4.2}x",
+            kind.name(),
+            lap,
+            our,
+            lap / our.max(1e-12)
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 11: lasd3 — BDC-V1 vs ours.
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    header("Fig. 11 — lasd3: BDC-V1 vs ours (seconds)");
+    let n = biggest_n(ctx);
+    for kind in MatrixKind::ALL {
+        let bd = test_bidiagonal(kind, n, 1e4);
+        let v1 = warm(|| run_v1(ctx, &bd));
+        let ours = warm(|| run_ours(ctx, &bd));
+        println!(
+            "  {:>12}: BDC-V1 {:7.3}s | ours {:7.3}s | speedup {:4.2}x",
+            kind.name(),
+            v1.stats.lasd3_sec,
+            ours.stats.lasd3_sec,
+            v1.stats.lasd3_sec / ours.stats.lasd3_sec.max(1e-12)
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 12: end-to-end bdsdc — ours vs BDC-V1 across types and sizes.
+pub fn fig12(ctx: &Ctx) -> Result<()> {
+    header("Fig. 12 — bdsdc: ours vs BDC-V1 (seconds, speedup)");
+    for kind in MatrixKind::ALL {
+        for n in ctx.square_sizes() {
+            let bd = test_bidiagonal(kind, n, 1e4);
+            let v1 = warm(|| run_v1(ctx, &bd));
+            let ours = warm(|| run_ours(ctx, &bd));
+            println!(
+                "  {:>12} n={n:>5}: BDC-V1 {:7.3}s | ours {:7.3}s | speedup {:4.2}x (deflated {}/{n})",
+                kind.name(),
+                v1.total,
+                ours.total,
+                v1.total / ours.total.max(1e-12),
+                ours.stats.deflated,
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! Figures 4-6: gebrd tuning, merged-vs-nonmerged BLAS, gebrd comparison.
+
+use anyhow::Result;
+
+use crate::bench_harness::{gebrd_flops, gflops, header, time_median, Ctx};
+use crate::gen::{generate, MatrixKind};
+use crate::svd::gebrd::gebrd_device_with;
+use crate::util::Rng;
+
+/// Fig. 4: gebrd block-size tuning (GFLOP/s per b).
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    header("Fig. 4 — gebrd block-size tuning (GFLOP/s, higher better)");
+    // tuning shapes: any (m, n) with >1 block size emitted
+    let mut shapes: Vec<(usize, usize)> = vec![];
+    for n in ctx.square_sizes() {
+        if ctx.blocks_for("labrd", n, n).len() > 1 {
+            shapes.push((n, n));
+        }
+    }
+    for (m, n) in ctx.ts_shapes() {
+        if ctx.blocks_for("labrd", m, n).len() > 1 {
+            shapes.push((m, n));
+        }
+    }
+    if shapes.is_empty() {
+        // fall back: single-block shapes at default b
+        shapes = ctx.square_sizes().iter().map(|&n| (n, n)).collect();
+    }
+    for (m, n) in shapes {
+        let a = generate(MatrixKind::Random, m, n, 1.0, 4);
+        print!("  {m:>5} x {n:<5}:");
+        let mut best = (0usize, 0.0f64);
+        for b in ctx.blocks_for("labrd", m, n) {
+            let t = time_median(ctx.reps, || {
+                let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
+                gebrd_device_with(&ctx.dev, ab, m, n, b, "gebrd_update_xla").unwrap();
+                ctx.dev.sync().unwrap();
+            });
+            let gf = gflops(gebrd_flops(m, n), t);
+            if gf > best.1 {
+                best = (b, gf);
+            }
+            print!("  b={b}: {gf:6.2}");
+        }
+        println!("   [best b={}]", best.0);
+    }
+    Ok(())
+}
+
+/// Fig. 5a: merged gemv x2 vs non-merged gemv x4.
+pub fn fig5a(ctx: &Ctx) -> Result<()> {
+    header("Fig. 5a — merged gemv x2 vs gemv x4 (time per call, speedup)");
+    let k = 32i64;
+    let mut rng = Rng::new(55);
+    for m in ctx.fig5_ms() {
+        let mi = m as i64;
+        let mk: Vec<f64> = (0..m * 32).map(|_| rng.gaussian()).collect();
+        let m2k: Vec<f64> = (0..m * 64).map(|_| rng.gaussian()).collect();
+        let u: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let vb = ctx.dev.upload(mk.clone(), &[m, 32]);
+        let yb = ctx.dev.upload(mk.clone(), &[m, 32]);
+        let xb = ctx.dev.upload(mk.clone(), &[m, 32]);
+        let ub4 = ctx.dev.upload(mk.clone(), &[m, 32]);
+        let pb = ctx.dev.upload(m2k.clone(), &[m, 64]);
+        let qb = ctx.dev.upload(m2k, &[m, 64]);
+        let uvec = ctx.dev.upload(u, &[m]);
+        // non-merged: FOUR separate device calls (the vendor-BLAS call
+        // pattern of eqs. (5)-(6))
+        let t4 = time_median(ctx.reps * 3, || {
+            let w1 = ctx.dev.op("gemv_tall_t", &[("m", mi), ("k", k)], &[yb, uvec]);
+            let t1 = ctx.dev.op("gemv_tall_n", &[("m", mi), ("k", k)], &[vb, w1]);
+            let w2 = ctx.dev.op("gemv_tall_t", &[("m", mi), ("k", k)], &[ub4, uvec]);
+            let t2o = ctx.dev.op("gemv_tall_n_acc", &[("m", mi), ("k", k)], &[xb, w2, t1]);
+            ctx.dev.sync().unwrap();
+            for o in [w1, t1, w2, t2o] { ctx.dev.free(o); }
+        });
+        // merged: TWO calls over the concatenated operands (eq. 8)
+        let t2 = time_median(ctx.reps * 3, || {
+            let w = ctx.dev.op("gemv_tall_t", &[("m", mi), ("k", 2 * k)], &[qb, uvec]);
+            let o = ctx.dev.op("gemv_tall_n", &[("m", mi), ("k", 2 * k)], &[pb, w]);
+            ctx.dev.sync().unwrap();
+            ctx.dev.free(w);
+            ctx.dev.free(o);
+        });
+        println!(
+            "  m={m:>5}: gemv x4 {:8.3} ms | merged x2 {:8.3} ms | speedup {:4.2}x",
+            t4 * 1e3,
+            t2 * 1e3,
+            t4 / t2
+        );
+        for b in [vb, yb, xb, ub4, pb, qb, uvec] {
+            ctx.dev.free(b);
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 5b: merged gemm x1 vs non-merged gemm x2 (plus the L1 Pallas
+/// kernel as the custom-kernel ablation).
+pub fn fig5b(ctx: &Ctx) -> Result<()> {
+    header("Fig. 5b — merged gemm x1 vs gemm x2 (time per update, speedup)");
+    let k = 32i64;
+    let mut rng = Rng::new(56);
+    for m in ctx.fig5_ms() {
+        let key = crate::runtime::OpKey::new("fig5_gemm1", &[("m", m as i64), ("k", k)]);
+        if !ctx.manifest.contains(&key) {
+            continue; // gemm micro-ops capped at m<=2048 in aot.py
+        }
+        let mi = m as i64;
+        let a: Vec<f64> = (0..m * m).map(|_| rng.gaussian()).collect();
+        let mk: Vec<f64> = (0..m * 32).map(|_| rng.gaussian()).collect();
+        let m2k: Vec<f64> = (0..m * 64).map(|_| rng.gaussian()).collect();
+        let ab = ctx.dev.upload(a, &[m, m]);
+        let vb = ctx.dev.upload(mk.clone(), &[m, 32]);
+        let yb = ctx.dev.upload(mk.clone(), &[m, 32]);
+        let xb = ctx.dev.upload(mk.clone(), &[m, 32]);
+        let ub = ctx.dev.upload(mk, &[m, 32]);
+        let pb = ctx.dev.upload(m2k.clone(), &[m, 64]);
+        let qb = ctx.dev.upload(m2k, &[m, 64]);
+        // non-merged: TWO separate gemm calls (eq. 4)
+        let t2 = time_median(ctx.reps, || {
+            let u1 = ctx.dev.op("rank_update", &[("m", mi), ("k", k)], &[ab, vb, yb]);
+            let u2 = ctx.dev.op("rank_update", &[("m", mi), ("k", k)], &[u1, xb, ub]);
+            ctx.dev.sync().unwrap();
+            ctx.dev.free(u1);
+            ctx.dev.free(u2);
+        });
+        let t1 = time_median(ctx.reps, || {
+            let o = ctx
+                .dev
+                .op("fig5_gemm1_xla", &[("m", mi), ("k", k)], &[ab, pb, qb]);
+            ctx.dev.sync().unwrap();
+            ctx.dev.free(o);
+        });
+        let tp = time_median(ctx.reps, || {
+            let o = ctx
+                .dev
+                .op("fig5_gemm1", &[("m", mi), ("k", k)], &[ab, pb, qb]);
+            ctx.dev.sync().unwrap();
+            ctx.dev.free(o);
+        });
+        println!(
+            "  m={m:>5}: gemm x2 {:8.2} ms | merged x1 {:8.2} ms (speedup {:4.2}x) | pallas kernel {:8.2} ms",
+            t2 * 1e3,
+            t1 * 1e3,
+            t2 / t1,
+            tp * 1e3
+        );
+        for b in [ab, vb, yb, xb, ub, pb, qb] {
+            ctx.dev.free(b);
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 6: gebrd — ours (merged) vs non-merged device (rocSOLVER-style)
+/// vs MAGMA-sim hybrid. GFLOP/s + speedups.
+pub fn fig6(ctx: &Ctx) -> Result<()> {
+    header("Fig. 6 — gebrd: ours vs rocSOLVER-sim vs MAGMA-sim (GFLOP/s)");
+    for n in ctx.square_sizes() {
+        let a = generate(MatrixKind::Random, n, n, 1.0, 6);
+        let b = ctx.cfg.block;
+        let t_ours = time_median(ctx.reps, || {
+            let ab = ctx.dev.upload(a.data.clone(), &[n, n]);
+            gebrd_device_with(&ctx.dev, ab, n, n, b, "gebrd_update_xla").unwrap();
+            ctx.dev.sync().unwrap();
+        });
+        let t_roc = time_median(ctx.reps, || {
+            let ab = ctx.dev.upload(a.data.clone(), &[n, n]);
+            gebrd_device_with(&ctx.dev, ab, n, n, b, "gebrd_update2_ws").unwrap();
+            ctx.dev.sync().unwrap();
+        });
+        let mut prof = crate::coordinator::PhaseProfile::default();
+        let t_magma = time_median(1, || {
+            prof = crate::coordinator::PhaseProfile::default();
+            crate::svd::baselines::magma_sim::gebrd_hybrid(&ctx.dev, &a, b, &mut prof).unwrap();
+        });
+        let f = gebrd_flops(n, n);
+        println!(
+            "  n={n:>5}: ours {:7.2} | rocSOLVER-sim {:7.2} (x{:4.2}) | MAGMA-sim {:7.2} (x{:4.2})",
+            gflops(f, t_ours),
+            gflops(f, t_roc),
+            t_roc / t_ours,
+            gflops(f, t_magma),
+            t_magma / t_ours
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,207 @@
+//! Figures 13-16: QR factorisation / Q generation / back-transforms —
+//! block-size tuning and modified-CWY vs classic vs MAGMA-hybrid.
+
+use anyhow::Result;
+
+use crate::bench_harness::{gflops, header, qr_flops, time_median, Ctx};
+use crate::coordinator::PhaseProfile;
+use crate::gen::{generate, MatrixKind};
+use crate::svd::baselines::magma_sim;
+use crate::svd::qr::{
+    geqrf_device_with, orgqr_device_with, ormlq_device_with, ormqr_device_with,
+};
+
+/// Fig. 13: geqrf / orgqr block-size tuning on the TS tuning shape.
+pub fn fig13(ctx: &Ctx) -> Result<()> {
+    header("Fig. 13 — geqrf/orgqr block-size tuning (seconds)");
+    let shapes: Vec<(usize, usize)> = ctx
+        .ts_shapes()
+        .into_iter()
+        .filter(|&(m, n)| ctx.blocks_for("geqrf_step", m, n).len() > 1)
+        .collect();
+    let shapes = if shapes.is_empty() {
+        ctx.ts_shapes().into_iter().take(1).collect()
+    } else {
+        shapes
+    };
+    for (m, n) in shapes {
+        let a = generate(MatrixKind::Random, m, n, 1.0, 13);
+        print!("  geqrf {m}x{n}:");
+        for b in ctx.blocks_for("geqrf_step", m, n) {
+            let t = time_median(ctx.reps, || {
+                let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
+                let f = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
+                ctx.dev.sync().unwrap();
+                ctx.dev.free(f.afac);
+            });
+            print!("  b={b}: {:7.3}s", t);
+        }
+        println!();
+        print!("  orgqr {m}x{n}:");
+        for b in ctx.blocks_for("orgqr_step", m, n) {
+            let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
+            let f = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
+            let t = time_median(ctx.reps, || {
+                let q = orgqr_device_with(&ctx.dev, &f, m, n, b, "orgqr_step").unwrap();
+                ctx.dev.sync().unwrap();
+                ctx.dev.free(q);
+            });
+            ctx.dev.free(f.afac);
+            print!("  b={b}: {:7.3}s", t);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Fig. 14: geqrf / orgqr — ours (modified CWY) vs classic-CWY
+/// (rocSOLVER/LAPACK-style) vs MAGMA-sim hybrid.
+pub fn fig14(ctx: &Ctx) -> Result<()> {
+    header("Fig. 14 — geqrf/orgqr: ours vs classic vs MAGMA-sim (GFLOP/s)");
+    for (m, n) in ctx.ts_shapes() {
+        let a = generate(MatrixKind::Random, m, n, 1.0, 14);
+        let b = ctx.cfg.block;
+        let f = qr_flops(m, n);
+        let t_ours = time_median(ctx.reps, || {
+            let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
+            let fq = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
+            ctx.dev.sync().unwrap();
+            ctx.dev.free(fq.afac);
+        });
+        let t_classic = time_median(ctx.reps, || {
+            let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
+            let fq = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step_classic").unwrap();
+            ctx.dev.sync().unwrap();
+            ctx.dev.free(fq.afac);
+        });
+        let t_magma = time_median(1, || {
+            let mut prof = PhaseProfile::default();
+            magma_sim::geqrf_hybrid(&ctx.dev, &a, b, &mut prof).unwrap();
+        });
+        println!(
+            "  geqrf {m:>5}x{n:<5}: ours {:7.2} | classic {:7.2} (x{:4.2}) | MAGMA-sim {:7.2} (x{:4.2})",
+            gflops(f, t_ours),
+            gflops(f, t_classic),
+            t_classic / t_ours,
+            gflops(f, t_magma),
+            t_magma / t_ours
+        );
+
+        // orgqr comparison over the same factor
+        let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
+        let fq = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
+        let t_oours = time_median(ctx.reps, || {
+            let q = orgqr_device_with(&ctx.dev, &fq, m, n, b, "orgqr_step").unwrap();
+            ctx.dev.sync().unwrap();
+            ctx.dev.free(q);
+        });
+        let t_oclassic = time_median(ctx.reps, || {
+            let q = orgqr_device_with(&ctx.dev, &fq, m, n, b, "orgqr_step_classic").unwrap();
+            ctx.dev.sync().unwrap();
+            ctx.dev.free(q);
+        });
+        ctx.dev.free(fq.afac);
+        println!(
+            "  orgqr {m:>5}x{n:<5}: ours {:7.3}s | classic {:7.3}s (x{:4.2})",
+            t_oours,
+            t_oclassic,
+            t_oclassic / t_oours
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 15: ormqr/ormlq block-size tuning (square shapes).
+pub fn fig15(ctx: &Ctx) -> Result<()> {
+    header("Fig. 15 — ormqr/ormlq block-size tuning (seconds)");
+    for n in ctx.square_sizes() {
+        let blocks = ctx.blocks_for("ormqr_step", n, n);
+        if blocks.len() <= 1 {
+            continue;
+        }
+        let a = generate(MatrixKind::Random, n, n, 1.0, 15);
+        let fac = crate::linalg::gebrd_cpu::gebrd(a, 32);
+        let afac = ctx.dev.upload(fac.a.data.clone(), &[n, n]);
+        print!("  ormqr n={n}:");
+        for b in blocks.clone() {
+            let t = time_median(ctx.reps, || {
+                let c = ctx.dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+                let c = ormqr_device_with(&ctx.dev, afac, &fac.tauq, c, n, n, b, "ormqr_step")
+                    .unwrap();
+                ctx.dev.sync().unwrap();
+                ctx.dev.free(c);
+            });
+            print!("  b={b}: {t:7.3}s");
+        }
+        println!();
+        print!("  ormlq n={n}:");
+        for b in blocks {
+            let t = time_median(ctx.reps, || {
+                let c = ctx.dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+                let c = ormlq_device_with(&ctx.dev, afac, &fac.taup, c, n, n, b, "ormlq_step")
+                    .unwrap();
+                ctx.dev.sync().unwrap();
+                ctx.dev.free(c);
+            });
+            print!("  b={b}: {t:7.3}s");
+        }
+        println!();
+        ctx.dev.free(afac);
+    }
+    Ok(())
+}
+
+/// Fig. 16: ormqr/ormlq — ours vs classic vs MAGMA-sim hybrid.
+pub fn fig16(ctx: &Ctx) -> Result<()> {
+    header("Fig. 16 — ormqr/ormlq: ours vs classic vs MAGMA-sim (seconds)");
+    for n in ctx.square_sizes() {
+        let b = ctx.cfg.block;
+        let a = generate(MatrixKind::Random, n, n, 1.0, 16);
+        let fac = crate::linalg::gebrd_cpu::gebrd(a, b);
+        let afac = ctx.dev.upload(fac.a.data.clone(), &[n, n]);
+        for (name, step, row_ref) in [
+            ("ormqr", "ormqr_step", false),
+            ("ormlq", "ormlq_step", true),
+        ] {
+            let taus = if row_ref { &fac.taup } else { &fac.tauq };
+            let t_ours = time_median(ctx.reps, || {
+                let c = ctx.dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+                let c = if row_ref {
+                    ormlq_device_with(&ctx.dev, afac, taus, c, n, n, b, step).unwrap()
+                } else {
+                    ormqr_device_with(&ctx.dev, afac, taus, c, n, n, b, step).unwrap()
+                };
+                ctx.dev.sync().unwrap();
+                ctx.dev.free(c);
+            });
+            let classic = format!("{step}_classic");
+            let t_classic = time_median(ctx.reps, || {
+                let c = ctx.dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+                let c = if row_ref {
+                    ormlq_device_with(&ctx.dev, afac, taus, c, n, n, b, &classic).unwrap()
+                } else {
+                    ormqr_device_with(&ctx.dev, afac, taus, c, n, n, b, &classic).unwrap()
+                };
+                ctx.dev.sync().unwrap();
+                ctx.dev.free(c);
+            });
+            let t_magma = time_median(1, || {
+                magma_sim::orm_hybrid(
+                    &ctx.dev,
+                    &fac,
+                    crate::matrix::Matrix::eye(n, n),
+                    row_ref,
+                    b,
+                )
+                .unwrap();
+            });
+            println!(
+                "  {name} n={n:>5}: ours {t_ours:7.3}s | classic {t_classic:7.3}s (x{:4.2}) | MAGMA-sim {t_magma:7.3}s (x{:4.2})",
+                t_classic / t_ours,
+                t_magma / t_ours
+            );
+        }
+        ctx.dev.free(afac);
+    }
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Figures 17-20: end-to-end SVD — accuracy, phase profiles, performance
+//! and m/n-ratio sweeps across all solvers.
+
+use anyhow::Result;
+
+use crate::bench_harness::{header, Ctx};
+use crate::config::Solver;
+use crate::gen::{generate, MatrixKind};
+use crate::svd::{e_sigma, e_svd, gesvd};
+
+const SOLVERS: [Solver; 3] = [Solver::RocSolverSim, Solver::MagmaSim, Solver::Ours];
+
+/// Fig. 17: accuracy E_sigma / E_svd across types and condition numbers.
+pub fn fig17(ctx: &Ctx) -> Result<()> {
+    header("Fig. 17 — accuracy: E_sigma (vs LAPACK-ref) and E_svd");
+    // rocSOLVER-sim's O(12 n^3) rotation stream makes large-n accuracy
+    // sweeps impractical on this substrate; n=128 suffices for E_sigma/E_svd.
+    let n = ctx.square_sizes()[0];
+    let ts = ctx.ts_shapes().first().copied();
+    let mut shapes = vec![(n, n)];
+    if let Some(t) = ts {
+        shapes.push(t);
+    }
+    for (m, nn) in shapes {
+        for kind in MatrixKind::ALL {
+            for theta in [1e2, 1e4, 1e6, 1e8] {
+                if kind == MatrixKind::Random && theta != 1e2 {
+                    continue; // condition number not a parameter for random
+                }
+                let a = generate(kind, m, nn, theta, 17);
+                let reference = gesvd(&ctx.dev, &a, &ctx.cfg, Solver::LapackRef)?;
+                print!(
+                    "  {:>12} {m:>5}x{nn:<4} theta={theta:>7.0e}:",
+                    kind.name()
+                );
+                for s in SOLVERS {
+                    let r = gesvd(&ctx.dev, &a, &ctx.cfg, s)?;
+                    print!(
+                        "  {} Es={:.1e} Ev={:.1e}",
+                        s.name(),
+                        e_sigma(&reference.sigma, &r.sigma),
+                        e_svd(&a, &r)
+                    );
+                }
+                println!();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 18: phase time distribution per solver.
+pub fn fig18(ctx: &Ctx) -> Result<()> {
+    header("Fig. 18 — SVD phase distribution (% of solve)");
+    let mut shapes: Vec<(usize, usize)> = ctx.square_sizes().iter().map(|&n| (n, n)).collect();
+    shapes.extend(ctx.ts_shapes());
+    for (m, n) in shapes {
+        let a = generate(MatrixKind::Random, m, n, 1.0, 18);
+        for s in SOLVERS {
+            if s == Solver::RocSolverSim && n.max(m / 4) > 256 {
+                println!("  {:>13} {m:>5}x{n:<5}: skipped (bdcqr rotation stream impractical at this size — the paper's 1293x pathology)", s.name());
+                continue;
+            }
+            if s != Solver::RocSolverSim {
+                let _ = gesvd(&ctx.dev, &a, &ctx.cfg, s)?; // warm cache
+            }
+            let r = gesvd(&ctx.dev, &a, &ctx.cfg, s)?;
+            let total = r.profile.total().max(1e-12);
+            print!("  {:>13} {m:>5}x{n:<5} ({total:8.3}s):", s.name());
+            for phase in &r.profile.order {
+                let t = r.profile.get(phase);
+                if t / total > 0.005 {
+                    print!(" {phase} {:4.1}%", 100.0 * t / total);
+                }
+            }
+            println!();
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 19: end-to-end SVD performance + speedups over the baselines.
+pub fn fig19(ctx: &Ctx) -> Result<()> {
+    header("Fig. 19 — end-to-end SVD (seconds; speedups vs ours)");
+    let mut shapes: Vec<(usize, usize)> = ctx.square_sizes().iter().map(|&n| (n, n)).collect();
+    shapes.extend(ctx.ts_shapes());
+    for (m, n) in shapes {
+        let a = generate(MatrixKind::Random, m, n, 1.0, 19);
+        let mut ours = 0.0;
+        let mut row = format!("  {m:>5} x {n:<5}:");
+        for s in [Solver::Ours, Solver::RocSolverSim, Solver::MagmaSim] {
+            if s == Solver::RocSolverSim && n > 256 {
+                row.push_str("  rocsolver-sim: skipped (impractical)");
+                continue;
+            }
+            if s != Solver::RocSolverSim {
+                // warm the per-shape executable cache (long-lived library
+                // semantics); the rotation-stream path is timed cold since
+                // its cost is workload- not compile-dominated
+                let _ = gesvd(&ctx.dev, &a, &ctx.cfg, s)?;
+            }
+            let t0 = std::time::Instant::now();
+            let _ = gesvd(&ctx.dev, &a, &ctx.cfg, s)?;
+            let t = t0.elapsed().as_secs_f64();
+            if s == Solver::Ours {
+                ours = t;
+                row.push_str(&format!("  ours {t:8.3}s"));
+            } else {
+                row.push_str(&format!(
+                    "  {} {t:8.3}s (x{:5.2})",
+                    s.name(),
+                    t / ours.max(1e-12)
+                ));
+            }
+        }
+        println!("{row}");
+    }
+    Ok(())
+}
+
+/// Fig. 20: m/n ratio sweep.
+pub fn fig20(ctx: &Ctx) -> Result<()> {
+    header("Fig. 20 — SVD vs m/n ratio (seconds; speedups vs ours)");
+    let shapes = ctx.ts_shapes();
+    for ratio in [4usize, 8, 16] {
+        for &(m, n) in &shapes {
+            if m / n != ratio || m % n != 0 {
+                continue;
+            }
+            let a = generate(MatrixKind::Random, m, n, 1.0, 20);
+            let _ = gesvd(&ctx.dev, &a, &ctx.cfg, Solver::Ours)?; // warm
+            let t0 = std::time::Instant::now();
+            let _ = gesvd(&ctx.dev, &a, &ctx.cfg, Solver::Ours)?;
+            let ours = t0.elapsed().as_secs_f64();
+            let roc = if n <= 256 {
+                let t1 = std::time::Instant::now();
+                let _ = gesvd(&ctx.dev, &a, &ctx.cfg, Solver::RocSolverSim)?;
+                t1.elapsed().as_secs_f64()
+            } else {
+                f64::NAN // impractical at this size (see fig19 note)
+            };
+            let _ = gesvd(&ctx.dev, &a, &ctx.cfg, Solver::MagmaSim)?; // warm
+            let t2 = std::time::Instant::now();
+            let _ = gesvd(&ctx.dev, &a, &ctx.cfg, Solver::MagmaSim)?;
+            let mag = t2.elapsed().as_secs_f64();
+            println!(
+                "  m/n={ratio:>2} ({m:>5}x{n:<4}): ours {ours:8.3}s | rocSOLVER-sim x{:5.2} | MAGMA-sim x{:5.2}",
+                roc / ours,
+                mag / ours
+            );
+        }
+    }
+    Ok(())
+}

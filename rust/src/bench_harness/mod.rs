@@ -1,0 +1,193 @@
+//! Paper figure/table regenerators (DESIGN.md §Experiment-index).
+//!
+//! Each `figNN` prints the same rows/series the paper reports — absolute
+//! numbers differ (CPU PJRT substrate), but the comparisons' *shape*
+//! (who wins, by what factor, where crossovers fall) is the reproduction
+//! target. All figures respect the shapes actually present in the
+//! artifact manifest, so `--quick` artifact sets run a reduced sweep.
+
+pub mod figs_bdc;
+pub mod figs_gebrd;
+pub mod figs_qr;
+pub mod figs_svd;
+
+use crate::config::Config;
+use crate::runtime::registry::Manifest;
+use crate::runtime::Device;
+
+/// Median-of-reps timing.
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut ts = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        ts.push(t0.elapsed().as_secs_f64());
+    }
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+/// 8/3 n^3 — the gebrd / BDC flop convention the paper uses.
+pub fn gebrd_flops(m: usize, n: usize) -> f64 {
+    let (m, n) = (m as f64, n as f64);
+    4.0 * n * n * (m - n / 3.0)
+}
+
+pub fn qr_flops(m: usize, n: usize) -> f64 {
+    let (m, n) = (m as f64, n as f64);
+    2.0 * n * n * (m - n / 3.0)
+}
+
+pub struct Ctx {
+    pub dev: Device,
+    pub cfg: Config,
+    pub manifest: Manifest,
+    /// reps per timing point
+    pub reps: usize,
+}
+
+impl Ctx {
+    pub fn new(dev: Device, cfg: Config, reps: usize) -> anyhow::Result<Ctx> {
+        let manifest = Manifest::load(&cfg.artifacts)?;
+        Ok(Ctx { dev, cfg, manifest, reps })
+    }
+
+    /// Size caps keep the full `cargo bench` run practical on the CPU
+    /// substrate; raise with GCSVD_BENCH_MAX_N / GCSVD_BENCH_MAX_M.
+    fn max_n() -> usize {
+        std::env::var("GCSVD_BENCH_MAX_N")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(512)
+    }
+
+    fn max_m() -> usize {
+        std::env::var("GCSVD_BENCH_MAX_M")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2048)
+    }
+
+    /// Square sizes with full op coverage in the manifest (ascending).
+    pub fn square_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .keys_for("labrd")
+            .into_iter()
+            .filter(|k| k.params["m"] == k.params["n"] && k.params["b"] == 32)
+            .map(|k| k.params["n"] as usize)
+            .filter(|&n| n <= Self::max_n())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Tall-skinny (m, n) pairs in the manifest.
+    pub fn ts_shapes(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .manifest
+            .keys_for("labrd")
+            .into_iter()
+            .filter(|k| k.params["m"] > k.params["n"] && k.params["b"] == 32)
+            .map(|k| (k.params["m"] as usize, k.params["n"] as usize))
+            .filter(|&(m, _)| m <= Self::max_m())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Block sizes available for an op at shape (m, n).
+    pub fn blocks_for(&self, op: &str, m: usize, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .keys_for(op)
+            .into_iter()
+            .filter(|k| k.params["m"] == m as i64 && k.params["n"] == n as i64)
+            .map(|k| k.params["b"] as usize)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn fig5_ms(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .keys_for("fig5_gemv2")
+            .into_iter()
+            .map(|k| k.params["m"] as usize)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Run one figure by id; "all" runs the full set.
+pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
+    let all = which == "all";
+    if all || which == "fig4" {
+        figs_gebrd::fig4(ctx)?;
+    }
+    if all || which == "fig5a" {
+        figs_gebrd::fig5a(ctx)?;
+    }
+    if all || which == "fig5b" {
+        figs_gebrd::fig5b(ctx)?;
+    }
+    if all || which == "fig6" {
+        figs_gebrd::fig6(ctx)?;
+    }
+    if all || which == "fig7" {
+        figs_bdc::fig7(ctx)?;
+    }
+    if all || which == "fig8" {
+        figs_bdc::fig8(ctx)?;
+    }
+    if all || which == "fig9" {
+        figs_bdc::fig9(ctx)?;
+    }
+    if all || which == "fig10" {
+        figs_bdc::fig10(ctx)?;
+    }
+    if all || which == "fig11" {
+        figs_bdc::fig11(ctx)?;
+    }
+    if all || which == "fig12" {
+        figs_bdc::fig12(ctx)?;
+    }
+    if all || which == "fig13" {
+        figs_qr::fig13(ctx)?;
+    }
+    if all || which == "fig14" {
+        figs_qr::fig14(ctx)?;
+    }
+    if all || which == "fig15" {
+        figs_qr::fig15(ctx)?;
+    }
+    if all || which == "fig16" {
+        figs_qr::fig16(ctx)?;
+    }
+    if all || which == "fig17" {
+        figs_svd::fig17(ctx)?;
+    }
+    if all || which == "fig18" {
+        figs_svd::fig18(ctx)?;
+    }
+    if all || which == "fig19" {
+        figs_svd::fig19(ctx)?;
+    }
+    if all || which == "fig20" {
+        figs_svd::fig20(ctx)?;
+    }
+    Ok(())
+}

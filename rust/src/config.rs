@@ -1,0 +1,103 @@
+//! Runtime configuration shared by the CLI, benches and examples.
+
+use std::path::PathBuf;
+
+/// Which diagonalisation engine a solve uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Solver {
+    /// The paper's method: GPU-centered phases + the new GPU-based BDC.
+    Ours,
+    /// rocSOLVER/cuSOLVER analogue: device phases, QR-iteration bdsqr.
+    RocSolverSim,
+    /// MAGMA analogue: hybrid CPU panels + device updates, CPU bdsdc.
+    MagmaSim,
+    /// Gates et al. [12]: BDC with only the lasd3 gemms on the device.
+    BdcV1,
+    /// Pure-CPU LAPACK-style reference (gebrd + bdsqr + orm*).
+    LapackRef,
+}
+
+impl Solver {
+    pub fn parse(s: &str) -> Option<Solver> {
+        match s {
+            "ours" => Some(Solver::Ours),
+            "rocsolver" | "rocsolver-sim" | "cusolver" => Some(Solver::RocSolverSim),
+            "magma" | "magma-sim" => Some(Solver::MagmaSim),
+            "bdc-v1" | "bdcv1" => Some(Solver::BdcV1),
+            "lapack" | "lapack-ref" => Some(Solver::LapackRef),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Solver::Ours => "ours",
+            Solver::RocSolverSim => "rocsolver-sim",
+            Solver::MagmaSim => "magma-sim",
+            Solver::BdcV1 => "bdc-v1",
+            Solver::LapackRef => "lapack-ref",
+        }
+    }
+}
+
+/// Global knobs. Field defaults mirror the paper's tuned values.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Directory holding the AOT artifacts + manifest.
+    pub artifacts: PathBuf,
+    /// gebrd/geqrf/orm* block size (paper Fig. 4/13/15 tuning; 32 default).
+    pub block: usize,
+    /// BDC leaf size (paper: 32).
+    pub leaf: usize,
+    /// CPU threads for the secular solver.
+    pub threads: usize,
+    /// Use the Pallas merged-update kernel ('pallas') or the XLA-dot
+    /// analogue of a vendor BLAS ('xla').
+    pub kernel: String,
+    /// Simulated PCIe model for baseline transfer accounting.
+    pub transfer: crate::runtime::transfer::TransferModel,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts: artifacts_dir(),
+            block: 32,
+            leaf: 32,
+            threads: std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(4),
+            kernel: "xla".to_string(),
+            transfer: Default::default(),
+        }
+    }
+}
+
+/// Locate the artifacts directory: $GCSVD_ARTIFACTS or ./artifacts relative
+/// to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("GCSVD_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solver_parse_roundtrip() {
+        for s in [
+            Solver::Ours,
+            Solver::RocSolverSim,
+            Solver::MagmaSim,
+            Solver::BdcV1,
+            Solver::LapackRef,
+        ] {
+            assert_eq!(Solver::parse(s.name()), Some(s));
+        }
+        assert_eq!(Solver::parse("nope"), None);
+    }
+}

@@ -1,0 +1,95 @@
+//! Coordinator: phase profiles and solve-level orchestration metrics.
+//!
+//! Every solver reports a [`PhaseProfile`] with the same phase names the
+//! paper uses (Fig. 1 / Fig. 18): `geqrf`, `orgqr`, `gebrd`, `bdcdc` (or
+//! `bdcqr`), `ormqr+ormlq`, `gemm` — which the bench harness turns into
+//! the stacked-distribution figures.
+
+use std::collections::BTreeMap;
+
+/// Named phase timings plus transfer accounting.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseProfile {
+    pub phases: BTreeMap<String, f64>,
+    pub order: Vec<String>,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub modelled_transfer_sec: f64,
+    /// Location trace for Fig.-1-style output: phase -> "gpu"|"cpu"|"hybrid"
+    pub location: BTreeMap<String, &'static str>,
+}
+
+impl PhaseProfile {
+    pub fn record(&mut self, phase: &str, secs: f64, location: &'static str) {
+        if !self.phases.contains_key(phase) {
+            self.order.push(phase.to_string());
+        }
+        *self.phases.entry(phase.to_string()).or_default() += secs;
+        self.location.insert(phase.to_string(), location);
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.values().sum()
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.phases.get(phase).copied().unwrap_or(0.0)
+    }
+
+    /// Render the paper-style profile rows: phase, seconds, share, where.
+    pub fn table(&self) -> String {
+        let total = self.total().max(1e-12);
+        let mut out = String::new();
+        for p in &self.order {
+            let t = self.phases[p];
+            out.push_str(&format!(
+                "{:>14}  {:>9.4}s  {:>5.1}%  [{}]\n",
+                p,
+                t,
+                100.0 * t / total,
+                self.location.get(p).copied().unwrap_or("?")
+            ));
+        }
+        out.push_str(&format!("{:>14}  {:>9.4}s\n", "total", total));
+        out
+    }
+}
+
+/// Time a closure into a profile phase.
+pub fn timed<T>(
+    profile: &mut PhaseProfile,
+    phase: &str,
+    location: &'static str,
+    f: impl FnOnce() -> T,
+) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    profile.record(phase, t0.elapsed().as_secs_f64(), location);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_accumulates() {
+        let mut p = PhaseProfile::default();
+        p.record("gebrd", 1.0, "gpu");
+        p.record("bdcdc", 3.0, "hybrid");
+        p.record("gebrd", 1.0, "gpu");
+        assert_eq!(p.get("gebrd"), 2.0);
+        assert_eq!(p.total(), 5.0);
+        assert_eq!(p.order, vec!["gebrd", "bdcdc"]);
+        let t = p.table();
+        assert!(t.contains("gebrd") && t.contains("40.0%"));
+    }
+
+    #[test]
+    fn timed_runs_closure() {
+        let mut p = PhaseProfile::default();
+        let v = timed(&mut p, "x", "cpu", || 42);
+        assert_eq!(v, 42);
+        assert!(p.get("x") >= 0.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! # gcsvd — GPU-centered Singular Value Decomposition
+//!
+//! A three-layer reproduction of *“Efficient GPU-Centered Singular Value
+//! Decomposition Using the Divide-and-Conquer Method”* (Liu et al., 2025):
+//!
+//! * **L3 (this crate)** — the coordinator: phase scheduling, the bidiagonal
+//!   divide-and-conquer (BDC) tree with CPU/device asynchronous overlap,
+//!   deflation, the secular-equation solver, baselines, benchmarks and CLI.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs for every
+//!   device-side operation (panel reductions, merged-rank-(2b) updates,
+//!   modified-CWY QR steps, BDC vector updates), AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the paper's two
+//!   custom-kernel hot spots: the merged trailing update and the fused
+//!   secular-vector stage.
+//!
+//! The "GPU" is a PJRT device (CPU plugin in this environment — see
+//! DESIGN.md §Hardware-substitution); matrices live in device buffers that
+//! are chained between compiled executables without host round-trips,
+//! mirroring the paper's elimination of CPU↔GPU matrix transfers.
+
+pub mod bdc;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod gen;
+pub mod linalg;
+pub mod matrix;
+pub mod runtime;
+pub mod svd;
+pub mod util;
+
+pub use matrix::Matrix;

@@ -1,0 +1,247 @@
+//! Minimal BLAS subset used by the CPU-side algorithms and baselines.
+//!
+//! `gemm` is cache-blocked with a transposed-B micro layout; it is not
+//! competitive with a vendor BLAS but is good enough for CPU panels and
+//! reference solvers (the device side uses XLA's gemm).
+
+use crate::matrix::Matrix;
+
+/// y += alpha * A x (A: m x n).
+pub fn gemv(a: &Matrix, x: &[f64], y: &mut [f64], alpha: f64) {
+    assert_eq!(x.len(), a.cols);
+    assert_eq!(y.len(), a.rows);
+    for i in 0..a.rows {
+        let row = a.row(i);
+        let mut acc = 0.0;
+        for j in 0..a.cols {
+            acc += row[j] * x[j];
+        }
+        y[i] += alpha * acc;
+    }
+}
+
+/// y += alpha * A^T x (A: m x n, x: m, y: n).
+pub fn gemv_t(a: &Matrix, x: &[f64], y: &mut [f64], alpha: f64) {
+    assert_eq!(x.len(), a.rows);
+    assert_eq!(y.len(), a.cols);
+    for i in 0..a.rows {
+        let row = a.row(i);
+        let xi = alpha * x[i];
+        if xi != 0.0 {
+            for j in 0..a.cols {
+                y[j] += row[j] * xi;
+            }
+        }
+    }
+}
+
+/// C += alpha * A B (A: m x k, B: k x n). Cache-blocked.
+pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    const MC: usize = 64;
+    const NC: usize = 64;
+    const KC: usize = 64;
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    for i0 in (0..m).step_by(MC) {
+        let im = (i0 + MC).min(m);
+        for k0 in (0..k).step_by(KC) {
+            let km = (k0 + KC).min(k);
+            for j0 in (0..n).step_by(NC) {
+                let jm = (j0 + NC).min(n);
+                for i in i0..im {
+                    let arow = a.row(i);
+                    let crow = c.row_mut(i);
+                    for kk in k0..km {
+                        let aik = alpha * arow[kk];
+                        if aik != 0.0 {
+                            let brow = b.row(kk);
+                            for j in j0..jm {
+                                crow[j] += aik * brow[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C += alpha * A B^T (A: m x k, B: n x k).
+pub fn gemm_nt(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.rows {
+            let brow = b.row(j);
+            let mut acc = 0.0;
+            for kk in 0..a.cols {
+                acc += arow[kk] * brow[kk];
+            }
+            crow[j] += alpha * acc;
+        }
+    }
+}
+
+/// C += alpha * A^T B (A: k x m, B: k x n).
+pub fn gemm_tn(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(c.rows, a.cols);
+    assert_eq!(c.cols, b.cols);
+    for kk in 0..a.rows {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for i in 0..a.cols {
+            let aik = alpha * arow[i];
+            if aik != 0.0 {
+                let crow = c.row_mut(i);
+                for j in 0..b.cols {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: C = A B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    gemm(a, b, &mut c, 1.0);
+    c
+}
+
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+pub fn nrm2(x: &[f64]) -> f64 {
+    // two-pass scaled norm, dlassq-style, to avoid overflow
+    let amax = x.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+    if amax == 0.0 {
+        return 0.0;
+    }
+    let s: f64 = x.iter().map(|&v| (v / amax) * (v / amax)).sum();
+    amax * s.sqrt()
+}
+
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Solve R w = z in place for upper-triangular R (trsm with one rhs column
+/// at a time). `trans` solves R^T w = z instead.
+pub fn trsv_upper(r: &Matrix, z: &mut [f64], trans: bool) {
+    let n = r.rows;
+    assert_eq!(r.cols, n);
+    assert_eq!(z.len(), n);
+    if !trans {
+        for i in (0..n).rev() {
+            let mut acc = z[i];
+            for j in i + 1..n {
+                acc -= r.at(i, j) * z[j];
+            }
+            z[i] = acc / r.at(i, i);
+        }
+    } else {
+        for i in 0..n {
+            let mut acc = z[i];
+            for j in 0..i {
+                acc -= r.at(j, i) * z[j];
+            }
+            z[i] = acc / r.at(i, i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randm(r: &mut Rng, m: usize, n: usize) -> Matrix {
+        Matrix::from_fn(m, n, |_, _| r.gaussian())
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut r = Rng::new(1);
+        let a = randm(&mut r, 70, 33);
+        let b = randm(&mut r, 33, 91);
+        let c = matmul(&a, &b);
+        for &(i, j) in &[(0, 0), (69, 90), (35, 45), (12, 3)] {
+            let want = dot(&a.row(i).to_vec(), &b.col(j));
+            assert!((c.at(i, j) - want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gemm_variants_consistent() {
+        let mut r = Rng::new(2);
+        let a = randm(&mut r, 20, 15);
+        let b = randm(&mut r, 15, 10);
+        let c0 = matmul(&a, &b);
+        // A B = (A^T)^T B via gemm_tn
+        let mut c1 = Matrix::zeros(20, 10);
+        gemm_tn(&a.transpose(), &b, &mut c1, 1.0);
+        assert!(c0.max_diff(&c1) < 1e-12);
+        // A B = A (B^T)^T via gemm_nt
+        let mut c2 = Matrix::zeros(20, 10);
+        gemm_nt(&a, &b.transpose(), &mut c2, 1.0);
+        assert!(c0.max_diff(&c2) < 1e-12);
+    }
+
+    #[test]
+    fn gemv_consistent_with_gemm() {
+        let mut r = Rng::new(3);
+        let a = randm(&mut r, 9, 7);
+        let x: Vec<f64> = (0..7).map(|_| r.gaussian()).collect();
+        let mut y = vec![0.0; 9];
+        gemv(&a, &x, &mut y, 1.0);
+        let xm = Matrix::from_rows(7, 1, x.clone());
+        let want = matmul(&a, &xm);
+        assert!(crate::util::max_abs_diff(&y, &want.data) < 1e-12);
+
+        let mut yt = vec![0.0; 7];
+        gemv_t(&a, &y, &mut yt, 1.0);
+        let want_t = matmul(&a.transpose(), &Matrix::from_rows(9, 1, y));
+        assert!(crate::util::max_abs_diff(&yt, &want_t.data) < 1e-12);
+    }
+
+    #[test]
+    fn nrm2_no_overflow() {
+        let x = vec![1e200, 1e200];
+        assert!((nrm2(&x) - 1e200 * 2f64.sqrt()).abs() / 1e200 < 1e-14);
+        assert_eq!(nrm2(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn trsv_solves() {
+        let mut rng = Rng::new(4);
+        let n = 8;
+        let mut r = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = rng.gaussian();
+            }
+            r[(i, i)] += 4.0;
+        }
+        let w: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        // z = R w; solve back
+        let mut z = vec![0.0; n];
+        gemv(&r, &w, &mut z, 1.0);
+        trsv_upper(&r, &mut z, false);
+        assert!(crate::util::max_abs_diff(&z, &w) < 1e-10);
+        // transposed
+        let mut z2 = vec![0.0; n];
+        gemv(&r.transpose(), &w, &mut z2, 1.0);
+        trsv_upper(&r, &mut z2, true);
+        assert!(crate::util::max_abs_diff(&z2, &w) < 1e-10);
+    }
+}

@@ -1,0 +1,68 @@
+//! Givens rotations (LAPACK dlartg conventions).
+
+/// Compute (c, s, r) with [c s; -s c]^T [f; g] = [r; 0], i.e.
+/// c*f + s*g = r and -s*f + c*g = 0.
+pub fn lartg(f: f64, g: f64) -> (f64, f64, f64) {
+    if g == 0.0 {
+        (1.0, 0.0, f)
+    } else if f == 0.0 {
+        (0.0, 1.0, g)
+    } else {
+        let r = f.hypot(g);
+        let r = if f >= 0.0 { r } else { -r };
+        (f / r, g / r, r)
+    }
+}
+
+/// Apply the rotation to a pair of values: (x, y) -> (c x + s y, -s x + c y).
+#[inline]
+pub fn rot(c: f64, s: f64, x: f64, y: f64) -> (f64, f64) {
+    (c * x + s * y, -s * x + c * y)
+}
+
+/// Apply to two slices element-wise (column rotation).
+pub fn rot_slices(c: f64, s: f64, x: &mut [f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+        let (nx, ny) = rot(c, s, *xi, *yi);
+        *xi = nx;
+        *yi = ny;
+    }
+}
+
+/// A recorded rotation acting on columns (j1, j2) — the unit the BDC and
+/// bdsqr pipelines ship to the device in batches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlaneRot {
+    pub j1: u32,
+    pub j2: u32,
+    pub c: f64,
+    pub s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lartg_annihilates() {
+        for &(f, g) in &[(3.0, 4.0), (-3.0, 4.0), (0.0, 2.0), (2.0, 0.0), (1e-300, 1.0)] {
+            let (c, s, r) = lartg(f, g);
+            let (x, y) = rot(c, s, f, g);
+            assert!((x - r).abs() < 1e-12 * r.abs().max(1.0), "({f},{g})");
+            assert!(y.abs() < 1e-12, "({f},{g}) -> y={y}");
+            assert!((c * c + s * s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rot_slices_orthogonal() {
+        let (c, s, _) = lartg(1.0, 2.0);
+        let mut x = vec![1.0, 0.0, 3.0];
+        let mut y = vec![0.0, 1.0, -1.0];
+        let n0: f64 = x.iter().chain(y.iter()).map(|v| v * v).sum();
+        rot_slices(c, s, &mut x, &mut y);
+        let n1: f64 = x.iter().chain(y.iter()).map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,144 @@
+//! Householder reflector primitives (LAPACK dlarfg/dlarf conventions —
+//! identical to python/compile/kernels/ref.py, enforced by cross-tests).
+
+use crate::linalg::blas;
+use crate::matrix::Matrix;
+
+/// Result of `larfg`: `v` has v[0] == 1; H = I - tau v v^T maps the input
+/// to beta * e_1.
+pub struct Reflector {
+    pub v: Vec<f64>,
+    pub tau: f64,
+    pub beta: f64,
+}
+
+/// LAPACK dlarfg on x (len >= 1).
+pub fn larfg(x: &[f64]) -> Reflector {
+    let alpha = x[0];
+    let xnorm = blas::nrm2(&x[1..]);
+    if xnorm == 0.0 {
+        let mut v = vec![0.0; x.len()];
+        v[0] = 1.0;
+        return Reflector { v, tau: 0.0, beta: alpha };
+    }
+    let sgn = if alpha >= 0.0 { 1.0 } else { -1.0 };
+    let beta = -sgn * alpha.hypot(xnorm);
+    let tau = (beta - alpha) / beta;
+    let scale = 1.0 / (alpha - beta);
+    let mut v = Vec::with_capacity(x.len());
+    v.push(1.0);
+    v.extend(x[1..].iter().map(|&t| t * scale));
+    Reflector { v, tau, beta }
+}
+
+/// A <- (I - tau v v^T) A, applied to rows [r0, r0+v.len()) of A's columns
+/// [c0, c1).
+pub fn larf_left(a: &mut Matrix, v: &[f64], tau: f64, r0: usize, c0: usize, c1: usize) {
+    if tau == 0.0 {
+        return;
+    }
+    let k = v.len();
+    // w = tau * A^T v over the window
+    let mut w = vec![0.0; c1 - c0];
+    for (ir, &vi) in v.iter().enumerate() {
+        if vi != 0.0 {
+            let row = &a.row(r0 + ir)[c0..c1];
+            for (j, &r) in row.iter().enumerate() {
+                w[j] += vi * r;
+            }
+        }
+    }
+    for wj in w.iter_mut() {
+        *wj *= tau;
+    }
+    for ir in 0..k {
+        let vi = v[ir];
+        if vi != 0.0 {
+            let row = &mut a.row_mut(r0 + ir)[c0..c1];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r -= vi * w[j];
+            }
+        }
+    }
+}
+
+/// A <- A (I - tau v v^T), applied to columns [c0, c0+v.len()) of A's rows
+/// [r0, r1).
+pub fn larf_right(a: &mut Matrix, v: &[f64], tau: f64, r0: usize, r1: usize, c0: usize) {
+    if tau == 0.0 {
+        return;
+    }
+    let k = v.len();
+    for i in r0..r1 {
+        let row = &mut a.row_mut(i)[c0..c0 + k];
+        let mut w = 0.0;
+        for (j, &vj) in v.iter().enumerate() {
+            w += row[j] * vj;
+        }
+        w *= tau;
+        for (j, &vj) in v.iter().enumerate() {
+            row[j] -= w * vj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn larfg_annihilates() {
+        let mut r = Rng::new(1);
+        for len in [1usize, 2, 5, 33] {
+            let x: Vec<f64> = (0..len).map(|_| r.gaussian()).collect();
+            let rf = larfg(&x);
+            // H x = beta e1
+            let w = blas::dot(&rf.v, &x) * rf.tau;
+            let hx: Vec<f64> = x
+                .iter()
+                .zip(&rf.v)
+                .map(|(&xi, &vi)| xi - w * vi)
+                .collect();
+            assert!((hx[0] - rf.beta).abs() < 1e-12 * rf.beta.abs().max(1.0));
+            for &t in &hx[1..] {
+                assert!(t.abs() < 1e-12, "tail not annihilated: {t}");
+            }
+            // |beta| = ||x||
+            assert!((rf.beta.abs() - blas::nrm2(&x)).abs() < 1e-12 * blas::nrm2(&x).max(1.0));
+        }
+    }
+
+    #[test]
+    fn larfg_zero_tail() {
+        let rf = larfg(&[3.0, 0.0, 0.0]);
+        assert_eq!(rf.tau, 0.0);
+        assert_eq!(rf.beta, 3.0);
+    }
+
+    #[test]
+    fn larf_left_right_consistent() {
+        let mut rng = Rng::new(2);
+        let mut a = Matrix::from_fn(6, 5, |_, _| rng.gaussian());
+        let a0 = a.clone();
+        let x: Vec<f64> = (0..4).map(|_| rng.gaussian()).collect();
+        let rf = larfg(&x);
+        // left apply on rows 2..6, all columns
+        larf_left(&mut a, &rf.v, rf.tau, 2, 0, 5);
+        // brute force: H = I - tau v v^T acting on the same window
+        let mut h = Matrix::eye(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                h[(i, j)] -= rf.tau * rf.v[i] * rf.v[j];
+            }
+        }
+        let want = blas::matmul(&h, &a0.block(2, 0, 4, 5));
+        assert!(a.block(2, 0, 4, 5).max_diff(&want) < 1e-12);
+
+        // right apply
+        let mut b = a0.clone();
+        larf_right(&mut b, &rf.v, rf.tau, 0, 6, 1);
+        let want_r = blas::matmul(&a0.block(0, 1, 6, 4), &h);
+        assert!(b.block(0, 1, 6, 4).max_diff(&want_r) < 1e-12);
+    }
+}

@@ -1,0 +1,138 @@
+//! One-sided Jacobi SVD (Hestenes) — slow but extremely accurate;
+//! used as an independent oracle in tests and as the related-work
+//! "Jacobi methods" comparator mentioned in the paper's Section 2.
+
+use crate::linalg::blas;
+use crate::matrix::Matrix;
+
+/// Full SVD of A (m x n, m >= n): returns (U m x n, sigma n, V n x n) with
+/// A = U diag(sigma) V^T, sigma descending.
+pub fn jacobi_svd(a: &Matrix) -> (Matrix, Vec<f64>, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n);
+    let mut w = a.clone();
+    let mut v = Matrix::eye(n, n);
+    let eps = f64::EPSILON;
+    let max_sweeps = 60;
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // 2x2 Gram entries
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let x = w.at(i, p);
+                    let y = w.at(i, q);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation zeroing the (p,q) Gram entry
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = if zeta >= 0.0 {
+                    1.0 / (zeta + (1.0 + zeta * zeta).sqrt())
+                } else {
+                    -1.0 / (-zeta + (1.0 + zeta * zeta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let x = w.at(i, p);
+                    let y = w.at(i, q);
+                    w[(i, p)] = c * x - s * y;
+                    w[(i, q)] = s * x + c * y;
+                }
+                for i in 0..n {
+                    let x = v.at(i, p);
+                    let y = v.at(i, q);
+                    v[(i, p)] = c * x - s * y;
+                    v[(i, q)] = s * x + c * y;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+
+    // extract singular values and left vectors
+    let mut sig: Vec<f64> = (0..n)
+        .map(|j| blas::nrm2(&w.col(j)))
+        .collect();
+    let mut u = Matrix::zeros(m, n);
+    for j in 0..n {
+        if sig[j] > 0.0 {
+            for i in 0..m {
+                u[(i, j)] = w.at(i, j) / sig[j];
+            }
+        } else {
+            u[(j.min(m - 1), j)] = 1.0;
+        }
+    }
+    // sort descending
+    let mut perm: Vec<usize> = (0..n).collect();
+    perm.sort_by(|&i, &j| sig[j].partial_cmp(&sig[i]).unwrap());
+    let sig_sorted: Vec<f64> = perm.iter().map(|&i| sig[i]).collect();
+    sig = sig_sorted;
+    crate::linalg::bdsqr::permute_cols(&mut u, &perm);
+    crate::linalg::bdsqr::permute_cols(&mut v, &perm);
+    (u, sig, v)
+}
+
+/// Singular values only (test convenience).
+pub fn singular_values(a: &Matrix) -> Vec<f64> {
+    jacobi_svd(a).1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstructs_random() {
+        let mut rng = Rng::new(41);
+        for &(m, n) in &[(5, 5), (9, 6), (16, 16), (20, 7)] {
+            let a = Matrix::from_fn(m, n, |_, _| rng.gaussian());
+            let (u, sig, v) = jacobi_svd(&a);
+            let mut us = u.clone();
+            for j in 0..n {
+                for i in 0..m {
+                    us[(i, j)] *= sig[j];
+                }
+            }
+            let mut rec = Matrix::zeros(m, n);
+            blas::gemm_nt(&us, &v, &mut rec, 1.0);
+            assert!(rec.max_diff(&a) < 1e-11, "({m},{n}): {:e}", rec.max_diff(&a));
+            assert!(u.orthonormality_defect() < 1e-12);
+            assert!(v.orthonormality_defect() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) embedded in an orthogonal sandwich is trivially diag
+        let a = Matrix::from_diag(&[1.0, 3.0, 2.0]);
+        let (_, sig, _) = jacobi_svd(&a);
+        assert!((sig[0] - 3.0).abs() < 1e-14);
+        assert!((sig[1] - 2.0).abs() < 1e-14);
+        assert!((sig[2] - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // two identical columns -> one zero singular value
+        let mut a = Matrix::from_fn(6, 3, |i, j| ((i + j * 2) as f64).sin());
+        let c0 = a.col(0);
+        a.set_col(2, &c0);
+        let (_, sig, _) = jacobi_svd(&a);
+        assert!(sig[2] < 1e-12 * sig[0]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Pure-Rust dense linear-algebra substrate.
+//!
+//! Everything the coordinator's CPU side needs, built from scratch (no
+//! LAPACK/BLAS bindings): blocked BLAS-3 kernels, Householder and Givens
+//! primitives, a CPU blocked QR and bidiagonalisation (used by the
+//! MAGMA-sim baseline's CPU panels and the pure-CPU LAPACK-reference
+//! solver), the Demmel–Kahan bidiagonal QR iteration (`bdsqr`, both the
+//! rocSOLVER-sim diagonaliser and the BDC leaf solver), a one-sided Jacobi
+//! SVD used as an independent test oracle, and the `lasd4` secular-equation
+//! solver at the heart of divide-and-conquer.
+
+pub mod bdsqr;
+pub mod blas;
+pub mod gebrd_cpu;
+pub mod givens;
+pub mod householder;
+pub mod jacobi;
+pub mod qr;
+pub mod secular;

@@ -1,0 +1,189 @@
+//! CPU blocked Householder QR (modified CWY transform — the same
+//! formulation the device path uses, eqs. (24)-(32) of the paper).
+//!
+//! Used by: the MAGMA-sim baseline (CPU panel factorisation), the matrix
+//! generator (random orthogonal factors), and the pure-CPU reference SVD.
+
+use crate::linalg::blas;
+use crate::linalg::householder::{larf_left, larfg};
+use crate::matrix::Matrix;
+
+/// Packed QR factorisation: R on/above the diagonal, reflector tails below,
+/// plus the tau scalars.
+pub struct QrFactor {
+    pub a: Matrix,
+    pub tau: Vec<f64>,
+}
+
+/// Factor one b-column panel at offset t in place; returns taus.
+pub fn geqrf_panel(a: &mut Matrix, t: usize, b: usize) -> Vec<f64> {
+    let m = a.rows;
+    let mut taus = vec![0.0; b];
+    for i in 0..b {
+        let g = t + i;
+        let col: Vec<f64> = (g..m).map(|r| a.at(r, g)).collect();
+        let rf = larfg(&col);
+        taus[i] = rf.tau;
+        // apply to the remaining panel columns
+        larf_left(a, &rf.v, rf.tau, g, g + 1, t + b);
+        a[(g, g)] = rf.beta;
+        for (k, &vk) in rf.v.iter().enumerate().skip(1) {
+            a[(g + k, g)] = vk;
+        }
+    }
+    taus
+}
+
+/// Unit-lower Y (m x b) for the panel at offset t of a packed factor.
+pub fn build_y(a: &Matrix, t: usize, b: usize) -> Matrix {
+    let m = a.rows;
+    let mut y = Matrix::zeros(m, b);
+    for i in 0..b {
+        let g = t + i;
+        y[(g, i)] = 1.0;
+        for r in g + 1..m {
+            y[(r, i)] = a.at(r, g);
+        }
+    }
+    y
+}
+
+/// Modified CWY triangular factor: T^{-1} = triu(Y^T Y), diag 1/tau.
+pub fn tinv(y: &Matrix, tau: &[f64]) -> Matrix {
+    let b = y.cols;
+    let mut g = Matrix::zeros(b, b);
+    blas::gemm_tn(y, y, &mut g, 1.0);
+    for i in 0..b {
+        for j in 0..i {
+            g[(i, j)] = 0.0;
+        }
+        g[(i, i)] = if tau[i] != 0.0 { 1.0 / tau[i] } else { 1e300 };
+    }
+    g
+}
+
+/// C <- (I - Y T^(T?) Y^T) C via gemm/trsm/gemm on the column window
+/// [c0, c1). `trans=true` applies H_b..H_1 (geqrf update), false H_1..H_b.
+pub fn larfb(c: &mut Matrix, y: &Matrix, tinv_m: &Matrix, c0: usize, c1: usize, trans: bool) {
+    let b = y.cols;
+    let ncols = c1 - c0;
+    // Z = Y^T C (b x ncols)
+    let mut z = Matrix::zeros(b, ncols);
+    for r in 0..y.rows {
+        let yrow = y.row(r);
+        let crow = &c.row(r)[c0..c1];
+        for i in 0..b {
+            let yv = yrow[i];
+            if yv != 0.0 {
+                let zrow = z.row_mut(i);
+                for j in 0..ncols {
+                    zrow[j] += yv * crow[j];
+                }
+            }
+        }
+    }
+    // W = T^(T?) Z, i.e. solve Tinv^(T?) W = Z column-wise
+    for j in 0..ncols {
+        let mut coljv: Vec<f64> = (0..b).map(|i| z.at(i, j)).collect();
+        blas::trsv_upper(tinv_m, &mut coljv, trans);
+        for i in 0..b {
+            z[(i, j)] = coljv[i];
+        }
+    }
+    // C -= Y W
+    for r in 0..y.rows {
+        let yrow = y.row(r);
+        let crow = &mut c.row_mut(r)[c0..c1];
+        for i in 0..b {
+            let yv = yrow[i];
+            if yv != 0.0 {
+                let zrow = z.row(i);
+                for j in 0..ncols {
+                    crow[j] -= yv * zrow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Blocked QR of A (m >= n), modified CWY.
+pub fn geqrf(mut a: Matrix, b: usize) -> QrFactor {
+    let n = a.cols;
+    let mut tau = vec![0.0; n];
+    let mut t = 0;
+    while t < n {
+        let bb = b.min(n - t);
+        let taus = geqrf_panel(&mut a, t, bb);
+        tau[t..t + bb].copy_from_slice(&taus);
+        if t + bb < n {
+            let y = build_y(&a, t, bb);
+            let ti = tinv(&y, &taus);
+            larfb(&mut a, &y, &ti, t + bb, n, true);
+        }
+        t += bb;
+    }
+    QrFactor { a, tau }
+}
+
+/// Thin Q (m x n) from a packed factor.
+pub fn orgqr(f: &QrFactor, b: usize) -> Matrix {
+    let (m, n) = (f.a.rows, f.a.cols);
+    let mut q = Matrix::eye(m, n);
+    let mut t = ((n - 1) / b) * b;
+    loop {
+        let bb = b.min(n - t);
+        let y = build_y(&f.a, t, bb);
+        let ti = tinv(&y, &f.tau[t..t + bb]);
+        larfb(&mut q, &y, &ti, 0, n, false);
+        if t == 0 {
+            break;
+        }
+        t -= b;
+    }
+    q
+}
+
+/// Upper-triangular R (n x n) from a packed factor.
+pub fn extract_r(f: &QrFactor) -> Matrix {
+    let n = f.a.cols;
+    let mut r = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = f.a.at(i, j);
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(11);
+        for &(m, n, b) in &[(8, 8, 2), (13, 9, 3), (40, 16, 8), (16, 16, 16), (9, 5, 4)] {
+            let a = Matrix::from_fn(m, n, |_, _| rng.gaussian());
+            let f = geqrf(a.clone(), b);
+            let q = orgqr(&f, b);
+            let r = extract_r(&f);
+            let qr = blas::matmul(&q, &r);
+            assert!(qr.max_diff(&a) < 1e-11, "({m},{n},{b}): {:e}", qr.max_diff(&a));
+            assert!(q.orthonormality_defect() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn r_is_triangular() {
+        let mut rng = Rng::new(12);
+        let a = Matrix::from_fn(10, 6, |_, _| rng.gaussian());
+        let f = geqrf(a, 3);
+        let r = extract_r(&f);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,340 @@
+//! The secular-equation solver (LAPACK dlasd4 analogue) — eq. (17):
+//!
+//! ```text
+//! f(omega) = 1 + sum_j z_j^2 / (d_j^2 - omega^2) = 0,
+//! ```
+//!
+//! solved in s = omega^2 space, one root per interval (d_k^2, d_{k+1}^2)
+//! (the last root in (d_N^2, d_N^2 + ||z||^2)).
+//!
+//! Accuracy strategy: every evaluation is performed relative to a *base*
+//! endpoint b (the interval end nearer the root): with tau = s - d_b^2,
+//! the differences delta_j = d_j^2 - s are computed as
+//! (d_j - d_b)(d_j + d_b) - tau — a factored form that avoids the
+//! catastrophic cancellation of forming d_j^2 - s directly. The iteration
+//! is a Newton step safeguarded by bisection (monotone f), which converges
+//! to ~1 ulp of tau.
+
+/// One secular root described relative to its base endpoint so downstream
+/// consumers (Gu–Eisenstat z-recomputation, vector assembly) can form
+/// d_j^2 - omega^2 without cancellation.
+#[derive(Clone, Copy, Debug)]
+pub struct SecularRoot {
+    /// Index of the base endpoint (root = sqrt(d[base]^2 + tau)).
+    pub base: usize,
+    /// Offset from the base endpoint in s-space.
+    pub tau: f64,
+    /// The root omega itself.
+    pub omega: f64,
+}
+
+impl SecularRoot {
+    /// delta_j = d_j^2 - omega^2, evaluated in the factored form.
+    #[inline]
+    pub fn delta(&self, d: &[f64], j: usize) -> f64 {
+        (d[j] - d[self.base]) * (d[j] + d[self.base]) - self.tau
+    }
+}
+
+/// f(tau) = 1 + sum z_j^2 / ((d_j-d_b)(d_j+d_b) - tau) and its derivative.
+fn eval(d: &[f64], z: &[f64], base: usize, tau: f64) -> (f64, f64) {
+    let db = d[base];
+    let mut f = 1.0;
+    let mut fp = 0.0;
+    for j in 0..d.len() {
+        let delta = (d[j] - db) * (d[j] + db) - tau;
+        let zj2 = z[j] * z[j];
+        f += zj2 / delta;
+        fp += zj2 / (delta * delta);
+    }
+    (f, fp)
+}
+
+/// Solve for the k-th root (0-based; roots ascend with k).
+///
+/// `d` must be non-negative and strictly increasing, with d[0] == 0
+/// (the deflated M-matrix convention); `z` the live z-vector.
+pub fn solve_root(d: &[f64], z: &[f64], k: usize) -> SecularRoot {
+    let n = d.len();
+    debug_assert!(k < n);
+    let znorm2: f64 = z.iter().map(|x| x * x).sum();
+    let d2k = d[k] * d[k];
+    let d2k1 = if k + 1 < n { d[k + 1] * d[k + 1] } else { d2k + znorm2 };
+
+    // choose the base endpoint by the sign of f at the midpoint
+    let (base, mut lo, mut hi);
+    if k + 1 < n {
+        let mid = 0.5 * (d2k1 - d2k);
+        // f relative to base k at tau = mid
+        let (fmid, _) = eval(d, z, k, mid);
+        if fmid > 0.0 {
+            // root in the left half — base on k
+            base = k;
+            lo = 0.0;
+            hi = mid;
+        } else {
+            // root in the right half — base on k+1; tau negative
+            base = k + 1;
+            lo = d2k - d2k1 + mid; // = -(d2k1-d2k)/2
+            hi = 0.0;
+        }
+    } else {
+        // last interval: root in (d_n^2, d_n^2 + ||z||^2), base on k
+        base = k;
+        lo = 0.0;
+        hi = znorm2;
+    }
+
+    // f is increasing in tau; f(lo+) = -inf side, f(hi-) = +inf side for
+    // interior intervals. Newton with bisection safeguard on [lo, hi].
+    let mut tau = 0.5 * (lo + hi);
+    for _ in 0..120 {
+        let (f, fp) = eval(d, z, base, tau);
+        if f == 0.0 || !f.is_finite() {
+            break;
+        }
+        if f < 0.0 {
+            lo = tau;
+        } else {
+            hi = tau;
+        }
+        // Newton step (f increasing => fp > 0)
+        let step = -f / fp;
+        let mut next = tau + step;
+        if !(next > lo && next < hi) || !next.is_finite() {
+            next = 0.5 * (lo + hi); // bisection fallback
+        }
+        if next == tau {
+            break;
+        }
+        tau = next;
+    }
+
+    let omega2 = d[base] * d[base] + tau;
+    SecularRoot { base, tau, omega: omega2.max(0.0).sqrt() }
+}
+
+/// All N roots, ascending. Multi-threaded over roots when `threads > 1`
+/// (the paper's "parallel for" in Algorithm 4 line 1-2).
+pub fn solve_all(d: &[f64], z: &[f64], threads: usize) -> Vec<SecularRoot> {
+    let n = d.len();
+    if threads <= 1 || n < 64 {
+        return (0..n).map(|k| solve_root(d, z, k)).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<SecularRoot>> = vec![None; n];
+    std::thread::scope(|s| {
+        for (tid, slot) in out.chunks_mut(chunk).enumerate() {
+            let d = &d;
+            let z = &z;
+            s.spawn(move || {
+                for (i, o) in slot.iter_mut().enumerate() {
+                    *o = Some(solve_root(d, z, tid * chunk + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Gu–Eisenstat z-recomputation (eq. 18) on the CPU — the device path uses
+/// the fused Pallas kernel; this one serves the CPU baselines and tests.
+/// Signs are taken from the original z.
+pub fn zhat(d: &[f64], z: &[f64], roots: &[SecularRoot]) -> Vec<f64> {
+    let n = d.len();
+    let mut out = vec![0.0; n];
+    for i in 0..n {
+        // product in log-free form: (w_N^2 - d_i^2) * prod ratios
+        let mut acc = -roots[n - 1].delta(d, i); // w_{N-1}^2 - d_i^2
+        for k in 0..i {
+            // (w_k^2 - d_i^2) / (d_k^2 - d_i^2)
+            let num = -roots[k].delta(d, i);
+            let den = (d[k] - d[i]) * (d[k] + d[i]);
+            acc *= num / den;
+        }
+        for k in i..n - 1 {
+            let num = -roots[k].delta(d, i);
+            let den = (d[k + 1] - d[i]) * (d[k + 1] + d[i]);
+            acc *= num / den;
+        }
+        let mag = acc.max(0.0).sqrt();
+        out[i] = if z[i] >= 0.0 { mag } else { -mag };
+    }
+    out
+}
+
+/// Singular vectors of M (eq. 19) on the CPU from recomputed zhat.
+/// Returns (U, V) as column-major-ish `Matrix` (N x N each).
+pub fn secular_vectors(
+    d: &[f64],
+    zh: &[f64],
+    roots: &[SecularRoot],
+) -> (crate::matrix::Matrix, crate::matrix::Matrix) {
+    use crate::matrix::Matrix;
+    let n = d.len();
+    let mut u = Matrix::zeros(n, n);
+    let mut v = Matrix::zeros(n, n);
+    for (i, root) in roots.iter().enumerate() {
+        let mut vcol = vec![0.0; n];
+        for j in 0..n {
+            vcol[j] = zh[j] / root.delta(d, j);
+        }
+        let vn = crate::linalg::blas::nrm2(&vcol);
+        let mut ucol = vec![0.0; n];
+        ucol[0] = -1.0;
+        for j in 1..n {
+            ucol[j] = d[j] * vcol[j];
+        }
+        let un = crate::linalg::blas::nrm2(&ucol);
+        for j in 0..n {
+            u[(j, i)] = ucol[j] / un;
+            v[(j, i)] = vcol[j] / vn;
+        }
+    }
+    (u, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::matrix::Matrix;
+    use crate::util::Rng;
+
+    fn m_matrix(d: &[f64], z: &[f64]) -> Matrix {
+        let n = d.len();
+        let mut m = Matrix::zeros(n, n);
+        for j in 0..n {
+            m[(0, j)] = z[j];
+        }
+        for j in 1..n {
+            m[(j, j)] = d[j];
+        }
+        m
+    }
+
+    fn case(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut d = vec![0.0; n];
+        for i in 1..n {
+            d[i] = d[i - 1] + 0.05 + rng.uniform();
+        }
+        let z: Vec<f64> = (0..n)
+            .map(|_| {
+                let g = rng.gaussian();
+                if g.abs() < 0.1 {
+                    0.1
+                } else {
+                    g
+                }
+            })
+            .collect();
+        (d, z)
+    }
+
+    #[test]
+    fn roots_are_roots_and_interlace() {
+        let (d, z) = case(10, 51);
+        let roots = solve_all(&d, &z, 1);
+        let znorm2: f64 = z.iter().map(|x| x * x).sum();
+        for k in 0..10 {
+            let w = roots[k].omega;
+            // interlacing
+            assert!(w > d[k], "root {k} below interval");
+            if k + 1 < 10 {
+                assert!(w < d[k + 1], "root {k} above interval");
+            } else {
+                assert!(w * w < d[9] * d[9] + znorm2 + 1e-12);
+            }
+            // residual of the secular function (scaled)
+            let mut f = 1.0;
+            let mut scale = 1.0f64;
+            for j in 0..10 {
+                let t = z[j] * z[j] / roots[k].delta(&d, j);
+                f += t;
+                scale = scale.max(t.abs());
+            }
+            assert!(f.abs() / scale < 1e-10, "root {k}: residual {f:e}");
+        }
+    }
+
+    #[test]
+    fn roots_match_brute_force_svd() {
+        let (d, z) = case(8, 52);
+        let roots = solve_all(&d, &z, 1);
+        let m = m_matrix(&d, &z);
+        let mut sv = crate::linalg::jacobi::singular_values(&m);
+        sv.reverse(); // ascending
+        for k in 0..8 {
+            assert!(
+                crate::util::rel_err(roots[k].omega, sv[k]) < 1e-10,
+                "root {k}: {} vs {}",
+                roots[k].omega,
+                sv[k]
+            );
+        }
+    }
+
+    #[test]
+    fn zhat_recovers_z() {
+        // with exact roots, |zhat| == |z|
+        let (d, z) = case(12, 53);
+        let roots = solve_all(&d, &z, 1);
+        let zh = zhat(&d, &z, &roots);
+        for j in 0..12 {
+            assert!(
+                (zh[j] - z[j]).abs() < 1e-8 * z[j].abs().max(1.0),
+                "j={j}: {} vs {}",
+                zh[j],
+                z[j]
+            );
+        }
+    }
+
+    #[test]
+    fn vectors_diagonalise_m() {
+        let (d, z) = case(9, 54);
+        let roots = solve_all(&d, &z, 1);
+        let zh = zhat(&d, &z, &roots);
+        let (u, v) = secular_vectors(&d, &zh, &roots);
+        assert!(u.orthonormality_defect() < 1e-10, "U defect {:e}", u.orthonormality_defect());
+        assert!(v.orthonormality_defect() < 1e-10);
+        // M V == U diag(omega) for M built from zhat
+        let m = m_matrix(&d, &zh);
+        let mv = blas::matmul(&m, &v);
+        let mut uw = u.clone();
+        for (k, root) in roots.iter().enumerate() {
+            for j in 0..9 {
+                uw[(j, k)] *= root.omega;
+            }
+        }
+        assert!(mv.max_diff(&uw) < 1e-9, "{:e}", mv.max_diff(&uw));
+    }
+
+    #[test]
+    fn close_entries_stress() {
+        // clustered d values — the hard case for cancellation
+        let n = 6;
+        let d = vec![0.0, 1.0, 1.0 + 1e-8, 1.0 + 2e-8, 2.0, 2.0 + 1e-10];
+        let z = vec![0.5, 0.3, 0.2, 0.4, 0.1, 0.25];
+        let roots = solve_all(&d, &z, 1);
+        for k in 0..n {
+            let w = roots[k].omega;
+            assert!(w >= d[k] && (k + 1 == n || w <= d[k + 1]), "interlacing k={k}");
+        }
+        let zh = zhat(&d, &z, &roots);
+        let (u, v) = secular_vectors(&d, &zh, &roots);
+        assert!(u.orthonormality_defect() < 1e-8);
+        assert!(v.orthonormality_defect() < 1e-8);
+    }
+
+    #[test]
+    fn threaded_matches_serial() {
+        let (d, z) = case(200, 55);
+        let serial = solve_all(&d, &z, 1);
+        let par = solve_all(&d, &z, 4);
+        for k in 0..200 {
+            assert_eq!(serial[k].omega, par[k].omega);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! gcsvd CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   svd     --m M --n N [--kind K] [--theta T] [--solver S] [--block B]
+//!           run one SVD, print sigma head, accuracy and the phase profile
+//!   bench   <fig4|fig5a|fig5b|fig6..fig20|all> [--reps R]
+//!           regenerate a paper figure (see DESIGN.md experiment index)
+//!   profile --m M --n N [--solver S]   phase/location trace (Fig. 1 style)
+//!   info    list artifact coverage
+//!
+//! Global flags: --artifacts DIR, --kernel pallas|xla, --no-transfer-model
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+use gcsvd::bench_harness::{self, Ctx};
+use gcsvd::config::{Config, Solver};
+use gcsvd::gen::{generate, MatrixKind};
+use gcsvd::runtime::transfer::TransferModel;
+use gcsvd::runtime::Device;
+use gcsvd::svd::{e_sigma, e_svd, gesvd};
+
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut flags = HashMap::new();
+    let mut positional = vec![];
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { flags, positional }
+}
+
+impl Args {
+    fn get_usize(&self, k: &str, default: usize) -> Result<usize> {
+        match self.flags.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{k}: bad integer {v}")),
+        }
+    }
+    fn get_f64(&self, k: &str, default: f64) -> Result<f64> {
+        match self.flags.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{k}: bad float {v}")),
+        }
+    }
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+}
+
+fn build_config(args: &Args) -> Result<Config> {
+    let mut cfg = Config::default();
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts = dir.into();
+    }
+    if let Some(k) = args.get("kernel") {
+        if k != "pallas" && k != "xla" {
+            bail!("--kernel must be pallas or xla");
+        }
+        cfg.kernel = k.to_string();
+    }
+    cfg.block = args.get_usize("block", cfg.block)?;
+    cfg.leaf = args.get_usize("leaf", cfg.leaf)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if args.get("no-transfer-model").is_some() {
+        cfg.transfer.enabled = false;
+    }
+    Ok(cfg)
+}
+
+fn make_device(cfg: &Config) -> Result<Device> {
+    Device::with_model(&cfg.artifacts, cfg.transfer)
+}
+
+fn cmd_svd(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let m = args.get_usize("m", 256)?;
+    let n = args.get_usize("n", m)?;
+    let theta = args.get_f64("theta", 100.0)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let kind = MatrixKind::parse(args.get("kind").unwrap_or("random"))
+        .ok_or_else(|| anyhow!("unknown --kind (random|logrand|arith|geo)"))?;
+    let solver = Solver::parse(args.get("solver").unwrap_or("ours"))
+        .ok_or_else(|| anyhow!("unknown --solver"))?;
+
+    println!("generating {} matrix {m}x{n} (theta={theta:.1e}, seed={seed})", kind.name());
+    let a = generate(kind, m, n, theta, seed);
+    let dev = make_device(&cfg)?;
+    if args.get("warmup").is_some() {
+        // populate the executable cache so the measured solve is compile-free
+        let _ = gesvd(&dev, &a, &cfg, solver)?;
+    }
+    let t0 = std::time::Instant::now();
+    let r = gesvd(&dev, &a, &cfg, solver)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nsolver={} wall={wall:.3}s", solver.name());
+    println!("sigma[0..6] = {:?}", &r.sigma[..r.sigma.len().min(6)]);
+    println!("E_svd = {:.3e}", e_svd(&a, &r));
+    if args.get("check").is_some() {
+        let reference = gesvd(&dev, &a, &cfg, Solver::LapackRef)?;
+        println!("E_sigma (vs lapack-ref) = {:.3e}", e_sigma(&reference.sigma, &r.sigma));
+    }
+    println!("\nphase profile:\n{}", r.profile.table());
+    let st = dev.stats();
+    println!(
+        "device: {} execs, {:.3}s busy, {} compiles ({:.2}s), h2d {:.1} MiB, d2h {:.1} MiB",
+        st.exec_count,
+        st.exec_sec,
+        st.compile_count,
+        st.compile_sec,
+        st.upload_bytes as f64 / (1 << 20) as f64,
+        st.download_bytes as f64 / (1 << 20) as f64
+    );
+    let mut ops: Vec<(&String, &f64)> = st.per_op_sec.iter().collect();
+    ops.sort_by(|a, b| b.1.partial_cmp(a.1).unwrap());
+    println!("top device ops:");
+    for (name, sec) in ops.iter().take(8) {
+        println!("  {name:<22} {sec:8.3}s");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let reps = args.get_usize("reps", 3)?;
+    let dev = make_device(&cfg)?;
+    let ctx = Ctx::new(dev, cfg, reps)?;
+    bench_harness::run(&ctx, which)
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let m = args.get_usize("m", 512)?;
+    let n = args.get_usize("n", m)?;
+    let a = generate(MatrixKind::Random, m, n, 1.0, 7);
+    let dev = make_device(&cfg)?;
+    println!("Fig. 1-style execution profile ({m}x{n}):");
+    for solver in [Solver::RocSolverSim, Solver::MagmaSim, Solver::Ours] {
+        let r = gesvd(&dev, &a, &cfg, solver)?;
+        println!("\n[{}]", solver.name());
+        print!("{}", r.profile.table());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let manifest = gcsvd::runtime::registry::Manifest::load(&cfg.artifacts)?;
+    println!("artifacts: {:?}", manifest.dir());
+    let mut names: Vec<String> = vec![];
+    for op in [
+        "labrd", "gebrd_update", "geqrf_step", "orgqr_step", "ormqr_step",
+        "bdc_secular", "bdc_block_gemm", "fig5_gemv2",
+    ] {
+        let keys = manifest.keys_for(op);
+        names.push(format!("  {op}: {} shapes", keys.len()));
+    }
+    println!("{}", names.join("\n"));
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: gcsvd <svd|bench|profile|info> [flags]\n\
+         see rust/src/main.rs header or README.md for flag lists"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let args = parse_args(&argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let out = match cmd {
+        "svd" => cmd_svd(&args),
+        "bench" => cmd_bench(&args),
+        "profile" => cmd_profile(&args),
+        "info" => cmd_info(&args),
+        _ => usage(),
+    };
+    if let Err(e) = out {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+// keep TransferModel import used even when defaults suffice
+#[allow(unused)]
+fn _unused(m: TransferModel) {}

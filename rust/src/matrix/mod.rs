@@ -1,0 +1,249 @@
+//! Dense row-major matrix storage plus the bidiagonal type.
+//!
+//! Row-major matches XLA's default literal layout, so `Matrix::data` moves
+//! to/from `PjRtBuffer`s without transposition.
+
+use std::fmt;
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(rows: usize, cols: usize) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows.min(cols) {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a diagonal.
+    pub fn from_diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self.at(i, j);
+            }
+        }
+        t
+    }
+
+    /// Copy of the sub-block [r0, r0+nr) x [c0, c0+nc).
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Matrix {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        let mut b = Matrix::zeros(nr, nc);
+        for i in 0..nr {
+            b.row_mut(i).copy_from_slice(&self.row(r0 + i)[c0..c0 + nc]);
+        }
+        b
+    }
+
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Matrix) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols);
+        for i in 0..b.rows {
+            let dst = &mut self.row_mut(r0 + i)[c0..c0 + b.cols];
+            dst.copy_from_slice(b.row(i));
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |a, &x| a.max(x.abs()))
+    }
+
+    /// ||self - other||_max (test helper).
+    pub fn max_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        crate::util::max_abs_diff(&self.data, &other.data)
+    }
+
+    /// ||self^T self - I||_max — orthonormality defect of the columns.
+    pub fn orthonormality_defect(&self) -> f64 {
+        let mut worst = 0.0f64;
+        for j1 in 0..self.cols {
+            for j2 in j1..self.cols {
+                let mut dot = 0.0;
+                for i in 0..self.rows {
+                    dot += self.at(i, j1) * self.at(i, j2);
+                }
+                let want = if j1 == j2 { 1.0 } else { 0.0 };
+                worst = worst.max((dot - want).abs());
+            }
+        }
+        worst
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rshow = self.rows.min(8);
+        let cshow = self.cols.min(8);
+        for i in 0..rshow {
+            write!(f, "  ")?;
+            for j in 0..cshow {
+                write!(f, "{:>10.4} ", self.at(i, j))?;
+            }
+            writeln!(f, "{}", if cshow < self.cols { "..." } else { "" })?;
+        }
+        if rshow < self.rows {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Upper bidiagonal matrix: diagonal `d` (n) and superdiagonal `e` (n-1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bidiagonal {
+    pub d: Vec<f64>,
+    pub e: Vec<f64>,
+}
+
+impl Bidiagonal {
+    pub fn new(d: Vec<f64>, e: Vec<f64>) -> Self {
+        assert!(e.len() + 1 == d.len() || (d.is_empty() && e.is_empty()));
+        Bidiagonal { d, e }
+    }
+
+    pub fn n(&self) -> usize {
+        self.d.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = self.d[i];
+            if i + 1 < n {
+                m[(i, i + 1)] = self.e[i];
+            }
+        }
+        m
+    }
+
+    /// ||B||_max — used for deflation thresholds.
+    pub fn max_abs(&self) -> f64 {
+        self.d
+            .iter()
+            .chain(self.e.iter())
+            .fold(0.0f64, |a, &x| a.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_blocks() {
+        let mut m = Matrix::from_fn(4, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(2, 1)], 21.0);
+        let b = m.block(1, 1, 2, 2);
+        assert_eq!(b.data, vec![11.0, 12.0, 21.0, 22.0]);
+        m.set_block(0, 0, &Matrix::from_diag(&[5.0, 5.0]));
+        assert_eq!(m[(0, 0)], 5.0);
+        assert_eq!(m[(0, 1)], 0.0);
+        assert_eq!(m[(1, 1)], 5.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_fn(3, 5, |i, j| (i + 2 * j) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn eye_orthonormal() {
+        let m = Matrix::eye(5, 3);
+        assert!(m.orthonormality_defect() < 1e-15);
+    }
+
+    #[test]
+    fn bidiagonal_dense() {
+        let b = Bidiagonal::new(vec![1.0, 2.0, 3.0], vec![0.5, 0.25]);
+        let d = b.to_dense();
+        assert_eq!(d[(0, 0)], 1.0);
+        assert_eq!(d[(0, 1)], 0.5);
+        assert_eq!(d[(1, 2)], 0.25);
+        assert_eq!(d[(2, 0)], 0.0);
+        assert_eq!(b.max_abs(), 3.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! The paper's GPU-based BDC engine (Section 4.2.2): singular-vector
+//! matrices live in device buffers; deflation Givens, permutations, the
+//! fused secular-vector kernel (eqs. 18-19) and the merge gemms all run
+//! on the device; only z-vectors, d/omega values, rotation tables, and
+//! index vectors cross the host boundary (vector-level traffic).
+//!
+//! Asynchrony: every mutation enqueues on the device stream and returns
+//! immediately, so the CPU deflation scan of the NEXT node overlaps with
+//! the device work of the previous one — the Algorithm 3 timeline.
+
+use crate::bdc::driver::{BdcEngine, Mat};
+use crate::linalg::givens::PlaneRot;
+use crate::linalg::secular::SecularRoot;
+use crate::matrix::Matrix;
+use crate::runtime::registry::bucket_for;
+use crate::runtime::{BufId, Device};
+
+const ROT_BATCH: usize = 512; // largest aot.py ROT_BUCKETS entry
+const ROT_BUCKETS: [usize; 3] = [8, 64, 512]; // mirrors aot.py ROT_BUCKETS
+const LEAF_TILE: usize = 64; // mirrors aot.py set_block bs
+
+pub struct DeviceEngine {
+    dev: Device,
+    n: usize,
+    u: Option<BufId>,
+    v: Option<BufId>,
+}
+
+impl DeviceEngine {
+    pub fn new(dev: Device) -> Self {
+        DeviceEngine { dev, n: 0, u: None, v: None }
+    }
+
+    pub fn u_buf(&self) -> BufId {
+        self.u.expect("init first")
+    }
+
+    pub fn v_buf(&self) -> BufId {
+        self.v.expect("init first")
+    }
+
+    /// Release ownership of (U, V) to the caller (for back-transforms).
+    pub fn take(mut self) -> (Device, BufId, BufId) {
+        (self.dev.clone(), self.u.take().unwrap(), self.v.take().unwrap())
+    }
+
+    fn mat(&self, which: Mat) -> BufId {
+        match which {
+            Mat::U => self.u_buf(),
+            Mat::V => self.v_buf(),
+        }
+    }
+
+    fn set_mat(&mut self, which: Mat, id: BufId) {
+        match which {
+            Mat::U => self.u = Some(id),
+            Mat::V => self.v = Some(id),
+        }
+    }
+
+    /// Read back a host copy (end of solve).
+    pub fn download(&self, which: Mat) -> anyhow::Result<Matrix> {
+        let data = self.dev.read(self.mat(which))?;
+        Ok(Matrix::from_rows(self.n, self.n, data))
+    }
+
+    fn apply_block(&mut self, which: Mat, blk: &Matrix, off: usize, len: usize) {
+        // upload a LEAF_TILE^2 tile with the live block at `loc`
+        let n = self.n;
+        let woff = off.min(n - LEAF_TILE);
+        let loc = off - woff;
+        assert!(loc + len <= LEAF_TILE, "leaf block too large: {len}+{loc}");
+        let mut tile = vec![0.0; LEAF_TILE * LEAF_TILE];
+        for i in 0..len {
+            for j in 0..len {
+                tile[(loc + i) * LEAF_TILE + loc + j] = blk.at(i, j);
+            }
+        }
+        let tb = self.dev.upload(tile, &[LEAF_TILE, LEAF_TILE]);
+        let woffb = self.dev.scalar_i64(woff as i64);
+        let locb = self.dev.scalar_i64(loc as i64);
+        let lenb = self.dev.scalar_i64(len as i64);
+        let cur = self.mat(which);
+        let out = self.dev.op(
+            "set_block",
+            &[("n", n as i64), ("bs", LEAF_TILE as i64)],
+            &[cur, tb, woffb, locb, lenb],
+        );
+        for b in [cur, tb, woffb, locb, lenb] {
+            self.dev.free(b);
+        }
+        self.set_mat(which, out);
+    }
+}
+
+impl BdcEngine for DeviceEngine {
+    fn init(&mut self, n: usize) {
+        self.n = n;
+        let e1 = self.dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+        let e2 = self.dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+        if let Some(u) = self.u.take() {
+            self.dev.free(u);
+        }
+        if let Some(v) = self.v.take() {
+            self.dev.free(v);
+        }
+        self.u = Some(e1);
+        self.v = Some(e2);
+    }
+
+    fn set_leaf(&mut self, lo: usize, u: &Matrix, v: &Matrix) {
+        self.apply_block(Mat::U, u, lo, u.rows);
+        self.apply_block(Mat::V, v, lo, v.rows);
+    }
+
+    fn v_row(&mut self, row: usize, c0: usize, len: usize) -> Vec<f64> {
+        let rb = self.dev.scalar_i64(row as i64);
+        let out = self.dev.op("bdc_row", &[("n", self.n as i64)], &[self.v_buf(), rb]);
+        self.dev.free(rb);
+        let full = self.dev.read(out).expect("v_row read");
+        self.dev.free(out);
+        full[c0..c0 + len].to_vec()
+    }
+
+    fn rot_cols(&mut self, which: Mat, rots: &[PlaneRot]) {
+        let n = self.n as i64;
+        for chunk in rots.chunks(ROT_BATCH) {
+            // smallest emitted rmax bucket that fits this chunk: tiny
+            // deflation batches (1-8 rots) must not pay a 512-iteration
+            // device loop (EXPERIMENTS.md §Perf L3-1).
+            let rmax = ROT_BUCKETS
+                .iter()
+                .copied()
+                .find(|&r| r >= chunk.len())
+                .unwrap_or(ROT_BATCH);
+            let mut table = vec![0.0; rmax * 4];
+            for (r, pr) in chunk.iter().enumerate() {
+                table[r * 4] = pr.j1 as f64;
+                table[r * 4 + 1] = pr.j2 as f64;
+                table[r * 4 + 2] = pr.c;
+                table[r * 4 + 3] = pr.s;
+            }
+            let tb = self.dev.upload(table, &[rmax, 4]);
+            let nb = self.dev.scalar_i64(chunk.len() as i64);
+            let cur = self.mat(which);
+            let out = self.dev.op(
+                "bdc_rots",
+                &[("n", n), ("rmax", rmax as i64)],
+                &[cur, tb, nb],
+            );
+            for b in [cur, tb, nb] {
+                self.dev.free(b);
+            }
+            self.set_mat(which, out);
+        }
+    }
+
+    fn permute(&mut self, which: Mat, lo: usize, perm_local: &[usize]) {
+        let n = self.n;
+        let mut perm: Vec<i64> = (0..n as i64).collect();
+        for (newj, &oldj) in perm_local.iter().enumerate() {
+            perm[lo + newj] = (lo + oldj) as i64;
+        }
+        let pb = self.dev.upload_i64(perm, &[n]);
+        let cur = self.mat(which);
+        let out = self
+            .dev
+            .op("bdc_permute_cols", &[("n", n as i64)], &[cur, pb]);
+        self.dev.free(cur);
+        self.dev.free(pb);
+        self.set_mat(which, out);
+    }
+
+    fn secular_apply(
+        &mut self,
+        lo: usize,
+        len: usize,
+        sqre: usize,
+        d: &[f64],
+        roots: &[SecularRoot],
+        z_live: &[f64],
+    ) {
+        let n = self.n;
+        let k = d.len();
+        // the gemm window must cover the V block's extra row when sqre=1
+        let kb = bucket_for(len + sqre).expect("bucket");
+        assert!(kb <= n, "gemm window {kb} larger than matrix {n}");
+        // padded vectors: d strictly increasing beyond K; the roots ship as
+        // their (dbase, tau) pairs so the kernel forms every delta in the
+        // cancellation-free factored form (see kernels/secular.py).
+        let mut dp = vec![0.0; kb];
+        let mut basep = vec![0.0; kb];
+        let mut taup = vec![0.25; kb];
+        let mut signs = vec![1.0; kb];
+        dp[..k].copy_from_slice(d);
+        for (i, r) in roots.iter().enumerate() {
+            basep[i] = d[r.base];
+            taup[i] = r.tau;
+        }
+        for i in k..kb {
+            dp[i] = dp[i.saturating_sub(1)] + 1.0;
+            basep[i] = dp[i];
+        }
+        for i in 0..k {
+            signs[i] = if z_live[i] >= 0.0 { 1.0 } else { -1.0 };
+        }
+        let db = self.dev.upload(dp, &[kb]);
+        let bb = self.dev.upload(basep, &[kb]);
+        let tb = self.dev.upload(taup, &[kb]);
+        let sb = self.dev.upload(signs, &[kb]);
+        let kb_i = self.dev.scalar_i64(k as i64);
+        // fused kernel: [zhat | S_U | S_V] packed
+        let packed = self
+            .dev
+            .op("bdc_secular", &[("nb", kb as i64)], &[db, bb, tb, sb, kb_i]);
+        for b in [db, bb, tb, sb, kb_i] {
+            self.dev.free(b);
+        }
+        // split S_U / S_V out of the packed buffer via the slice graphs the
+        // block gemm consumes directly — we read nothing back.
+        // Window anchor for blocks near the matrix edge:
+        let woff = lo.min(n - kb);
+        let loc = lo - woff;
+        let su = self.dev.op("bdc_secular_u", &[("nb", kb as i64)], &[packed]);
+        let sv = self.dev.op("bdc_secular_v", &[("nb", kb as i64)], &[packed]);
+        self.dev.free(packed);
+        for (which, s) in [(Mat::U, su), (Mat::V, sv)] {
+            let woffb = self.dev.scalar_i64(woff as i64);
+            let locb = self.dev.scalar_i64(loc as i64);
+            let lenb = self.dev.scalar_i64(k as i64);
+            let cur = self.mat(which);
+            let out = self.dev.op(
+                "bdc_block_gemm",
+                &[("n", n as i64), ("kb", kb as i64)],
+                &[cur, s, woffb, locb, lenb],
+            );
+            for b in [cur, s, woffb, locb, lenb] {
+                self.dev.free(b);
+            }
+            self.set_mat(which, out);
+        }
+    }
+
+    fn sync(&mut self) {
+        self.dev.sync().expect("device sync");
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: the device command queue, the artifact registry and the
+//! transfer-cost model.
+pub mod device;
+pub mod registry;
+pub mod bdc_engine;
+pub mod transfer;
+
+pub use device::{BufId, Device, DeviceStats};
+pub use registry::OpKey;

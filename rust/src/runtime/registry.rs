@@ -1,0 +1,212 @@
+//! Artifact registry: parses `artifacts/manifest.txt` (written by
+//! python/compile/aot.py) and resolves (op-name, shape-params) to HLO
+//! files, compiling lazily with a per-device cache.
+//!
+//! Manifest line format: `<op> <k>=<v> ... file=<relpath>`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+/// Fully-qualified op key: name + sorted integer params.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpKey {
+    pub name: String,
+    pub params: BTreeMap<String, i64>,
+}
+
+impl OpKey {
+    pub fn new(name: &str, params: &[(&str, i64)]) -> Self {
+        OpKey {
+            name: name.to_string(),
+            params: params.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+}
+
+impl std::fmt::Display for OpKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name)?;
+        for (k, v) in &self.params {
+            write!(f, " {k}={v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Manifest: op key -> HLO file path.
+pub struct Manifest {
+    dir: PathBuf,
+    files: HashMap<OpKey, PathBuf>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} — run `make artifacts`"))?;
+        let mut files = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts
+                .next()
+                .ok_or_else(|| anyhow!("manifest line {}: empty", lineno + 1))?
+                .to_string();
+            let mut params = BTreeMap::new();
+            let mut file = None;
+            for kv in parts {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("manifest line {}: bad token {kv}", lineno + 1))?;
+                if k == "file" {
+                    file = Some(v.to_string());
+                } else {
+                    params.insert(
+                        k.to_string(),
+                        v.parse::<i64>()
+                            .with_context(|| format!("manifest line {}", lineno + 1))?,
+                    );
+                }
+            }
+            let file = file.ok_or_else(|| anyhow!("manifest line {}: no file=", lineno + 1))?;
+            files.insert(OpKey { name, params }, dir.join(file));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), files })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path(&self, key: &OpKey) -> Result<&Path> {
+        self.files
+            .get(key)
+            .map(|p| p.as_path())
+            .ok_or_else(|| anyhow!("op not in manifest: {key} (re-run `make artifacts`?)"))
+    }
+
+    pub fn contains(&self, key: &OpKey) -> bool {
+        self.files.contains_key(key)
+    }
+
+    /// All keys for an op family (benches enumerate available shapes).
+    pub fn keys_for(&self, name: &str) -> Vec<OpKey> {
+        let mut v: Vec<OpKey> = self
+            .files
+            .keys()
+            .filter(|k| k.name == name)
+            .cloned()
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Compile cache living on the device worker thread.
+pub struct ExeCache {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<OpKey, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    pub compile_count: usize,
+    pub compile_sec: f64,
+}
+
+impl ExeCache {
+    pub fn new(client: xla::PjRtClient, manifest: Manifest) -> Self {
+        ExeCache { client, manifest, cache: HashMap::new(), compile_count: 0, compile_sec: 0.0 }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn get(&mut self, key: &OpKey) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.get(key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.path(key)?.to_path_buf();
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+        self.compile_count += 1;
+        self.compile_sec += t0.elapsed().as_secs_f64();
+        let rc = std::rc::Rc::new(exe);
+        self.cache.insert(key.clone(), rc.clone());
+        Ok(rc)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Pick the smallest bucket >= want from the fixed bucket ladder that the
+/// AOT emitter used (mirrors aot.py BUCKETS).
+pub const BUCKETS: [usize; 12] = [32, 64, 96, 128, 192, 256, 384, 512, 768, 1024, 1536, 2048];
+
+pub fn bucket_for(want: usize) -> Result<usize> {
+    BUCKETS
+        .iter()
+        .copied()
+        .find(|&b| b >= want)
+        .ok_or_else(|| bail_err(want))
+}
+
+fn bail_err(want: usize) -> anyhow::Error {
+    anyhow!("no secular bucket >= {want}; extend aot.py BUCKETS")
+}
+
+#[allow(unused)]
+fn _bail(_: ()) {
+    let _ = || -> Result<()> { bail!("unused") };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opkey_display_and_order() {
+        let k = OpKey::new("labrd", &[("n", 128), ("m", 128), ("b", 32)]);
+        assert_eq!(format!("{k}"), "labrd b=32 m=128 n=128");
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let dir = std::env::temp_dir().join(format!("gcsvd_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "labrd b=32 m=128 n=128 file=labrd_b32_m128_n128.hlo.txt\n\
+             eye m=128 n=128 file=eye.hlo.txt\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let k = OpKey::new("labrd", &[("m", 128), ("n", 128), ("b", 32)]);
+        assert!(m.contains(&k));
+        assert!(m.path(&k).unwrap().ends_with("labrd_b32_m128_n128.hlo.txt"));
+        assert!(!m.contains(&OpKey::new("labrd", &[("m", 64), ("n", 64), ("b", 32)])));
+        assert_eq!(m.keys_for("eye").len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bucket_ladder() {
+        assert_eq!(bucket_for(1).unwrap(), 32);
+        assert_eq!(bucket_for(32).unwrap(), 32);
+        assert_eq!(bucket_for(33).unwrap(), 64);
+        assert_eq!(bucket_for(130).unwrap(), 192);
+        assert!(bucket_for(4096).is_err());
+    }
+}

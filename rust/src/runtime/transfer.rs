@@ -1,0 +1,112 @@
+//! Simulated PCIe transfer-cost model.
+//!
+//! The physical testbed has no discrete accelerator, so host<->device
+//! copies through the PJRT boundary are cheap memcpys. The paper's
+//! baseline comparisons (MAGMA/BDC-V1 vs ours) hinge on the *relative*
+//! cost of CPU-GPU transfers, so baselines charge each modelled transfer
+//! against a calibrated PCIe profile (latency + bytes/bandwidth) by
+//! spinning for the residual time. The GPU-centered path performs no
+//! matrix-level transfers and therefore pays (and charges) nothing.
+//!
+//! Calibration: what the paper's comparison depends on is the RATIO of
+//! transfer time to device-compute time. Our PJRT CPU "device" runs f64
+//! gemm at ~10 GFLOP/s vs the V100's ~7 TFLOP/s — roughly 700x slower —
+//! so charging literal PCIe numbers (12 GB/s) would make transfers look
+//! free and flip the paper's hybrid-vs-resident comparisons. The default
+//! model therefore scales PCIe 3.0 x16 down by ~1e2 (a conservative
+//! fraction of the compute ratio, keeping bench runtimes practical):
+//! 100 MB/s effective bandwidth, 0.2 ms per-transfer latency. Pass
+//! `--no-transfer-model` (tests do) for pure functional runs, or set the
+//! fields directly to recalibrate.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TransferModel {
+    /// Effective bandwidth in bytes/second.
+    pub bytes_per_sec: f64,
+    /// Fixed per-transfer latency in seconds.
+    pub latency_sec: f64,
+    /// Disable cost injection entirely (pure functional runs/tests).
+    pub enabled: bool,
+}
+
+impl Default for TransferModel {
+    fn default() -> Self {
+        TransferModel { bytes_per_sec: 100e6, latency_sec: 0.2e-3, enabled: true }
+    }
+}
+
+/// Accumulated transfer statistics (per phase/solve).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransferStats {
+    pub h2d_count: u64,
+    pub h2d_bytes: u64,
+    pub d2h_count: u64,
+    pub d2h_bytes: u64,
+    pub modelled_sec: f64,
+}
+
+impl TransferModel {
+    pub fn cost_sec(&self, bytes: usize) -> f64 {
+        self.latency_sec + bytes as f64 / self.bytes_per_sec
+    }
+
+    /// Charge one transfer: spin-wait the modelled residual beyond the
+    /// `already_spent` wall time the real copy consumed.
+    pub fn charge(&self, bytes: usize, already_spent: f64, stats: &mut TransferStats, h2d: bool) {
+        if h2d {
+            stats.h2d_count += 1;
+            stats.h2d_bytes += bytes as u64;
+        } else {
+            stats.d2h_count += 1;
+            stats.d2h_bytes += bytes as u64;
+        }
+        if !self.enabled {
+            return;
+        }
+        let want = self.cost_sec(bytes);
+        stats.modelled_sec += want;
+        let residual = want - already_spent;
+        if residual > 0.0 {
+            let t0 = Instant::now();
+            let dur = Duration::from_secs_f64(residual);
+            while t0.elapsed() < dur {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model_linear_in_bytes() {
+        let m = TransferModel { bytes_per_sec: 1e9, latency_sec: 1e-5, enabled: true };
+        assert!((m.cost_sec(0) - 1e-5).abs() < 1e-12);
+        assert!((m.cost_sec(1_000_000_000) - 1.00001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn charge_accumulates_stats() {
+        let m = TransferModel { bytes_per_sec: 1e12, latency_sec: 0.0, enabled: false };
+        let mut st = TransferStats::default();
+        m.charge(100, 0.0, &mut st, true);
+        m.charge(50, 0.0, &mut st, false);
+        assert_eq!(st.h2d_count, 1);
+        assert_eq!(st.h2d_bytes, 100);
+        assert_eq!(st.d2h_count, 1);
+        assert_eq!(st.d2h_bytes, 50);
+    }
+
+    #[test]
+    fn charge_spins_at_least_model_time() {
+        let m = TransferModel { bytes_per_sec: 1e9, latency_sec: 0.0, enabled: true };
+        let mut st = TransferStats::default();
+        let t0 = Instant::now();
+        m.charge(2_000_000, 0.0, &mut st, true); // 2 ms modelled
+        assert!(t0.elapsed().as_secs_f64() >= 0.0019);
+    }
+}

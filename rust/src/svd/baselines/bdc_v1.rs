@@ -1,0 +1,107 @@
+//! BDC-V1 (Gates et al. [12]): the divide-and-conquer runs on the CPU but
+//! the lasd3 gemms are offloaded to the device with FULL-MATRIX round
+//! trips per merge — the transfer-bound pattern Fig. 7 profiles.
+
+use crate::bdc::cpu::CpuEngine;
+use crate::bdc::driver::{BdcEngine, Mat};
+use crate::linalg::givens::PlaneRot;
+use crate::linalg::secular::{self, SecularRoot};
+use crate::matrix::Matrix;
+use crate::runtime::registry::bucket_for;
+use crate::runtime::Device;
+
+pub struct BdcV1Engine {
+    inner: CpuEngine,
+    dev: Device,
+    n: usize,
+}
+
+impl BdcV1Engine {
+    pub fn new(dev: Device) -> Self {
+        BdcV1Engine { inner: CpuEngine::new(), dev, n: 0 }
+    }
+
+    pub fn into_uv(self) -> (Matrix, Matrix) {
+        (self.inner.u, self.inner.v)
+    }
+
+    pub fn uv(&self) -> (&Matrix, &Matrix) {
+        (&self.inner.u, &self.inner.v)
+    }
+
+    /// Upload host matrix, run the block gemm on device, download back —
+    /// the BDC-V1 merge offload, charging both directions.
+    fn offload_gemm(&mut self, which: Mat, lo: usize, k: usize, kb: usize, s: &Matrix) {
+        let n = self.n;
+        let host = match which {
+            Mat::U => &mut self.inner.u,
+            Mat::V => &mut self.inner.v,
+        };
+        // pad S into kb x kb with identity beyond k
+        let mut sp = Matrix::eye(kb, kb);
+        for i in 0..k {
+            for j in 0..k {
+                sp[(i, j)] = s.at(i, j);
+            }
+        }
+        let woff = lo.min(n - kb);
+        let loc = lo - woff;
+        let mb = self.dev.upload_charged(host.data.clone(), &[n, n]);
+        let sb = self.dev.upload_charged(sp.data, &[kb, kb]);
+        let woffb = self.dev.scalar_i64(woff as i64);
+        let locb = self.dev.scalar_i64(loc as i64);
+        let lenb = self.dev.scalar_i64(k as i64);
+        let out = self.dev.op(
+            "bdc_block_gemm",
+            &[("n", n as i64), ("kb", kb as i64)],
+            &[mb, sb, woffb, locb, lenb],
+        );
+        let data = self.dev.read_charged(out).expect("bdc-v1 gemm download");
+        for b in [mb, sb, woffb, locb, lenb, out] {
+            self.dev.free(b);
+        }
+        host.data = data;
+    }
+}
+
+impl BdcEngine for BdcV1Engine {
+    fn init(&mut self, n: usize) {
+        self.n = n;
+        self.inner.init(n);
+    }
+
+    fn set_leaf(&mut self, lo: usize, u: &Matrix, v: &Matrix) {
+        self.inner.set_leaf(lo, u, v);
+    }
+
+    fn v_row(&mut self, row: usize, c0: usize, len: usize) -> Vec<f64> {
+        self.inner.v_row(row, c0, len)
+    }
+
+    fn rot_cols(&mut self, which: Mat, rots: &[PlaneRot]) {
+        self.inner.rot_cols(which, rots);
+    }
+
+    fn permute(&mut self, which: Mat, lo: usize, perm_local: &[usize]) {
+        self.inner.permute(which, lo, perm_local);
+    }
+
+    fn secular_apply(
+        &mut self,
+        lo: usize,
+        len: usize,
+        sqre: usize,
+        d: &[f64],
+        roots: &[SecularRoot],
+        z_live: &[f64],
+    ) {
+        // CPU: z-hat + secular vectors (as in [12])
+        let zh = secular::zhat(d, z_live, roots);
+        let (su, sv) = secular::secular_vectors(d, &zh, roots);
+        // device: the gemms, with full-matrix round trips
+        let k = d.len();
+        let kb = bucket_for(len + sqre).expect("bucket");
+        self.offload_gemm(Mat::U, lo, k, kb, &su);
+        self.offload_gemm(Mat::V, lo, k, kb, &sv);
+    }
+}

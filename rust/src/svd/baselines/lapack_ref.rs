@@ -1,0 +1,66 @@
+//! Pure-CPU LAPACK-style reference SVD: blocked gebrd + bdsqr (QR
+//! iteration) + unblocked back-transforms. No device involvement — the
+//! accuracy oracle and the "LAPACK" row of Figs. 8/10.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::coordinator::PhaseProfile;
+use crate::linalg::bdsqr::{bdsqr, BdsqrOpts};
+use crate::linalg::{blas, gebrd_cpu, qr};
+use crate::matrix::Matrix;
+use crate::svd::gesdd::SvdResult;
+
+pub fn gesvd_lapack_ref(a: &Matrix, cfg: &Config) -> Result<SvdResult> {
+    let (m, n) = (a.rows, a.cols);
+    anyhow::ensure!(m >= n);
+    let mut profile = PhaseProfile::default();
+    let b = cfg.block;
+
+    // TS switchover (Chan)
+    let (r, q) = if m > n {
+        let t0 = std::time::Instant::now();
+        let f = qr::geqrf(a.clone(), b);
+        profile.record("geqrf", t0.elapsed().as_secs_f64(), "cpu");
+        let t1 = std::time::Instant::now();
+        let qthin = qr::orgqr(&f, b);
+        profile.record("orgqr", t1.elapsed().as_secs_f64(), "cpu");
+        (qr::extract_r(&f), Some(qthin))
+    } else {
+        (a.clone(), None)
+    };
+
+    let t2 = std::time::Instant::now();
+    let fac = gebrd_cpu::gebrd(r, b);
+    profile.record("gebrd", t2.elapsed().as_secs_f64(), "cpu");
+
+    let t3 = std::time::Instant::now();
+    let mut d = fac.d.clone();
+    let mut e = fac.e.clone();
+    let mut u2 = Matrix::eye(n, n);
+    let mut v2 = Matrix::eye(n, n);
+    bdsqr(
+        &mut d,
+        &mut e,
+        BdsqrOpts { u: Some(&mut u2), v: Some(&mut v2), log: None },
+    );
+    profile.record("bdcqr", t3.elapsed().as_secs_f64(), "cpu");
+
+    let t4 = std::time::Instant::now();
+    gebrd_cpu::ormqr_unblocked(&fac, &mut u2);
+    gebrd_cpu::ormlq_unblocked(&fac, &mut v2);
+    profile.record("ormqr+ormlq", t4.elapsed().as_secs_f64(), "cpu");
+
+    let u = if let Some(q) = q {
+        let t5 = std::time::Instant::now();
+        let u = blas::matmul(&q, &u2);
+        profile.record("gemm", t5.elapsed().as_secs_f64(), "cpu");
+        u
+    } else {
+        u2
+    };
+
+    // bdsqr already returns descending
+    let vt = v2.transpose();
+    Ok(SvdResult { sigma: d, u, vt, profile })
+}

@@ -1,0 +1,14 @@
+//! SVD phase drivers and solvers.
+//!
+//! * [`gebrd`] — GPU-centered merged-rank-(2b) bidiagonalisation;
+//! * [`qr`] — GPU-centered geqrf/orgqr/ormqr/ormlq (modified CWY);
+//! * [`gesdd`] — the paper's end-to-end solver ("ours");
+//! * [`baselines`] — rocSOLVER-sim, MAGMA-sim, BDC-V1, LAPACK-ref.
+
+pub mod baselines;
+pub mod gebrd;
+pub mod gesdd;
+pub mod qr;
+
+pub use baselines::gesvd;
+pub use gesdd::{e_sigma, e_svd, SvdResult};

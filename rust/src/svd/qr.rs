@@ -1,0 +1,185 @@
+//! GPU-centered QR factorisation and Q generation (paper Section 4.3.2):
+//! panel factorisation on device, modified-CWY T^{-1} (gemm, eq. 28),
+//! trsm-based trailing update (eqs. 30-32), all BLAS3.
+
+use anyhow::Result;
+
+use crate::runtime::{BufId, Device};
+
+/// Device-resident QR factor.
+pub struct DeviceQr {
+    /// Packed factor (R above diagonal, reflectors below).
+    pub afac: BufId,
+    pub tau: Vec<f64>,
+}
+
+/// Blocked QR of the device matrix `a` (consumed). m >= n, b | n.
+pub fn geqrf_device(dev: &Device, a: BufId, m: usize, n: usize, b: usize) -> Result<DeviceQr> {
+    geqrf_device_with(dev, a, m, n, b, "geqrf_step")
+}
+
+/// geqrf with an explicit step op ("geqrf_step" = modified CWY / trsm,
+/// "geqrf_step_classic" = classic larft recurrence baseline).
+pub fn geqrf_device_with(
+    dev: &Device,
+    a: BufId,
+    m: usize,
+    n: usize,
+    b: usize,
+    step_op: &str,
+) -> Result<DeviceQr> {
+    assert!(m >= n && n % b == 0);
+    let p = [("m", m as i64), ("n", n as i64), ("b", b as i64)];
+    let mut tau = vec![0.0; n];
+    let mut a_cur = a;
+    let mut t = 0usize;
+    while t < n {
+        let tb = dev.scalar_i64(t as i64);
+        let ws = dev.op(step_op, &p, &[a_cur, tb]);
+        dev.free(a_cur);
+        dev.free(tb);
+        let head = dev.op("qr_head", &p, &[ws]);
+        a_cur = dev.op("geqrf_extract_a", &p, &[ws]);
+        dev.free(ws);
+        let h = dev.read(head)?;
+        dev.free(head);
+        tau[t..t + b].copy_from_slice(&h);
+        t += b;
+    }
+    Ok(DeviceQr { afac: a_cur, tau })
+}
+
+/// Thin Q (m x n) from a device QR factor — block-reverse application of
+/// (I - Y T Y^T) with T^{-1} recomputed on device per panel (the paper
+/// recomputes so orgqr can use its own optimal block size).
+pub fn orgqr_device(dev: &Device, f: &DeviceQr, m: usize, n: usize, b: usize) -> Result<BufId> {
+    orgqr_device_with(dev, f, m, n, b, "orgqr_step")
+}
+
+/// orgqr with an explicit step op (classic vs modified CWY).
+pub fn orgqr_device_with(
+    dev: &Device,
+    f: &DeviceQr,
+    m: usize,
+    n: usize,
+    b: usize,
+    step_op: &str,
+) -> Result<BufId> {
+    assert!(n % b == 0);
+    let p = [("m", m as i64), ("n", n as i64), ("b", b as i64)];
+    let mut q = dev.op("eye", &[("m", m as i64), ("n", n as i64)], &[]);
+    let mut t = n - b;
+    loop {
+        let tb = dev.scalar_i64(t as i64);
+        let taub = dev.upload(f.tau[t..t + b].to_vec(), &[b]);
+        let q2 = dev.op(step_op, &p, &[q, f.afac, taub, tb]);
+        dev.free(q);
+        dev.free(tb);
+        dev.free(taub);
+        q = q2;
+        if t == 0 {
+            break;
+        }
+        t -= b;
+    }
+    Ok(q)
+}
+
+/// Back-transform C <- U1 C with gebrd's column reflectors (ormqr),
+/// all on device. C is (m x k) with k == n in our pipelines.
+pub fn ormqr_device(
+    dev: &Device,
+    afac: BufId,
+    tauq: &[f64],
+    c: BufId,
+    m: usize,
+    n: usize,
+    b: usize,
+) -> Result<BufId> {
+    ormqr_device_with(dev, afac, tauq, c, m, n, b, "ormqr_step")
+}
+
+/// ormqr with an explicit step op (classic vs modified CWY).
+#[allow(clippy::too_many_arguments)]
+pub fn ormqr_device_with(
+    dev: &Device,
+    afac: BufId,
+    tauq: &[f64],
+    c: BufId,
+    m: usize,
+    n: usize,
+    b: usize,
+    step_op: &str,
+) -> Result<BufId> {
+    assert!(n % b == 0);
+    let p = [("b", b as i64), ("k", n as i64), ("m", m as i64), ("n", n as i64)];
+    let mut cur = c;
+    let mut t = n - b;
+    loop {
+        let tb = dev.scalar_i64(t as i64);
+        let taub = dev.upload(tauq[t..t + b].to_vec(), &[b]);
+        let c2 = dev.op(step_op, &p, &[cur, afac, taub, tb]);
+        dev.free(cur);
+        dev.free(tb);
+        dev.free(taub);
+        cur = c2;
+        if t == 0 {
+            break;
+        }
+        t -= b;
+    }
+    Ok(cur)
+}
+
+/// Back-transform C <- V1 C with gebrd's row reflectors (ormlq). C (n x k).
+pub fn ormlq_device(
+    dev: &Device,
+    afac: BufId,
+    taup: &[f64],
+    c: BufId,
+    m: usize,
+    n: usize,
+    b: usize,
+) -> Result<BufId> {
+    ormlq_device_with(dev, afac, taup, c, m, n, b, "ormlq_step")
+}
+
+/// ormlq with an explicit step op (classic vs modified CWY).
+#[allow(clippy::too_many_arguments)]
+pub fn ormlq_device_with(
+    dev: &Device,
+    afac: BufId,
+    taup: &[f64],
+    c: BufId,
+    m: usize,
+    n: usize,
+    b: usize,
+    step_op: &str,
+) -> Result<BufId> {
+    assert!(n % b == 0);
+    let p = [("b", b as i64), ("k", n as i64), ("m", m as i64), ("n", n as i64)];
+    // row reflectors: G_0..G_{n-2}; panels over [0, n) — the final panel's
+    // trailing reflectors have tau == 0 (identity), safe to apply.
+    let mut cur = c;
+    let mut t = n - b;
+    loop {
+        let tb = dev.scalar_i64(t as i64);
+        let mut taus = vec![0.0; b];
+        for i in 0..b {
+            if t + i < n - 1 {
+                taus[i] = taup[t + i];
+            }
+        }
+        let taub = dev.upload(taus, &[b]);
+        let c2 = dev.op(step_op, &p, &[cur, afac, taub, tb]);
+        dev.free(cur);
+        dev.free(tb);
+        dev.free(taub);
+        cur = c2;
+        if t == 0 {
+            break;
+        }
+        t -= b;
+    }
+    Ok(cur)
+}

@@ -1,0 +1,125 @@
+//! Device integration: drives real AOT artifacts through the PJRT worker
+//! and checks numerics against the CPU substrate. Requires `make artifacts`
+//! (the --quick set suffices: m=n=128/256, TS 1024x128).
+
+use gcsvd::config::artifacts_dir;
+use gcsvd::linalg::gebrd_cpu;
+use gcsvd::matrix::Matrix;
+use gcsvd::runtime::Device;
+use gcsvd::util::Rng;
+
+fn device() -> Device {
+    Device::new(&artifacts_dir()).expect("device (run `make artifacts` first)")
+}
+
+#[test]
+fn labrd_and_update_match_cpu() {
+    let dev = device();
+    let (m, n, b) = (128usize, 128usize, 32usize);
+    let mut rng = Rng::new(91);
+    let a = Matrix::from_fn(m, n, |_, _| rng.gaussian());
+
+    // device: one panel + trailing update
+    let a_buf = dev.upload(a.data.clone(), &[m, n]);
+    let t0 = dev.scalar_i64(0);
+    let ws = dev.op(
+        "labrd",
+        &[("m", m as i64), ("n", n as i64), ("b", b as i64)],
+        &[a_buf, t0],
+    );
+    let head = dev.read_prefix(ws, 4 * b).unwrap();
+    let a2 = dev.op(
+        "gebrd_update_xla",
+        &[("m", m as i64), ("n", n as i64), ("b", b as i64)],
+        &[ws, t0],
+    );
+    let a2_host = dev.read(a2).unwrap();
+
+    // cpu reference
+    let mut ac = a.clone();
+    let panel = gebrd_cpu::labrd(&mut ac, 0, b);
+    gebrd_cpu::trailing_update(&mut ac, &panel.p, &panel.q, 0, b);
+
+    assert!(
+        gcsvd::util::max_abs_diff(&head[..b], &panel.d) < 1e-10,
+        "d mismatch"
+    );
+    assert!(gcsvd::util::max_abs_diff(&head[b..2 * b], &panel.e) < 1e-10);
+    assert!(gcsvd::util::max_abs_diff(&head[2 * b..3 * b], &panel.tauq) < 1e-10);
+    assert!(gcsvd::util::max_abs_diff(&head[3 * b..4 * b], &panel.taup) < 1e-10);
+    let diff = gcsvd::util::max_abs_diff(&a2_host, &ac.data);
+    assert!(diff < 1e-9, "trailing update mismatch: {diff:e}");
+}
+
+#[test]
+fn pallas_update_matches_xla_update() {
+    let dev = device();
+    let (m, n, b) = (128usize, 128usize, 32usize);
+    let mut rng = Rng::new(92);
+    let a = Matrix::from_fn(m, n, |_, _| rng.gaussian());
+    let a_buf = dev.upload(a.data.clone(), &[m, n]);
+    let t0 = dev.scalar_i64(0);
+    let p = [("m", m as i64), ("n", n as i64), ("b", b as i64)];
+    let ws = dev.op("labrd", &p, &[a_buf, t0]);
+    let ax = dev.op("gebrd_update_xla", &p, &[ws, t0]);
+    let ap = dev.op("gebrd_update", &p, &[ws, t0]); // pallas kernel
+    let vx = dev.read(ax).unwrap();
+    let vp = dev.read(ap).unwrap();
+    let diff = gcsvd::util::max_abs_diff(&vx, &vp);
+    assert!(diff < 1e-11, "pallas vs xla merged update: {diff:e}");
+}
+
+#[test]
+fn eye_and_gemv_ops() {
+    let dev = device();
+    let n = 128usize;
+    let e = dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+    let v = dev.read(e).unwrap();
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            assert_eq!(v[i * n + j], want);
+        }
+    }
+    let mut rng = Rng::new(93);
+    let a = Matrix::from_fn(n, n, |_, _| rng.gaussian());
+    let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let ab = dev.upload(a.data.clone(), &[n, n]);
+    let xb = dev.upload(x.clone(), &[n]);
+    let y = dev.op("gemv_t", &[("m", n as i64), ("n", n as i64)], &[ab, xb]);
+    let yv = dev.read(y).unwrap();
+    let mut want = vec![0.0; n];
+    gcsvd::linalg::blas::gemv_t(&a, &x, &mut want, 1.0);
+    assert!(gcsvd::util::max_abs_diff(&yv, &want) < 1e-10);
+}
+
+#[test]
+fn async_chaining_and_stats() {
+    let dev = device();
+    let n = 128usize;
+    // chain 3 ops without any intermediate sync
+    let e = dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+    let perm: Vec<i64> = (0..n as i64).rev().collect();
+    let pb = dev.upload_i64(perm, &[n]);
+    let r1 = dev.op("bdc_permute_cols", &[("n", n as i64)], &[e, pb]);
+    let pb2 = dev.upload_i64((0..n as i64).rev().collect(), &[n]);
+    let r2 = dev.op("bdc_permute_cols", &[("n", n as i64)], &[r1, pb2]);
+    let v = dev.read(r2).unwrap(); // double reversal = identity
+    for i in 0..n {
+        assert_eq!(v[i * n + i], 1.0);
+    }
+    let st = dev.stats();
+    assert!(st.exec_count >= 3);
+    assert!(st.compile_count >= 2);
+}
+
+#[test]
+fn error_surfaces_on_read() {
+    let dev = device();
+    // op not in manifest
+    let bogus = dev.op("labrd", &[("m", 7), ("n", 7), ("b", 3)], &[]);
+    assert!(dev.read(bogus).is_err());
+    // device recovers for subsequent commands
+    let e = dev.op("eye", &[("m", 128), ("n", 128)], &[]);
+    assert!(dev.read(e).is_ok());
+}

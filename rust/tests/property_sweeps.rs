@@ -1,0 +1,139 @@
+//! Hand-rolled property sweeps (no proptest offline): randomized inputs,
+//! structural invariants checked over many cases.
+
+use gcsvd::bdc::deflate::lasd2;
+use gcsvd::config::{artifacts_dir, Config, Solver};
+use gcsvd::gen::{generate, MatrixKind};
+use gcsvd::linalg::bdsqr::bdsqr_svd;
+use gcsvd::linalg::{jacobi, secular};
+use gcsvd::runtime::transfer::TransferModel;
+use gcsvd::runtime::Device;
+use gcsvd::svd::{e_svd, gesvd};
+use gcsvd::util::Rng;
+
+/// Deflation invariants: perm is a permutation, z-mass preserved,
+/// live+dead partition, live d ascending with d[0] == 0.
+#[test]
+fn deflation_invariants_sweep() {
+    let mut rng = Rng::new(101);
+    for case in 0..200 {
+        let n = 3 + rng.below(40);
+        let mut d = vec![0.0; n];
+        for i in 1..n {
+            // mix of separated, clustered and tiny gaps
+            let gap = match rng.below(4) {
+                0 => 1e-18,
+                1 => 1e-9,
+                _ => 0.01 + rng.uniform(),
+            };
+            d[i] = d[i - 1] + gap;
+        }
+        let z: Vec<f64> = (0..n)
+            .map(|_| match rng.below(5) {
+                0 => 0.0,
+                1 => 1e-300,
+                _ => rng.gaussian(),
+            })
+            .collect();
+        let mass0: f64 = z.iter().map(|x| x * x).sum();
+        let out = lasd2(&d, &z, 1.0);
+        let mut p = out.perm.clone();
+        p.sort_unstable();
+        assert_eq!(p, (0..n).collect::<Vec<_>>(), "case {case}: perm");
+        assert_eq!(out.k + out.d_dead.len(), n, "case {case}: partition");
+        assert_eq!(out.d_live.len(), out.k);
+        assert_eq!(out.d_live[0], 0.0, "case {case}: q1 column must stay");
+        for w in out.d_live.windows(2) {
+            assert!(w[1] >= w[0], "case {case}: live d not ascending");
+        }
+        // rotations preserve z mass (up to the z1 floor injection)
+        let mass1: f64 = out.z_live.iter().map(|x| x * x).sum();
+        assert!(
+            mass1 >= mass0 - 1e-12 && mass1 <= mass0 + 1.0,
+            "case {case}: z mass {mass0} -> {mass1}"
+        );
+    }
+}
+
+/// bdsqr vs Jacobi oracle on random bidiagonals.
+#[test]
+fn bdsqr_vs_jacobi_sweep() {
+    let mut rng = Rng::new(102);
+    for case in 0..40 {
+        let n = 2 + rng.below(24);
+        let d: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let e: Vec<f64> = (0..n - 1).map(|_| rng.gaussian()).collect();
+        let (sig, _, _) = bdsqr_svd(&d, &e);
+        let b = gcsvd::matrix::Bidiagonal::new(d, e).to_dense();
+        let sv = jacobi::singular_values(&b);
+        for i in 0..n {
+            assert!(
+                (sig[i] - sv[i]).abs() < 1e-10 * sv[0].max(1.0),
+                "case {case} sigma[{i}]: {} vs {}",
+                sig[i],
+                sv[i]
+            );
+        }
+    }
+}
+
+/// Secular solver invariants on random spectra: interlacing + residual.
+#[test]
+fn secular_invariants_sweep() {
+    let mut rng = Rng::new(103);
+    for case in 0..60 {
+        let n = 2 + rng.below(30);
+        let mut d = vec![0.0; n];
+        for i in 1..n {
+            d[i] = d[i - 1] + 1e-6 + rng.uniform();
+        }
+        let z: Vec<f64> = (0..n).map(|_| 0.05 + rng.uniform()).collect();
+        let roots = secular::solve_all(&d, &z, 1);
+        let znorm2: f64 = z.iter().map(|x| x * x).sum();
+        for k in 0..n {
+            let w = roots[k].omega;
+            assert!(w >= d[k] - 1e-12, "case {case}: root {k} below pole");
+            if k + 1 < n {
+                assert!(w <= d[k + 1] + 1e-12, "case {case}: root {k} above pole");
+            } else {
+                assert!(w * w <= d[n - 1] * d[n - 1] + znorm2 + 1e-9);
+            }
+        }
+        // vectors diagonalise (spot-check via orthogonality)
+        let zh = secular::zhat(&d, &z, &roots);
+        let (u, v) = secular::secular_vectors(&d, &zh, &roots);
+        assert!(u.orthonormality_defect() < 1e-8, "case {case}: U");
+        assert!(v.orthonormality_defect() < 1e-8, "case {case}: V");
+    }
+}
+
+/// Full-solver sweep: ours vs the Jacobi oracle on mixed kinds/shapes.
+#[test]
+fn gesdd_vs_jacobi_sweep() {
+    let dev = Device::with_model(
+        &artifacts_dir(),
+        TransferModel { enabled: false, ..Default::default() },
+    )
+    .expect("device");
+    let cfg = Config::default();
+    let mut rng = Rng::new(104);
+    let shapes = [(128usize, 128usize), (1024, 128), (2048, 128), (256, 256)];
+    for case in 0..6 {
+        let (m, n) = shapes[rng.below(shapes.len())];
+        let kind = MatrixKind::ALL[rng.below(4)];
+        let theta = [1e1, 1e4, 1e7][rng.below(3)];
+        let a = generate(kind, m, n, theta, 1000 + case as u64);
+        let r = gesvd(&dev, &a, &cfg, Solver::Ours).expect("solve");
+        let sv = jacobi::singular_values(&a);
+        for i in 0..n {
+            assert!(
+                (r.sigma[i] - sv[i]).abs() < 1e-9 * sv[0].max(1.0),
+                "case {case} {}x{} {:?} sigma[{i}]",
+                m,
+                n,
+                kind
+            );
+        }
+        assert!(e_svd(&a, &r) < 1e-9, "case {case}: E_svd");
+    }
+}

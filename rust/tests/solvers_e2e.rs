@@ -1,0 +1,112 @@
+//! End-to-end solver correctness: every solver x {square, TS} on real
+//! artifacts, checked for reconstruction, orthogonality and singular-value
+//! agreement with the Jacobi oracle.
+
+use gcsvd::config::{artifacts_dir, Config, Solver};
+use gcsvd::gen::{generate, MatrixKind};
+use gcsvd::linalg::jacobi;
+use gcsvd::matrix::Matrix;
+use gcsvd::runtime::transfer::TransferModel;
+use gcsvd::runtime::Device;
+use gcsvd::svd::{e_svd, gesvd};
+
+fn device() -> Device {
+    // transfer model disabled in tests: correctness only, no spin-waits
+    Device::with_model(
+        &artifacts_dir(),
+        TransferModel { enabled: false, ..Default::default() },
+    )
+    .expect("device (run `make artifacts` first)")
+}
+
+fn check(dev: &Device, a: &Matrix, solver: Solver, tol: f64) {
+    let cfg = Config { artifacts: artifacts_dir(), ..Default::default() };
+    let r = gesvd(dev, a, &cfg, solver).unwrap_or_else(|e| panic!("{solver:?}: {e:#}"));
+    let n = a.cols;
+    // descending non-negative
+    for i in 0..n {
+        assert!(r.sigma[i] >= -1e-12, "{solver:?} sigma[{i}] < 0");
+        if i + 1 < n {
+            assert!(r.sigma[i] >= r.sigma[i + 1] - 1e-10, "{solver:?} not descending");
+        }
+    }
+    // orthogonality
+    assert!(
+        r.u.orthonormality_defect() < tol,
+        "{solver:?} U defect {:e}",
+        r.u.orthonormality_defect()
+    );
+    let v = r.vt.transpose();
+    assert!(
+        v.orthonormality_defect() < tol,
+        "{solver:?} V defect {:e}",
+        v.orthonormality_defect()
+    );
+    // reconstruction
+    let err = e_svd(a, &r);
+    assert!(err < tol, "{solver:?} E_svd {err:e}");
+    // singular values vs oracle
+    let sv = jacobi::singular_values(a);
+    for i in 0..n {
+        assert!(
+            (r.sigma[i] - sv[i]).abs() < tol * sv[0].max(1.0),
+            "{solver:?} sigma[{i}]: {} vs {}",
+            r.sigma[i],
+            sv[i]
+        );
+    }
+}
+
+#[test]
+fn all_solvers_square_128() {
+    let dev = device();
+    let a = generate(MatrixKind::Random, 128, 128, 1.0, 42);
+    for solver in [
+        Solver::Ours,
+        Solver::RocSolverSim,
+        Solver::MagmaSim,
+        Solver::BdcV1,
+        Solver::LapackRef,
+    ] {
+        check(&dev, &a, solver, 1e-8);
+    }
+}
+
+#[test]
+fn all_solvers_tall_skinny() {
+    let dev = device();
+    let a = generate(MatrixKind::SvdGeo, 1024, 128, 1e3, 7);
+    for solver in [
+        Solver::Ours,
+        Solver::RocSolverSim,
+        Solver::MagmaSim,
+        Solver::BdcV1,
+        Solver::LapackRef,
+    ] {
+        check(&dev, &a, solver, 1e-8);
+    }
+}
+
+#[test]
+fn ours_matrix_kinds_and_conditions() {
+    let dev = device();
+    for kind in MatrixKind::ALL {
+        for theta in [1e2, 1e6] {
+            let a = generate(kind, 128, 128, theta, 3);
+            check(&dev, &a, Solver::Ours, 1e-8);
+        }
+    }
+}
+
+#[test]
+fn profile_phases_present() {
+    let dev = device();
+    let a = generate(MatrixKind::Random, 1024, 128, 1.0, 9);
+    let cfg = Config::default();
+    let r = gesvd(&dev, &a, &cfg, Solver::Ours).unwrap();
+    for phase in ["geqrf", "orgqr", "gebrd", "bdcdc", "ormqr+ormlq", "gemm"] {
+        assert!(r.profile.get(phase) > 0.0, "missing phase {phase}");
+    }
+    assert_eq!(r.profile.location["gebrd"], "gpu");
+    assert_eq!(r.profile.location["bdcdc"], "hybrid");
+}
