@@ -1,7 +1,7 @@
 //! End-to-end application driver: SVD-based image compression — the
 //! paper's motivating application class (Andrews & Patterson [3],
 //! Sadek [36]). This is the repository's headline end-to-end validation
-//! (recorded in EXPERIMENTS.md §End-to-end):
+//! (recorded in DESIGN.md §End-to-end):
 //!
 //!   1. synthesise a deterministic 512x512 grayscale "photograph"
 //!      (smooth background + textures + edges — realistic spectral decay),

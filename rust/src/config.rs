@@ -2,6 +2,8 @@
 
 use std::path::PathBuf;
 
+pub use crate::runtime::BackendKind;
+
 /// Which diagonalisation engine a solve uses.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Solver {
@@ -42,7 +44,10 @@ impl Solver {
 /// Global knobs. Field defaults mirror the paper's tuned values.
 #[derive(Clone, Debug)]
 pub struct Config {
-    /// Directory holding the AOT artifacts + manifest.
+    /// Device backend (host interpreter by default; `GCSVD_BACKEND` or
+    /// `--backend` selects the PJRT path when compiled in).
+    pub backend: BackendKind,
+    /// Directory holding the AOT artifacts + manifest (PJRT backend only).
     pub artifacts: PathBuf,
     /// gebrd/geqrf/orm* block size (paper Fig. 4/13/15 tuning; 32 default).
     pub block: usize,
@@ -60,6 +65,7 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Config {
+            backend: BackendKind::from_env(),
             artifacts: artifacts_dir(),
             block: 32,
             leaf: 32,

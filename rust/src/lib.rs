@@ -13,10 +13,13 @@
 //!   custom-kernel hot spots: the merged trailing update and the fused
 //!   secular-vector stage.
 //!
-//! The "GPU" is a PJRT device (CPU plugin in this environment — see
-//! DESIGN.md §Hardware-substitution); matrices live in device buffers that
-//! are chained between compiled executables without host round-trips,
-//! mirroring the paper's elimination of CPU↔GPU matrix transfers.
+//! The "GPU" is a pluggable [`runtime::Backend`] (see DESIGN.md
+//! §Hardware-substitution): by default a pure-Rust host interpreter that
+//! executes every device op natively (hermetic — no artifacts, Python or
+//! network), with the PJRT/XLA path available behind the `pjrt` cargo
+//! feature. Either way, matrices live in device buffers that are chained
+//! between ops without host round-trips, mirroring the paper's
+//! elimination of CPU↔GPU matrix transfers.
 
 pub mod bdc;
 pub mod bench_harness;

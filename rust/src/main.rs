@@ -8,7 +8,8 @@
 //!   profile --m M --n N [--solver S]   phase/location trace (Fig. 1 style)
 //!   info    list artifact coverage
 //!
-//! Global flags: --artifacts DIR, --kernel pallas|xla, --no-transfer-model
+//! Global flags: --backend host|pjrt (or GCSVD_BACKEND; default host),
+//! --artifacts DIR (pjrt only), --kernel pallas|xla, --no-transfer-model
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -70,6 +71,10 @@ fn build_config(args: &Args) -> Result<Config> {
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts = dir.into();
     }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = gcsvd::config::BackendKind::parse(b)
+            .ok_or_else(|| anyhow!("--backend must be host or pjrt"))?;
+    }
     if let Some(k) = args.get("kernel") {
         if k != "pallas" && k != "xla" {
             bail!("--kernel must be pallas or xla");
@@ -86,7 +91,7 @@ fn build_config(args: &Args) -> Result<Config> {
 }
 
 fn make_device(cfg: &Config) -> Result<Device> {
-    Device::with_model(&cfg.artifacts, cfg.transfer)
+    Device::with_backend(cfg.backend, &cfg.artifacts, cfg.transfer)
 }
 
 fn cmd_svd(args: &Args) -> Result<()> {
@@ -168,7 +173,8 @@ fn cmd_profile(args: &Args) -> Result<()> {
 
 fn cmd_info(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
-    let manifest = gcsvd::runtime::registry::Manifest::load(&cfg.artifacts)?;
+    let manifest = gcsvd::runtime::registry::Manifest::load_or_builtin(&cfg.artifacts)?;
+    println!("backend: {}", cfg.backend.name());
     println!("artifacts: {:?}", manifest.dir());
     let mut names: Vec<String> = vec![];
     for op in [

@@ -1,0 +1,61 @@
+//! The device backend seam.
+//!
+//! [`Backend`] is the contract between the device worker loop
+//! (`runtime::device`) and whatever actually executes ops: upload f64/i64
+//! arrays, execute an op by [`OpKey`], read buffers back, report compile
+//! accounting. Two implementations exist:
+//!
+//!   * `runtime::host::HostBackend` — a pure-Rust interpreter that
+//!     natively implements every op the coordinator emits, with semantics
+//!     pinned to `python/compile/kernels/ref.py`. The default: hermetic,
+//!     no artifacts, no Python, no network.
+//!   * `runtime::pjrt::PjrtBackend` (behind the `pjrt` cargo feature) —
+//!     compiles AOT-lowered HLO artifacts through a PJRT client, the
+//!     original paper-reproduction substrate.
+//!
+//! Backends need not be `Send`: the worker constructs its backend on the
+//! worker thread (PJRT state is thread-bound), so [`Device`] spawns with a
+//! `FnOnce() -> Result<B>` factory instead of a backend value.
+//!
+//! [`Device`]: crate::runtime::Device
+
+use anyhow::Result;
+
+use crate::runtime::registry::OpKey;
+
+/// A device execution substrate. Buffers are opaque to the worker; the
+/// worker maps caller-allocated `BufId`s to `Self::Buf` values.
+pub trait Backend {
+    type Buf;
+
+    /// Upload a row-major f64 array with the given dims ([] = scalar).
+    fn upload_f64(&mut self, data: Vec<f64>, dims: &[usize]) -> Result<Self::Buf>;
+
+    /// Upload an i64 array (index vectors / runtime scalars).
+    fn upload_i64(&mut self, data: Vec<i64>, dims: &[usize]) -> Result<Self::Buf>;
+
+    /// Execute one op; args are borrowed input buffers, the result is a
+    /// fresh output buffer (ops never mutate inputs — stream semantics).
+    fn exec(&mut self, op: &OpKey, args: &[&Self::Buf]) -> Result<Self::Buf>;
+
+    /// Full f64 read-back of a buffer (row-major).
+    fn read(&mut self, buf: &Self::Buf) -> Result<Vec<f64>>;
+
+    /// Read only the first `len` elements. Backends that can avoid
+    /// materialising the rest should; the default truncates a full read.
+    fn read_prefix(&mut self, buf: &Self::Buf, len: usize) -> Result<Vec<f64>> {
+        let mut v = self.read(buf)?;
+        v.truncate(len);
+        Ok(v)
+    }
+
+    /// (compile_count, compile_sec) for `DeviceStats`. For the host
+    /// interpreter this counts distinct op keys executed (the analogue of
+    /// a compile cache fill).
+    fn compile_stats(&self) -> (usize, f64) {
+        (0, 0.0)
+    }
+
+    /// Backend name for diagnostics.
+    fn name(&self) -> &'static str;
+}

@@ -65,25 +65,28 @@ impl DeviceEngine {
     }
 
     fn apply_block(&mut self, which: Mat, blk: &Matrix, off: usize, len: usize) {
-        // upload a LEAF_TILE^2 tile with the live block at `loc`
+        // upload a bs^2 tile with the live block at `loc`; the tile is
+        // clamped to the matrix so small problems (n < LEAF_TILE) neither
+        // underflow the window anchor nor overhang the matrix edge
         let n = self.n;
-        let woff = off.min(n - LEAF_TILE);
+        let bs = LEAF_TILE.min(n);
+        let woff = off.min(n - bs);
         let loc = off - woff;
-        assert!(loc + len <= LEAF_TILE, "leaf block too large: {len}+{loc}");
-        let mut tile = vec![0.0; LEAF_TILE * LEAF_TILE];
+        assert!(loc + len <= bs, "leaf block too large: {len}+{loc} > {bs}");
+        let mut tile = vec![0.0; bs * bs];
         for i in 0..len {
             for j in 0..len {
-                tile[(loc + i) * LEAF_TILE + loc + j] = blk.at(i, j);
+                tile[(loc + i) * bs + loc + j] = blk.at(i, j);
             }
         }
-        let tb = self.dev.upload(tile, &[LEAF_TILE, LEAF_TILE]);
+        let tb = self.dev.upload(tile, &[bs, bs]);
         let woffb = self.dev.scalar_i64(woff as i64);
         let locb = self.dev.scalar_i64(loc as i64);
         let lenb = self.dev.scalar_i64(len as i64);
         let cur = self.mat(which);
         let out = self.dev.op(
             "set_block",
-            &[("n", n as i64), ("bs", LEAF_TILE as i64)],
+            &[("n", n as i64), ("bs", bs as i64)],
             &[cur, tb, woffb, locb, lenb],
         );
         for b in [cur, tb, woffb, locb, lenb] {
@@ -127,7 +130,7 @@ impl BdcEngine for DeviceEngine {
         for chunk in rots.chunks(ROT_BATCH) {
             // smallest emitted rmax bucket that fits this chunk: tiny
             // deflation batches (1-8 rots) must not pay a 512-iteration
-            // device loop (EXPERIMENTS.md §Perf L3-1).
+            // device loop (DESIGN.md §Perf notes, L3-1).
             let rmax = ROT_BUCKETS
                 .iter()
                 .copied()
@@ -182,9 +185,12 @@ impl BdcEngine for DeviceEngine {
     ) {
         let n = self.n;
         let k = d.len();
-        // the gemm window must cover the V block's extra row when sqre=1
-        let kb = bucket_for(len + sqre).expect("bucket");
-        assert!(kb <= n, "gemm window {kb} larger than matrix {n}");
+        // the gemm window must cover the V block's extra row when sqre=1;
+        // clamp the bucket to the matrix so small problems (n below the
+        // first bucket) and oversized requests stay in range — the node
+        // block always fits because lo + len + sqre <= n
+        let kb = bucket_for(len + sqre).unwrap_or(len + sqre).min(n);
+        debug_assert!(kb >= len + sqre, "gemm window {kb} below block {}", len + sqre);
         // padded vectors: d strictly increasing beyond K; the roots ship as
         // their (dbase, tau) pairs so the kernel forms every delta in the
         // cancellation-free factored form (see kernels/secular.py).

@@ -1,23 +1,64 @@
-//! The device: a PJRT client behind a command queue.
+//! The device: a pluggable [`Backend`] behind a command queue.
 //!
-//! All PJRT state (client, executables, buffers) lives on one worker
-//! thread; the coordinator enqueues commands and receives replies over
-//! channels. This models a GPU stream: commands execute in FIFO order,
-//! enqueues are asynchronous (the CPU continues immediately — the overlap
-//! the paper's Algorithm 3 exploits), and only explicit reads synchronise.
+//! All backend state (buffers, executables) lives on one worker thread;
+//! the coordinator enqueues commands and receives replies over channels.
+//! This models a GPU stream: commands execute in FIFO order, enqueues are
+//! asynchronous (the CPU continues immediately — the overlap the paper's
+//! Algorithm 3 exploits), and only explicit reads synchronise.
 //!
 //! Buffer handles (`BufId`) are allocated by the *caller*, so a command
 //! may reference the output of an earlier, still-queued command without
 //! waiting — exactly like chaining kernels on a stream.
+//!
+//! Backend selection (DESIGN.md §Backend architecture): the pure-Rust
+//! host interpreter is the default; the PJRT/XLA path is opt-in via the
+//! `pjrt` cargo feature plus `GCSVD_BACKEND=pjrt` (or an explicit
+//! [`BackendKind`] through [`Device::with_backend`]).
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-use crate::runtime::registry::{ExeCache, Manifest, OpKey};
+use crate::runtime::backend::Backend;
+use crate::runtime::host::HostBackend;
+use crate::runtime::registry::OpKey;
 use crate::runtime::transfer::{TransferModel, TransferStats};
+
+/// Which backend a [`Device`] executes on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust host interpreter (default; hermetic, no artifacts).
+    Host,
+    /// PJRT client over AOT HLO artifacts (`pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "host" | "cpu" | "interp" => Some(BackendKind::Host),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Selection from `GCSVD_BACKEND` (default: host).
+    pub fn from_env() -> BackendKind {
+        std::env::var("GCSVD_BACKEND")
+            .ok()
+            .and_then(|s| BackendKind::parse(&s))
+            .unwrap_or(BackendKind::Host)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Host => "host",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
 
 /// Handle to a device buffer (valid on the worker thread only).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -54,24 +95,70 @@ pub struct DeviceStats {
 pub struct Device {
     tx: Sender<Cmd>,
     next: Arc<AtomicU64>,
+    backend: BackendKind,
     /// Transfer accounting + model charging for the *baseline* paths.
     pub model: TransferModel,
     pub tstats: Arc<Mutex<TransferStats>>,
 }
 
 impl Device {
-    /// Spin up the worker with the manifest at `artifacts_dir`.
+    /// Spin up a worker on the backend selected by `GCSVD_BACKEND`
+    /// (default: the hermetic host interpreter). `artifacts_dir` is only
+    /// consulted by the PJRT backend.
     pub fn new(artifacts_dir: &std::path::Path) -> Result<Device> {
         Self::with_model(artifacts_dir, TransferModel { enabled: false, ..Default::default() })
     }
 
     pub fn with_model(artifacts_dir: &std::path::Path, model: TransferModel) -> Result<Device> {
-        let manifest = Manifest::load(artifacts_dir)?;
+        Self::with_backend(BackendKind::from_env(), artifacts_dir, model)
+    }
+
+    /// Host-interpreter device with the transfer model disabled — the
+    /// hermetic default for tests and library use.
+    pub fn host() -> Device {
+        Self::with_backend(
+            BackendKind::Host,
+            std::path::Path::new(""),
+            TransferModel { enabled: false, ..Default::default() },
+        )
+        .expect("host backend construction cannot fail")
+    }
+
+    pub fn with_backend(
+        kind: BackendKind,
+        artifacts_dir: &std::path::Path,
+        model: TransferModel,
+    ) -> Result<Device> {
+        match kind {
+            BackendKind::Host => {
+                Self::spawn(kind, model, move || Ok(HostBackend::new()))
+            }
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => {
+                let manifest = crate::runtime::registry::Manifest::load(artifacts_dir)?;
+                Self::spawn(kind, model, move || {
+                    crate::runtime::pjrt::PjrtBackend::new(manifest)
+                })
+            }
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => {
+                let _ = artifacts_dir;
+                bail!("pjrt backend requested but this build has no PJRT support \
+                       (rebuild with --features pjrt)")
+            }
+        }
+    }
+
+    fn spawn<B, F>(kind: BackendKind, model: TransferModel, make: F) -> Result<Device>
+    where
+        B: Backend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let (tx, rx) = channel::<Cmd>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         std::thread::Builder::new()
             .name("gcsvd-device".into())
-            .spawn(move || worker(manifest, rx, ready_tx))
+            .spawn(move || worker(make, rx, ready_tx))
             .context("spawning device worker")?;
         ready_rx
             .recv()
@@ -79,9 +166,14 @@ impl Device {
         Ok(Device {
             tx,
             next: Arc::new(AtomicU64::new(1)),
+            backend: kind,
             model,
             tstats: Arc::new(Mutex::new(TransferStats::default())),
         })
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     fn fresh(&self) -> BufId {
@@ -183,16 +275,21 @@ impl Device {
     }
 }
 
-fn worker(manifest: Manifest, rx: Receiver<Cmd>, ready: Sender<Result<()>>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
+/// The worker loop, generic over the backend. The backend is constructed
+/// ON this thread (PJRT state is thread-bound), hence the factory.
+fn worker<B: Backend>(
+    make: impl FnOnce() -> Result<B>,
+    rx: Receiver<Cmd>,
+    ready: Sender<Result<()>>,
+) {
+    let mut backend = match make() {
+        Ok(b) => b,
         Err(e) => {
-            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e:?}")));
+            let _ = ready.send(Err(e));
             return;
         }
     };
-    let mut cache = ExeCache::new(client, manifest);
-    let mut bufs: HashMap<BufId, xla::PjRtBuffer> = HashMap::new();
+    let mut bufs: HashMap<BufId, B::Buf> = HashMap::new();
     let mut stats = DeviceStats::default();
     // first error is latched and reported at the next synchronising call
     let mut pending_err: Option<anyhow::Error> = None;
@@ -202,33 +299,26 @@ fn worker(manifest: Manifest, rx: Receiver<Cmd>, ready: Sender<Result<()>>) {
         match cmd {
             Cmd::UploadF64 { id, data, dims } => {
                 stats.upload_bytes += (data.len() * 8) as u64;
-                match cache.client().buffer_from_host_buffer(&data, &dims, None) {
+                match backend.upload_f64(data, &dims) {
                     Ok(b) => {
                         bufs.insert(id, b);
                     }
-                    Err(e) => pending_err = pending_err.or(Some(anyhow!("upload: {e:?}"))),
+                    Err(e) => pending_err = pending_err.or(Some(e)),
                 }
             }
             Cmd::UploadI64 { id, data, dims } => {
                 stats.upload_bytes += (data.len() * 8) as u64;
-                match cache.client().buffer_from_host_buffer(&data, &dims, None) {
+                match backend.upload_i64(data, &dims) {
                     Ok(b) => {
                         bufs.insert(id, b);
                     }
-                    Err(e) => pending_err = pending_err.or(Some(anyhow!("upload i64: {e:?}"))),
+                    Err(e) => pending_err = pending_err.or(Some(e)),
                 }
             }
             Cmd::Exec { op, args, out } => {
                 if pending_err.is_some() {
                     continue;
                 }
-                let exe = match cache.get(&op) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        pending_err = Some(e);
-                        continue;
-                    }
-                };
                 let mut argrefs = Vec::with_capacity(args.len());
                 let mut missing = false;
                 for a in &args {
@@ -246,16 +336,15 @@ fn worker(manifest: Manifest, rx: Receiver<Cmd>, ready: Sender<Result<()>>) {
                     continue;
                 }
                 let t0 = std::time::Instant::now();
-                match exe.execute_b(&argrefs) {
-                    Ok(mut res) => {
+                match backend.exec(&op, &argrefs) {
+                    Ok(buf) => {
                         let dt = t0.elapsed().as_secs_f64();
                         stats.exec_count += 1;
                         stats.exec_sec += dt;
                         *stats.per_op_sec.entry(op.name.clone()).or_default() += dt;
-                        let buf = res.remove(0).remove(0);
                         bufs.insert(out, buf);
                     }
-                    Err(e) => pending_err = Some(anyhow!("exec {op}: {e:?}")),
+                    Err(e) => pending_err = Some(e),
                 }
             }
             Cmd::Read { id, reply } => {
@@ -264,12 +353,7 @@ fn worker(manifest: Manifest, rx: Receiver<Cmd>, ready: Sender<Result<()>>) {
                 } else {
                     match bufs.get(&id) {
                         None => Err(anyhow!("read: missing buffer {id:?}")),
-                        Some(b) => b
-                            .to_literal_sync()
-                            .map_err(|e| anyhow!("read literal: {e:?}"))
-                            .and_then(|l| {
-                                l.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
-                            }),
+                        Some(b) => backend.read(b),
                     }
                 };
                 if let Ok(v) = &r {
@@ -283,22 +367,7 @@ fn worker(manifest: Manifest, rx: Receiver<Cmd>, ready: Sender<Result<()>>) {
                 } else {
                     match bufs.get(&id) {
                         None => Err(anyhow!("read_prefix: missing buffer {id:?}")),
-                        Some(b) => {
-                            // TFRT CPU PJRT lacks CopyRawToHost; fall back
-                            // to a full literal read and truncate. (A real
-                            // accelerator backend would honour the raw
-                            // path; see EXPERIMENTS.md §Perf.)
-                            b.to_literal_sync()
-                                .map_err(|e| anyhow!("read_prefix literal: {e:?}"))
-                                .and_then(|l| {
-                                    l.to_vec::<f64>()
-                                        .map_err(|e| anyhow!("to_vec: {e:?}"))
-                                })
-                                .map(|mut v| {
-                                    v.truncate(len);
-                                    v
-                                })
-                        }
+                        Some(b) => backend.read_prefix(b, len),
                     }
                 };
                 if let Ok(v) = &r {
@@ -317,8 +386,9 @@ fn worker(manifest: Manifest, rx: Receiver<Cmd>, ready: Sender<Result<()>>) {
                 let _ = reply.send(r);
             }
             Cmd::Stats { reply } => {
-                stats.compile_count = cache.compile_count;
-                stats.compile_sec = cache.compile_sec;
+                let (cc, cs) = backend.compile_stats();
+                stats.compile_count = cc;
+                stats.compile_sec = cs;
                 let _ = reply.send(stats.clone());
             }
         }
@@ -327,14 +397,54 @@ fn worker(manifest: Manifest, rx: Receiver<Cmd>, ready: Sender<Result<()>>) {
 
 #[cfg(test)]
 mod tests {
-    // Device tests that need real artifacts live in rust/tests/ (they
-    // require `make artifacts` to have run); here we only check the
-    // handle allocator logic compiles and errors are explicit.
     use super::*;
 
     #[test]
-    fn missing_artifacts_dir_errors() {
-        let r = Device::new(std::path::Path::new("/nonexistent/artifacts"));
+    fn host_device_needs_no_artifacts() {
+        // the hermetic default: construction succeeds with no artifacts
+        // directory at all, and ops execute
+        let dev = Device::new(std::path::Path::new("/nonexistent/artifacts")).unwrap();
+        assert_eq!(dev.backend(), BackendKind::Host);
+        let e = dev.op("eye", &[("m", 3), ("n", 3)], &[]);
+        let v = dev.read(e).unwrap();
+        assert_eq!(v, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("host"), Some(BackendKind::Host));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("tpu"), None);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_without_feature_errors() {
+        let r = Device::with_backend(
+            BackendKind::Pjrt,
+            std::path::Path::new("/nonexistent"),
+            TransferModel { enabled: false, ..Default::default() },
+        );
         assert!(r.is_err());
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn pjrt_missing_artifacts_dir_errors() {
+        let r = Device::with_backend(
+            BackendKind::Pjrt,
+            std::path::Path::new("/nonexistent/artifacts"),
+            TransferModel { enabled: false, ..Default::default() },
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn error_latching_recovers_after_read() {
+        let dev = Device::host();
+        let bogus = dev.op("not_a_real_op", &[("n", 4)], &[]);
+        assert!(dev.read(bogus).is_err());
+        let e = dev.op("eye", &[("m", 2), ("n", 2)], &[]);
+        assert!(dev.read(e).is_ok());
     }
 }

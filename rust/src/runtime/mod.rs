@@ -1,9 +1,15 @@
-//! PJRT runtime: the device command queue, the artifact registry and the
-//! transfer-cost model.
-pub mod device;
-pub mod registry;
+//! Device runtime: the command-queue device, the pluggable backend seam
+//! (host interpreter by default, PJRT behind the `pjrt` feature), the op
+//! registry and the transfer-cost model.
+pub mod backend;
 pub mod bdc_engine;
+pub mod device;
+pub mod host;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod registry;
 pub mod transfer;
 
-pub use device::{BufId, Device, DeviceStats};
+pub use backend::Backend;
+pub use device::{BackendKind, BufId, Device, DeviceStats};
 pub use registry::OpKey;

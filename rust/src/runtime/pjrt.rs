@@ -1,0 +1,68 @@
+//! The PJRT/XLA backend (behind the `pjrt` cargo feature): resolves ops
+//! through the AOT artifact manifest, compiles HLO text lazily per op key
+//! and executes through a PJRT client. This is the original
+//! paper-reproduction substrate; the CPU PJRT plugin stands in for the
+//! GPU (DESIGN.md §Hardware substitution).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::backend::Backend;
+use crate::runtime::registry::{ExeCache, Manifest, OpKey};
+
+pub struct PjrtBackend {
+    cache: ExeCache,
+}
+
+impl PjrtBackend {
+    /// Construct on the worker thread (PJRT state is thread-bound).
+    pub fn new(manifest: Manifest) -> Result<PjrtBackend> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(PjrtBackend { cache: ExeCache::new(client, manifest) })
+    }
+}
+
+impl Backend for PjrtBackend {
+    type Buf = xla::PjRtBuffer;
+
+    fn upload_f64(&mut self, data: Vec<f64>, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.cache
+            .client()
+            .buffer_from_host_buffer(&data, dims, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    fn upload_i64(&mut self, data: Vec<i64>, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.cache
+            .client()
+            .buffer_from_host_buffer(&data, dims, None)
+            .map_err(|e| anyhow!("upload i64: {e:?}"))
+    }
+
+    fn exec(&mut self, op: &OpKey, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let exe = self.cache.get(op)?;
+        let mut res = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("exec {op}: {e:?}"))?;
+        Ok(res.remove(0).remove(0))
+    }
+
+    fn read(&mut self, buf: &xla::PjRtBuffer) -> Result<Vec<f64>> {
+        buf.to_literal_sync()
+            .map_err(|e| anyhow!("read literal: {e:?}"))?
+            .to_vec::<f64>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    // TFRT CPU PJRT lacks CopyRawToHost, so the prefix read falls back to
+    // a full literal read + truncate (the Backend default). A real
+    // accelerator backend would honour the raw path (DESIGN.md §Perf).
+
+    fn compile_stats(&self) -> (usize, f64) {
+        (self.cache.compile_count, self.cache.compile_sec)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

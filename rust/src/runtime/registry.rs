@@ -44,7 +44,7 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading manifest {path:?} — run `make artifacts`"))?;
+            .with_context(|| format!("reading manifest {path:?} — run `python -m compile.aot`"))?;
         let mut files = HashMap::new();
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
@@ -78,6 +78,116 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), files })
     }
 
+    /// Load the on-disk manifest, or fall back to the [`builtin`]
+    /// shape grid when none exists. A manifest that exists but fails to
+    /// parse is a real error and is surfaced, not silently replaced. The
+    /// host-interpreter backend executes any op key, so the builtin grid
+    /// (mirroring aot.py's emission) only tells the bench harness which
+    /// shapes to sweep; the PJRT backend still requires real artifacts
+    /// via [`Manifest::load`].
+    ///
+    /// [`builtin`]: Manifest::builtin
+    pub fn load_or_builtin(dir: &Path) -> Result<Manifest> {
+        if dir.join("manifest.txt").exists() {
+            Manifest::load(dir)
+        } else {
+            Ok(Manifest::builtin())
+        }
+    }
+
+    /// The shape grid aot.py emits (without `--large`), with placeholder
+    /// file paths — see [`Manifest::load_or_builtin`].
+    pub fn builtin() -> Manifest {
+        let mut files = HashMap::new();
+        let mut put = |name: &str, params: &[(&str, i64)]| {
+            files.insert(OpKey::new(name, params), PathBuf::from("<builtin>"));
+        };
+        const SQUARE: [i64; 4] = [128, 256, 512, 1024];
+        const TS: [(i64, i64); 6] =
+            [(1024, 128), (2048, 128), (2048, 256), (2048, 512), (4096, 256), (4096, 512)];
+        const DEFAULT_B: i64 = 32;
+        const TUNE_B: [i64; 3] = [8, 16, 64];
+        const FIG5_M: [i64; 5] = [256, 512, 1024, 2048, 4096];
+        const FIG5_K: i64 = 32;
+        const ROT_BUCKETS: [i64; 3] = [8, 64, 512];
+        const LEAF: i64 = 32;
+
+        let matrix_ops = |put: &mut dyn FnMut(&str, &[(&str, i64)]), m: i64, n: i64, b: i64| {
+            for op in [
+                "labrd", "gebrd_update", "gebrd_update_xla", "gebrd_update2", "extract_a",
+                "ws_head", "qr_head", "set_cols", "set_rows", "larfb_up", "larfb_full",
+                "gebrd_update2_ws", "geqrf_step", "geqrf_extract_a", "orgqr_step",
+                "geqrf_step_classic", "orgqr_step_classic",
+            ] {
+                put(op, &[("m", m), ("n", n), ("b", b)]);
+            }
+            for op in ["ormqr_step", "ormlq_step", "ormqr_step_classic", "ormlq_step_classic"] {
+                put(op, &[("m", m), ("n", n), ("k", n), ("b", b)]);
+            }
+        };
+        let bdc_ops = |put: &mut dyn FnMut(&str, &[(&str, i64)]), n: i64| {
+            put("bdc_row", &[("n", n)]);
+            for r in ROT_BUCKETS {
+                put("bdc_rots", &[("n", n), ("rmax", r)]);
+            }
+            put("bdc_permute_cols", &[("n", n)]);
+            put("set_block", &[("n", n), ("bs", 2 * LEAF)]);
+            put("zeros", &[("n", n)]);
+            for kb in BUCKETS {
+                if (kb as i64) <= n {
+                    put("bdc_block_gemm", &[("n", n), ("kb", kb as i64)]);
+                }
+            }
+        };
+
+        let mut ns: Vec<i64> = vec![];
+        for n in SQUARE {
+            matrix_ops(&mut put, n, n, DEFAULT_B);
+            put("eye", &[("m", n), ("n", n)]);
+            put("gemv_t", &[("m", n), ("n", n)]);
+            put("gemv_n", &[("m", n), ("n", n)]);
+            ns.push(n);
+        }
+        for (m, n) in TS {
+            matrix_ops(&mut put, m, n, DEFAULT_B);
+            put("eye", &[("m", m), ("n", n)]);
+            put("gemv_t", &[("m", m), ("n", n)]);
+            put("gemv_n", &[("m", m), ("n", n)]);
+            put("gemm", &[("m", m), ("k", n), ("n", n)]);
+            ns.push(n);
+        }
+        let nmax = *ns.iter().max().unwrap();
+        for nb in BUCKETS {
+            if (nb as i64) <= nmax {
+                for op in ["bdc_secular", "bdc_secular_xla", "bdc_secular_u", "bdc_secular_v"] {
+                    put(op, &[("nb", nb as i64)]);
+                }
+            }
+        }
+        ns.sort_unstable();
+        ns.dedup();
+        for n in ns {
+            bdc_ops(&mut put, n);
+        }
+        for b in TUNE_B {
+            matrix_ops(&mut put, 512, 512, b);
+            matrix_ops(&mut put, 2048, 256, b);
+        }
+        for m in FIG5_M {
+            for op in ["fig5_gemv4", "fig5_gemv2", "gemv_tall_t", "gemv_tall_n", "gemv_tall_n_acc"] {
+                put(op, &[("m", m), ("k", FIG5_K)]);
+            }
+            put("gemv_tall_t", &[("m", m), ("k", 2 * FIG5_K)]);
+            put("gemv_tall_n", &[("m", m), ("k", 2 * FIG5_K)]);
+            if m <= 2048 {
+                for op in ["fig5_gemm2", "fig5_gemm1", "fig5_gemm1_xla", "rank_update"] {
+                    put(op, &[("m", m), ("k", FIG5_K)]);
+                }
+            }
+        }
+        Manifest { dir: PathBuf::from("<builtin>"), files }
+    }
+
     pub fn dir(&self) -> &Path {
         &self.dir
     }
@@ -86,7 +196,7 @@ impl Manifest {
         self.files
             .get(key)
             .map(|p| p.as_path())
-            .ok_or_else(|| anyhow!("op not in manifest: {key} (re-run `make artifacts`?)"))
+            .ok_or_else(|| anyhow!("op not in manifest: {key} (re-run `python -m compile.aot`?)"))
     }
 
     pub fn contains(&self, key: &OpKey) -> bool {
@@ -106,7 +216,8 @@ impl Manifest {
     }
 }
 
-/// Compile cache living on the device worker thread.
+/// Compile cache living on the device worker thread (PJRT backend only).
+#[cfg(feature = "pjrt")]
 pub struct ExeCache {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -115,6 +226,7 @@ pub struct ExeCache {
     pub compile_sec: f64,
 }
 
+#[cfg(feature = "pjrt")]
 impl ExeCache {
     pub fn new(client: xla::PjRtClient, manifest: Manifest) -> Self {
         ExeCache { client, manifest, cache: HashMap::new(), compile_count: 0, compile_sec: 0.0 }

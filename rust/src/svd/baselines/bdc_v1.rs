@@ -98,9 +98,10 @@ impl BdcEngine for BdcV1Engine {
         // CPU: z-hat + secular vectors (as in [12])
         let zh = secular::zhat(d, z_live, roots);
         let (su, sv) = secular::secular_vectors(d, &zh, roots);
-        // device: the gemms, with full-matrix round trips
+        // device: the gemms, with full-matrix round trips; clamp the
+        // window to the matrix like the device engine does
         let k = d.len();
-        let kb = bucket_for(len + sqre).expect("bucket");
+        let kb = bucket_for(len + sqre).unwrap_or(len + sqre).min(self.n);
         self.offload_gemm(Mat::U, lo, k, kb, &su);
         self.offload_gemm(Mat::V, lo, k, kb, &sv);
     }

@@ -392,9 +392,15 @@ pub fn orm_hybrid(
 
 pub fn gesvd_magma_sim(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
     let (m, n) = (a.rows, a.cols);
-    anyhow::ensure!(m >= n);
+    anyhow::ensure!(m >= n && n >= 1);
     let mut profile = PhaseProfile::default();
-    let b = cfg.block;
+    // magma-sim's fixed-shape panel writeback needs b | n, so clamp to
+    // the largest divisor of n <= cfg.block (worst case b = 1: the
+    // hybrid degenerates to per-column round trips but stays correct)
+    let mut b = cfg.block.clamp(1, n);
+    while n % b != 0 {
+        b -= 1;
+    }
 
     let (r, q) = if m > n {
         let f = geqrf_hybrid(dev, a, b, &mut profile)?;

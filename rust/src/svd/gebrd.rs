@@ -50,8 +50,7 @@ pub fn gebrd_device_with(
     b: usize,
     update_op: &str,
 ) -> Result<DeviceGebrd> {
-    assert!(m >= n && n % b == 0, "gebrd_device needs m>=n, b|n");
-    let p = [("m", m as i64), ("n", n as i64), ("b", b as i64)];
+    assert!(m >= n && b >= 1 && b <= n, "gebrd_device needs m>=n, 1<=b<=n");
 
     let mut d = vec![0.0; n];
     let mut e = vec![0.0; n.saturating_sub(1)];
@@ -61,36 +60,38 @@ pub fn gebrd_device_with(
     // Enqueue the whole panel chain without a single host synchronisation
     // (the command queue pipelines every panel); the 4b-element headers
     // are read back together at the end — the paper's "matrix never
-    // leaves the GPU, only the bidiagonal does" schedule.
+    // leaves the GPU, only the bidiagonal does" schedule. The final panel
+    // may be ragged (bb < b), keyed by its own b so any n solves.
     let mut a_cur = a;
-    let mut heads = Vec::with_capacity(n / b);
+    let mut heads = Vec::with_capacity(n.div_ceil(b));
     let mut t = 0usize;
     while t < n {
+        let bb = b.min(n - t);
+        let p = [("m", m as i64), ("n", n as i64), ("b", bb as i64)];
         let tb = dev.scalar_i64(t as i64);
         let ws = dev.op("labrd", &p, &[a_cur, tb]);
         dev.free(a_cur);
-        heads.push(dev.op("ws_head", &p, &[ws]));
-        if t + b < n {
+        heads.push((t, bb, dev.op("ws_head", &p, &[ws])));
+        if t + bb < n {
             a_cur = dev.op(update_op, &p, &[ws, tb]);
         } else {
             a_cur = dev.op("extract_a", &p, &[ws]);
         }
         dev.free(ws);
         dev.free(tb);
-        t += b;
+        t += bb;
     }
-    for (pi, head) in heads.into_iter().enumerate() {
-        let t = pi * b;
+    for (t, bb, head) in heads {
         let h = dev.read(head)?;
         dev.free(head);
-        d[t..t + b].copy_from_slice(&h[..b]);
-        for k in 0..b {
+        d[t..t + bb].copy_from_slice(&h[..bb]);
+        for k in 0..bb {
             if t + k + 1 < n {
-                e[t + k] = h[b + k];
+                e[t + k] = h[bb + k];
             }
         }
-        tauq[t..t + b].copy_from_slice(&h[2 * b..3 * b]);
-        taup[t..t + b].copy_from_slice(&h[3 * b..4 * b]);
+        tauq[t..t + bb].copy_from_slice(&h[2 * bb..3 * bb]);
+        taup[t..t + bb].copy_from_slice(&h[3 * bb..4 * bb]);
     }
 
     Ok(DeviceGebrd { afac: a_cur, d, e, tauq, taup })

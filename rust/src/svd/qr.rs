@@ -28,12 +28,13 @@ pub fn geqrf_device_with(
     b: usize,
     step_op: &str,
 ) -> Result<DeviceQr> {
-    assert!(m >= n && n % b == 0);
-    let p = [("m", m as i64), ("n", n as i64), ("b", b as i64)];
+    assert!(m >= n && b >= 1 && b <= n);
     let mut tau = vec![0.0; n];
     let mut a_cur = a;
     let mut t = 0usize;
     while t < n {
+        let bb = b.min(n - t);
+        let p = [("m", m as i64), ("n", n as i64), ("b", bb as i64)];
         let tb = dev.scalar_i64(t as i64);
         let ws = dev.op(step_op, &p, &[a_cur, tb]);
         dev.free(a_cur);
@@ -43,8 +44,8 @@ pub fn geqrf_device_with(
         dev.free(ws);
         let h = dev.read(head)?;
         dev.free(head);
-        tau[t..t + b].copy_from_slice(&h);
-        t += b;
+        tau[t..t + bb].copy_from_slice(&h[..bb]);
+        t += bb;
     }
     Ok(DeviceQr { afac: a_cur, tau })
 }
@@ -65,13 +66,15 @@ pub fn orgqr_device_with(
     b: usize,
     step_op: &str,
 ) -> Result<BufId> {
-    assert!(n % b == 0);
-    let p = [("m", m as i64), ("n", n as i64), ("b", b as i64)];
+    assert!(b >= 1 && b <= n);
     let mut q = dev.op("eye", &[("m", m as i64), ("n", n as i64)], &[]);
-    let mut t = n - b;
+    // block-reverse application; the first (rightmost) panel may be ragged
+    let mut t = ((n - 1) / b) * b;
     loop {
+        let bb = b.min(n - t);
+        let p = [("m", m as i64), ("n", n as i64), ("b", bb as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let taub = dev.upload(f.tau[t..t + b].to_vec(), &[b]);
+        let taub = dev.upload(f.tau[t..t + bb].to_vec(), &[bb]);
         let q2 = dev.op(step_op, &p, &[q, f.afac, taub, tb]);
         dev.free(q);
         dev.free(tb);
@@ -111,13 +114,15 @@ pub fn ormqr_device_with(
     b: usize,
     step_op: &str,
 ) -> Result<BufId> {
-    assert!(n % b == 0);
-    let p = [("b", b as i64), ("k", n as i64), ("m", m as i64), ("n", n as i64)];
+    assert!(b >= 1 && b <= n);
     let mut cur = c;
-    let mut t = n - b;
+    // block-reverse application; the first (rightmost) panel may be ragged
+    let mut t = ((n - 1) / b) * b;
     loop {
+        let bb = b.min(n - t);
+        let p = [("b", bb as i64), ("k", n as i64), ("m", m as i64), ("n", n as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let taub = dev.upload(tauq[t..t + b].to_vec(), &[b]);
+        let taub = dev.upload(tauq[t..t + bb].to_vec(), &[bb]);
         let c2 = dev.op(step_op, &p, &[cur, afac, taub, tb]);
         dev.free(cur);
         dev.free(tb);
@@ -156,21 +161,27 @@ pub fn ormlq_device_with(
     b: usize,
     step_op: &str,
 ) -> Result<BufId> {
-    assert!(n % b == 0);
-    let p = [("b", b as i64), ("k", n as i64), ("m", m as i64), ("n", n as i64)];
-    // row reflectors: G_0..G_{n-2}; panels over [0, n) — the final panel's
-    // trailing reflectors have tau == 0 (identity), safe to apply.
+    assert!(b >= 1 && b <= n);
+    // row reflectors: G_0..G_{n-2}; panels cover [0, nref) with the
+    // rightmost (possibly ragged) panel first. Reflectors past n-2 have
+    // tau == 0 (identity), safe to apply.
+    let nref = n - 1;
+    if nref == 0 {
+        return Ok(c);
+    }
     let mut cur = c;
-    let mut t = n - b;
+    let mut t = ((nref - 1) / b) * b;
     loop {
+        let bb = b.min(n - t);
+        let p = [("b", bb as i64), ("k", n as i64), ("m", m as i64), ("n", n as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let mut taus = vec![0.0; b];
-        for i in 0..b {
+        let mut taus = vec![0.0; bb];
+        for (i, slot) in taus.iter_mut().enumerate() {
             if t + i < n - 1 {
-                taus[i] = taup[t + i];
+                *slot = taup[t + i];
             }
         }
-        let taub = dev.upload(taus, &[b]);
+        let taub = dev.upload(taus, &[bb]);
         let c2 = dev.op(step_op, &p, &[cur, afac, taub, tb]);
         dev.free(cur);
         dev.free(tb);

@@ -11,7 +11,7 @@ use gcsvd::runtime::Device;
 use gcsvd::util::Rng;
 
 fn run_dual(d: Vec<f64>, e: Vec<f64>, leaf: usize) {
-    let dev = Device::new(&artifacts_dir()).expect("device (run `make artifacts`)");
+    let dev = Device::new(&artifacts_dir()).expect("device");
     let n = d.len();
     let b = Bidiagonal::new(d, e);
     let mut dual = DualEngine {

@@ -1,6 +1,7 @@
-//! Device integration: drives real AOT artifacts through the PJRT worker
-//! and checks numerics against the CPU substrate. Requires `make artifacts`
-//! (the --quick set suffices: m=n=128/256, TS 1024x128).
+//! Device integration: drives the selected backend through the device
+//! worker and checks numerics against the CPU substrate. Hermetic on the
+//! default host backend; with `--features pjrt` and `GCSVD_BACKEND=pjrt`
+//! the same tests exercise real AOT artifacts.
 
 use gcsvd::config::artifacts_dir;
 use gcsvd::linalg::gebrd_cpu;
@@ -9,7 +10,7 @@ use gcsvd::runtime::Device;
 use gcsvd::util::Rng;
 
 fn device() -> Device {
-    Device::new(&artifacts_dir()).expect("device (run `make artifacts` first)")
+    Device::new(&artifacts_dir()).expect("device")
 }
 
 #[test]

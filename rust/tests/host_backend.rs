@@ -1,0 +1,79 @@
+//! Host-backend parity: the hermetic pure-Rust interpreter must drive the
+//! full GPU-centered pipeline to oracle-grade accuracy with no artifacts
+//! directory, no Python and no network.
+
+use gcsvd::config::{BackendKind, Config, Solver};
+use gcsvd::gen::{generate, MatrixKind};
+use gcsvd::linalg::jacobi;
+use gcsvd::runtime::transfer::TransferModel;
+use gcsvd::runtime::Device;
+use gcsvd::svd::{e_svd, gesvd};
+
+fn host_device() -> Device {
+    // pinned to the host backend regardless of GCSVD_BACKEND
+    Device::with_backend(
+        BackendKind::Host,
+        std::path::Path::new("/definitely/no/artifacts"),
+        TransferModel { enabled: false, ..Default::default() },
+    )
+    .expect("host backend")
+}
+
+#[test]
+fn ours_vs_jacobi_oracle_128() {
+    let dev = host_device();
+    let cfg = Config::default();
+    let a = generate(MatrixKind::Random, 128, 128, 1.0, 77);
+    let r = gesvd(&dev, &a, &cfg, Solver::Ours).expect("solve");
+    let err = e_svd(&a, &r);
+    assert!(err < 1e-9, "E_svd {err:e}");
+    assert!(r.u.orthonormality_defect() < 1e-9);
+    assert!(r.vt.transpose().orthonormality_defect() < 1e-9);
+    let sv = jacobi::singular_values(&a);
+    for i in 0..128 {
+        assert!(
+            (r.sigma[i] - sv[i]).abs() < 1e-9 * sv[0].max(1.0),
+            "sigma[{i}]: {} vs {}",
+            r.sigma[i],
+            sv[i]
+        );
+    }
+}
+
+#[test]
+fn ours_matches_lapack_ref_exactly_enough() {
+    let dev = host_device();
+    let cfg = Config::default();
+    let a = generate(MatrixKind::SvdGeo, 128, 128, 1e4, 5);
+    let ours = gesvd(&dev, &a, &cfg, Solver::Ours).expect("ours");
+    let lref = gesvd(&dev, &a, &cfg, Solver::LapackRef).expect("lapack-ref");
+    for i in 0..128 {
+        assert!(
+            (ours.sigma[i] - lref.sigma[i]).abs() < 1e-8 * lref.sigma[0].max(1.0),
+            "sigma[{i}]"
+        );
+    }
+}
+
+#[test]
+fn device_stats_flow_through_backend() {
+    let dev = host_device();
+    let e = dev.op("eye", &[("m", 16), ("n", 16)], &[]);
+    let _ = dev.read(e).unwrap();
+    let st = dev.stats();
+    assert_eq!(st.exec_count, 1);
+    assert_eq!(st.compile_count, 1); // distinct op keys interpreted
+    assert!(st.download_bytes >= 16 * 16 * 8);
+    assert!(st.per_op_sec.contains_key("eye"));
+}
+
+#[test]
+fn builtin_manifest_covers_bench_sweeps() {
+    use gcsvd::runtime::registry::{Manifest, OpKey};
+    let m = Manifest::load_or_builtin(std::path::Path::new("/definitely/no/artifacts")).unwrap();
+    assert!(m.contains(&OpKey::new("labrd", &[("m", 128), ("n", 128), ("b", 32)])));
+    assert!(m.contains(&OpKey::new("labrd", &[("m", 1024), ("n", 128), ("b", 32)])));
+    assert!(m.contains(&OpKey::new("bdc_secular", &[("nb", 128)])));
+    assert!(m.contains(&OpKey::new("fig5_gemv2", &[("m", 1024), ("k", 32)])));
+    assert!(!m.keys_for("labrd").is_empty());
+}

@@ -1,0 +1,186 @@
+//! Regression sweeps for small and odd problem sizes.
+//!
+//! Guards two seed bugs:
+//!   * usize underflow panics in the device BDC engine for n < 64
+//!     (`set_block` tile anchoring and the secular gemm window);
+//!   * `gesdd_ours`'s hard "block must divide n" requirement — arbitrary
+//!     n must solve with the block clamped and the ragged tail handled.
+
+use gcsvd::bdc::{bdc_solve, cpu::CpuEngine};
+use gcsvd::bdc::driver::Mat;
+use gcsvd::bdc::lasdq::lasdq;
+use gcsvd::config::{Config, Solver};
+use gcsvd::linalg::{blas, jacobi};
+use gcsvd::matrix::{Bidiagonal, Matrix};
+use gcsvd::runtime::bdc_engine::DeviceEngine;
+use gcsvd::runtime::Device;
+use gcsvd::svd::{e_svd, gesvd};
+use gcsvd::util::Rng;
+
+fn random_bidiagonal(n: usize, rng: &mut Rng) -> Bidiagonal {
+    let d: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let e: Vec<f64> = (0..n.saturating_sub(1)).map(|_| rng.gaussian()).collect();
+    Bidiagonal::new(d, e)
+}
+
+/// sigma ascending + reconstruction B = U diag(sigma) V^T.
+fn check_uv(b: &Bidiagonal, sig: &[f64], u: &Matrix, v: &Matrix, tol: f64, tag: &str) {
+    let n = b.n();
+    for i in 0..n {
+        assert!(sig[i] >= -1e-12, "{tag}: sigma[{i}] negative");
+        if i > 0 {
+            assert!(sig[i] >= sig[i - 1] - 1e-12, "{tag}: sigma not ascending at {i}");
+        }
+    }
+    assert!(u.orthonormality_defect() < tol, "{tag}: U defect");
+    assert!(v.orthonormality_defect() < tol, "{tag}: V defect");
+    let mut us = u.clone();
+    for j in 0..n {
+        for i in 0..n {
+            us[(i, j)] *= sig[j];
+        }
+    }
+    let mut rec = Matrix::zeros(n, n);
+    blas::gemm_nt(&us, v, &mut rec, 1.0);
+    let bd = b.to_dense();
+    let err = rec.max_diff(&bd) / bd.max_abs().max(1.0);
+    assert!(err < tol, "{tag}: reconstruction {err:e}");
+}
+
+#[test]
+fn cpu_bdc_all_small_sizes() {
+    let mut rng = Rng::new(301);
+    for n in 1..=40usize {
+        for leaf in [3usize, 32] {
+            let b = random_bidiagonal(n, &mut rng);
+            let mut eng = CpuEngine::new();
+            let (sig, _) = bdc_solve(&b, &mut eng, leaf, 1);
+            assert_eq!(sig.len(), n);
+            check_uv(&b, &sig, &eng.u, &eng.v, 1e-8, &format!("cpu n={n} leaf={leaf}"));
+        }
+    }
+}
+
+#[test]
+fn device_bdc_all_small_sizes_no_panic() {
+    // the underflow regression: every n in 1..=40 must solve on the
+    // device engine (host backend) and agree with the CPU engine
+    let mut rng = Rng::new(302);
+    for n in 1..=40usize {
+        let b = random_bidiagonal(n, &mut rng);
+        let (sig_cpu, u_cpu, v_cpu) = {
+            let mut eng = CpuEngine::new();
+            let (sig, _) = bdc_solve(&b, &mut eng, 3, 1);
+            (sig, eng.u, eng.v)
+        };
+        let dev = Device::host();
+        let mut eng = DeviceEngine::new(dev);
+        let (sig_dev, _) = bdc_solve(&b, &mut eng, 3, 1);
+        assert_eq!(sig_dev.len(), n);
+        for i in 0..n {
+            assert!(
+                (sig_dev[i] - sig_cpu[i]).abs() < 1e-9 * sig_cpu[n - 1].abs().max(1.0),
+                "n={n} sigma[{i}]: {} vs {}",
+                sig_dev[i],
+                sig_cpu[i]
+            );
+        }
+        let u = eng.download(Mat::U).unwrap();
+        let v = eng.download(Mat::V).unwrap();
+        assert!(u.max_diff(&u_cpu) < 1e-9, "n={n}: U diverged");
+        assert!(v.max_diff(&v_cpu) < 1e-9, "n={n}: V diverged");
+    }
+}
+
+#[test]
+fn device_bdc_larger_leaves_cross_leaf_tile() {
+    // n just below / at / above the 64-element set_block tile
+    let mut rng = Rng::new(303);
+    for n in [63usize, 64, 65, 70] {
+        let b = random_bidiagonal(n, &mut rng);
+        let dev = Device::host();
+        let mut eng = DeviceEngine::new(dev);
+        let (sig, _) = bdc_solve(&b, &mut eng, 32, 1);
+        let u = eng.download(Mat::U).unwrap();
+        let v = eng.download(Mat::V).unwrap();
+        check_uv(&b, &sig, &u, &v, 1e-8, &format!("device n={n}"));
+    }
+}
+
+#[test]
+fn lasdq_both_sqre_cases_small() {
+    let mut rng = Rng::new(304);
+    for nn in 1..=12usize {
+        for sqre in [0usize, 1] {
+            let d: Vec<f64> = (0..nn).map(|_| rng.gaussian()).collect();
+            let e: Vec<f64> = (0..nn - 1 + sqre).map(|_| rng.gaussian()).collect();
+            let (sig, u, v) = lasdq(&d, &e, sqre);
+            assert_eq!(sig.len(), nn);
+            assert!(u.orthonormality_defect() < 1e-9, "nn={nn} sqre={sqre}: U");
+            assert!(v.orthonormality_defect() < 1e-9, "nn={nn} sqre={sqre}: V");
+        }
+    }
+}
+
+#[test]
+fn gesdd_arbitrary_n_no_divisibility() {
+    // the divisibility regression: default block (32) with n it does not
+    // divide, including n < block and prime n, square and tall-skinny
+    let cfg = Config::default();
+    let shapes = [
+        (1usize, 1usize),
+        (2, 2),
+        (3, 3),
+        (5, 5),
+        (7, 7),
+        (12, 12),
+        (33, 33),
+        (37, 37),
+        (50, 37),
+        (41, 12),
+        (65, 64),
+    ];
+    let mut rng = Rng::new(305);
+    for (m, n) in shapes {
+        let a = Matrix::from_fn(m, n, |_, _| rng.gaussian());
+        let dev = Device::host();
+        let r = gesvd(&dev, &a, &cfg, Solver::Ours)
+            .unwrap_or_else(|e| panic!("{m}x{n}: {e:#}"));
+        assert_eq!(r.sigma.len(), n);
+        for i in 0..n {
+            assert!(r.sigma[i] >= -1e-12, "{m}x{n}: sigma[{i}] negative");
+            if i + 1 < n {
+                assert!(r.sigma[i] >= r.sigma[i + 1] - 1e-10, "{m}x{n}: not descending");
+            }
+        }
+        let err = e_svd(&a, &r);
+        assert!(err < 1e-8, "{m}x{n}: E_svd {err:e}");
+        let sv = jacobi::singular_values(&a);
+        for i in 0..n {
+            assert!(
+                (r.sigma[i] - sv[i]).abs() < 1e-8 * sv[0].max(1.0),
+                "{m}x{n}: sigma[{i}] {} vs jacobi {}",
+                r.sigma[i],
+                sv[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn gesdd_small_block_config() {
+    // explicit small blocks on odd n exercise ragged panels in every
+    // phase driver (geqrf/orgqr/gebrd/ormqr/ormlq)
+    let mut cfg = Config::default();
+    cfg.block = 4;
+    cfg.leaf = 4;
+    let mut rng = Rng::new(306);
+    for (m, n) in [(19usize, 19usize), (30, 17)] {
+        let a = Matrix::from_fn(m, n, |_, _| rng.gaussian());
+        let dev = Device::host();
+        let r = gesvd(&dev, &a, &cfg, Solver::Ours)
+            .unwrap_or_else(|e| panic!("{m}x{n}: {e:#}"));
+        let err = e_svd(&a, &r);
+        assert!(err < 1e-8, "{m}x{n}: E_svd {err:e}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Compile-time stub for the `xla` PJRT binding.
+//!
+//! The offline build environment has no XLA runtime, so the `pjrt` cargo
+//! feature links against this stub: it exposes the exact type/method
+//! surface `gcsvd`'s PJRT backend uses, but every entry point returns
+//! `Err(Error::Unavailable)` at runtime. To run the real PJRT path, point
+//! the `xla` dependency in `rust/Cargo.toml` at the actual binding (same
+//! API) and rebuild with `--features pjrt`.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub was linked instead of a real XLA binding.
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla stub: PJRT runtime unavailable (link the real xla crate to use --features pjrt)"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
