@@ -1,0 +1,207 @@
+//! Batched SVD over slices of heterogeneous-shape matrices.
+//!
+//! The paper's pipeline assumes one large factorisation saturating the
+//! device; production traffic is dominated by *many* small-to-medium
+//! solves (cf. Abdelfattah & Fasi's batch SVD solver and Boukaram et
+//! al.'s batched QR/SVD — PAPERS.md). This module is that regime's entry
+//! point:
+//!
+//!   * [`plan`] shape-buckets the inputs — equal `(m, n, block)` keys
+//!     share one [`plan::SolvePlan`] and replay the same op sequence, so
+//!     a worker solving a bucket back-to-back hits its device's warm
+//!     compile cache — and orders buckets heaviest-first;
+//!   * [`runtime::StealPool`] executes the flattened schedule with
+//!     work-stealing, one persistent [`Device`] per worker (created
+//!     lazily on the worker's first item and reused for every solve it
+//!     takes — the old one-device-per-solve assumption is gone);
+//!   * the pool width is `min(cfg.threads, backend fan-out hint, batch)`
+//!     where the hint is [`Backend::max_parallelism`] — host interpreter:
+//!     one worker per core; PJRT: 1 (the client already owns the cores).
+//!
+//! Results are returned in input order and are bit-identical for any
+//! thread count: items are independent, the item -> result mapping is
+//! index-keyed, and every intra-solve stage is deterministic.
+//!
+//! A future real-GPU backend maps this scheduler onto streams instead of
+//! worker threads: one stream (+ one `Device`) per pool worker, buckets
+//! as graph/plan-cache units, and the heaviest-first deal becomes the
+//! stream-priority order (DESIGN.md §Batch scheduler).
+//!
+//! [`runtime::StealPool`]: crate::runtime::StealPool
+//! [`Device`]: crate::runtime::Device
+//! [`Backend::max_parallelism`]: crate::runtime::Backend::max_parallelism
+
+pub mod plan;
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::config::{Config, Solver};
+use crate::matrix::Matrix;
+use crate::runtime::pool::StealPool;
+use crate::runtime::Device;
+use crate::svd::{gesvd, SvdResult};
+use plan::bucket_inputs;
+
+/// Scheduling counters from one batched solve.
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    /// Pool workers actually used (after the hint/batch clamps).
+    pub threads: usize,
+    /// Distinct shape buckets.
+    pub buckets: usize,
+    /// Items that ran on a worker other than the one they were dealt to.
+    pub steals: usize,
+    /// Aggregate flop estimate across the batch (plan convention).
+    pub flops: f64,
+    /// Wall time of the whole batched call, seconds.
+    pub wall: f64,
+    /// The executed schedule: shape buckets, heaviest-per-matrix first,
+    /// exactly as dealt to the pool (so callers report what actually
+    /// ran instead of re-deriving it).
+    pub schedule: Vec<plan::Bucket>,
+}
+
+/// Batched SVD with the paper's solver ("ours") — `gesdd` over a batch.
+pub fn gesdd_batched(inputs: &[Matrix], cfg: &Config) -> Result<Vec<SvdResult>> {
+    gesvd_batched(inputs, cfg, Solver::Ours)
+}
+
+/// Batched SVD with any solver. Results are in input order. On the
+/// first item failure the pool stops dealing new items (in-flight
+/// solves finish) and the batch returns that item's error tagged with
+/// its batch index; which items were skipped is timing-dependent, the
+/// returned error is the failing item with the lowest index.
+pub fn gesvd_batched(inputs: &[Matrix], cfg: &Config, solver: Solver) -> Result<Vec<SvdResult>> {
+    Ok(gesvd_batched_with_stats(inputs, cfg, solver)?.0)
+}
+
+/// [`gesvd_batched`] plus the scheduling counters (CLI / bench harness).
+pub fn gesvd_batched_with_stats(
+    inputs: &[Matrix],
+    cfg: &Config,
+    solver: Solver,
+) -> Result<(Vec<SvdResult>, BatchStats)> {
+    let t0 = std::time::Instant::now();
+    let buckets = bucket_inputs(inputs, cfg)?;
+    // flattened schedule: buckets stay contiguous, heaviest bucket first
+    let order: Vec<usize> = buckets.iter().flat_map(|b| b.items.iter().copied()).collect();
+    let flops: f64 = buckets.iter().map(|b| b.plan.flops * b.items.len() as f64).sum();
+
+    let width = pool_width(inputs.len(), cfg);
+    // Divide the thread budget across workers instead of oversubscribing
+    // (width workers x per-solve secular threads <= cfg.threads), so a
+    // small batch of large matrices still uses the whole host. The
+    // threaded secular solver is bit-identical to serial, so the split
+    // never changes a result.
+    let mut solve_cfg = cfg.clone();
+    solve_cfg.threads = (cfg.threads / width).max(1);
+
+    // Once any item fails, stop dealing new items (in-flight solves
+    // finish); their slots carry SKIPPED so the real error wins below.
+    const SKIPPED: &str = "skipped: an earlier batch item failed";
+    let aborted = AtomicBool::new(false);
+
+    let pool = StealPool::new(width);
+    let (slots, pstats) = pool.run_with(
+        order.len(),
+        // one persistent device per worker, built on the worker thread
+        |_worker| {
+            Device::with_backend(cfg.backend, &cfg.artifacts, cfg.transfer)
+                .map_err(|e| format!("{e:#}"))
+        },
+        |dev, j| {
+            if aborted.load(Ordering::Relaxed) {
+                return Err(SKIPPED.to_string());
+            }
+            let r = match dev {
+                Ok(d) => gesvd(d, &inputs[order[j]], &solve_cfg, solver)
+                    .map_err(|e| format!("{e:#}")),
+                Err(e) => Err(e.clone()),
+            };
+            if r.is_err() {
+                aborted.store(true, Ordering::Relaxed);
+            }
+            r
+        },
+    );
+
+    // scatter schedule order back to input order; report the failing
+    // item with the lowest batch index (deterministic error choice)
+    let mut out: Vec<Option<SvdResult>> = (0..inputs.len()).map(|_| None).collect();
+    let mut first_err: Option<(usize, String)> = None;
+    for (j, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Ok(r) => out[order[j]] = Some(r),
+            Err(e) => {
+                if e != SKIPPED && !first_err.as_ref().is_some_and(|(i, _)| *i <= order[j]) {
+                    first_err = Some((order[j], e));
+                }
+            }
+        }
+    }
+    if let Some((idx, e)) = first_err {
+        return Err(anyhow!("batch item {idx}: {e}"));
+    }
+    let results: Vec<SvdResult> = out
+        .into_iter()
+        .map(|o| o.expect("every input index is scheduled exactly once"))
+        .collect();
+
+    let stats = BatchStats {
+        threads: pstats.workers,
+        buckets: buckets.len(),
+        steals: pstats.steals,
+        flops,
+        wall: t0.elapsed().as_secs_f64(),
+        schedule: buckets,
+    };
+    Ok((results, stats))
+}
+
+/// Pool width: `min(cfg.threads, backend fan-out hint, batch size)`.
+/// The hint comes from `BackendKind::max_parallelism_hint` — the static
+/// projection of `Backend::max_parallelism`, readable before any device
+/// exists, so no probe device is built just to ask. Backend
+/// construction errors surface from the first pool worker, tagged with
+/// its batch item.
+fn pool_width(items: usize, cfg: &Config) -> usize {
+    if items <= 1 || cfg.threads <= 1 {
+        return 1;
+    }
+    let hint = cfg.backend.max_parallelism_hint();
+    cfg.threads.min(hint).min(items).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let cfg = Config::default();
+        let out = gesdd_batched(&[], &cfg).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn stats_cover_the_batch() {
+        let cfg = Config { threads: 2, ..Config::default() };
+        let mut rng = crate::util::Rng::new(91);
+        let inputs = vec![
+            Matrix::from_fn(6, 6, |_, _| rng.gaussian()),
+            Matrix::from_fn(9, 4, |_, _| rng.gaussian()),
+            Matrix::from_fn(6, 6, |_, _| rng.gaussian()),
+        ];
+        let (results, stats) =
+            gesvd_batched_with_stats(&inputs, &cfg, Solver::Ours).unwrap();
+        assert_eq!(results.len(), 3);
+        assert_eq!(stats.buckets, 2);
+        assert!(stats.threads >= 1 && stats.threads <= 2);
+        assert!(stats.flops > 0.0);
+        for (i, (a, r)) in inputs.iter().zip(&results).enumerate() {
+            assert_eq!(r.sigma.len(), a.cols, "item {i}");
+            assert!(crate::svd::e_svd(a, r) < 1e-8, "item {i}");
+        }
+    }
+}

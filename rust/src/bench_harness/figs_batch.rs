@@ -1,0 +1,60 @@
+//! Batch figure (not in the paper — the ROADMAP's many-small-solves
+//! regime): throughput of the batched pool vs a serial loop over the
+//! same inputs, as batch size grows. Mixed shapes (square, tall-skinny,
+//! n=1) so the shape-bucketing scheduler is exercised, not just the
+//! pool.
+
+use anyhow::Result;
+
+use crate::batch::{gesvd_batched_with_stats, plan};
+use crate::bench_harness::{gflops, header, time_median, Ctx};
+use crate::config::Solver;
+use crate::gen::{generate, MatrixKind};
+use crate::runtime::Device;
+use crate::svd::gesvd;
+
+/// Batch sizes swept (matrices per call).
+const BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
+
+pub fn fig_batch(ctx: &Ctx) -> Result<()> {
+    header("Batch — pool vs serial-loop throughput (ours, mixed shapes)");
+    let n = 48usize;
+    let shapes = [(n, n), (2 * n, n), (n / 2, n / 2), (n, 1)];
+    for batch in BATCHES {
+        let inputs: Vec<_> = (0..batch)
+            .map(|i| {
+                let (m, nn) = shapes[i % shapes.len()];
+                generate(MatrixKind::Random, m, nn, 1.0, 60 + i as u64)
+            })
+            .collect();
+        let flops: f64 = inputs.iter().map(|a| plan::svd_flops(a.rows, a.cols)).sum();
+
+        // baseline: the pre-batch idiom — one device, a plain loop. The
+        // device is built inside the timed region, mirroring the batched
+        // call (which constructs its worker devices per invocation), so
+        // neither side rides a warm cache the other paid for.
+        let t_serial = time_median(ctx.reps, || {
+            let dev = Device::with_backend(ctx.cfg.backend, &ctx.cfg.artifacts, ctx.cfg.transfer)
+                .expect("serial device");
+            for a in &inputs {
+                let _ = gesvd(&dev, a, &ctx.cfg, Solver::Ours).expect("serial solve");
+            }
+        });
+
+        let mut workers = 0usize;
+        let t_batch = time_median(ctx.reps, || {
+            let (_, st) = gesvd_batched_with_stats(&inputs, &ctx.cfg, Solver::Ours)
+                .expect("batched solve");
+            workers = st.threads;
+        });
+
+        println!(
+            "  batch {batch:>3}: serial {t_serial:8.4}s | pool({workers}) {t_batch:8.4}s \
+             (x{:4.2}) | {:6.1} mat/s | {:7.3} GFLOP/s",
+            t_serial / t_batch.max(1e-12),
+            batch as f64 / t_batch.max(1e-12),
+            gflops(flops, t_batch.max(1e-12)),
+        );
+    }
+    Ok(())
+}

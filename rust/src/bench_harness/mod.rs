@@ -6,6 +6,7 @@
 //! target. All figures respect the shapes actually present in the
 //! artifact manifest, so `--quick` artifact sets run a reduced sweep.
 
+pub mod figs_batch;
 pub mod figs_bdc;
 pub mod figs_gebrd;
 pub mod figs_qr;
@@ -15,14 +16,24 @@ use crate::config::Config;
 use crate::runtime::registry::Manifest;
 use crate::runtime::Device;
 
-/// Median-of-reps timing.
+/// Median-of-reps timing. `reps` is clamped to at least one measurement
+/// so an over-eager `--reps 0` measures once instead of panicking on an
+/// empty sample (the old `ts[0]`-of-empty-vec bug).
 pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let reps = reps.max(1);
     let mut ts = Vec::with_capacity(reps);
     for _ in 0..reps {
         let t0 = std::time::Instant::now();
         f();
         ts.push(t0.elapsed().as_secs_f64());
     }
+    median_of(ts)
+}
+
+/// Sorted-median of a non-empty, NaN-free sample (upper middle for even
+/// counts). Factored out of [`time_median`] so selection is testable
+/// without wall-clock samples.
+fn median_of(mut ts: Vec<f64>) -> f64 {
     ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
     ts[ts.len() / 2]
 }
@@ -192,5 +203,32 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
     if all || which == "fig20" {
         figs_svd::fig20(ctx)?;
     }
+    if all || which == "batch" || which == "figb" {
+        figs_batch::fig_batch(ctx)?;
+    }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_median_zero_reps_measures_once() {
+        let mut calls = 0usize;
+        let t = time_median(0, || calls += 1);
+        assert_eq!(calls, 1);
+        assert!(t >= 0.0 && t.is_finite());
+    }
+
+    #[test]
+    fn median_selection_is_the_sorted_middle() {
+        // no wall clock involved: selection is checked on injected
+        // samples, so loaded CI runners cannot flip the outcome
+        assert_eq!(median_of(vec![9.0, 1.0, 5.0]), 5.0);
+        assert_eq!(median_of(vec![1.0]), 1.0);
+        // distinguishes median from min (1.0), mean (4.25) and max (9.0)
+        assert_eq!(median_of(vec![9.0, 1.0, 2.0, 5.0]), 5.0);
+        assert_eq!(median_of(vec![0.0, 0.0, 0.0, 6.0, 6.0]), 0.0);
+    }
 }

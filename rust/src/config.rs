@@ -53,8 +53,14 @@ pub struct Config {
     pub block: usize,
     /// BDC leaf size (paper: 32).
     pub leaf: usize,
-    /// CPU threads for the secular solver.
+    /// Host parallelism budget. Inside one solve this bounds the secular
+    /// root solver; for batched solves it bounds the work-stealing pool
+    /// width (further clamped by the backend's `max_parallelism` hint).
     pub threads: usize,
+    /// Batch size for the `svd-batch` driver: how many matrices it
+    /// generates per call when `--batch` is absent (the library API
+    /// itself takes explicit slices). Set by `--batch` via the CLI.
+    pub batch: usize,
     /// Use the Pallas merged-update kernel ('pallas') or the XLA-dot
     /// analogue of a vendor BLAS ('xla').
     pub kernel: String,
@@ -72,6 +78,7 @@ impl Default for Config {
             threads: std::thread::available_parallelism()
                 .map(|c| c.get())
                 .unwrap_or(4),
+            batch: 8,
             kernel: "xla".to_string(),
             transfer: Default::default(),
         }

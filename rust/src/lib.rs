@@ -5,7 +5,9 @@
 //!
 //! * **L3 (this crate)** — the coordinator: phase scheduling, the bidiagonal
 //!   divide-and-conquer (BDC) tree with CPU/device asynchronous overlap,
-//!   deflation, the secular-equation solver, baselines, benchmarks and CLI.
+//!   deflation, the secular-equation solver, the batched-SVD subsystem
+//!   ([`batch`], scheduled by a work-stealing host pool), baselines,
+//!   benchmarks and CLI.
 //! * **L2 (python/compile/model.py)** — JAX compute graphs for every
 //!   device-side operation (panel reductions, merged-rank-(2b) updates,
 //!   modified-CWY QR steps, BDC vector updates), AOT-lowered to HLO text.
@@ -21,6 +23,14 @@
 //! between ops without host round-trips, mirroring the paper's
 //! elimination of CPU↔GPU matrix transfers.
 
+// Index-based loops deliberately mirror the LAPACK-style pseudocode
+// throughout the numeric kernels; silence the style lints that would
+// rewrite them into iterator chains and obscure the paper mapping.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::many_single_char_names)]
+
+pub mod batch;
 pub mod bdc;
 pub mod bench_harness;
 pub mod config;

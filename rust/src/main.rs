@@ -1,12 +1,17 @@
 //! gcsvd CLI — the L3 coordinator entrypoint.
 //!
 //! Subcommands:
-//!   svd     --m M --n N [--kind K] [--theta T] [--solver S] [--block B]
-//!           run one SVD, print sigma head, accuracy and the phase profile
-//!   bench   <fig4|fig5a|fig5b|fig6..fig20|all> [--reps R]
-//!           regenerate a paper figure (see DESIGN.md experiment index)
-//!   profile --m M --n N [--solver S]   phase/location trace (Fig. 1 style)
-//!   info    list artifact coverage
+//!   svd       --m M --n N [--kind K] [--theta T] [--solver S] [--block B]
+//!             run one SVD, print sigma head, accuracy and the phase profile
+//!   svd-batch [--batch N] [--m M] [--n N] [--mixed] [--solver S]
+//!             [--threads T] [--check]
+//!             batched SVD over the work-stealing pool; prints bucket
+//!             schedule + throughput (matrices/s, aggregate GFLOP/s), and
+//!             with --check the serial-loop baseline + parity
+//!   bench     <fig4|fig5a|fig5b|fig6..fig20|batch|all> [--reps R]
+//!             regenerate a paper figure (see DESIGN.md experiment index)
+//!   profile   --m M --n N [--solver S]   phase/location trace (Fig. 1 style)
+//!   info      list artifact coverage
 //!
 //! Global flags: --backend host|pjrt (or GCSVD_BACKEND; default host),
 //! --artifacts DIR (pjrt only), --kernel pallas|xla, --no-transfer-model
@@ -84,6 +89,7 @@ fn build_config(args: &Args) -> Result<Config> {
     cfg.block = args.get_usize("block", cfg.block)?;
     cfg.leaf = args.get_usize("leaf", cfg.leaf)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
     if args.get("no-transfer-model").is_some() {
         cfg.transfer.enabled = false;
     }
@@ -143,6 +149,106 @@ fn cmd_svd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shapes for one batch: homogeneous `(m, n)` by default, or with
+/// `--mixed` a heterogeneous cycle exercising square, tall-skinny and
+/// n=1 items (the bucketing regime).
+fn batch_shapes(batch: usize, m: usize, n: usize, mixed: bool) -> Vec<(usize, usize)> {
+    (0..batch)
+        .map(|i| {
+            if !mixed {
+                return (m, n);
+            }
+            match i % 4 {
+                0 => (m, n),
+                1 => (n, n),
+                2 => (2 * n, n),
+                _ => (m, 1),
+            }
+        })
+        .collect()
+}
+
+fn cmd_svd_batch(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let batch = cfg.batch;
+    let m = args.get_usize("m", 96)?;
+    let n = args.get_usize("n", m)?;
+    anyhow::ensure!(m >= n && n >= 1, "--m must be >= --n >= 1");
+    let theta = args.get_f64("theta", 100.0)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let kind = MatrixKind::parse(args.get("kind").unwrap_or("random"))
+        .ok_or_else(|| anyhow!("unknown --kind (random|logrand|arith|geo)"))?;
+    let solver = Solver::parse(args.get("solver").unwrap_or("ours"))
+        .ok_or_else(|| anyhow!("unknown --solver"))?;
+    let mixed = args.get("mixed").is_some();
+
+    let shapes = batch_shapes(batch, m, n, mixed);
+    println!(
+        "generating batch of {batch} {} matrices (base {m}x{n}{}, theta={theta:.1e}, seed={seed})",
+        kind.name(),
+        if mixed { ", mixed shapes" } else { "" }
+    );
+    let inputs: Vec<gcsvd::Matrix> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(mi, ni))| generate(kind, mi, ni, theta, seed + i as u64))
+        .collect();
+
+    let (results, stats) = gcsvd::batch::gesvd_batched_with_stats(&inputs, &cfg, solver)?;
+    println!("executed schedule ({} buckets, heaviest first):", stats.buckets);
+    for b in &stats.schedule {
+        println!(
+            "  {:>6}x{:<6} block={:<3} x{:<3}  ~{:.2} GFLOP each",
+            b.plan.key.m,
+            b.plan.key.n,
+            b.plan.key.block,
+            b.items.len(),
+            b.plan.flops / 1e9
+        );
+    }
+    println!(
+        "\nsolver={} pool: {} workers, {} steals",
+        solver.name(),
+        stats.threads,
+        stats.steals
+    );
+    println!(
+        "batch wall {:.3}s | {:.1} matrices/s | {:.2} GFLOP/s aggregate",
+        stats.wall,
+        batch as f64 / stats.wall.max(1e-12),
+        stats.flops / stats.wall.max(1e-12) / 1e9
+    );
+
+    if args.get("check").is_some() {
+        // device construction inside the timed region, mirroring the
+        // batched wall (which includes worker-device construction)
+        let t0 = std::time::Instant::now();
+        let dev = make_device(&cfg)?;
+        let mut serial = Vec::with_capacity(inputs.len());
+        for a in &inputs {
+            serial.push(gesvd(&dev, a, &cfg, solver)?);
+        }
+        let ts = t0.elapsed().as_secs_f64();
+        let mut worst = 0.0f64;
+        let mut scale = 1.0f64;
+        for (r, s) in results.iter().zip(&serial) {
+            worst = worst.max(gcsvd::util::max_abs_diff(&r.sigma, &s.sigma));
+            worst = worst.max(gcsvd::util::max_abs_diff(&r.u.data, &s.u.data));
+            worst = worst.max(gcsvd::util::max_abs_diff(&r.vt.data, &s.vt.data));
+            scale = scale.max(s.sigma.first().copied().unwrap_or(0.0));
+        }
+        println!(
+            "serial loop {ts:.3}s | batch speedup x{:.2} | max |batched - serial| {worst:.1e}",
+            ts / stats.wall.max(1e-12)
+        );
+        anyhow::ensure!(
+            worst <= 1e-10 * scale,
+            "parity check FAILED: batched diverges from serial by {worst:.3e}"
+        );
+    }
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     let which = args
@@ -190,7 +296,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: gcsvd <svd|bench|profile|info> [flags]\n\
+        "usage: gcsvd <svd|svd-batch|bench|profile|info> [flags]\n\
          see rust/src/main.rs header or README.md for flag lists"
     );
     std::process::exit(2);
@@ -205,6 +311,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let out = match cmd {
         "svd" => cmd_svd(&args),
+        "svd-batch" | "svd_batch" => cmd_svd_batch(&args),
         "bench" => cmd_bench(&args),
         "profile" => cmd_profile(&args),
         "info" => cmd_info(&args),

@@ -56,6 +56,18 @@ pub trait Backend {
         (0, 0.0)
     }
 
+    /// How many sibling instances of this backend can productively run
+    /// at once — the batch scheduler's fan-out hint (one pool worker per
+    /// instance, each with its own `Device`). The default assumes a
+    /// host-resident backend: one per CPU core. Substrates that
+    /// serialise on shared thread-bound state (the PJRT CPU client)
+    /// should override this to 1.
+    fn max_parallelism(&self) -> usize {
+        std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(1)
+    }
+
     /// Backend name for diagnostics.
     fn name(&self) -> &'static str;
 }

@@ -58,6 +58,25 @@ impl BackendKind {
             BackendKind::Pjrt => "pjrt",
         }
     }
+
+    /// Static projection of `Backend::max_parallelism` for scheduling
+    /// decisions that must precede backend construction (the batch
+    /// pool's width clamp). Kept next to the impls it mirrors so the
+    /// two cannot drift: host defers to the trait method on a
+    /// (thread-free) backend value; PJRT's is the same constant its
+    /// `Backend` impl returns. [`Device::max_parallelism`] reports the
+    /// live per-instance value once a device exists.
+    pub fn max_parallelism_hint(&self) -> usize {
+        match self {
+            BackendKind::Host => HostBackend::new().max_parallelism(),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => crate::runtime::pjrt::PjrtBackend::MAX_PARALLELISM,
+            // without the feature, Device::with_backend refuses this
+            // kind outright, so the value is never consulted
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => 1,
+        }
+    }
 }
 
 /// Handle to a device buffer (valid on the worker thread only).
@@ -96,6 +115,8 @@ pub struct Device {
     tx: Sender<Cmd>,
     next: Arc<AtomicU64>,
     backend: BackendKind,
+    /// `Backend::max_parallelism` hint, captured at worker startup.
+    max_par: usize,
     /// Transfer accounting + model charging for the *baseline* paths.
     pub model: TransferModel,
     pub tstats: Arc<Mutex<TransferStats>>,
@@ -155,18 +176,19 @@ impl Device {
         F: FnOnce() -> Result<B> + Send + 'static,
     {
         let (tx, rx) = channel::<Cmd>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let (ready_tx, ready_rx) = channel::<Result<usize>>();
         std::thread::Builder::new()
             .name("gcsvd-device".into())
             .spawn(move || worker(make, rx, ready_tx))
             .context("spawning device worker")?;
-        ready_rx
+        let max_par = ready_rx
             .recv()
             .context("device worker died during startup")??;
         Ok(Device {
             tx,
             next: Arc::new(AtomicU64::new(1)),
             backend: kind,
+            max_par,
             model,
             tstats: Arc::new(Mutex::new(TransferStats::default())),
         })
@@ -174,6 +196,12 @@ impl Device {
 
     pub fn backend(&self) -> BackendKind {
         self.backend
+    }
+
+    /// The backend's fan-out hint (`Backend::max_parallelism`): how many
+    /// sibling devices of this kind the batch scheduler may run at once.
+    pub fn max_parallelism(&self) -> usize {
+        self.max_par.max(1)
     }
 
     fn fresh(&self) -> BufId {
@@ -280,7 +308,7 @@ impl Device {
 fn worker<B: Backend>(
     make: impl FnOnce() -> Result<B>,
     rx: Receiver<Cmd>,
-    ready: Sender<Result<()>>,
+    ready: Sender<Result<usize>>,
 ) {
     let mut backend = match make() {
         Ok(b) => b,
@@ -293,7 +321,7 @@ fn worker<B: Backend>(
     let mut stats = DeviceStats::default();
     // first error is latched and reported at the next synchronising call
     let mut pending_err: Option<anyhow::Error> = None;
-    let _ = ready.send(Ok(()));
+    let _ = ready.send(Ok(backend.max_parallelism()));
 
     for cmd in rx {
         match cmd {
@@ -408,6 +436,15 @@ mod tests {
         let e = dev.op("eye", &[("m", 3), ("n", 3)], &[]);
         let v = dev.read(e).unwrap();
         assert_eq!(v, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn host_reports_fanout_hint() {
+        let dev = Device::host();
+        assert!(dev.max_parallelism() >= 1);
+        // the pre-construction static hint and the live instance value
+        // must agree (pool_width relies on the former)
+        assert_eq!(dev.max_parallelism(), BackendKind::Host.max_parallelism_hint());
     }
 
     #[test]

@@ -1,15 +1,18 @@
 //! Device runtime: the command-queue device, the pluggable backend seam
-//! (host interpreter by default, PJRT behind the `pjrt` feature), the op
-//! registry and the transfer-cost model.
+//! (host interpreter by default, PJRT behind the `pjrt` feature), the
+//! work-stealing host pool behind the batch subsystem, the op registry
+//! and the transfer-cost model.
 pub mod backend;
 pub mod bdc_engine;
 pub mod device;
 pub mod host;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod pool;
 pub mod registry;
 pub mod transfer;
 
 pub use backend::Backend;
 pub use device::{BackendKind, BufId, Device, DeviceStats};
+pub use pool::StealPool;
 pub use registry::OpKey;

@@ -14,6 +14,12 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// The fan-out hint, statically knowable without building a client:
+    /// one PJRT CPU client already owns every core, so sibling clients
+    /// just thrash it. Single source for both the `Backend` impl below
+    /// and the batch scheduler's width clamp (`batch::pool_width`).
+    pub const MAX_PARALLELISM: usize = 1;
+
     /// Construct on the worker thread (PJRT state is thread-bound).
     pub fn new(manifest: Manifest) -> Result<PjrtBackend> {
         let client =
@@ -64,5 +70,9 @@ impl Backend for PjrtBackend {
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+
+    fn max_parallelism(&self) -> usize {
+        Self::MAX_PARALLELISM
     }
 }

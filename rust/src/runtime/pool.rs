@@ -1,0 +1,189 @@
+//! A hand-rolled work-stealing thread pool (std-only, offline-safe).
+//!
+//! [`StealPool`] runs a fixed set of independent items across worker
+//! threads: items are dealt into per-worker deques as contiguous chunks
+//! (so shape-bucketed batches stay contiguous per worker and reuse the
+//! worker's warm device/op caches), each worker pops from the *front* of
+//! its own deque, and an idle worker steals from the *back* of a peer's —
+//! the owner/thief deque-end split of Arora-Blumofe-Plaxton. With the
+//! batch scheduler's heaviest-first deal, the front of a chunk is the
+//! expensive cache-hot work the owner keeps, and the stolen back is the
+//! cheap tail — stealing rebalances small items, not large ones (see
+//! `batch::plan`).
+//!
+//! Results are keyed by item index, so the output order — and, for
+//! deterministic item functions, the output *values* — are independent of
+//! the number of workers and of the steal interleaving. The batch parity
+//! tests (`tests/batch.rs`) assert exactly that.
+//!
+//! Workers carry optional per-worker state (`run_with`'s `init`), created
+//! lazily on the worker thread at its first item. The batch scheduler
+//! uses this to give every worker a persistent [`Device`] that survives
+//! across all the items the worker executes — replacing the old
+//! one-`Device`-per-solve assumption with one device (and one warm
+//! compile cache) per worker.
+//!
+//! [`Device`]: crate::runtime::Device
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Fixed-width work-stealing pool. Workers are scoped to each [`run`]
+/// call (`std::thread::scope`), so borrowed inputs need no `'static`
+/// bound and no unsafe lifetime erasure.
+///
+/// [`run`]: StealPool::run
+#[derive(Clone, Copy, Debug)]
+pub struct StealPool {
+    threads: usize,
+}
+
+/// Counters from one [`StealPool::run_with`] execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Workers that actually ran (min(threads, items), at least 1).
+    pub workers: usize,
+    /// Items executed by a worker other than the one they were dealt to.
+    pub steals: usize,
+}
+
+impl StealPool {
+    /// `threads` is clamped to at least one.
+    pub fn new(threads: usize) -> StealPool {
+        StealPool { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` over items `0..n`, returning the results in item order.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.run_with(n, |_worker| (), |_state, i| f(i)).0
+    }
+
+    /// Like [`run`](StealPool::run), with per-worker state: `init(worker)`
+    /// is called lazily on the worker thread at its first item, and the
+    /// resulting state is passed to every subsequent `f` call on that
+    /// worker.
+    pub fn run_with<S, T, I, F>(&self, n: usize, init: I, f: F) -> (Vec<T>, PoolStats)
+    where
+        T: Send,
+        I: Fn(usize) -> S + Sync,
+        F: Fn(&mut S, usize) -> T + Sync,
+    {
+        let workers = self.threads.min(n.max(1));
+        // contiguous chunk per worker; stealing rebalances from the tails
+        let queues: Vec<Mutex<VecDeque<usize>>> = (0..workers)
+            .map(|w| Mutex::new((n * w / workers..n * (w + 1) / workers).collect()))
+            .collect();
+        let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let steals = AtomicUsize::new(0);
+
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let queues = &queues;
+                let results = &results;
+                let steals = &steals;
+                let init = &init;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut state: Option<S> = None;
+                    while let Some(item) = take(queues, w, steals) {
+                        let st = state.get_or_insert_with(|| init(w));
+                        let out = f(st, item);
+                        *results[item].lock().unwrap() = Some(out);
+                    }
+                });
+            }
+        });
+
+        let stats = PoolStats { workers, steals: steals.load(Ordering::Relaxed) };
+        let out = results
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("pool item executed"))
+            .collect();
+        (out, stats)
+    }
+}
+
+/// Pop the front of worker `me`'s deque, else steal from the back of the
+/// nearest non-empty peer. `None` means the whole run is drained (items
+/// never spawn items, so one full scan is a sound termination check).
+fn take(queues: &[Mutex<VecDeque<usize>>], me: usize, steals: &AtomicUsize) -> Option<usize> {
+    if let Some(i) = queues[me].lock().unwrap().pop_front() {
+        return Some(i);
+    }
+    for off in 1..queues.len() {
+        let victim = (me + off) % queues.len();
+        if let Some(i) = queues[victim].lock().unwrap().pop_back() {
+            steals.fetch_add(1, Ordering::Relaxed);
+            return Some(i);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_in_item_order_any_width() {
+        for threads in [1usize, 2, 4, 32] {
+            let pool = StealPool::new(threads);
+            let out = pool.run(100, |i| i * i);
+            assert_eq!(out.len(), 100);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_run_is_fine() {
+        let pool = StealPool::new(4);
+        let out: Vec<usize> = pool.run(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_state_is_reused_not_rebuilt() {
+        let inits = AtomicUsize::new(0);
+        let pool = StealPool::new(2);
+        let (out, stats) = pool.run_with(
+            64,
+            |w| {
+                inits.fetch_add(1, Ordering::Relaxed);
+                w
+            },
+            |state, i| (*state, i),
+        );
+        assert!(inits.load(Ordering::Relaxed) <= stats.workers);
+        assert_eq!(out.len(), 64);
+        for (i, (_, item)) in out.iter().enumerate() {
+            assert_eq!(*item, i);
+        }
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let pool = StealPool::new(8);
+        let _ = pool.run(257, |_| counter.fetch_add(1, Ordering::Relaxed));
+        assert_eq!(counter.load(Ordering::Relaxed), 257);
+    }
+
+    #[test]
+    fn width_clamped_to_one() {
+        let pool = StealPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.run(3, |i| i + 1), vec![1, 2, 3]);
+    }
+}

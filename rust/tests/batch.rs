@@ -1,0 +1,158 @@
+//! Batched-SVD guarantees: batched-vs-serial parity over mixed shapes
+//! (including n=1 and tall-skinny), and bit-determinism of the pool
+//! schedule regardless of thread count.
+
+#![allow(clippy::needless_range_loop)]
+
+use gcsvd::batch::{gesvd_batched, gesvd_batched_with_stats};
+use gcsvd::config::{Config, Solver};
+use gcsvd::matrix::Matrix;
+use gcsvd::runtime::pool::StealPool;
+use gcsvd::runtime::transfer::TransferModel;
+use gcsvd::runtime::Device;
+use gcsvd::svd::{e_svd, gesvd};
+use gcsvd::util::Rng;
+
+/// Heterogeneous batch: n=1, tall-skinny (ragged and 2n), repeated
+/// shapes (shared buckets), a > leaf square, and one n >= 64 square so
+/// the secular solver's threaded path (its serial fallback cuts off
+/// below n = 64) is reachable inside a batch.
+fn mixed_inputs() -> Vec<Matrix> {
+    let mut rng = Rng::new(771);
+    let shapes = [
+        (1usize, 1usize),
+        (17, 1),
+        (5, 5),
+        (33, 7),
+        (16, 16),
+        (5, 5),
+        (40, 40),
+        (64, 32),
+        (70, 70),
+    ];
+    shapes
+        .iter()
+        .map(|&(m, n)| Matrix::from_fn(m, n, |_, _| rng.gaussian()))
+        .collect()
+}
+
+fn cfg_with_threads(threads: usize) -> Config {
+    Config {
+        threads,
+        transfer: TransferModel { enabled: false, ..Default::default() },
+        ..Config::default()
+    }
+}
+
+#[test]
+fn batched_matches_serial_exactly_for_threads_1_and_4() {
+    let inputs = mixed_inputs();
+    // the pre-batch idiom as the reference: one device, a plain loop
+    let serial_cfg = cfg_with_threads(1);
+    let dev = Device::host();
+    let serial: Vec<_> = inputs
+        .iter()
+        .map(|a| gesvd(&dev, a, &serial_cfg, Solver::Ours).expect("serial solve"))
+        .collect();
+
+    for threads in [1usize, 4] {
+        let cfg = cfg_with_threads(threads);
+        let batched = gesvd_batched(&inputs, &cfg, Solver::Ours).expect("batched solve");
+        assert_eq!(batched.len(), serial.len());
+        for (i, (b, s)) in batched.iter().zip(&serial).enumerate() {
+            assert_eq!(b.sigma, s.sigma, "threads={threads} item {i}: sigma");
+            assert_eq!(b.u.data, s.u.data, "threads={threads} item {i}: U");
+            assert_eq!(b.vt.data, s.vt.data, "threads={threads} item {i}: V^T");
+        }
+    }
+}
+
+#[test]
+fn batched_results_are_accurate_and_bucketed() {
+    let inputs = mixed_inputs();
+    let cfg = cfg_with_threads(4);
+    let (results, stats) =
+        gesvd_batched_with_stats(&inputs, &cfg, Solver::Ours).expect("batched solve");
+    // 8 distinct (m, n, block) keys in mixed_inputs (the two 5x5 share)
+    assert_eq!(stats.buckets, 8);
+    assert!(stats.threads >= 1);
+    for (i, (a, r)) in inputs.iter().zip(&results).enumerate() {
+        assert_eq!(r.sigma.len(), a.cols, "item {i}");
+        for k in 1..r.sigma.len() {
+            assert!(
+                r.sigma[k - 1] >= r.sigma[k] - 1e-10,
+                "item {i}: sigma not descending"
+            );
+        }
+        let err = e_svd(a, r);
+        assert!(err < 1e-8, "item {i}: E_svd {err:e}");
+    }
+}
+
+#[test]
+fn pool_schedule_is_deterministic_across_widths() {
+    let inputs = mixed_inputs();
+    let r1 = gesvd_batched(&inputs, &cfg_with_threads(1), Solver::Ours).unwrap();
+    let r4 = gesvd_batched(&inputs, &cfg_with_threads(4), Solver::Ours).unwrap();
+    for (i, (a, b)) in r1.iter().zip(&r4).enumerate() {
+        assert_eq!(a.sigma, b.sigma, "item {i}: sigma");
+        assert_eq!(a.u.data, b.u.data, "item {i}: U");
+        assert_eq!(a.vt.data, b.vt.data, "item {i}: V^T");
+    }
+}
+
+#[test]
+fn batched_works_for_the_cpu_reference_solver() {
+    let inputs = mixed_inputs();
+    let cfg = cfg_with_threads(4);
+    let batched = gesvd_batched(&inputs, &cfg, Solver::LapackRef).expect("batched lapack");
+    let dev = Device::host();
+    let serial_cfg = cfg_with_threads(1);
+    for (i, (a, b)) in inputs.iter().zip(&batched).enumerate() {
+        let s = gesvd(&dev, a, &serial_cfg, Solver::LapackRef).expect("serial lapack");
+        assert_eq!(b.sigma, s.sigma, "item {i}: sigma");
+    }
+}
+
+#[test]
+fn threaded_secular_path_matches_serial_in_batch() {
+    // 2 items with cfg.threads = 8 forces per-solve threads > 1
+    // (threads / width >= 4), and n = 100 keeps the root merges above
+    // solve_all's n < 64 serial fallback — so the threaded secular
+    // solver actually runs inside the batch, and must still be
+    // bit-identical to the single-threaded serial loop.
+    let mut rng = Rng::new(909);
+    let inputs: Vec<Matrix> = (0..2)
+        .map(|_| Matrix::from_fn(100, 100, |_, _| rng.gaussian()))
+        .collect();
+    let dev = Device::host();
+    let serial_cfg = cfg_with_threads(1);
+    let serial: Vec<_> = inputs
+        .iter()
+        .map(|a| gesvd(&dev, a, &serial_cfg, Solver::Ours).expect("serial solve"))
+        .collect();
+    let batched = gesvd_batched(&inputs, &cfg_with_threads(8), Solver::Ours).expect("batched");
+    for (i, (b, s)) in batched.iter().zip(&serial).enumerate() {
+        assert_eq!(b.sigma, s.sigma, "item {i}: sigma");
+        assert_eq!(b.u.data, s.u.data, "item {i}: U");
+        assert_eq!(b.vt.data, s.vt.data, "item {i}: V^T");
+    }
+}
+
+#[test]
+fn wide_input_fails_fast_with_its_index() {
+    let inputs = vec![Matrix::zeros(4, 4), Matrix::zeros(2, 6)];
+    let err = gesvd_batched(&inputs, &cfg_with_threads(2), Solver::Ours).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("batch item 1"), "{msg}");
+}
+
+#[test]
+fn raw_pool_is_width_independent() {
+    let reference: Vec<f64> = (0..53).map(|i| (i as f64).sqrt() * 3.0 + i as f64).collect();
+    for width in [1usize, 2, 3, 8, 17] {
+        let pool = StealPool::new(width);
+        let out = pool.run(53, |i| (i as f64).sqrt() * 3.0 + i as f64);
+        assert_eq!(out, reference, "width={width}");
+    }
+}

@@ -171,9 +171,7 @@ fn gesdd_arbitrary_n_no_divisibility() {
 fn gesdd_small_block_config() {
     // explicit small blocks on odd n exercise ragged panels in every
     // phase driver (geqrf/orgqr/gebrd/ormqr/ormlq)
-    let mut cfg = Config::default();
-    cfg.block = 4;
-    cfg.leaf = 4;
+    let cfg = Config { block: 4, leaf: 4, ..Config::default() };
     let mut rng = Rng::new(306);
     for (m, n) in [(19usize, 19usize), (30, 17)] {
         let a = Matrix::from_fn(m, n, |_, _| rng.gaussian());
