@@ -10,6 +10,13 @@
 //!     share one [`plan::SolvePlan`] and replay the same op sequence, so
 //!     a worker solving a bucket back-to-back hits its device's warm
 //!     compile cache — and orders buckets heaviest-first;
+//!   * with `cfg.fuse` (CLI `--fuse`), buckets of size >= 2 become ONE
+//!     schedule unit solved by `gesdd_ours_fused`: all k members advance
+//!     through one shared BDC tree with k-wide device ops over packed
+//!     `[k, n, n]` stacks (`bdc/driver_k.rs`), so each secular solve and
+//!     lasd3 gemm is issued once per tree node instead of once per
+//!     member. Singleton buckets (and every non-"ours" solver) keep the
+//!     per-solve path; fused lanes are bit-identical to per-solve runs;
 //!   * [`runtime::StealPool`] executes the flattened schedule with
 //!     work-stealing, one persistent [`Device`] per worker (created
 //!     lazily on the worker's first item and reused for every solve it
@@ -36,12 +43,14 @@ pub mod plan;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 
+use crate::bdc::driver_k::BdcStatsK;
 use crate::config::{Config, Solver};
 use crate::matrix::Matrix;
 use crate::runtime::pool::StealPool;
-use crate::runtime::Device;
+use crate::runtime::{Device, DeviceStats};
+use crate::svd::gesdd::gesdd_ours_fused;
 use crate::svd::{gesvd, SvdResult};
-use plan::bucket_inputs;
+use plan::{fused_plan, WorkUnit};
 
 /// Scheduling counters from one batched solve.
 #[derive(Clone, Debug, Default)]
@@ -56,11 +65,30 @@ pub struct BatchStats {
     pub flops: f64,
     /// Wall time of the whole batched call, seconds.
     pub wall: f64,
+    /// Buckets that ran the fused shared-tree path (`cfg.fuse`, size
+    /// >= 2, solver "ours").
+    pub fused_buckets: usize,
+    /// Tree nodes (leaves + merges) processed by fused op streams —
+    /// each served ALL its bucket's lanes with one k-wide op sequence.
+    pub fused_nodes: usize,
+    /// Mean fill of the masked fused kernels across fused merges (1.0 =
+    /// every lane's live prefix as wide as its node's widest lane; 1.0
+    /// when nothing fused ran).
+    pub lane_occupancy: f64,
+    /// Device counters aggregated over every pool worker's persistent
+    /// device: op counts for the fusion assertions, `live_buffers` as
+    /// the buffer-leak gauge, staging reuse hits.
+    pub device: DeviceStats,
     /// The executed schedule: shape buckets, heaviest-per-matrix first,
     /// exactly as dealt to the pool (so callers report what actually
     /// ran instead of re-deriving it).
     pub schedule: Vec<plan::Bucket>,
 }
+
+/// One unit's outcome: (input index, result) pairs — one pair for a
+/// single solve, the whole bucket for a fused solve — plus the fused
+/// tree counters. Errors carry the unit's lowest input index.
+type UnitOut = std::result::Result<(Vec<(usize, SvdResult)>, Option<BdcStatsK>), (usize, String)>;
 
 /// Batched SVD with the paper's solver ("ours") — `gesdd` over a batch.
 pub fn gesdd_batched(inputs: &[Matrix], cfg: &Config) -> Result<Vec<SvdResult>> {
@@ -83,12 +111,13 @@ pub fn gesvd_batched_with_stats(
     solver: Solver,
 ) -> Result<(Vec<SvdResult>, BatchStats)> {
     let t0 = std::time::Instant::now();
-    let buckets = bucket_inputs(inputs, cfg)?;
-    // flattened schedule: buckets stay contiguous, heaviest bucket first
-    let order: Vec<usize> = buckets.iter().flat_map(|b| b.items.iter().copied()).collect();
-    let flops: f64 = buckets.iter().map(|b| b.plan.flops * b.items.len() as f64).sum();
+    // fusion is a property of the "ours" BDC engine; other solvers keep
+    // the per-solve path even when cfg.fuse is set
+    let fuse = cfg.fuse && solver == Solver::Ours;
+    let plan = fused_plan(inputs, cfg, fuse)?;
+    let flops: f64 = plan.buckets.iter().map(|b| b.plan.flops * b.items.len() as f64).sum();
 
-    let width = pool_width(inputs.len(), cfg);
+    let width = pool_width(plan.units.len(), cfg);
     // Divide the thread budget across workers instead of oversubscribing
     // (width workers x per-solve secular threads <= cfg.threads), so a
     // small batch of large matrices still uses the whole host. The
@@ -97,27 +126,62 @@ pub fn gesvd_batched_with_stats(
     let mut solve_cfg = cfg.clone();
     solve_cfg.threads = (cfg.threads / width).max(1);
 
-    // Once any item fails, stop dealing new items (in-flight solves
+    // Once any unit fails, stop dealing new units (in-flight solves
     // finish); their slots carry SKIPPED so the real error wins below.
     const SKIPPED: &str = "skipped: an earlier batch item failed";
     let aborted = AtomicBool::new(false);
 
     let pool = StealPool::new(width);
-    let (slots, pstats) = pool.run_with(
-        order.len(),
+    let (slots, pstats, states) = pool.run_with_states(
+        plan.units.len(),
         // one persistent device per worker, built on the worker thread
         |_worker| {
             Device::with_backend(cfg.backend, &cfg.artifacts, cfg.transfer)
                 .map_err(|e| format!("{e:#}"))
         },
-        |dev, j| {
+        |dev, j| -> UnitOut {
+            let unit = plan.units[j];
+            let lowest = plan.lowest_index(unit);
             if aborted.load(Ordering::Relaxed) {
-                return Err(SKIPPED.to_string());
+                return Err((lowest, SKIPPED.to_string()));
             }
-            let r = match dev {
-                Ok(d) => gesvd(d, &inputs[order[j]], &solve_cfg, solver)
-                    .map_err(|e| format!("{e:#}")),
-                Err(e) => Err(e.clone()),
+            // Contain solver panics at the unit boundary: the BDC engine
+            // traits are infallible, so a device error latched mid-tree
+            // panics inside the solve; without the catch that would tear
+            // down the whole pool scope and lose every completed result.
+            // (The worker's device may strand buffers until the batch
+            // returns and drops it — bounded by the batch lifetime.)
+            let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let d = match dev {
+                    Ok(d) => d,
+                    Err(e) => return Err((lowest, e.clone())),
+                };
+                match unit {
+                    WorkUnit::Single(i) => gesvd(d, &inputs[i], &solve_cfg, solver)
+                        .map(|r| (vec![(i, r)], None))
+                        .map_err(|e| (lowest, format!("{e:#}"))),
+                    WorkUnit::Fused { bucket, start, len } => {
+                        let items = &plan.buckets[bucket].items[start..start + len];
+                        let lane_inputs: Vec<&Matrix> =
+                            items.iter().map(|&i| &inputs[i]).collect();
+                        gesdd_ours_fused(d, &lane_inputs, &solve_cfg)
+                            .map(|(rs, st)| {
+                                (items.iter().copied().zip(rs).collect(), Some(st))
+                            })
+                            .map_err(|e| (lowest, format!("{e:#}")))
+                    }
+                }
+            }));
+            let r: UnitOut = match solved {
+                Ok(r) => r,
+                Err(p) => {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic".to_string());
+                    Err((lowest, format!("solver panicked: {msg}")))
+                }
             };
             if r.is_err() {
                 aborted.store(true, Ordering::Relaxed);
@@ -126,16 +190,31 @@ pub fn gesvd_batched_with_stats(
         },
     );
 
-    // scatter schedule order back to input order; report the failing
-    // item with the lowest batch index (deterministic error choice)
+    // scatter unit outcomes back to input order; report the failing
+    // item with the lowest batch index (deterministic error choice).
+    // The fused-tree counters fold in unit order, so the stats are as
+    // width-independent as the results.
     let mut out: Vec<Option<SvdResult>> = (0..inputs.len()).map(|_| None).collect();
     let mut first_err: Option<(usize, String)> = None;
-    for (j, slot) in slots.into_iter().enumerate() {
+    let mut fused_buckets = 0usize;
+    let mut fused_nodes = 0usize;
+    let (mut occ_num, mut occ_den) = (0.0f64, 0.0f64);
+    for slot in slots {
         match slot {
-            Ok(r) => out[order[j]] = Some(r),
-            Err(e) => {
-                if e != SKIPPED && !first_err.as_ref().is_some_and(|(i, _)| *i <= order[j]) {
-                    first_err = Some((order[j], e));
+            Ok((pairs, st)) => {
+                if let Some(st) = st {
+                    fused_buckets += 1;
+                    fused_nodes += st.nodes();
+                    occ_num += st.occ_num;
+                    occ_den += st.occ_den;
+                }
+                for (i, r) in pairs {
+                    out[i] = Some(r);
+                }
+            }
+            Err((i, e)) => {
+                if e != SKIPPED && !first_err.as_ref().is_some_and(|(fi, _)| *fi <= i) {
+                    first_err = Some((i, e));
                 }
             }
         }
@@ -148,13 +227,26 @@ pub fn gesvd_batched_with_stats(
         .map(|o| o.expect("every input index is scheduled exactly once"))
         .collect();
 
+    // aggregate per-worker device counters (op-count assertions, the
+    // live-buffer leak gauge, staging reuse)
+    let mut device = DeviceStats::default();
+    for st in states.into_iter().flatten() {
+        if let Ok(d) = st {
+            device.absorb(&d.stats());
+        }
+    }
+
     let stats = BatchStats {
         threads: pstats.workers,
-        buckets: buckets.len(),
+        buckets: plan.buckets.len(),
         steals: pstats.steals,
         flops,
         wall: t0.elapsed().as_secs_f64(),
-        schedule: buckets,
+        fused_buckets,
+        fused_nodes,
+        lane_occupancy: if occ_den > 0.0 { occ_num / occ_den } else { 1.0 },
+        device,
+        schedule: plan.buckets,
     };
     Ok((results, stats))
 }

@@ -93,6 +93,72 @@ pub fn bucket_inputs(inputs: &[Matrix], cfg: &Config) -> Result<Vec<Bucket>> {
     Ok(buckets)
 }
 
+/// Largest lane count one fused unit may carry. Bounds the packed
+/// `[k, n, n]` device stacks (two of them per unit, rebuilt per k-wide
+/// op) and keeps a big uniform batch from collapsing onto a single pool
+/// worker — a 64-member bucket becomes four 16-lane units the pool can
+/// spread. Matches the widest lane count in the registry's builtin
+/// `FUSE_K` grid so AOT-backed devices have the op keys.
+pub const MAX_FUSE_LANES: usize = 16;
+
+/// One schedulable unit of a batched call: either a single per-solve
+/// item, or a run of same-shape bucket members advancing through one
+/// fused BDC tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkUnit {
+    /// Index into the caller's input slice (the per-solve path).
+    Single(usize),
+    /// `len` members of `FusedPlan::buckets[bucket].items`, starting at
+    /// `start`, solved by one `gesdd_ours_fused` call on one worker.
+    Fused { bucket: usize, start: usize, len: usize },
+}
+
+/// The executable schedule: the shape buckets (heaviest-per-matrix
+/// first, exactly as [`bucket_inputs`] orders them) plus the unit list
+/// the pool deals. With fusion off every item is a [`WorkUnit::Single`];
+/// with fusion on, buckets of size >= 2 become [`WorkUnit::Fused`] runs
+/// of at most [`MAX_FUSE_LANES`] lanes (a trailing run of 1 falls back
+/// to the per-solve path, as do singleton buckets).
+#[derive(Clone, Debug)]
+pub struct FusedPlan {
+    pub buckets: Vec<Bucket>,
+    pub units: Vec<WorkUnit>,
+}
+
+impl FusedPlan {
+    /// The lowest input index a unit covers — the deterministic error
+    /// tag for unit-level failures.
+    pub fn lowest_index(&self, unit: WorkUnit) -> usize {
+        match unit {
+            WorkUnit::Single(i) => i,
+            WorkUnit::Fused { bucket, start, .. } => self.buckets[bucket].items[start],
+        }
+    }
+}
+
+/// Build the unit schedule over [`bucket_inputs`]'s buckets.
+pub fn fused_plan(inputs: &[Matrix], cfg: &Config, fuse: bool) -> Result<FusedPlan> {
+    let buckets = bucket_inputs(inputs, cfg)?;
+    let mut units = Vec::with_capacity(inputs.len());
+    for (bi, b) in buckets.iter().enumerate() {
+        if fuse && b.items.len() >= 2 {
+            let mut start = 0usize;
+            while start < b.items.len() {
+                let len = (b.items.len() - start).min(MAX_FUSE_LANES);
+                if len >= 2 {
+                    units.push(WorkUnit::Fused { bucket: bi, start, len });
+                } else {
+                    units.push(WorkUnit::Single(b.items[start]));
+                }
+                start += len;
+            }
+        } else {
+            units.extend(b.items.iter().map(|&i| WorkUnit::Single(i)));
+        }
+    }
+    Ok(FusedPlan { buckets, units })
+}
+
 /// Per-matrix flop estimate for the full pipeline (paper conventions:
 /// gebrd 4n^2(m - n/3), QR 2n^2(m - n/3), BDC ~8/3 n^3, two one-sided
 /// back-transforms ~2n^3 each, plus the tall-skinny Q*U0 gemm).
@@ -151,6 +217,71 @@ mod tests {
         let inputs = vec![Matrix::zeros(4, 4), Matrix::zeros(3, 5)];
         let err = bucket_inputs(&inputs, &cfg).unwrap_err();
         assert!(format!("{err}").contains("batch item 1"), "{err}");
+    }
+
+    #[test]
+    fn fused_plan_collapses_multi_member_buckets() {
+        let cfg = Config::default();
+        let shapes = [(8usize, 8usize), (64, 64), (8, 8), (128, 32), (64, 64)];
+        let inputs: Vec<Matrix> = shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect();
+        let plan = fused_plan(&inputs, &cfg, true).unwrap();
+        // 3 buckets: {128x32}, {64x64 x2}, {8x8 x2} -> 1 single + 2 fused
+        assert_eq!(plan.buckets.len(), 3);
+        let fused: Vec<_> = plan
+            .units
+            .iter()
+            .filter(|u| matches!(u, WorkUnit::Fused { .. }))
+            .collect();
+        assert_eq!(fused.len(), 2);
+        assert_eq!(plan.units.len(), 3);
+        // every input is covered exactly once
+        let mut covered: Vec<usize> = plan
+            .units
+            .iter()
+            .flat_map(|u| match u {
+                WorkUnit::Single(i) => vec![*i],
+                WorkUnit::Fused { bucket, start, len } => {
+                    plan.buckets[*bucket].items[*start..*start + *len].to_vec()
+                }
+            })
+            .collect();
+        covered.sort_unstable();
+        assert_eq!(covered, (0..5).collect::<Vec<_>>());
+        // error tags use the run's lowest index
+        for u in &plan.units {
+            if let WorkUnit::Fused { bucket, start, .. } = u {
+                assert_eq!(plan.lowest_index(*u), plan.buckets[*bucket].items[*start]);
+            }
+        }
+
+        // fusion off: every item is its own unit
+        let unfused = fused_plan(&inputs, &cfg, false).unwrap();
+        assert_eq!(unfused.units.len(), 5);
+        assert!(unfused.units.iter().all(|u| matches!(u, WorkUnit::Single(_))));
+    }
+
+    #[test]
+    fn fused_plan_caps_lane_width() {
+        let cfg = Config::default();
+        // one uniform bucket of 2 * MAX + 1 members -> 2 full-width
+        // fused runs plus a per-solve trailing singleton
+        let inputs: Vec<Matrix> = (0..2 * MAX_FUSE_LANES + 1)
+            .map(|_| Matrix::zeros(6, 6))
+            .collect();
+        let plan = fused_plan(&inputs, &cfg, true).unwrap();
+        assert_eq!(plan.buckets.len(), 1);
+        assert_eq!(plan.units.len(), 3);
+        let mut covered = 0usize;
+        for u in &plan.units {
+            match u {
+                WorkUnit::Fused { len, .. } => {
+                    assert!(*len >= 2 && *len <= MAX_FUSE_LANES, "run width {len}");
+                    covered += len;
+                }
+                WorkUnit::Single(_) => covered += 1,
+            }
+        }
+        assert_eq!(covered, inputs.len());
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! The lane-aware BDC driver: k same-shape problems ("lanes") advance
+//! through ONE shared recursion tree, so every device op at a node is
+//! issued once for all lanes instead of once per problem — the batched
+//! kernel regime of Boukaram et al. / Abdelfattah & Fasi (PAPERS.md).
+//!
+//! The tree shape depends only on (n, leaf), so same-shape bucket
+//! members visit identical nodes in identical order. What differs per
+//! lane is the *numerical* state: coupling values, sort orders, and —
+//! crucially — the deflation outcome. The driver therefore keeps every
+//! per-node scalar of `bdc/driver.rs` as a column across lanes (per-lane
+//! z-vectors, per-lane permutations, a per-lane live count K), and the
+//! fused engine ops mask each lane to its own live prefix.
+//!
+//! Bit-exactness contract: lane `l` of `bdc_solve_k` performs exactly
+//! the floating-point operations `bdc_solve` performs on problem `l`
+//! alone (the host backend's k-wide ops share their inner loops with the
+//! scalar ops), so fused and per-solve results are identical to the bit.
+//! `tests/batch.rs` asserts this for k in {2, 3, 7}.
+
+use crate::bdc::deflate::{lasd2, Deflation};
+use crate::bdc::driver::Mat;
+use crate::bdc::lasdq::lasdq;
+use crate::linalg::givens::PlaneRot;
+use crate::linalg::secular::{self, SecularRoot};
+use crate::matrix::{Bidiagonal, Matrix};
+
+/// One lane's input to the fused lasd3 stage: the deflated (d, z) pair
+/// and its secular roots. `d.len()` is the lane's live count K.
+pub struct LaneSecular {
+    pub d: Vec<f64>,
+    pub roots: Vec<SecularRoot>,
+    pub z: Vec<f64>,
+}
+
+/// Engine owning k singular-vector matrix pairs (packed on device as
+/// `[k, n, n]` stacks). The lane count is fixed by `init`; every other
+/// method takes per-lane data indexed `0..lanes`. Column indices are
+/// GLOBAL, exactly as in [`BdcEngine`](crate::bdc::driver::BdcEngine).
+pub trait BdcEngineK {
+    /// All lanes start as n x n identity.
+    fn init(&mut self, lanes: usize, n: usize);
+
+    /// Write one leaf result per lane (all lanes share the leaf's
+    /// position and size — the tree is shared).
+    fn set_leaf_k(&mut self, lo: usize, us: &[Matrix], vs: &[Matrix]);
+
+    /// Read row `row` of every lane's V, columns [c0, c0+len).
+    fn v_row_k(&mut self, row: usize, c0: usize, len: usize) -> Vec<Vec<f64>>;
+
+    /// Apply per-lane Givens rotation lists (global pairs); lanes with an
+    /// empty list are left untouched (count-masked on device).
+    fn rot_cols_k(&mut self, which: Mat, rots: &[Vec<PlaneRot>]);
+
+    /// Permute columns [lo, lo+len) of every lane by its LOCAL perm.
+    fn permute_k(&mut self, which: Mat, lo: usize, perms: &[Vec<usize>]);
+
+    /// The fused lasd3 update: one kernel + one window gemm per matrix
+    /// for ALL lanes, each lane masked to its own live prefix K.
+    fn secular_apply_k(&mut self, lo: usize, len: usize, sqre: usize, lanes: &[LaneSecular]);
+
+    /// Flush any queued asynchronous work (end of the solve).
+    fn sync(&mut self) {}
+}
+
+/// Counters for one fused tree (surfaced through `BatchStats`).
+#[derive(Clone, Debug, Default)]
+pub struct BdcStatsK {
+    pub lanes: usize,
+    pub merges: usize,
+    pub leaves: usize,
+    /// Occupancy numerator: sum over merge nodes and lanes of K_lane.
+    pub occ_num: f64,
+    /// Occupancy denominator: sum over merge nodes of lanes * max K.
+    pub occ_den: f64,
+}
+
+impl BdcStatsK {
+    /// Tree nodes processed by one fused op stream.
+    pub fn nodes(&self) -> usize {
+        self.merges + self.leaves
+    }
+
+    /// Mean fill of the masked fused kernels: 1.0 means every lane's
+    /// live prefix is as long as its node's widest lane (no masking
+    /// waste); defined as 1.0 when no merges ran.
+    pub fn lane_occupancy(&self) -> f64 {
+        if self.occ_den > 0.0 {
+            self.occ_num / self.occ_den
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Solve k same-size BDC problems through one shared tree. All lanes
+/// must have the same `n`; returns per-lane sigma ASCENDING, with the
+/// engine's packed U/V columns in matching order (per lane).
+pub fn bdc_solve_k<E: BdcEngineK>(
+    bs: &[Bidiagonal],
+    engine: &mut E,
+    leaf: usize,
+    threads: usize,
+) -> (Vec<Vec<f64>>, BdcStatsK) {
+    let lanes = bs.len();
+    assert!(lanes >= 1, "bdc_solve_k needs at least one lane");
+    let n = bs[0].n();
+    for b in bs {
+        assert_eq!(b.n(), n, "bdc_solve_k lanes must share n");
+    }
+    let mut stats = BdcStatsK { lanes, ..Default::default() };
+    engine.init(lanes, n);
+    if n == 0 {
+        return (vec![vec![]; lanes], stats);
+    }
+    let leaf = leaf.max(3);
+    let sig = solve_node_k(bs, engine, 0, n, 0, leaf, threads, &mut stats);
+    engine.sync();
+    (sig, stats)
+}
+
+/// Recursive shared-tree node solve (mirrors `driver::solve_node`).
+fn solve_node_k<E: BdcEngineK>(
+    bs: &[Bidiagonal],
+    engine: &mut E,
+    lo: usize,
+    nn: usize,
+    sqre: usize,
+    leaf: usize,
+    threads: usize,
+    stats: &mut BdcStatsK,
+) -> Vec<Vec<f64>> {
+    if nn <= leaf {
+        let mut sigs = Vec::with_capacity(bs.len());
+        let mut us = Vec::with_capacity(bs.len());
+        let mut vs = Vec::with_capacity(bs.len());
+        for b in bs {
+            let d = &b.d[lo..lo + nn];
+            let e: Vec<f64> = (0..nn - 1 + sqre).map(|i| b.e[lo + i]).collect();
+            let (sig, u, v) = lasdq(d, &e, sqre);
+            sigs.push(sig);
+            us.push(u);
+            vs.push(v);
+        }
+        engine.set_leaf_k(lo, &us, &vs);
+        stats.leaves += 1;
+        return sigs;
+    }
+
+    let k = nn / 2;
+    let d1 = solve_node_k(bs, engine, lo, k - 1, 1, leaf, threads, stats);
+    let d2 = solve_node_k(bs, engine, lo + k, nn - k, sqre, leaf, threads, stats);
+    merge_node_k(bs, engine, lo, nn, sqre, k, &d1, &d2, threads, stats)
+}
+
+/// The lasd1 merge with columnar per-lane bookkeeping (mirrors
+/// `driver::merge_node` lane by lane — see the module docs for the
+/// bit-exactness contract).
+fn merge_node_k<E: BdcEngineK>(
+    bs: &[Bidiagonal],
+    engine: &mut E,
+    lo: usize,
+    nn: usize,
+    sqre: usize,
+    k: usize,
+    d1: &[Vec<f64>],
+    d2: &[Vec<f64>],
+    threads: usize,
+    stats: &mut BdcStatsK,
+) -> Vec<Vec<f64>> {
+    let lanes = bs.len();
+    stats.merges += 1;
+    let ik = lo + k - 1; // global coupling row
+
+    // ---- z construction from V rows (one device read for all lanes) ----
+    let r1s = engine.v_row_k(ik, lo, k);
+    let r2s = engine.v_row_k(lo + k, lo + k, nn - k + sqre);
+
+    let mut d_nats: Vec<Vec<f64>> = Vec::with_capacity(lanes);
+    let mut z_nats: Vec<Vec<f64>> = Vec::with_capacity(lanes);
+    let mut q2rots: Vec<Vec<PlaneRot>> = vec![Vec::new(); lanes];
+    let mut any_q2 = false;
+    for l in 0..lanes {
+        let alpha = bs[l].d[ik];
+        let beta = bs[l].e[ik];
+        let (r1, r2) = (&r1s[l], &r2s[l]);
+        let mut d_nat = vec![0.0; nn];
+        let mut z_nat = vec![0.0; nn];
+        for c in 0..k - 1 {
+            d_nat[c] = d1[l][c];
+            z_nat[c] = alpha * r1[c];
+        }
+        d_nat[k - 1] = 0.0;
+        z_nat[k - 1] = alpha * r1[k - 1];
+        for c in k..nn {
+            d_nat[c] = d2[l][c - k];
+            z_nat[c] = beta * r2[c - k];
+        }
+        if sqre == 1 {
+            // fold the q2 z-mass into the q1 column (per lane)
+            let zq2 = beta * r2[nn - k];
+            let zq1 = z_nat[k - 1];
+            let r = zq1.hypot(zq2);
+            if r > 0.0 {
+                let (c, s) = (zq1 / r, zq2 / r);
+                q2rots[l].push(PlaneRot {
+                    j1: (lo + k - 1) as u32,
+                    j2: (lo + nn) as u32,
+                    c,
+                    s,
+                });
+                z_nat[k - 1] = r;
+                any_q2 = true;
+            }
+        }
+        d_nats.push(d_nat);
+        z_nats.push(z_nat);
+    }
+    if any_q2 {
+        engine.rot_cols_k(Mat::V, &q2rots);
+    }
+
+    // ---- per-lane sort by d ascending; one fused permute ----
+    let mut orders: Vec<Vec<usize>> = Vec::with_capacity(lanes);
+    let mut ds_all: Vec<Vec<f64>> = Vec::with_capacity(lanes);
+    let mut zs_all: Vec<Vec<f64>> = Vec::with_capacity(lanes);
+    let mut orgnrms: Vec<f64> = Vec::with_capacity(lanes);
+    for l in 0..lanes {
+        let d_nat = &d_nats[l];
+        let mut order: Vec<usize> = Vec::with_capacity(nn);
+        order.push(k - 1);
+        let (mut i1, mut i2) = (0usize, k);
+        while i1 < k - 1 || i2 < nn {
+            if i1 < k - 1 && (i2 >= nn || d_nat[i1] <= d_nat[i2]) {
+                order.push(i1);
+                i1 += 1;
+            } else {
+                order.push(i2);
+                i2 += 1;
+            }
+        }
+        let d_sorted: Vec<f64> = order.iter().map(|&c| d_nat[c]).collect();
+        let z_sorted: Vec<f64> = order.iter().map(|&c| z_nats[l][c]).collect();
+        let alpha = bs[l].d[ik];
+        let beta = bs[l].e[ik];
+        let orgnrm = alpha
+            .abs()
+            .max(beta.abs())
+            .max(d_sorted.iter().fold(0.0f64, |a, &x| a.max(x)));
+        let inv = if orgnrm > 0.0 { 1.0 / orgnrm } else { 1.0 };
+        ds_all.push(d_sorted.iter().map(|x| x * inv).collect());
+        zs_all.push(z_sorted.iter().map(|x| x * inv).collect());
+        orders.push(order);
+        orgnrms.push(orgnrm);
+    }
+    engine.permute_k(Mat::U, lo, &orders);
+    engine.permute_k(Mat::V, lo, &orders);
+
+    // ---- per-lane deflation; fused masked rotations + permutes ----
+    let defls: Vec<Deflation> = (0..lanes).map(|l| lasd2(&ds_all[l], &zs_all[l], 1.0)).collect();
+    let grots: Vec<Vec<PlaneRot>> = defls
+        .iter()
+        .map(|defl| {
+            defl.rots
+                .iter()
+                .map(|r| PlaneRot {
+                    j1: (lo + r.j1 as usize) as u32,
+                    j2: (lo + r.j2 as usize) as u32,
+                    c: r.c,
+                    s: r.s,
+                })
+                .collect()
+        })
+        .collect();
+    if grots.iter().any(|g| !g.is_empty()) {
+        engine.rot_cols_k(Mat::U, &grots);
+        engine.rot_cols_k(Mat::V, &grots);
+    }
+    let perms: Vec<Vec<usize>> = defls.iter().map(|d| d.perm.clone()).collect();
+    engine.permute_k(Mat::U, lo, &perms);
+    engine.permute_k(Mat::V, lo, &perms);
+
+    // lane occupancy of the masked secular kernel at this node
+    let kmax = defls.iter().map(|d| d.k).max().unwrap_or(0);
+    stats.occ_num += defls.iter().map(|d| d.k as f64).sum::<f64>();
+    stats.occ_den += (lanes * kmax) as f64;
+
+    // ---- per-lane secular roots (CPU); one fused lasd3 apply ----
+    let lane_sec: Vec<LaneSecular> = defls
+        .iter()
+        .map(|defl| {
+            let roots = secular::solve_all(&defl.d_live, &defl.z_live, threads);
+            LaneSecular { d: defl.d_live.clone(), roots, z: defl.z_live.clone() }
+        })
+        .collect();
+    engine.secular_apply_k(lo, nn, sqre, &lane_sec);
+
+    // ---- per-lane new singular values; fused final permute ----
+    let mut final_perms: Vec<Vec<usize>> = Vec::with_capacity(lanes);
+    let mut outs: Vec<Vec<f64>> = Vec::with_capacity(lanes);
+    for l in 0..lanes {
+        let defl = &defls[l];
+        let sig: Vec<f64> = lane_sec[l].roots.iter().map(|r| r.omega * orgnrms[l]).collect();
+        let dead: Vec<f64> = defl.d_dead.iter().map(|x| x * orgnrms[l]).collect();
+        let mut final_perm: Vec<usize> = Vec::with_capacity(nn);
+        let (mut a, mut bidx) = (0usize, 0usize);
+        while a < sig.len() || bidx < dead.len() {
+            if a < sig.len() && (bidx >= dead.len() || sig[a] <= dead[bidx]) {
+                final_perm.push(a);
+                a += 1;
+            } else {
+                final_perm.push(defl.k + bidx);
+                bidx += 1;
+            }
+        }
+        let mut out: Vec<f64> = Vec::with_capacity(nn);
+        for &p in &final_perm {
+            out.push(if p < defl.k { sig[p] } else { dead[p - defl.k] });
+        }
+        final_perms.push(final_perm);
+        outs.push(out);
+    }
+    engine.permute_k(Mat::U, lo, &final_perms);
+    engine.permute_k(Mat::V, lo, &final_perms);
+    outs
+}

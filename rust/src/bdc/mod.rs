@@ -15,6 +15,11 @@
 //!   * the BDC-V1 engine — CPU everything except the lasd3 gemms,
 //!     with full matrix round-trips per merge (Gates et al. [12]).
 //!
+//! A lane-aware twin of the driver (`driver_k.rs`) advances k same-shape
+//! problems through ONE shared recursion tree over a [`BdcEngineK`]
+//! (packed `[k, n, n]` device stacks, k-wide node ops, per-lane
+//! deflation state) — the batch subsystem's `--fuse` path.
+//!
 //! Index conventions: the tree is built over the square upper bidiagonal
 //! root (n x n). A node covers rows [lo, lo+nn) and, for its right-vector
 //! block, columns [lo, lo+nn+sqre). Children: left = (lo, k-1, sqre=1),
@@ -27,6 +32,8 @@ pub mod cpu;
 pub mod dual;
 pub mod deflate;
 pub mod driver;
+pub mod driver_k;
 pub mod lasdq;
 
 pub use driver::{bdc_solve, BdcEngine, BdcStats};
+pub use driver_k::{bdc_solve_k, BdcEngineK, BdcStatsK};

@@ -1,8 +1,10 @@
 //! Batch figure (not in the paper — the ROADMAP's many-small-solves
-//! regime): throughput of the batched pool vs a serial loop over the
-//! same inputs, as batch size grows. Mixed shapes (square, tall-skinny,
-//! n=1) so the shape-bucketing scheduler is exercised, not just the
-//! pool.
+//! regime): throughput of the batched pool vs a serial loop vs the
+//! fused shared-tree path over the same inputs, as batch size grows.
+//! Mixed shapes (square, tall-skinny, n=1) so the shape-bucketing
+//! scheduler is exercised, not just the pool; once the batch cycles the
+//! shape list, buckets of size >= 2 appear and `--fuse` semantics (one
+//! k-wide op stream per bucket) become visible in the fused column.
 
 use anyhow::Result;
 
@@ -17,7 +19,7 @@ use crate::svd::gesvd;
 const BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
 
 pub fn fig_batch(ctx: &Ctx) -> Result<()> {
-    header("Batch — pool vs serial-loop throughput (ours, mixed shapes)");
+    header("Batch — pool vs serial vs fused throughput (ours, mixed shapes)");
     let n = 48usize;
     let shapes = [(n, n), (2 * n, n), (n / 2, n / 2), (n, 1)];
     for batch in BATCHES {
@@ -48,10 +50,25 @@ pub fn fig_batch(ctx: &Ctx) -> Result<()> {
             workers = st.threads;
         });
 
+        // fused-vs-unfused: same inputs, same pool, buckets of size >= 2
+        // collapsed into shared-tree units (k-wide op streams)
+        let mut fused_cfg = ctx.cfg.clone();
+        fused_cfg.fuse = true;
+        let mut fused_nodes = 0usize;
+        let mut occupancy = 1.0f64;
+        let t_fused = time_median(ctx.reps, || {
+            let (_, st) = gesvd_batched_with_stats(&inputs, &fused_cfg, Solver::Ours)
+                .expect("fused batched solve");
+            fused_nodes = st.fused_nodes;
+            occupancy = st.lane_occupancy;
+        });
+
         println!(
             "  batch {batch:>3}: serial {t_serial:8.4}s | pool({workers}) {t_batch:8.4}s \
-             (x{:4.2}) | {:6.1} mat/s | {:7.3} GFLOP/s",
+             (x{:4.2}) | fused {t_fused:8.4}s (x{:4.2}, {fused_nodes} nodes, occ {occupancy:4.2}) \
+             | {:6.1} mat/s | {:7.3} GFLOP/s",
             t_serial / t_batch.max(1e-12),
+            t_serial / t_fused.max(1e-12),
             batch as f64 / t_batch.max(1e-12),
             gflops(flops, t_batch.max(1e-12)),
         );

@@ -61,6 +61,11 @@ pub struct Config {
     /// generates per call when `--batch` is absent (the library API
     /// itself takes explicit slices). Set by `--batch` via the CLI.
     pub batch: usize,
+    /// Fuse same-shape buckets of a batched call into one shared BDC
+    /// tree per bucket (k-wide device ops; `--fuse` on the CLI). Only
+    /// the "ours" solver has a fused engine — other solvers keep the
+    /// per-solve path regardless.
+    pub fuse: bool,
     /// Use the Pallas merged-update kernel ('pallas') or the XLA-dot
     /// analogue of a vendor BLAS ('xla').
     pub kernel: String,
@@ -79,6 +84,7 @@ impl Default for Config {
                 .map(|c| c.get())
                 .unwrap_or(4),
             batch: 8,
+            fuse: false,
             kernel: "xla".to_string(),
             transfer: Default::default(),
         }

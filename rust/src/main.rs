@@ -4,10 +4,12 @@
 //!   svd       --m M --n N [--kind K] [--theta T] [--solver S] [--block B]
 //!             run one SVD, print sigma head, accuracy and the phase profile
 //!   svd-batch [--batch N] [--m M] [--n N] [--mixed] [--solver S]
-//!             [--threads T] [--check]
+//!             [--threads T] [--fuse] [--check]
 //!             batched SVD over the work-stealing pool; prints bucket
 //!             schedule + throughput (matrices/s, aggregate GFLOP/s), and
-//!             with --check the serial-loop baseline + parity
+//!             with --check the serial-loop baseline + parity; --fuse
+//!             routes same-shape buckets through one shared BDC tree
+//!             (k-wide device ops) and prints fused node/occupancy stats
 //!   bench     <fig4|fig5a|fig5b|fig6..fig20|batch|all> [--reps R]
 //!             regenerate a paper figure (see DESIGN.md experiment index)
 //!   profile   --m M --n N [--solver S]   phase/location trace (Fig. 1 style)
@@ -90,6 +92,9 @@ fn build_config(args: &Args) -> Result<Config> {
     cfg.leaf = args.get_usize("leaf", cfg.leaf)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.batch = args.get_usize("batch", cfg.batch)?;
+    if args.get("fuse").is_some() {
+        cfg.fuse = true;
+    }
     if args.get("no-transfer-model").is_some() {
         cfg.transfer.enabled = false;
     }
@@ -204,6 +209,13 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
             b.plan.key.block,
             b.items.len(),
             b.plan.flops / 1e9
+        );
+    }
+    if cfg.fuse {
+        println!(
+            "fused: {} bucket(s) shared-tree, {} tree nodes k-wide, \
+             lane occupancy {:.2}",
+            stats.fused_buckets, stats.fused_nodes, stats.lane_occupancy
         );
     }
     println!(

@@ -49,6 +49,14 @@ pub trait Backend {
         Ok(v)
     }
 
+    /// Reclaim the host-side f64 storage of a freed buffer so the device
+    /// can recycle it as upload staging (`Device::stage`). Backends whose
+    /// buffers live in device memory (PJRT, real GPUs) return `None` —
+    /// for those, staging reuse happens in pinned host pools instead.
+    fn reclaim_f64(&mut self, _buf: Self::Buf) -> Option<Vec<f64>> {
+        None
+    }
+
     /// (compile_count, compile_sec) for `DeviceStats`. For the host
     /// interpreter this counts distinct op keys executed (the analogue of
     /// a compile cache fill).

@@ -15,15 +15,50 @@ use crate::matrix::Matrix;
 use crate::runtime::registry::bucket_for;
 use crate::runtime::{BufId, Device};
 
-const ROT_BATCH: usize = 512; // largest aot.py ROT_BUCKETS entry
-const ROT_BUCKETS: [usize; 3] = [8, 64, 512]; // mirrors aot.py ROT_BUCKETS
-const LEAF_TILE: usize = 64; // mirrors aot.py set_block bs
+// Shared with the k-wide engine (`bdc_engine_k.rs`) so the two cannot
+// drift from each other or from the aot.py emission grid they mirror.
+pub(crate) const ROT_BATCH: usize = 512; // largest aot.py ROT_BUCKETS entry
+pub(crate) const ROT_BUCKETS: [usize; 3] = [8, 64, 512]; // mirrors aot.py ROT_BUCKETS
+pub(crate) const LEAF_TILE: usize = 64; // mirrors aot.py set_block bs
 
 pub struct DeviceEngine {
     dev: Device,
     n: usize,
     u: Option<BufId>,
     v: Option<BufId>,
+}
+
+/// Fill one lane's padded secular-kernel inputs: d/dbase over the live
+/// prefix plus the strictly-increasing padding, the root taus, and the
+/// z signs. The caller pre-fills `taup` with 0.25 and `signs` with 1.0
+/// (the padding values). Shared by [`DeviceEngine::secular_apply`] and
+/// the k-wide `DeviceEngineK::secular_apply_k` so the two paddings
+/// cannot drift — the fused path's bit-exactness contract depends on
+/// them staying identical.
+pub(crate) fn pack_secular_lane(
+    dp: &mut [f64],
+    basep: &mut [f64],
+    taup: &mut [f64],
+    signs: &mut [f64],
+    d: &[f64],
+    roots: &[SecularRoot],
+    z_live: &[f64],
+) {
+    let k = d.len();
+    let kb = dp.len();
+    dp[..k].copy_from_slice(d);
+    for (i, r) in roots.iter().enumerate() {
+        basep[i] = d[r.base];
+        taup[i] = r.tau;
+    }
+    // lasd2 always keeps column 0 live, so k >= 1 and i - 1 is in range
+    for i in k..kb {
+        dp[i] = dp[i - 1] + 1.0;
+        basep[i] = dp[i];
+    }
+    for i in 0..k {
+        signs[i] = if z_live[i] >= 0.0 { 1.0 } else { -1.0 };
+    }
 }
 
 impl DeviceEngine {
@@ -73,7 +108,7 @@ impl DeviceEngine {
         let woff = off.min(n - bs);
         let loc = off - woff;
         assert!(loc + len <= bs, "leaf block too large: {len}+{loc} > {bs}");
-        let mut tile = vec![0.0; bs * bs];
+        let mut tile = self.dev.stage_zeroed(bs * bs);
         for i in 0..len {
             for j in 0..len {
                 tile[(loc + i) * bs + loc + j] = blk.at(i, j);
@@ -122,7 +157,9 @@ impl BdcEngine for DeviceEngine {
         self.dev.free(rb);
         let full = self.dev.read(out).expect("v_row read");
         self.dev.free(out);
-        full[c0..c0 + len].to_vec()
+        let row = full[c0..c0 + len].to_vec();
+        self.dev.recycle(full);
+        row
     }
 
     fn rot_cols(&mut self, which: Mat, rots: &[PlaneRot]) {
@@ -136,7 +173,7 @@ impl BdcEngine for DeviceEngine {
                 .copied()
                 .find(|&r| r >= chunk.len())
                 .unwrap_or(ROT_BATCH);
-            let mut table = vec![0.0; rmax * 4];
+            let mut table = self.dev.stage_zeroed(rmax * 4);
             for (r, pr) in chunk.iter().enumerate() {
                 table[r * 4] = pr.j1 as f64;
                 table[r * 4 + 1] = pr.j2 as f64;
@@ -198,18 +235,7 @@ impl BdcEngine for DeviceEngine {
         let mut basep = vec![0.0; kb];
         let mut taup = vec![0.25; kb];
         let mut signs = vec![1.0; kb];
-        dp[..k].copy_from_slice(d);
-        for (i, r) in roots.iter().enumerate() {
-            basep[i] = d[r.base];
-            taup[i] = r.tau;
-        }
-        for i in k..kb {
-            dp[i] = dp[i.saturating_sub(1)] + 1.0;
-            basep[i] = dp[i];
-        }
-        for i in 0..k {
-            signs[i] = if z_live[i] >= 0.0 { 1.0 } else { -1.0 };
-        }
+        pack_secular_lane(&mut dp, &mut basep, &mut taup, &mut signs, d, roots, z_live);
         let db = self.dev.upload(dp, &[kb]);
         let bb = self.dev.upload(basep, &[kb]);
         let tb = self.dev.upload(taup, &[kb]);

@@ -105,8 +105,53 @@ pub struct DeviceStats {
     pub download_bytes: u64,
     pub compile_count: usize,
     pub compile_sec: f64,
+    /// Buffers alive on the worker when the stats were taken — the
+    /// leak-regression gauge: a completed solve must return this to its
+    /// pre-solve baseline.
+    pub live_buffers: usize,
+    /// Uploads served from the recycled staging pool (`Device::stage`).
+    pub staging_hits: u64,
     /// per-op execution time, for phase profiles
     pub per_op_sec: HashMap<String, f64>,
+    /// per-op execution count (fusion tests assert op-stream shape)
+    pub per_op_count: HashMap<String, u64>,
+}
+
+impl DeviceStats {
+    /// Fold another device's counters into this one (batch schedulers
+    /// aggregate across per-worker devices).
+    pub fn absorb(&mut self, o: &DeviceStats) {
+        self.exec_count += o.exec_count;
+        self.exec_sec += o.exec_sec;
+        self.upload_bytes += o.upload_bytes;
+        self.download_bytes += o.download_bytes;
+        self.compile_count += o.compile_count;
+        self.compile_sec += o.compile_sec;
+        self.live_buffers += o.live_buffers;
+        self.staging_hits += o.staging_hits;
+        for (k, v) in &o.per_op_sec {
+            *self.per_op_sec.entry(k.clone()).or_default() += v;
+        }
+        for (k, v) in &o.per_op_count {
+            *self.per_op_count.entry(k.clone()).or_default() += v;
+        }
+    }
+}
+
+/// Bounds on the recycled staging pool: at most this many vectors, and
+/// at most this many retained bytes in total. Reclaimed buffers beyond
+/// either bound are dropped — a batch of large solves must not park
+/// dozens of copies of its biggest U/V intermediate in every worker
+/// device for the device's whole lifetime.
+const STAGING_CAP: usize = 32;
+const STAGING_CAP_BYTES: usize = 1 << 26; // 64 MiB
+
+/// Retain `v` for staging reuse if the pool bounds allow it.
+fn stash_staging(pool: &mut Vec<Vec<f64>>, v: Vec<f64>) {
+    let held: usize = pool.iter().map(|b| b.capacity() * 8).sum();
+    if pool.len() < STAGING_CAP && held + v.capacity() * 8 <= STAGING_CAP_BYTES {
+        pool.push(v);
+    }
 }
 
 /// Cloneable device handle.
@@ -117,6 +162,13 @@ pub struct Device {
     backend: BackendKind,
     /// `Backend::max_parallelism` hint, captured at worker startup.
     max_par: usize,
+    /// Recycled upload staging: the worker pushes reclaimed f64 storage
+    /// of freed buffers here (`Backend::reclaim_f64`), and `stage`/
+    /// `stage_zeroed` pop from it — so back-to-back solves on one device
+    /// (a pool worker walking a bucket) stop allocating fresh staging
+    /// per solve.
+    staging: Arc<Mutex<Vec<Vec<f64>>>>,
+    staging_hits: Arc<AtomicU64>,
     /// Transfer accounting + model charging for the *baseline* paths.
     pub model: TransferModel,
     pub tstats: Arc<Mutex<TransferStats>>,
@@ -177,9 +229,11 @@ impl Device {
     {
         let (tx, rx) = channel::<Cmd>();
         let (ready_tx, ready_rx) = channel::<Result<usize>>();
+        let staging: Arc<Mutex<Vec<Vec<f64>>>> = Arc::new(Mutex::new(Vec::new()));
+        let staging_w = staging.clone();
         std::thread::Builder::new()
             .name("gcsvd-device".into())
-            .spawn(move || worker(make, rx, ready_tx))
+            .spawn(move || worker(make, rx, ready_tx, staging_w))
             .context("spawning device worker")?;
         let max_par = ready_rx
             .recv()
@@ -189,6 +243,8 @@ impl Device {
             next: Arc::new(AtomicU64::new(1)),
             backend: kind,
             max_par,
+            staging,
+            staging_hits: Arc::new(AtomicU64::new(0)),
             model,
             tstats: Arc::new(Mutex::new(TransferStats::default())),
         })
@@ -230,6 +286,66 @@ impl Device {
         self.model
             .charge(bytes, t0.elapsed().as_secs_f64(), &mut st, true);
         id
+    }
+
+    /// Pop a recycled vector suitable for a `want`-element request: the
+    /// smallest retained vector that already fits (so a tiny request
+    /// does not pin a huge recycled allocation inside a long-lived
+    /// buffer), else the largest (least reallocation when growing).
+    fn stage_pick(&self, want: usize) -> Option<Vec<f64>> {
+        let mut pool = self.staging.lock().unwrap();
+        let idx = pool
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.capacity() >= want)
+            .min_by_key(|(_, v)| v.capacity())
+            .map(|(i, _)| i)
+            .or_else(|| {
+                pool.iter()
+                    .enumerate()
+                    .max_by_key(|(_, v)| v.capacity())
+                    .map(|(i, _)| i)
+            });
+        let v = idx.map(|i| pool.swap_remove(i));
+        if v.is_some() {
+            self.staging_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        v
+    }
+
+    /// A staging vector holding a copy of `data`, drawn from the recycled
+    /// pool when one is available (fresh allocation otherwise). Pass the
+    /// result straight to [`upload`](Device::upload): once that buffer is
+    /// freed, the worker reclaims the storage and the next `stage` call
+    /// on this device reuses it.
+    pub fn stage(&self, data: &[f64]) -> Vec<f64> {
+        match self.stage_pick(data.len()) {
+            Some(mut v) => {
+                v.clear();
+                v.extend_from_slice(data);
+                v
+            }
+            None => data.to_vec(),
+        }
+    }
+
+    /// A zero-filled staging vector of length `len` from the recycled
+    /// pool (see [`stage`](Device::stage)).
+    pub fn stage_zeroed(&self, len: usize) -> Vec<f64> {
+        match self.stage_pick(len) {
+            Some(mut v) => {
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Hand a host-side vector (e.g. a sliced read-back) to the staging
+    /// pool so a later `stage` call reuses its allocation.
+    pub fn recycle(&self, v: Vec<f64>) {
+        stash_staging(&mut self.staging.lock().unwrap(), v);
     }
 
     pub fn upload_i64(&self, data: Vec<i64>, dims: &[usize]) -> BufId {
@@ -291,7 +407,9 @@ impl Device {
     pub fn stats(&self) -> DeviceStats {
         let (reply, rx) = channel();
         self.send(Cmd::Stats { reply });
-        rx.recv().expect("device worker gone")
+        let mut st = rx.recv().expect("device worker gone");
+        st.staging_hits = self.staging_hits.load(Ordering::Relaxed);
+        st
     }
 
     pub fn transfer_stats(&self) -> TransferStats {
@@ -309,6 +427,7 @@ fn worker<B: Backend>(
     make: impl FnOnce() -> Result<B>,
     rx: Receiver<Cmd>,
     ready: Sender<Result<usize>>,
+    staging: Arc<Mutex<Vec<Vec<f64>>>>,
 ) {
     let mut backend = match make() {
         Ok(b) => b,
@@ -370,6 +489,7 @@ fn worker<B: Backend>(
                         stats.exec_count += 1;
                         stats.exec_sec += dt;
                         *stats.per_op_sec.entry(op.name.clone()).or_default() += dt;
+                        *stats.per_op_count.entry(op.name).or_default() += 1;
                         bufs.insert(out, buf);
                     }
                     Err(e) => pending_err = Some(e),
@@ -404,7 +524,11 @@ fn worker<B: Backend>(
                 let _ = reply.send(r);
             }
             Cmd::Free { id } => {
-                bufs.remove(&id);
+                if let Some(buf) = bufs.remove(&id) {
+                    if let Some(v) = backend.reclaim_f64(buf) {
+                        stash_staging(&mut staging.lock().unwrap(), v);
+                    }
+                }
             }
             Cmd::Sync { reply } => {
                 let r = match pending_err.take() {
@@ -417,6 +541,7 @@ fn worker<B: Backend>(
                 let (cc, cs) = backend.compile_stats();
                 stats.compile_count = cc;
                 stats.compile_sec = cs;
+                stats.live_buffers = bufs.len();
                 let _ = reply.send(stats.clone());
             }
         }
@@ -474,6 +599,34 @@ mod tests {
             TransferModel { enabled: false, ..Default::default() },
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn staging_recycles_freed_buffers() {
+        let dev = Device::host();
+        // first upload: pool empty, no hit
+        let b1 = dev.upload(dev.stage(&[1.0, 2.0, 3.0]), &[3]);
+        dev.free(b1);
+        dev.sync().unwrap();
+        // second staged upload reuses the reclaimed storage
+        let v = dev.stage(&[4.0, 5.0]);
+        assert_eq!(v, vec![4.0, 5.0]);
+        let st = dev.stats();
+        assert!(st.staging_hits >= 1, "no staging reuse recorded");
+        dev.recycle(v);
+        assert_eq!(dev.stage_zeroed(4), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn live_buffer_count_tracks_frees() {
+        let dev = Device::host();
+        let base = dev.stats().live_buffers;
+        let a = dev.op("eye", &[("m", 3), ("n", 3)], &[]);
+        let b = dev.op("eye", &[("m", 2), ("n", 2)], &[]);
+        assert_eq!(dev.stats().live_buffers, base + 2);
+        dev.free(a);
+        dev.free(b);
+        assert_eq!(dev.stats().live_buffers, base);
     }
 
     #[test]

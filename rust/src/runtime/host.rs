@@ -123,6 +123,13 @@ impl Backend for HostBackend {
         (self.seen.len(), 0.0)
     }
 
+    fn reclaim_f64(&mut self, buf: HostBuf) -> Option<Vec<f64>> {
+        match buf {
+            HostBuf::F64(v) => Some(v),
+            HostBuf::I64(_) => None,
+        }
+    }
+
     fn name(&self) -> &'static str {
         "host"
     }
@@ -442,18 +449,7 @@ impl Backend for HostBackend {
                 let nrot = arg(op, args, 2)?.scalar()?;
                 ensure!(m.len() == n * n, "bdc_rots: matrix size");
                 ensure!(rots.len() == rmax * 4, "bdc_rots: table size");
-                for r in 0..nrot.min(rmax) {
-                    let j1 = rots[r * 4] as usize;
-                    let j2 = rots[r * 4 + 1] as usize;
-                    let (c, s) = (rots[r * 4 + 2], rots[r * 4 + 3]);
-                    ensure!(j1 < n && j2 < n, "bdc_rots: column out of range");
-                    for i in 0..n {
-                        let x = m[i * n + j1];
-                        let y = m[i * n + j2];
-                        m[i * n + j1] = c * x + s * y;
-                        m[i * n + j2] = -s * x + c * y;
-                    }
-                }
+                rots_apply(&mut m, n, rots, nrot.min(rmax))?;
                 m
             }
             "bdc_permute_cols" => {
@@ -462,13 +458,7 @@ impl Backend for HostBackend {
                 let perm = arg(op, args, 1)?.i64s()?;
                 ensure!(m.len() == n * n && perm.len() == n, "bdc_permute_cols: sizes");
                 let mut out = vec![0.0; n * n];
-                for (newj, &oldj) in perm.iter().enumerate() {
-                    let oldj = oldj as usize;
-                    ensure!(oldj < n, "bdc_permute_cols: index {oldj} out of range");
-                    for i in 0..n {
-                        out[i * n + newj] = m[i * n + oldj];
-                    }
-                }
+                permute_into(&mut out, m, n, perm)?;
                 out
             }
             "bdc_secular" | "bdc_secular_xla" => {
@@ -507,21 +497,7 @@ impl Backend for HostBackend {
                 let len = arg(op, args, 4)?.scalar()?;
                 ensure!(m.len() == n * n && s.len() == kb * kb, "bdc_block_gemm: sizes");
                 ensure!(woff + kb <= n && loc + len <= kb, "bdc_block_gemm: window");
-                // Only columns [woff+loc, woff+loc+len) change:
-                //   M[woff:woff+kb, block] <- M[woff:woff+kb, block] @ S[:len, :len]
-                let o = woff + loc;
-                let mut row = vec![0.0; len];
-                for i in 0..kb {
-                    let r = (woff + i) * n;
-                    for (jj, slot) in row.iter_mut().enumerate() {
-                        let mut acc = 0.0;
-                        for tt in 0..len {
-                            acc += m[r + o + tt] * s[tt * kb + jj];
-                        }
-                        *slot = acc;
-                    }
-                    m[r + o..r + o + len].copy_from_slice(&row);
-                }
+                block_gemm_apply(&mut m, n, s, kb, woff, loc, len);
                 m
             }
             "set_block" => {
@@ -534,10 +510,172 @@ impl Backend for HostBackend {
                 let len = arg(op, args, 4)?.scalar()?;
                 ensure!(m.len() == n * n && blk.len() == bs * bs, "set_block: sizes");
                 ensure!(woff + bs <= n && loc + len <= bs, "set_block: window");
-                for i in loc..loc + len {
-                    for j in loc..loc + len {
-                        m[(woff + i) * n + woff + j] = blk[i * bs + j];
+                set_block_apply(&mut m, n, blk, bs, woff, loc, len);
+                m
+            }
+
+            // ---- k-wide BDC vector ops (fused same-shape trees). One op
+            // processes all k lanes of a packed [k, n, n] U/V stack; the
+            // inner per-lane loops are the SAME helpers the scalar ops
+            // use, so a fused lane is bit-identical to a per-solve run.
+            // Per-lane counts (rotations, live prefixes) arrive as i64
+            // vectors and mask each lane's work to its own state. ----
+            "eye_k" => {
+                let (k, n) = (p(op, "k")?, p(op, "n")?);
+                ensure!(k >= 1, "eye_k: lanes");
+                let mut out = vec![0.0; k * n * n];
+                for l in 0..k {
+                    for i in 0..n {
+                        out[l * n * n + i * n + i] = 1.0;
                     }
+                }
+                out
+            }
+            "lane_slice" => {
+                let (k, n) = (p(op, "k")?, p(op, "n")?);
+                let m = arg(op, args, 0)?.f64s()?;
+                let lane = arg(op, args, 1)?.scalar()?;
+                ensure!(m.len() == k * n * n, "lane_slice: stack size");
+                ensure!(lane < k, "lane_slice: lane {lane} of {k}");
+                m[lane * n * n..(lane + 1) * n * n].to_vec()
+            }
+            "set_block_k" => {
+                let (k, n, bs) = (p(op, "k")?, p(op, "n")?, p(op, "bs")?);
+                ensure!(bs <= n, "set_block_k: tile {bs} > n {n}");
+                let mut m = arg(op, args, 0)?.f64s()?.to_vec();
+                let blk = arg(op, args, 1)?.f64s()?;
+                let woff = arg(op, args, 2)?.scalar()?;
+                let loc = arg(op, args, 3)?.scalar()?;
+                let len = arg(op, args, 4)?.scalar()?;
+                ensure!(m.len() == k * n * n && blk.len() == k * bs * bs, "set_block_k: sizes");
+                ensure!(woff + bs <= n && loc + len <= bs, "set_block_k: window");
+                for l in 0..k {
+                    set_block_apply(
+                        &mut m[l * n * n..(l + 1) * n * n],
+                        n,
+                        &blk[l * bs * bs..(l + 1) * bs * bs],
+                        bs,
+                        woff,
+                        loc,
+                        len,
+                    );
+                }
+                m
+            }
+            "bdc_row_k" => {
+                let (k, n) = (p(op, "k")?, p(op, "n")?);
+                let m = arg(op, args, 0)?.f64s()?;
+                let g = arg(op, args, 1)?.scalar()?;
+                ensure!(g < n && m.len() == k * n * n, "bdc_row_k: row {g} of {n}");
+                let mut out = Vec::with_capacity(k * n);
+                for l in 0..k {
+                    out.extend_from_slice(&m[l * n * n + g * n..l * n * n + (g + 1) * n]);
+                }
+                out
+            }
+            "rot_cols_k" => {
+                let (k, n, rmax) = (p(op, "k")?, p(op, "n")?, p(op, "rmax")?);
+                let mut m = arg(op, args, 0)?.f64s()?.to_vec();
+                let rots = arg(op, args, 1)?.f64s()?;
+                let counts = arg(op, args, 2)?.i64s()?;
+                ensure!(m.len() == k * n * n, "rot_cols_k: stack size");
+                ensure!(rots.len() == k * rmax * 4, "rot_cols_k: table size");
+                ensure!(counts.len() == k, "rot_cols_k: counts size");
+                for l in 0..k {
+                    ensure!(counts[l] >= 0, "rot_cols_k: negative count");
+                    let nrot = (counts[l] as usize).min(rmax);
+                    rots_apply(
+                        &mut m[l * n * n..(l + 1) * n * n],
+                        n,
+                        &rots[l * rmax * 4..(l + 1) * rmax * 4],
+                        nrot,
+                    )?;
+                }
+                m
+            }
+            "permute_k" => {
+                let (k, n) = (p(op, "k")?, p(op, "n")?);
+                let m = arg(op, args, 0)?.f64s()?;
+                let perms = arg(op, args, 1)?.i64s()?;
+                ensure!(m.len() == k * n * n && perms.len() == k * n, "permute_k: sizes");
+                let mut out = vec![0.0; k * n * n];
+                for l in 0..k {
+                    permute_into(
+                        &mut out[l * n * n..(l + 1) * n * n],
+                        &m[l * n * n..(l + 1) * n * n],
+                        n,
+                        &perms[l * n..(l + 1) * n],
+                    )?;
+                }
+                out
+            }
+            "secular_k" => {
+                let (k, nb) = (p(op, "k")?, p(op, "nb")?);
+                let d = arg(op, args, 0)?.f64s()?;
+                let dbase = arg(op, args, 1)?.f64s()?;
+                let tau = arg(op, args, 2)?.f64s()?;
+                let signs = arg(op, args, 3)?.f64s()?;
+                let ks = arg(op, args, 4)?.i64s()?;
+                ensure!(
+                    d.len() == k * nb
+                        && dbase.len() == k * nb
+                        && tau.len() == k * nb
+                        && signs.len() == k * nb
+                        && ks.len() == k,
+                    "secular_k: vector lengths"
+                );
+                let stride = nb + 2 * nb * nb;
+                let mut out = Vec::with_capacity(k * stride);
+                for l in 0..k {
+                    let kk = ks[l];
+                    ensure!(kk >= 1 && (kk as usize) <= nb, "secular_k: live count {kk} of {nb}");
+                    out.extend_from_slice(&secular_fused(
+                        nb,
+                        &d[l * nb..(l + 1) * nb],
+                        &dbase[l * nb..(l + 1) * nb],
+                        &tau[l * nb..(l + 1) * nb],
+                        &signs[l * nb..(l + 1) * nb],
+                        kk as usize,
+                    ));
+                }
+                out
+            }
+            "secular_u_k" | "secular_v_k" => {
+                let (k, nb) = (p(op, "k")?, p(op, "nb")?);
+                let packed = arg(op, args, 0)?.f64s()?;
+                let stride = nb + 2 * nb * nb;
+                ensure!(packed.len() == k * stride, "{}: packed size", op.name);
+                let off = if op.name == "secular_u_k" { nb } else { nb + nb * nb };
+                let mut out = Vec::with_capacity(k * nb * nb);
+                for l in 0..k {
+                    out.extend_from_slice(&packed[l * stride + off..l * stride + off + nb * nb]);
+                }
+                out
+            }
+            "merge_gemm_k" => {
+                let (k, n, kb) = (p(op, "k")?, p(op, "n")?, p(op, "kb")?);
+                ensure!(kb <= n, "merge_gemm_k: window {kb} > n {n}");
+                let mut m = arg(op, args, 0)?.f64s()?.to_vec();
+                let s = arg(op, args, 1)?.f64s()?;
+                let woff = arg(op, args, 2)?.scalar()?;
+                let loc = arg(op, args, 3)?.scalar()?;
+                let lens = arg(op, args, 4)?.i64s()?;
+                ensure!(m.len() == k * n * n && s.len() == k * kb * kb, "merge_gemm_k: sizes");
+                ensure!(lens.len() == k, "merge_gemm_k: lens size");
+                ensure!(woff + kb <= n, "merge_gemm_k: window");
+                for l in 0..k {
+                    ensure!(lens[l] >= 0, "merge_gemm_k: negative len");
+                    let len = lens[l] as usize;
+                    ensure!(loc + len <= kb, "merge_gemm_k: lane window");
+                    block_gemm_apply(
+                        &mut m[l * n * n..(l + 1) * n * n],
+                        n,
+                        &s[l * kb * kb..(l + 1) * kb * kb],
+                        kb,
+                        woff,
+                        loc,
+                        len,
+                    );
                 }
                 m
             }
@@ -567,6 +705,86 @@ fn unpack_labrd_ws(
         Matrix::from_rows(m, 2 * b, ws[p0..q0].to_vec()),
         Matrix::from_rows(n, 2 * b, ws[q0..].to_vec()),
     ))
+}
+
+/// Apply `nrot` plane rotations from a packed `[_, 4]` table (j1, j2, c,
+/// s per row) to the columns of the row-major n x n matrix `m`. Shared by
+/// the scalar `bdc_rots` op and each lane of `rot_cols_k`, so fused lanes
+/// reproduce the per-solve arithmetic exactly.
+fn rots_apply(m: &mut [f64], n: usize, rots: &[f64], nrot: usize) -> Result<()> {
+    for r in 0..nrot {
+        let j1 = rots[r * 4] as usize;
+        let j2 = rots[r * 4 + 1] as usize;
+        let (c, s) = (rots[r * 4 + 2], rots[r * 4 + 3]);
+        ensure!(j1 < n && j2 < n, "bdc_rots: column out of range");
+        for i in 0..n {
+            let x = m[i * n + j1];
+            let y = m[i * n + j2];
+            m[i * n + j1] = c * x + s * y;
+            m[i * n + j2] = -s * x + c * y;
+        }
+    }
+    Ok(())
+}
+
+/// Gather columns of the row-major n x n matrix `m` into `out` by the
+/// full-length perm (new -> old). Shared by `bdc_permute_cols` and each
+/// lane of `permute_k`.
+fn permute_into(out: &mut [f64], m: &[f64], n: usize, perm: &[i64]) -> Result<()> {
+    for (newj, &oldj) in perm.iter().enumerate() {
+        let oldj = oldj as usize;
+        ensure!(oldj < n, "bdc_permute_cols: index {oldj} out of range");
+        for i in 0..n {
+            out[i * n + newj] = m[i * n + oldj];
+        }
+    }
+    Ok(())
+}
+
+/// The lasd3 window gemm: only columns [woff+loc, woff+loc+len) change,
+///   M[woff:woff+kb, block] <- M[woff:woff+kb, block] @ S[:len, :len].
+/// Shared by `bdc_block_gemm` and each lane of `merge_gemm_k`.
+fn block_gemm_apply(
+    m: &mut [f64],
+    n: usize,
+    s: &[f64],
+    kb: usize,
+    woff: usize,
+    loc: usize,
+    len: usize,
+) {
+    let o = woff + loc;
+    let mut row = vec![0.0; len];
+    for i in 0..kb {
+        let r = (woff + i) * n;
+        for (jj, slot) in row.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for tt in 0..len {
+                acc += m[r + o + tt] * s[tt * kb + jj];
+            }
+            *slot = acc;
+        }
+        m[r + o..r + o + len].copy_from_slice(&row);
+    }
+}
+
+/// Write the live `len` x `len` block of a bs x bs tile into the matrix
+/// window anchored at `woff`. Shared by `set_block` and each lane of
+/// `set_block_k`.
+fn set_block_apply(
+    m: &mut [f64],
+    n: usize,
+    blk: &[f64],
+    bs: usize,
+    woff: usize,
+    loc: usize,
+    len: usize,
+) {
+    for i in loc..loc + len {
+        for j in loc..loc + len {
+            m[(woff + i) * n + woff + j] = blk[i * bs + j];
+        }
+    }
 }
 
 /// The fused lasd3 secular stage (model.op_bdc_secular): from padded d,
@@ -813,6 +1031,207 @@ mod tests {
         let r1b = HostBuf::F64(r1);
         let r2 = run(&mut b, "bdc_permute_cols", &[("n", n as i64)], &[&r1b, &pb]);
         assert!(crate::util::max_abs_diff(&r2, &m.data) < 1e-15);
+    }
+
+    #[test]
+    fn k_ops_match_scalar_lanes_bitexactly() {
+        let (k, n) = (3usize, 6usize);
+        let mut rng = Rng::new(5);
+        let lanes: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..n * n).map(|_| rng.gaussian()).collect())
+            .collect();
+        let stack: Vec<f64> = lanes.concat();
+        let mut b = HostBackend::new();
+        let kp = [("k", k as i64), ("n", n as i64)];
+
+        // rotations: lane l applies l+1 rotations, masked by the counts
+        let rmax = 8usize;
+        let mut tables = vec![0.0; k * rmax * 4];
+        for l in 0..k {
+            for r in 0..=l {
+                let t = &mut tables[(l * rmax + r) * 4..(l * rmax + r) * 4 + 4];
+                t[0] = r as f64;
+                t[1] = (r + 1) as f64;
+                t[2] = 0.8;
+                t[3] = 0.6;
+            }
+        }
+        let counts: Vec<i64> = (1..=k as i64).collect();
+        let mb = HostBuf::F64(stack.clone());
+        let tb = HostBuf::F64(tables.clone());
+        let cb = HostBuf::I64(counts.clone());
+        let rk = run(
+            &mut b,
+            "rot_cols_k",
+            &[("k", k as i64), ("n", n as i64), ("rmax", rmax as i64)],
+            &[&mb, &tb, &cb],
+        );
+        for l in 0..k {
+            let lb = HostBuf::F64(lanes[l].clone());
+            let ltb = HostBuf::F64(tables[l * rmax * 4..(l + 1) * rmax * 4].to_vec());
+            let lnb = HostBuf::I64(vec![counts[l]]);
+            let want = run(
+                &mut b,
+                "bdc_rots",
+                &[("n", n as i64), ("rmax", rmax as i64)],
+                &[&lb, &ltb, &lnb],
+            );
+            assert_eq!(&rk[l * n * n..(l + 1) * n * n], &want[..], "rot lane {l}");
+        }
+
+        // permutes: a different rotation of the identity per lane
+        let mut perms = vec![0i64; k * n];
+        for l in 0..k {
+            for j in 0..n {
+                perms[l * n + j] = ((j + l + 1) % n) as i64;
+            }
+        }
+        let pb = HostBuf::I64(perms.clone());
+        let mb2 = HostBuf::F64(stack.clone());
+        let pk = run(&mut b, "permute_k", &kp, &[&mb2, &pb]);
+        for l in 0..k {
+            let lb = HostBuf::F64(lanes[l].clone());
+            let lpb = HostBuf::I64(perms[l * n..(l + 1) * n].to_vec());
+            let want = run(&mut b, "bdc_permute_cols", &[("n", n as i64)], &[&lb, &lpb]);
+            assert_eq!(&pk[l * n * n..(l + 1) * n * n], &want[..], "perm lane {l}");
+        }
+
+        // lane_slice extracts one lane verbatim; bdc_row_k one row per lane
+        let mb3 = HostBuf::F64(stack.clone());
+        let one = HostBuf::I64(vec![1]);
+        let sl = run(&mut b, "lane_slice", &kp, &[&mb3, &one]);
+        assert_eq!(sl, lanes[1]);
+        let rb = HostBuf::I64(vec![2]);
+        let mb4 = HostBuf::F64(stack.clone());
+        let rows = run(&mut b, "bdc_row_k", &kp, &[&mb4, &rb]);
+        for l in 0..k {
+            assert_eq!(&rows[l * n..(l + 1) * n], &lanes[l][2 * n..3 * n], "row lane {l}");
+        }
+    }
+
+    #[test]
+    fn merge_gemm_k_matches_scalar_per_lane() {
+        let (k, n, kb) = (2usize, 6usize, 4usize);
+        let mut rng = Rng::new(6);
+        let lanes: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..n * n).map(|_| rng.gaussian()).collect())
+            .collect();
+        let ss: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..kb * kb).map(|_| rng.gaussian()).collect())
+            .collect();
+        let lens = vec![3i64, 2];
+        let (woff, loc) = (1usize, 1usize);
+        let mut b = HostBackend::new();
+        let args = [
+            HostBuf::F64(lanes.concat()),
+            HostBuf::F64(ss.concat()),
+            HostBuf::I64(vec![woff as i64]),
+            HostBuf::I64(vec![loc as i64]),
+            HostBuf::I64(lens.clone()),
+        ];
+        let argrefs: Vec<&HostBuf> = args.iter().collect();
+        let got = run(
+            &mut b,
+            "merge_gemm_k",
+            &[("k", k as i64), ("n", n as i64), ("kb", kb as i64)],
+            &argrefs,
+        );
+        for l in 0..k {
+            let sargs = [
+                HostBuf::F64(lanes[l].clone()),
+                HostBuf::F64(ss[l].clone()),
+                HostBuf::I64(vec![woff as i64]),
+                HostBuf::I64(vec![loc as i64]),
+                HostBuf::I64(vec![lens[l]]),
+            ];
+            let sargrefs: Vec<&HostBuf> = sargs.iter().collect();
+            let want = run(
+                &mut b,
+                "bdc_block_gemm",
+                &[("n", n as i64), ("kb", kb as i64)],
+                &sargrefs,
+            );
+            assert_eq!(&got[l * n * n..(l + 1) * n * n], &want[..], "gemm lane {l}");
+        }
+    }
+
+    #[test]
+    fn secular_k_matches_scalar_per_lane() {
+        // two lanes with different live counts over the same padded width
+        let nb = 8usize;
+        let lanes_dz: [(&[f64], &[f64]); 2] = [
+            (&[0.0, 0.4, 1.1, 2.3, 3.0], &[0.5, -0.3, 0.8, 0.2, -0.6]),
+            (&[0.0, 0.7, 1.9], &[0.4, 0.6, -0.2]),
+        ];
+        let klanes = lanes_dz.len();
+        let (mut dk, mut bk, mut tk, mut sk, mut ks) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let mut scalar_packs: Vec<Vec<f64>> = Vec::new();
+        let mut b = HostBackend::new();
+        for (d, z) in lanes_dz {
+            let kk = d.len();
+            let roots = secular::solve_all(d, z, 1);
+            let mut dp = vec![0.0; nb];
+            let mut basep = vec![0.0; nb];
+            let mut taup = vec![0.25; nb];
+            let mut signs = vec![1.0; nb];
+            dp[..kk].copy_from_slice(d);
+            for (i, r) in roots.iter().enumerate() {
+                basep[i] = d[r.base];
+                taup[i] = r.tau;
+            }
+            for i in kk..nb {
+                dp[i] = dp[i - 1] + 1.0;
+                basep[i] = dp[i];
+            }
+            for i in 0..kk {
+                signs[i] = if z[i] >= 0.0 { 1.0 } else { -1.0 };
+            }
+            let bufs = [
+                HostBuf::F64(dp.clone()),
+                HostBuf::F64(basep.clone()),
+                HostBuf::F64(taup.clone()),
+                HostBuf::F64(signs.clone()),
+                HostBuf::I64(vec![kk as i64]),
+            ];
+            let argrefs: Vec<&HostBuf> = bufs.iter().collect();
+            scalar_packs.push(run(&mut b, "bdc_secular", &[("nb", nb as i64)], &argrefs));
+            dk.extend_from_slice(&dp);
+            bk.extend_from_slice(&basep);
+            tk.extend_from_slice(&taup);
+            sk.extend_from_slice(&signs);
+            ks.push(kk as i64);
+        }
+        let bufs = [
+            HostBuf::F64(dk),
+            HostBuf::F64(bk),
+            HostBuf::F64(tk),
+            HostBuf::F64(sk),
+            HostBuf::I64(ks),
+        ];
+        let argrefs: Vec<&HostBuf> = bufs.iter().collect();
+        let kp = [("k", klanes as i64), ("nb", nb as i64)];
+        let packed = run(&mut b, "secular_k", &kp, &argrefs);
+        let stride = nb + 2 * nb * nb;
+        for (l, want) in scalar_packs.iter().enumerate() {
+            assert_eq!(&packed[l * stride..(l + 1) * stride], &want[..], "lane {l}");
+        }
+        // the U/V slices line up with the packed layout
+        let pb = HostBuf::F64(packed.clone());
+        let uk = run(&mut b, "secular_u_k", &kp, &[&pb]);
+        let vk = run(&mut b, "secular_v_k", &kp, &[&pb]);
+        for l in 0..klanes {
+            assert_eq!(
+                &uk[l * nb * nb..(l + 1) * nb * nb],
+                &packed[l * stride + nb..l * stride + nb + nb * nb],
+                "U lane {l}"
+            );
+            assert_eq!(
+                &vk[l * nb * nb..(l + 1) * nb * nb],
+                &packed[l * stride + nb + nb * nb..(l + 1) * stride],
+                "V lane {l}"
+            );
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! and the transfer-cost model.
 pub mod backend;
 pub mod bdc_engine;
+pub mod bdc_engine_k;
 pub mod device;
 pub mod host;
 #[cfg(feature = "pjrt")]

@@ -73,6 +73,26 @@ impl StealPool {
     /// worker.
     pub fn run_with<S, T, I, F>(&self, n: usize, init: I, f: F) -> (Vec<T>, PoolStats)
     where
+        S: Send,
+        T: Send,
+        I: Fn(usize) -> S + Sync,
+        F: Fn(&mut S, usize) -> T + Sync,
+    {
+        let (out, stats, _states) = self.run_with_states(n, init, f);
+        (out, stats)
+    }
+
+    /// [`run_with`](StealPool::run_with) that also returns each worker's
+    /// final state (`None` for workers that never claimed an item) — the
+    /// batch scheduler reads per-worker `Device` counters after the run.
+    pub fn run_with_states<S, T, I, F>(
+        &self,
+        n: usize,
+        init: I,
+        f: F,
+    ) -> (Vec<T>, PoolStats, Vec<Option<S>>)
+    where
+        S: Send,
         T: Send,
         I: Fn(usize) -> S + Sync,
         F: Fn(&mut S, usize) -> T + Sync,
@@ -83,12 +103,14 @@ impl StealPool {
             .map(|w| Mutex::new((n * w / workers..n * (w + 1) / workers).collect()))
             .collect();
         let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let states: Vec<Mutex<Option<S>>> = (0..workers).map(|_| Mutex::new(None)).collect();
         let steals = AtomicUsize::new(0);
 
         std::thread::scope(|scope| {
             for w in 0..workers {
                 let queues = &queues;
                 let results = &results;
+                let states = &states;
                 let steals = &steals;
                 let init = &init;
                 let f = &f;
@@ -99,6 +121,7 @@ impl StealPool {
                         let out = f(st, item);
                         *results[item].lock().unwrap() = Some(out);
                     }
+                    *states[w].lock().unwrap() = state;
                 });
             }
         });
@@ -108,7 +131,11 @@ impl StealPool {
             .into_iter()
             .map(|slot| slot.into_inner().unwrap().expect("pool item executed"))
             .collect();
-        (out, stats)
+        let states = states
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap())
+            .collect();
+        (out, stats, states)
     }
 }
 
@@ -170,6 +197,29 @@ mod tests {
         for (i, (_, item)) in out.iter().enumerate() {
             assert_eq!(*item, i);
         }
+    }
+
+    #[test]
+    fn worker_states_are_returned() {
+        let pool = StealPool::new(3);
+        let (out, stats, states) = pool.run_with_states(
+            7,
+            |w| vec![w],
+            |state, i| {
+                state.push(i);
+                i
+            },
+        );
+        assert_eq!(out, (0..7).collect::<Vec<_>>());
+        assert_eq!(states.len(), stats.workers);
+        // every claimed item appears in exactly one worker's state
+        let mut seen: Vec<usize> = states
+            .iter()
+            .flatten()
+            .flat_map(|s| s[1..].iter().copied())
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
     }
 
     #[test]

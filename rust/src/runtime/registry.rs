@@ -166,8 +166,39 @@ impl Manifest {
         }
         ns.sort_unstable();
         ns.dedup();
-        for n in ns {
+        for &n in &ns {
             bdc_ops(&mut put, n);
+        }
+        // k-wide fused-tree ops (runtime/bdc_engine_k.rs): the host
+        // backend executes any lane count; the grid mirrors the lane
+        // widths aot.py would emit so the bench harness can enumerate
+        // fused shapes the same way it enumerates scalar ones.
+        const FUSE_K: [i64; 4] = [2, 4, 8, 16];
+        for &n in &ns {
+            for kk in FUSE_K {
+                for op in ["eye_k", "lane_slice", "bdc_row_k", "permute_k"] {
+                    put(op, &[("k", kk), ("n", n)]);
+                }
+                put("set_block_k", &[("k", kk), ("n", n), ("bs", 2 * LEAF)]);
+                for r in ROT_BUCKETS {
+                    put("rot_cols_k", &[("k", kk), ("n", n), ("rmax", r)]);
+                }
+                for kb in BUCKETS {
+                    if (kb as i64) <= n {
+                        put("merge_gemm_k", &[("k", kk), ("n", n), ("kb", kb as i64)]);
+                    }
+                }
+            }
+        }
+        let nmax2 = ns.last().copied().unwrap_or(0);
+        for kk in FUSE_K {
+            for nb in BUCKETS {
+                if (nb as i64) <= nmax2 {
+                    for op in ["secular_k", "secular_u_k", "secular_v_k"] {
+                        put(op, &[("k", kk), ("nb", nb as i64)]);
+                    }
+                }
+            }
         }
         for b in TUNE_B {
             matrix_ops(&mut put, 512, 512, b);

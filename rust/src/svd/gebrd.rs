@@ -81,9 +81,24 @@ pub fn gebrd_device_with(
         dev.free(tb);
         t += bb;
     }
+    // read every header before parsing: on a latched device error all
+    // headers (and the factor) are still freed, keeping a persistent
+    // pool-worker device leak-free; the FIRST error wins
+    let mut fail: Option<anyhow::Error> = None;
+    let mut parsed = Vec::with_capacity(heads.len());
     for (t, bb, head) in heads {
-        let h = dev.read(head)?;
+        let r = dev.read(head);
         dev.free(head);
+        match r {
+            Ok(h) => parsed.push((t, bb, h)),
+            Err(err) => fail = fail.or(Some(err)),
+        }
+    }
+    if let Some(err) = fail {
+        dev.free(a_cur);
+        return Err(err);
+    }
+    for (t, bb, h) in parsed {
         d[t..t + bb].copy_from_slice(&h[..bb]);
         for k in 0..bb {
             if t + k + 1 < n {

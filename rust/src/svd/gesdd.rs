@@ -9,13 +9,14 @@
 
 use anyhow::{Context, Result};
 
-use crate::bdc::{bdc_solve, driver::Mat};
+use crate::bdc::{bdc_solve, bdc_solve_k, driver::Mat, driver_k::BdcStatsK};
 use crate::config::Config;
 use crate::coordinator::PhaseProfile;
-use crate::matrix::Matrix;
+use crate::matrix::{Bidiagonal, Matrix};
 use crate::runtime::bdc_engine::DeviceEngine;
+use crate::runtime::bdc_engine_k::DeviceEngineK;
 use crate::runtime::{BufId, Device};
-use crate::svd::gebrd::gebrd_device;
+use crate::svd::gebrd::{gebrd_device, DeviceGebrd};
 use crate::svd::qr::{geqrf_device, orgqr_device, ormlq_device, ormqr_device};
 
 /// Full SVD result: A = U diag(sigma) V^T, sigma DESCENDING.
@@ -26,42 +27,68 @@ pub struct SvdResult {
     pub profile: PhaseProfile,
 }
 
-/// The paper's solver ("ours"). `a` is the host input (m x n, m >= n).
-pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
+/// Device-resident state after the pre-BDC phases of one solve: the
+/// gebrd factor (plus, on the TS path, the thin Q) and the phase times
+/// recorded so far. Shared by the per-solve and fused drivers.
+struct FrontEnd {
+    fac: DeviceGebrd,
+    q_thin: Option<BufId>,
+    profile: PhaseProfile,
+}
+
+/// Upload + (TS: geqrf/orgqr + R re-upload) + gebrd for one input.
+fn front_end(dev: &Device, a: &Matrix, cfg: &Config) -> Result<FrontEnd> {
     let (m, n) = (a.rows, a.cols);
-    anyhow::ensure!(m >= n, "gesdd requires m >= n (transpose first)");
-    anyhow::ensure!(n >= 1, "gesdd requires a non-empty matrix");
     let mut profile = PhaseProfile::default();
     // clamp the block to the problem; the phase drivers handle the ragged
     // final panel, so any n solves (no divisibility requirement)
     let b = cfg.block.clamp(1, n);
 
-    // initial upload: input handoff, not a pipeline transfer
-    let a_dev = dev.upload(a.data.clone(), &[m, n]);
+    // initial upload: input handoff, not a pipeline transfer. The copy
+    // lives in a staged vector so back-to-back solves on one device (a
+    // pool worker walking a bucket) recycle the allocation.
+    let a_dev = dev.upload(dev.stage(&a.data), &[m, n]);
 
     let (r_or_a, q_thin): (BufId, Option<BufId>) = if m > n {
-        // ---- TS path: QR first (Chan) ----
+        // ---- TS path: QR first (Chan). Error paths free whatever is
+        // still device-resident — the device is a persistent pool
+        // worker, not a per-solve throwaway. ----
         let t0 = std::time::Instant::now();
         let f = geqrf_device(dev, a_dev, m, n, b)?;
-        dev.sync()?;
+        if let Err(e) = dev.sync() {
+            dev.free(f.afac);
+            return Err(e);
+        }
         profile.record("geqrf", t0.elapsed().as_secs_f64(), "gpu");
 
         let t1 = std::time::Instant::now();
         let q = orgqr_device(dev, &f, m, n, b)?;
-        dev.sync()?;
+        if let Err(e) = dev.sync() {
+            dev.free(f.afac);
+            dev.free(q);
+            return Err(e);
+        }
         profile.record("orgqr", t1.elapsed().as_secs_f64(), "gpu");
 
         // R = triu of the factor's top n x n — materialise on host (n^2,
         // small next to A) and re-upload as the square SVD input.
-        let afac_host = dev.read(f.afac)?;
+        let afac_host = dev.read(f.afac);
         dev.free(f.afac);
-        let mut r = Matrix::zeros(n, n);
+        let afac_host = match afac_host {
+            Ok(h) => h,
+            Err(e) => {
+                dev.free(q);
+                return Err(e);
+            }
+        };
+        let mut r = dev.stage_zeroed(n * n);
         for i in 0..n {
             for j in i..n {
-                r[(i, j)] = afac_host[i * n + j];
+                r[i * n + j] = afac_host[i * n + j];
             }
         }
-        let r_dev = dev.upload(r.data, &[n, n]);
+        dev.recycle(afac_host);
+        let r_dev = dev.upload(r, &[n, n]);
         (r_dev, Some(q))
     } else {
         (a_dev, None)
@@ -69,24 +96,53 @@ pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
 
     // ---- bidiagonalisation (square n x n now) ----
     let t2 = std::time::Instant::now();
-    let fac = gebrd_device(dev, r_or_a, n, n, b, &cfg.kernel)?;
-    dev.sync()?;
+    let fac = match gebrd_device(dev, r_or_a, n, n, b, &cfg.kernel) {
+        Ok(fac) => fac,
+        Err(e) => {
+            if let Some(q) = q_thin {
+                dev.free(q);
+            }
+            return Err(e);
+        }
+    };
+    if let Err(e) = dev.sync() {
+        dev.free(fac.afac);
+        if let Some(q) = q_thin {
+            dev.free(q);
+        }
+        return Err(e);
+    }
     profile.record("gebrd", t2.elapsed().as_secs_f64(), "gpu");
+    Ok(FrontEnd { fac, q_thin, profile })
+}
 
-    // ---- BDC diagonalisation (hybrid, no matrix transfers) ----
-    let t3 = std::time::Instant::now();
-    let mut engine = DeviceEngine::new(dev.clone());
-    let (sig_asc, _stats) = bdc_solve(&fac.bidiagonal(), &mut engine, cfg.leaf, cfg.threads);
-    dev.sync()?;
-    profile.record("bdcdc", t3.elapsed().as_secs_f64(), "hybrid");
-
+/// Back-transforms + the TS final gemm + result download for one solve
+/// whose BDC output (U2, V2) is already on the device. Consumes the
+/// gebrd factor buffer and `q_thin`.
+fn back_end(
+    dev: &Device,
+    fac: &DeviceGebrd,
+    q_thin: Option<BufId>,
+    u2: BufId,
+    v2: BufId,
+    m: usize,
+    n: usize,
+    b: usize,
+    profile: &mut PhaseProfile,
+) -> Result<(Matrix, Matrix)> {
     // ---- back-transforms: U2 <- U1 U2, V2 <- V1 V2, on device ----
     let t4 = std::time::Instant::now();
-    let (_, u2, v2) = engine.take();
     let u2 = ormqr_device(dev, fac.afac, &fac.tauq, u2, n, n, b)?;
     let v2 = ormlq_device(dev, fac.afac, &fac.taup, v2, n, n, b)?;
     dev.free(fac.afac);
-    dev.sync()?;
+    if let Err(e) = dev.sync() {
+        // surface latched op errors without stranding the chained buffers
+        // on the (persistent, pool-worker) device
+        for id in [Some(u2), Some(v2), q_thin].into_iter().flatten() {
+            dev.free(id);
+        }
+        return Err(e);
+    }
     profile.record("ormqr+ormlq", t4.elapsed().as_secs_f64(), "gpu");
 
     // ---- TS final gemm: U = Q U0 (device) ----
@@ -99,21 +155,152 @@ pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
         );
         dev.free(q);
         dev.free(u2);
-        dev.sync()?;
+        if let Err(e) = dev.sync() {
+            dev.free(u);
+            dev.free(v2);
+            return Err(e);
+        }
         profile.record("gemm", t5.elapsed().as_secs_f64(), "gpu");
         (u, v2)
     } else {
         (u2, v2)
     };
 
-    // ---- result download (the unavoidable final handoff) ----
-    let u_host = dev.read(u_final)?;
-    let v_host = dev.read(v_final)?;
+    // ---- result download (the unavoidable final handoff); the buffers
+    // are released whether or not the reads succeed ----
+    let u_host = dev.read(u_final);
+    let v_host = dev.read(v_final);
     dev.free(u_final);
     dev.free(v_final);
+    Ok((Matrix::from_rows(m, n, u_host?), Matrix::from_rows(n, n, v_host?)))
+}
+
+/// The paper's solver ("ours"). `a` is the host input (m x n, m >= n).
+pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
+    let (m, n) = (a.rows, a.cols);
+    anyhow::ensure!(m >= n, "gesdd requires m >= n (transpose first)");
+    anyhow::ensure!(n >= 1, "gesdd requires a non-empty matrix");
+    let b = cfg.block.clamp(1, n);
+    let FrontEnd { fac, q_thin, mut profile } = front_end(dev, a, cfg)?;
+
+    // ---- BDC diagonalisation (hybrid, no matrix transfers) ----
+    let t3 = std::time::Instant::now();
+    let mut engine = DeviceEngine::new(dev.clone());
+    let (sig_asc, _stats) = bdc_solve(&fac.bidiagonal(), &mut engine, cfg.leaf, cfg.threads);
+    dev.sync()?;
+    profile.record("bdcdc", t3.elapsed().as_secs_f64(), "hybrid");
+
+    let (_, u2, v2) = engine.take();
+    let (u, v) = back_end(dev, &fac, q_thin, u2, v2, m, n, b, &mut profile)?;
 
     // BDC returns ascending; flip to descending like the paper/LAPACK.
-    finalize(sig_asc, Matrix::from_rows(m, n, u_host), Matrix::from_rows(n, n, v_host), profile)
+    finalize(sig_asc, u, v, profile)
+}
+
+/// The fused bucket solver: one call solves k same-shape inputs, running
+/// the per-lane front ends (geqrf/orgqr/gebrd) back-to-back on one
+/// device, then ONE shared BDC tree over all k bidiagonals (packed
+/// `[k, n, n]` vector stacks, k-wide node ops — `bdc/driver_k.rs`), then
+/// per-lane back-transforms over `lane_slice` views of the packed
+/// result. Lane `l`'s result is bit-identical to `gesdd_ours` on input
+/// `l` alone. Returns the per-lane results in input order plus the
+/// fused-tree counters.
+pub fn gesdd_ours_fused(
+    dev: &Device,
+    inputs: &[&Matrix],
+    cfg: &Config,
+) -> Result<(Vec<SvdResult>, BdcStatsK)> {
+    anyhow::ensure!(!inputs.is_empty(), "fused solve needs at least one input");
+    let (m, n) = (inputs[0].rows, inputs[0].cols);
+    for (i, a) in inputs.iter().enumerate() {
+        anyhow::ensure!(
+            a.rows == m && a.cols == n,
+            "fused lane {i}: {}x{} differs from bucket shape {m}x{n}",
+            a.rows,
+            a.cols
+        );
+    }
+    anyhow::ensure!(m >= n && n >= 1, "gesdd requires m >= n >= 1");
+    let lanes = inputs.len();
+    let b = cfg.block.clamp(1, n);
+
+    // per-lane front end (not fused in this PR: the k-wide gebrd/QR
+    // panel ops are the ROADMAP follow-up; BDC dominates the small-n
+    // regime this path targets)
+    let mut fronts: Vec<FrontEnd> = Vec::with_capacity(lanes);
+    for (i, a) in inputs.iter().enumerate() {
+        match front_end(dev, a, cfg).with_context(|| format!("fused lane {i}")) {
+            Ok(f) => fronts.push(f),
+            Err(e) => {
+                // release the lanes already prepared: the device is a
+                // persistent pool worker, not a per-solve throwaway
+                for f in fronts {
+                    free_front(dev, f);
+                }
+                return Err(e);
+            }
+        }
+    }
+
+    // ---- ONE shared BDC tree for all lanes ----
+    let t3 = std::time::Instant::now();
+    let bds: Vec<Bidiagonal> = fronts.iter().map(|f| f.fac.bidiagonal()).collect();
+    let mut engine = DeviceEngineK::new(dev.clone());
+    let (sigs, kstats) = bdc_solve_k(&bds, &mut engine, cfg.leaf, cfg.threads);
+    // DeviceEngineK defers its flush to this fallible sync, so a device
+    // error latched during the tree surfaces as an Err here (not a
+    // worker panic) — release everything the solve still owns
+    if let Err(e) = dev.sync() {
+        let (_, pu, pv) = engine.take();
+        dev.free(pu);
+        dev.free(pv);
+        for f in fronts {
+            free_front(dev, f);
+        }
+        return Err(e);
+    }
+    let bdc_sec = t3.elapsed().as_secs_f64();
+
+    // ---- per-lane back-transforms over lane slices of the stacks ----
+    let (_, pu, pv) = engine.take();
+    let kp = [("k", lanes as i64), ("n", n as i64)];
+    let mut results = Vec::with_capacity(lanes);
+    let mut sigs = sigs.into_iter();
+    let mut fronts = fronts.into_iter().enumerate();
+    let ran: Result<()> = (&mut fronts).try_for_each(|(l, front)| {
+        let FrontEnd { fac, q_thin, mut profile } = front;
+        // the tree is shared: charge its wall time to lane 0's profile
+        profile.record("bdcdc", if l == 0 { bdc_sec } else { 0.0 }, "hybrid");
+        let lb = dev.scalar_i64(l as i64);
+        let u2 = dev.op("lane_slice", &kp, &[pu, lb]);
+        let v2 = dev.op("lane_slice", &kp, &[pv, lb]);
+        dev.free(lb);
+        let (u, v) = back_end(dev, &fac, q_thin, u2, v2, m, n, b, &mut profile)
+            .with_context(|| format!("fused lane {l}"))?;
+        let sig_asc = sigs.next().expect("one sigma vector per lane");
+        results.push(finalize(sig_asc, u, v, profile)?);
+        Ok(())
+    });
+    // the packed stacks are released whether or not every lane landed;
+    // a failed lane also releases the unconsumed lanes' front-end state
+    dev.free(pu);
+    dev.free(pv);
+    if let Err(e) = ran {
+        for (_, f) in fronts {
+            free_front(dev, f);
+        }
+        return Err(e);
+    }
+    Ok((results, kstats))
+}
+
+/// Release the device buffers a [`FrontEnd`] still owns (error-path
+/// cleanup — the devices here are persistent pool workers).
+fn free_front(dev: &Device, front: FrontEnd) {
+    dev.free(front.fac.afac);
+    if let Some(q) = front.q_thin {
+        dev.free(q);
+    }
 }
 
 /// Shared tail: flip ascending (sigma, U cols, V cols) to descending and

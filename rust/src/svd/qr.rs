@@ -42,8 +42,17 @@ pub fn geqrf_device_with(
         let head = dev.op("qr_head", &p, &[ws]);
         a_cur = dev.op("geqrf_extract_a", &p, &[ws]);
         dev.free(ws);
-        let h = dev.read(head)?;
+        let h = dev.read(head);
         dev.free(head);
+        // free the in-flight factor before surfacing a latched error —
+        // the device may be a persistent pool worker
+        let h = match h {
+            Ok(h) => h,
+            Err(e) => {
+                dev.free(a_cur);
+                return Err(e);
+            }
+        };
         tau[t..t + bb].copy_from_slice(&h[..bb]);
         t += bb;
     }

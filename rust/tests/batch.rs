@@ -1,6 +1,9 @@
 //! Batched-SVD guarantees: batched-vs-serial parity over mixed shapes
-//! (including n=1 and tall-skinny), and bit-determinism of the pool
-//! schedule regardless of thread count.
+//! (including n=1 and tall-skinny), bit-determinism of the pool
+//! schedule regardless of thread count, fused-vs-serial bit-exactness
+//! of the shared-tree path (k in {2, 3, 7}, heavy deflation, n=1
+//! leaves), the sublinear fused op-stream shape, and the buffer-leak
+//! regression gauge.
 
 #![allow(clippy::needless_range_loop)]
 
@@ -145,6 +148,154 @@ fn wide_input_fails_fast_with_its_index() {
     let err = gesvd_batched(&inputs, &cfg_with_threads(2), Solver::Ours).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("batch item 1"), "{msg}");
+}
+
+/// Assert the fused path (cfg.fuse, widths 1 and 4) returns bit-exactly
+/// what the unfused per-solve path returns on the same inputs.
+fn check_fused_parity(inputs: &[Matrix], tag: &str) {
+    let unfused = gesvd_batched(inputs, &cfg_with_threads(1), Solver::Ours).expect("unfused");
+    for threads in [1usize, 4] {
+        let mut cfg = cfg_with_threads(threads);
+        cfg.fuse = true;
+        let fused = gesvd_batched(inputs, &cfg, Solver::Ours).expect("fused");
+        assert_eq!(fused.len(), unfused.len());
+        for (i, (f, u)) in fused.iter().zip(&unfused).enumerate() {
+            assert_eq!(f.sigma, u.sigma, "{tag} threads={threads} item {i}: sigma");
+            assert_eq!(f.u.data, u.u.data, "{tag} threads={threads} item {i}: U");
+            assert_eq!(f.vt.data, u.vt.data, "{tag} threads={threads} item {i}: V^T");
+        }
+    }
+}
+
+#[test]
+fn fused_matches_serial_bitexactly_for_k_2_3_7() {
+    // n = 40 > leaf 32, so the shared tree has real merges; every lane
+    // deflates differently, exercising the per-lane K masking
+    let mut rng = Rng::new(4242);
+    for k in [2usize, 3, 7] {
+        let inputs: Vec<Matrix> = (0..k)
+            .map(|_| Matrix::from_fn(40, 40, |_, _| rng.gaussian()))
+            .collect();
+        check_fused_parity(&inputs, &format!("k={k}"));
+    }
+}
+
+#[test]
+fn fused_parity_heavy_deflation() {
+    // repeated singular values (diagonal inputs with 3x-repeated
+    // entries, plus one scaled identity): lasd2 deflates almost
+    // everything, so the per-lane live prefixes K collapse and diverge —
+    // the masked kernels must still be bit-exact
+    let n = 36usize;
+    let mut inputs: Vec<Matrix> = (0..2)
+        .map(|l| {
+            Matrix::from_fn(n, n, |i, j| if i == j { (i / 3 + 1 + l) as f64 } else { 0.0 })
+        })
+        .collect();
+    inputs.push(Matrix::from_fn(n, n, |i, j| if i == j { 2.5 } else { 0.0 }));
+    check_fused_parity(&inputs, "heavy-deflation");
+}
+
+#[test]
+fn fused_parity_n1_and_tall_skinny_buckets() {
+    // n = 1: the BDC tree is a single 1x1 leaf per lane; the TS bucket
+    // runs per-lane QR front ends before the shared tree
+    let mut rng = Rng::new(99);
+    let cols: Vec<Matrix> = (0..3)
+        .map(|_| Matrix::from_fn(9, 1, |_, _| rng.gaussian()))
+        .collect();
+    check_fused_parity(&cols, "n=1");
+    let ts: Vec<Matrix> = (0..3)
+        .map(|_| Matrix::from_fn(70, 35, |_, _| rng.gaussian()))
+        .collect();
+    check_fused_parity(&ts, "tall-skinny");
+}
+
+#[test]
+fn fused_bucket_issues_one_sublinear_op_stream() {
+    // acceptance gauge: a bucket of k >= 4 same-shape matrices runs ONE
+    // fused op stream whose device op count grows sublinearly in k
+    let k = 5usize;
+    let mut rng = Rng::new(7331);
+    let inputs: Vec<Matrix> = (0..k)
+        .map(|_| Matrix::from_fn(48, 48, |_, _| rng.gaussian()))
+        .collect();
+    let mut fcfg = cfg_with_threads(1);
+    fcfg.fuse = true;
+    let (_, fused) = gesvd_batched_with_stats(&inputs, &fcfg, Solver::Ours).expect("fused");
+    let (_, unfused) =
+        gesvd_batched_with_stats(&inputs, &cfg_with_threads(1), Solver::Ours).expect("unfused");
+    let (_, single) =
+        gesvd_batched_with_stats(&inputs[..1], &fcfg, Solver::Ours).expect("single");
+
+    // one fused bucket walked one shared tree
+    assert_eq!(fused.fused_buckets, 1);
+    assert!(fused.fused_nodes >= 3, "tree nodes: {}", fused.fused_nodes);
+    assert!(
+        fused.lane_occupancy > 0.0 && fused.lane_occupancy <= 1.0,
+        "occupancy: {}",
+        fused.lane_occupancy
+    );
+    assert_eq!(unfused.fused_buckets, 0);
+
+    // the tree ran on k-wide ops, not k scalar streams
+    let ops = &fused.device.per_op_count;
+    for op in ["eye_k", "set_block_k", "permute_k", "secular_k", "merge_gemm_k", "lane_slice"] {
+        assert!(ops.contains_key(op), "fused stream missing {op}: {ops:?}");
+    }
+    for op in ["bdc_rots", "bdc_permute_cols", "bdc_secular", "bdc_block_gemm", "set_block"] {
+        assert!(!ops.contains_key(op), "scalar op {op} leaked into the fused stream");
+    }
+
+    // sublinear growth: the fused batch issues strictly fewer device ops
+    // than k independent trees, and stays under k x the single-solve
+    // budget (the per-lane front/back ends are the only linear part)
+    assert!(
+        fused.device.exec_count < unfused.device.exec_count,
+        "fused {} >= unfused {}",
+        fused.device.exec_count,
+        unfused.device.exec_count
+    );
+    assert!(
+        fused.device.exec_count < k as u64 * single.device.exec_count,
+        "fused {} not sublinear vs {} x single {}",
+        fused.device.exec_count,
+        k,
+        single.device.exec_count
+    );
+}
+
+#[test]
+fn device_buffers_return_to_baseline_after_batches() {
+    // leak regression: every worker device must end a batch with zero
+    // live buffers — fused and unfused, mixed shapes (square bucket,
+    // TS bucket, n=1, singletons)
+    let mut rng = Rng::new(515);
+    let shapes = [
+        (20usize, 20usize),
+        (20, 20),
+        (44, 22),
+        (44, 22),
+        (7, 1),
+        (16, 16),
+    ];
+    let inputs: Vec<Matrix> = shapes
+        .iter()
+        .map(|&(m, n)| Matrix::from_fn(m, n, |_, _| rng.gaussian()))
+        .collect();
+    for fuse in [false, true] {
+        let mut cfg = cfg_with_threads(2);
+        cfg.fuse = fuse;
+        let (results, st) = gesvd_batched_with_stats(&inputs, &cfg, Solver::Ours).expect("batch");
+        assert_eq!(results.len(), inputs.len());
+        assert_eq!(
+            st.device.live_buffers, 0,
+            "fuse={fuse}: {} device buffers leaked",
+            st.device.live_buffers
+        );
+        // the worker loop recycles staging across bucket members
+        assert!(st.device.staging_hits > 0, "fuse={fuse}: staging never reused");
+    }
 }
 
 #[test]
