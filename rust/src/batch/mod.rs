@@ -15,8 +15,13 @@
 //!     through one shared BDC tree with k-wide device ops over packed
 //!     `[k, n, n]` stacks (`bdc/driver_k.rs`), so each secular solve and
 //!     lasd3 gemm is issued once per tree node instead of once per
-//!     member. Singleton buckets (and every non-"ours" solver) keep the
-//!     per-solve path; fused lanes are bit-identical to per-solve runs;
+//!     member — and the post-BDC phase stays k-wide too (`back_end_k`:
+//!     one `ormqr_step_k`/`ormlq_step_k` per reflector panel, one
+//!     `q_gemm_k` for the TS `U = Q U0`, one stacked download per
+//!     matrix family), so a fused unit's device op count after the
+//!     front end does not scale with its lane count. Singleton buckets
+//!     (and every non-"ours" solver) keep the per-solve path; fused
+//!     lanes are bit-identical to per-solve runs;
 //!   * [`runtime::StealPool`] executes the flattened schedule with
 //!     work-stealing, one persistent [`Device`] per worker (created
 //!     lazily on the worker's first item and reused for every solve it
@@ -79,6 +84,14 @@ pub struct BatchStats {
     /// device: op counts for the fusion assertions, `live_buffers` as
     /// the buffer-leak gauge, staging reuse hits.
     pub device: DeviceStats,
+    /// Per-phase wall seconds summed over every result's
+    /// [`PhaseProfile`](crate::coordinator::PhaseProfile) — the
+    /// tree-vs-back-transform split of a batched call (`bdcdc` vs
+    /// `ormqr+ormlq` vs `gemm`), surfaced so the CLI and the
+    /// `BENCH_batch.json` artifact report where fused time goes without
+    /// re-walking the per-item profiles. Shared fused phases are
+    /// charged once (to lane 0), so the sums do not double-count.
+    pub phase_sec: std::collections::BTreeMap<String, f64>,
     /// The executed schedule: shape buckets, heaviest-per-matrix first,
     /// exactly as dealt to the pool (so callers report what actually
     /// ran instead of re-deriving it).
@@ -236,6 +249,15 @@ pub fn gesvd_batched_with_stats(
         }
     }
 
+    // phase split across the batch (fused shared phases are charged to
+    // one lane by the solver, so plain summation is double-count-free)
+    let mut phase_sec = std::collections::BTreeMap::new();
+    for r in &results {
+        for (p, s) in &r.profile.phases {
+            *phase_sec.entry(p.clone()).or_insert(0.0) += s;
+        }
+    }
+
     let stats = BatchStats {
         threads: pstats.workers,
         buckets: plan.buckets.len(),
@@ -246,6 +268,7 @@ pub fn gesvd_batched_with_stats(
         fused_nodes,
         lane_occupancy: if occ_den > 0.0 { occ_num / occ_den } else { 1.0 },
         device,
+        phase_sec,
         schedule: plan.buckets,
     };
     Ok((results, stats))

@@ -95,15 +95,19 @@ pub fn bucket_inputs(inputs: &[Matrix], cfg: &Config) -> Result<Vec<Bucket>> {
 
 /// Largest lane count one fused unit may carry. Bounds the packed
 /// `[k, n, n]` device stacks (two of them per unit, rebuilt per k-wide
-/// op) and keeps a big uniform batch from collapsing onto a single pool
-/// worker — a 64-member bucket becomes four 16-lane units the pool can
-/// spread. Matches the widest lane count in the registry's builtin
-/// `FUSE_K` grid so AOT-backed devices have the op keys.
+/// op, and since the k-wide back end landed also carried through the
+/// ormqr/ormlq chains and the TS gemm) and keeps a big uniform batch
+/// from collapsing onto a single pool worker — a 64-member bucket
+/// becomes four 16-lane units the pool can spread. Matches the widest
+/// lane count in the registry's builtin `FUSE_K` grid so AOT-backed
+/// devices have the op keys.
 pub const MAX_FUSE_LANES: usize = 16;
 
 /// One schedulable unit of a batched call: either a single per-solve
 /// item, or a run of same-shape bucket members advancing through one
-/// fused BDC tree.
+/// fused BDC tree AND one k-wide post-BDC back-transform stream
+/// (`gesdd_ours_fused`), so the unit's device op count is sublinear in
+/// its lane count end-to-end.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WorkUnit {
     /// Index into the caller's input slice (the per-solve path).

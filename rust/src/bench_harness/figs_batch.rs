@@ -4,11 +4,18 @@
 //! Mixed shapes (square, tall-skinny, n=1) so the shape-bucketing
 //! scheduler is exercised, not just the pool; once the batch cycles the
 //! shape list, buckets of size >= 2 appear and `--fuse` semantics (one
-//! k-wide op stream per bucket) become visible in the fused column.
+//! k-wide op stream per bucket, tree AND back-transforms) become
+//! visible in the fused column.
+//!
+//! With `--json FILE` the same rows are written as one machine-readable
+//! JSON document (shapes, fused-vs-unfused wall time, device op counts,
+//! phase split) — CI uploads it as `BENCH_batch.json`, seeding the
+//! cross-PR perf trajectory.
 
 use anyhow::Result;
 
-use crate::batch::{gesvd_batched_with_stats, plan};
+use crate::batch::{gesvd_batched_with_stats, plan, BatchStats};
+use crate::bench_harness::json::Json;
 use crate::bench_harness::{gflops, header, time_median, Ctx};
 use crate::config::Solver;
 use crate::gen::{generate, MatrixKind};
@@ -18,10 +25,32 @@ use crate::svd::gesvd;
 /// Batch sizes swept (matrices per call).
 const BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
 
+/// Per-op device counts of one batched run, keys sorted. Shared with
+/// the CLI's `svd-batch --json` record so the two artifacts cannot
+/// drift in key format.
+pub fn op_counts(st: &BatchStats) -> Json {
+    Json::sorted_obj(
+        st.device
+            .per_op_count
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::uint(*v))),
+    )
+}
+
+/// Per-phase wall seconds of one batched run (see [`op_counts`]).
+pub fn phase_split(st: &BatchStats) -> Json {
+    Json::sorted_obj(
+        st.phase_sec
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v))),
+    )
+}
+
 pub fn fig_batch(ctx: &Ctx) -> Result<()> {
     header("Batch — pool vs serial vs fused throughput (ours, mixed shapes)");
     let n = 48usize;
     let shapes = [(n, n), (2 * n, n), (n / 2, n / 2), (n, 1)];
+    let mut rows: Vec<Json> = Vec::with_capacity(BATCHES.len());
     for batch in BATCHES {
         let inputs: Vec<_> = (0..batch)
             .map(|i| {
@@ -43,25 +72,30 @@ pub fn fig_batch(ctx: &Ctx) -> Result<()> {
             }
         });
 
-        let mut workers = 0usize;
+        let mut pool_stats: Option<BatchStats> = None;
         let t_batch = time_median(ctx.reps, || {
             let (_, st) = gesvd_batched_with_stats(&inputs, &ctx.cfg, Solver::Ours)
                 .expect("batched solve");
-            workers = st.threads;
+            pool_stats = Some(st);
         });
 
         // fused-vs-unfused: same inputs, same pool, buckets of size >= 2
-        // collapsed into shared-tree units (k-wide op streams)
+        // collapsed into shared-tree units whose whole pipeline tail
+        // (tree + ormqr/ormlq + TS gemm) is k-wide op streams
         let mut fused_cfg = ctx.cfg.clone();
         fused_cfg.fuse = true;
-        let mut fused_nodes = 0usize;
-        let mut occupancy = 1.0f64;
+        let mut fused_stats: Option<BatchStats> = None;
         let t_fused = time_median(ctx.reps, || {
             let (_, st) = gesvd_batched_with_stats(&inputs, &fused_cfg, Solver::Ours)
                 .expect("fused batched solve");
-            fused_nodes = st.fused_nodes;
-            occupancy = st.lane_occupancy;
+            fused_stats = Some(st);
         });
+
+        let pool_stats = pool_stats.expect("one timed pool rep ran");
+        let fused_stats = fused_stats.expect("one timed fused rep ran");
+        let workers = pool_stats.threads;
+        let fused_nodes = fused_stats.fused_nodes;
+        let occupancy = fused_stats.lane_occupancy;
 
         println!(
             "  batch {batch:>3}: serial {t_serial:8.4}s | pool({workers}) {t_batch:8.4}s \
@@ -72,6 +106,41 @@ pub fn fig_batch(ctx: &Ctx) -> Result<()> {
             batch as f64 / t_batch.max(1e-12),
             gflops(flops, t_batch.max(1e-12)),
         );
+
+        rows.push(Json::obj([
+            ("batch", Json::int(batch as i64)),
+            (
+                "shapes",
+                Json::arr(inputs.iter().map(|a| {
+                    Json::arr([Json::int(a.rows as i64), Json::int(a.cols as i64)])
+                })),
+            ),
+            ("flops", Json::num(flops)),
+            ("serial_sec", Json::num(t_serial)),
+            ("pool_sec", Json::num(t_batch)),
+            ("fused_sec", Json::num(t_fused)),
+            ("workers", Json::int(workers as i64)),
+            ("fused_buckets", Json::int(fused_stats.fused_buckets as i64)),
+            ("fused_nodes", Json::int(fused_nodes as i64)),
+            ("lane_occupancy", Json::num(occupancy)),
+            ("pool_exec_count", Json::uint(pool_stats.device.exec_count)),
+            ("fused_exec_count", Json::uint(fused_stats.device.exec_count)),
+            ("pool_op_count", op_counts(&pool_stats)),
+            ("fused_op_count", op_counts(&fused_stats)),
+            ("pool_phase_sec", phase_split(&pool_stats)),
+            ("fused_phase_sec", phase_split(&fused_stats)),
+        ]));
+    }
+
+    if let Some(path) = &ctx.json {
+        let doc = Json::obj([
+            ("bench", Json::str("batch")),
+            ("backend", Json::str(ctx.cfg.backend.name())),
+            ("reps", Json::int(ctx.reps as i64)),
+            ("rows", Json::arr(rows)),
+        ]);
+        doc.write_to(path)?;
+        println!("  wrote machine-readable rows to {}", path.display());
     }
     Ok(())
 }

@@ -1,0 +1,134 @@
+//! Minimal JSON emission for the machine-readable perf artifacts
+//! (`BENCH_batch.json` in CI). No serde — the crate is dependency-free
+//! by design — so this is a tiny *writer*: a [`Json`] value is its own
+//! serialized text, built bottom-up with the constructors below. Output
+//! is always a single valid JSON document (objects keep insertion
+//! order, non-finite numbers serialize as `null`).
+
+use std::fmt::Write as _;
+
+/// A serialized JSON value.
+#[derive(Clone, Debug)]
+pub struct Json(String);
+
+impl Json {
+    /// JSON string with the mandatory escapes (quote, backslash,
+    /// control characters).
+    pub fn str(s: &str) -> Json {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+        Json(out)
+    }
+
+    /// Finite float (NaN/inf become `null` — JSON has no spelling for
+    /// them and a half-written artifact is worse than a hole).
+    pub fn num(x: f64) -> Json {
+        if x.is_finite() {
+            Json(format!("{x}"))
+        } else {
+            Json("null".to_string())
+        }
+    }
+
+    pub fn int(x: i64) -> Json {
+        Json(format!("{x}"))
+    }
+
+    pub fn uint(x: u64) -> Json {
+        Json(format!("{x}"))
+    }
+
+    pub fn bool(b: bool) -> Json {
+        Json(if b { "true" } else { "false" }.to_string())
+    }
+
+    /// Explicit absence (e.g. "the serial baseline did not run").
+    pub fn null() -> Json {
+        Json("null".to_string())
+    }
+
+    pub fn arr(items: impl IntoIterator<Item = Json>) -> Json {
+        let inner: Vec<String> = items.into_iter().map(|j| j.0).collect();
+        Json(format!("[{}]", inner.join(",")))
+    }
+
+    /// Object from (key, value) pairs, keys escaped, insertion order
+    /// preserved (stable artifacts diff cleanly across PRs).
+    pub fn obj<'a>(fields: impl IntoIterator<Item = (&'a str, Json)>) -> Json {
+        let inner: Vec<String> = fields
+            .into_iter()
+            .map(|(k, v)| format!("{}:{}", Json::str(k).0, v.0))
+            .collect();
+        Json(format!("{{{}}}", inner.join(",")))
+    }
+
+    /// Object from owned string keys, sorted for stable artifacts
+    /// (per-op counts, per-phase seconds — HashMap iteration order must
+    /// not leak into the committed trajectory).
+    pub fn sorted_obj(fields: impl IntoIterator<Item = (String, Json)>) -> Json {
+        let mut pairs: Vec<(String, Json)> = fields.into_iter().collect();
+        pairs.sort_by(|a, b| a.0.cmp(&b.0));
+        Json::obj(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())))
+    }
+
+    pub fn text(&self) -> &str {
+        &self.0
+    }
+
+    /// Write the document to a file (trailing newline for clean diffs).
+    pub fn write_to(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use anyhow::Context as _;
+        std::fs::write(path, format!("{}\n", self.0))
+            .with_context(|| format!("writing JSON artifact {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_serialize() {
+        assert_eq!(Json::str("a\"b\\c\nd").text(), r#""a\"b\\c\nd""#);
+        assert_eq!(Json::num(1.5).text(), "1.5");
+        assert_eq!(Json::num(f64::NAN).text(), "null");
+        assert_eq!(Json::int(-3).text(), "-3");
+        assert_eq!(Json::bool(true).text(), "true");
+        assert_eq!(
+            Json::arr([Json::int(1), Json::str("x")]).text(),
+            r#"[1,"x"]"#
+        );
+        assert_eq!(
+            Json::obj([("a", Json::int(1)), ("b", Json::arr([]))]).text(),
+            r#"{"a":1,"b":[]}"#
+        );
+    }
+
+    #[test]
+    fn sorted_obj_orders_keys() {
+        let mut m = std::collections::HashMap::new();
+        m.insert("z".to_string(), 2.0f64);
+        m.insert("a".to_string(), 1.0f64);
+        let j = Json::sorted_obj(m.into_iter().map(|(k, v)| (k, Json::num(v))));
+        assert_eq!(j.text(), r#"{"a":1,"z":2}"#);
+    }
+
+    #[test]
+    fn control_chars_escape() {
+        assert_eq!(Json::str("\u{1}").text(), "\"\\u0001\"");
+    }
+}

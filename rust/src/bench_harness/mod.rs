@@ -11,6 +11,7 @@ pub mod figs_bdc;
 pub mod figs_gebrd;
 pub mod figs_qr;
 pub mod figs_svd;
+pub mod json;
 
 use crate::config::Config;
 use crate::runtime::registry::Manifest;
@@ -59,6 +60,10 @@ pub struct Ctx {
     pub manifest: Manifest,
     /// reps per timing point
     pub reps: usize,
+    /// Where figures that support it (`bench batch`) write their
+    /// machine-readable record (`--json FILE`; CI uploads
+    /// `BENCH_batch.json` as the cross-PR perf trajectory).
+    pub json: Option<std::path::PathBuf>,
 }
 
 impl Ctx {
@@ -67,7 +72,14 @@ impl Ctx {
         // host backend executes any key, so a missing artifacts dir falls
         // back to the builtin grid and the benches stay hermetic
         let manifest = Manifest::load_or_builtin(&cfg.artifacts)?;
-        Ok(Ctx { dev, cfg, manifest, reps })
+        Ok(Ctx { dev, cfg, manifest, reps, json: None })
+    }
+
+    /// Set the JSON artifact path (builder style, for the CLI's
+    /// `--json` flag).
+    pub fn with_json(mut self, json: Option<std::path::PathBuf>) -> Ctx {
+        self.json = json;
+        self
     }
 
     /// Size caps keep the full `cargo bench` run practical on the CPU

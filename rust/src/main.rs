@@ -4,14 +4,17 @@
 //!   svd       --m M --n N [--kind K] [--theta T] [--solver S] [--block B]
 //!             run one SVD, print sigma head, accuracy and the phase profile
 //!   svd-batch [--batch N] [--m M] [--n N] [--mixed] [--solver S]
-//!             [--threads T] [--fuse] [--check]
+//!             [--threads T] [--fuse] [--check] [--json FILE]
 //!             batched SVD over the work-stealing pool; prints bucket
 //!             schedule + throughput (matrices/s, aggregate GFLOP/s), and
 //!             with --check the serial-loop baseline + parity; --fuse
-//!             routes same-shape buckets through one shared BDC tree
-//!             (k-wide device ops) and prints fused node/occupancy stats
+//!             routes same-shape buckets through one shared BDC tree and
+//!             k-wide back-transforms and prints fused node/occupancy
+//!             stats; --json writes the run as a machine-readable record
 //!   bench     <fig4|fig5a|fig5b|fig6..fig20|batch|all> [--reps R]
-//!             regenerate a paper figure (see DESIGN.md experiment index)
+//!             [--json FILE]
+//!             regenerate a paper figure (see DESIGN.md experiment
+//!             index); `bench batch --json` writes `BENCH_batch.json`
 //!   profile   --m M --n N [--solver S]   phase/location trace (Fig. 1 style)
 //!   info      list artifact coverage
 //!
@@ -21,7 +24,7 @@
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
-use gcsvd::bench_harness::{self, Ctx};
+use gcsvd::bench_harness::{self, figs_batch, json::Json, Ctx};
 use gcsvd::config::{Config, Solver};
 use gcsvd::gen::{generate, MatrixKind};
 use gcsvd::runtime::transfer::TransferModel;
@@ -230,7 +233,16 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
         batch as f64 / stats.wall.max(1e-12),
         stats.flops / stats.wall.max(1e-12) / 1e9
     );
+    if !stats.phase_sec.is_empty() {
+        let split: Vec<String> = stats
+            .phase_sec
+            .iter()
+            .map(|(p, s)| format!("{p} {s:.3}s"))
+            .collect();
+        println!("phase split (summed over items): {}", split.join(" | "));
+    }
 
+    let mut serial_wall: Option<f64> = None;
     if args.get("check").is_some() {
         // device construction inside the timed region, mirroring the
         // batched wall (which includes worker-device construction)
@@ -241,6 +253,7 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
             serial.push(gesvd(&dev, a, &cfg, solver)?);
         }
         let ts = t0.elapsed().as_secs_f64();
+        serial_wall = Some(ts);
         let mut worst = 0.0f64;
         let mut scale = 1.0f64;
         for (r, s) in results.iter().zip(&serial) {
@@ -258,6 +271,53 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
             "parity check FAILED: batched diverges from serial by {worst:.3e}"
         );
     }
+
+    // machine-readable record (shapes, walls, fused stats, device op
+    // counts) — CI uploads these next to bench-smoke.txt
+    if let Some(path) = args.get("json") {
+        let doc = Json::obj([
+            ("cmd", Json::str("svd-batch")),
+            ("solver", Json::str(solver.name())),
+            ("backend", Json::str(cfg.backend.name())),
+            ("batch", Json::int(batch as i64)),
+            ("m", Json::int(m as i64)),
+            ("n", Json::int(n as i64)),
+            ("mixed", Json::bool(mixed)),
+            ("fuse", Json::bool(cfg.fuse)),
+            ("threads", Json::int(stats.threads as i64)),
+            ("steals", Json::int(stats.steals as i64)),
+            ("wall_sec", Json::num(stats.wall)),
+            (
+                "serial_wall_sec",
+                serial_wall.map_or(Json::null(), Json::num),
+            ),
+            ("flops", Json::num(stats.flops)),
+            (
+                "buckets",
+                Json::arr(stats.schedule.iter().map(|b| {
+                    Json::obj([
+                        ("m", Json::int(b.plan.key.m as i64)),
+                        ("n", Json::int(b.plan.key.n as i64)),
+                        ("block", Json::int(b.plan.key.block as i64)),
+                        ("count", Json::int(b.items.len() as i64)),
+                        ("flops_each", Json::num(b.plan.flops)),
+                    ])
+                })),
+            ),
+            ("fused_buckets", Json::int(stats.fused_buckets as i64)),
+            ("fused_nodes", Json::int(stats.fused_nodes as i64)),
+            ("lane_occupancy", Json::num(stats.lane_occupancy)),
+            ("device_exec_count", Json::uint(stats.device.exec_count)),
+            ("staging_hits", Json::uint(stats.device.staging_hits)),
+            ("live_buffers", Json::int(stats.device.live_buffers as i64)),
+            // same mappings the bench figure writes into BENCH_batch.json,
+            // so the two artifacts cannot drift in key format
+            ("device_op_count", figs_batch::op_counts(&stats)),
+            ("phase_sec", figs_batch::phase_split(&stats)),
+        ]);
+        doc.write_to(std::path::Path::new(path))?;
+        println!("wrote machine-readable record to {path}");
+    }
     Ok(())
 }
 
@@ -269,8 +329,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .map(|s| s.as_str())
         .unwrap_or("all");
     let reps = args.get_usize("reps", 3)?;
+    let json = args.get("json").map(std::path::PathBuf::from);
     let dev = make_device(&cfg)?;
-    let ctx = Ctx::new(dev, cfg, reps)?;
+    let ctx = Ctx::new(dev, cfg, reps)?.with_json(json);
     bench_harness::run(&ctx, which)
 }
 

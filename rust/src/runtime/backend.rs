@@ -3,7 +3,12 @@
 //! [`Backend`] is the contract between the device worker loop
 //! (`runtime::device`) and whatever actually executes ops: upload f64/i64
 //! arrays, execute an op by [`OpKey`], read buffers back, report compile
-//! accounting. Two implementations exist:
+//! accounting. The op vocabulary spans the scalar pipeline steps
+//! (gebrd/geqrf/orm* panels, BDC vector ops) and their k-wide fused
+//! counterparts (`*_k` over packed `[k, n, n]` lane stacks — the shared
+//! BDC tree AND the post-BDC back-transforms / TS gemm), all executed
+//! through the same `exec` seam and counted per name in
+//! `DeviceStats::per_op_count`. Two implementations exist:
 //!
 //!   * `runtime::host::HostBackend` — a pure-Rust interpreter that
 //!     natively implements every op the coordinator emits, with semantics

@@ -47,8 +47,10 @@ impl DeviceEngineK {
         self.v.expect("init first")
     }
 
-    /// Release ownership of the packed (U, V) stacks to the caller (the
-    /// per-lane back-transforms slice lanes out with `lane_slice`).
+    /// Release ownership of the packed (U, V) stacks to the caller. The
+    /// fused driver's k-wide back end (`svd::gesdd::back_end_k`) runs
+    /// the ormqr/ormlq chains directly on the stacks; `lane_slice`
+    /// remains for callers that need one lane out (tests, diagnostics).
     pub fn take(mut self) -> (Device, BufId, BufId) {
         (self.dev.clone(), self.u.take().unwrap(), self.v.take().unwrap())
     }

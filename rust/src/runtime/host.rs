@@ -268,9 +268,7 @@ impl Backend for HostBackend {
                 let tau = arg(op, args, 2)?.f64s()?;
                 let t = arg(op, args, 3)?.scalar()?;
                 ensure!(tau.len() == b, "ormqr_step: tau length");
-                let y = qr::build_y(&afac, t, b);
-                let ti = qr::tinv(&y, tau);
-                qr::larfb(&mut c, &y, &ti, 0, k, false);
+                ormqr_panel_apply(&mut c, &afac, tau, t, b, k);
                 c.data
             }
             "ormlq_step" | "ormlq_step_classic" => {
@@ -280,20 +278,7 @@ impl Backend for HostBackend {
                 let tau = arg(op, args, 2)?.f64s()?;
                 let t = arg(op, args, 3)?.scalar()?;
                 ensure!(tau.len() == b, "ormlq_step: tau length");
-                // Y (n x b): row reflector t+i lives in Afac[t+i, t+i+2:],
-                // unit at t+i+1 (model.op_ormlq_step).
-                let mut y = Matrix::zeros(n, b);
-                for i in 0..b {
-                    let g = t + i;
-                    if g + 1 < n {
-                        y[(g + 1, i)] = 1.0;
-                        for r in g + 2..n {
-                            y[(r, i)] = afac.at(g, r);
-                        }
-                    }
-                }
-                let ti = qr::tinv(&y, tau);
-                qr::larfb(&mut c, &y, &ti, 0, k, false);
+                ormlq_panel_apply(&mut c, &afac, tau, t, b, n, k);
                 c.data
             }
 
@@ -680,6 +665,65 @@ impl Backend for HostBackend {
                 m
             }
 
+            // ---- k-wide back-transforms (fused buckets, post-BDC). The
+            // shared tree leaves U/V packed as [k, n, n]; these ops keep
+            // the whole back-transform phase one op stream per panel
+            // step instead of per lane. Each lane applies a panel of its
+            // OWN factorization (the factors are packed by `stack_k`);
+            // the inner per-lane loops are the SAME helpers the scalar
+            // ormqr_step / ormlq_step / gemm arms use, so a fused lane
+            // stays bit-identical to a per-solve run. ----
+            "stack_k" => {
+                let (k, len) = (p(op, "k")?, p(op, "len")?);
+                ensure!(k >= 1 && args.len() == k, "stack_k: {} args for {k} lanes", args.len());
+                let mut out = Vec::with_capacity(k * len);
+                for (l, a) in args.iter().enumerate() {
+                    let d = a.f64s()?;
+                    ensure!(d.len() == len, "stack_k: lane {l} has {} of {len} elements", d.len());
+                    out.extend_from_slice(d);
+                }
+                out
+            }
+            "ormqr_step_k" | "ormlq_step_k" => {
+                let (k, n, b) = (p(op, "k")?, p(op, "n")?, p(op, "b")?);
+                let cs = arg(op, args, 0)?.f64s()?;
+                let afacs = arg(op, args, 1)?.f64s()?;
+                let tau = arg(op, args, 2)?.f64s()?;
+                let t = arg(op, args, 3)?.scalar()?;
+                ensure!(
+                    cs.len() == k * n * n && afacs.len() == k * n * n,
+                    "{}: stack sizes",
+                    op.name
+                );
+                ensure!(tau.len() == k * b, "{}: tau length", op.name);
+                let mut out = Vec::with_capacity(k * n * n);
+                for l in 0..k {
+                    let mut c = Matrix::from_rows(n, n, cs[l * n * n..(l + 1) * n * n].to_vec());
+                    let afac = Matrix::from_rows(n, n, afacs[l * n * n..(l + 1) * n * n].to_vec());
+                    let taul = &tau[l * b..(l + 1) * b];
+                    if op.name == "ormqr_step_k" {
+                        ormqr_panel_apply(&mut c, &afac, taul, t, b, n);
+                    } else {
+                        ormlq_panel_apply(&mut c, &afac, taul, t, b, n, n);
+                    }
+                    out.extend_from_slice(&c.data);
+                }
+                out
+            }
+            "q_gemm_k" => {
+                let (k, m, n) = (p(op, "k")?, p(op, "m")?, p(op, "n")?);
+                let qs = arg(op, args, 0)?.f64s()?;
+                let us = arg(op, args, 1)?.f64s()?;
+                ensure!(qs.len() == k * m * n && us.len() == k * n * n, "q_gemm_k: stack sizes");
+                let mut out = Vec::with_capacity(k * m * n);
+                for l in 0..k {
+                    let q = Matrix::from_rows(m, n, qs[l * m * n..(l + 1) * m * n].to_vec());
+                    let u = Matrix::from_rows(n, n, us[l * n * n..(l + 1) * n * n].to_vec());
+                    out.extend_from_slice(&blas::matmul(&q, &u).data);
+                }
+                out
+            }
+
             other => bail!("host backend: unknown op {other} ({op})"),
         };
         Ok(HostBuf::F64(out))
@@ -785,6 +829,42 @@ fn set_block_apply(
             m[(woff + i) * n + woff + j] = blk[i * bs + j];
         }
     }
+}
+
+/// One ormqr panel application, C <- (I - Y T^{-1} Y^T) C for the column
+/// reflectors at panel `t` (model.op_ormqr_step). Shared by the scalar
+/// `ormqr_step` op and each lane of `ormqr_step_k`, so fused lanes
+/// reproduce the per-solve arithmetic exactly.
+fn ormqr_panel_apply(c: &mut Matrix, afac: &Matrix, tau: &[f64], t: usize, b: usize, kcols: usize) {
+    let y = qr::build_y(afac, t, b);
+    let ti = qr::tinv(&y, tau);
+    qr::larfb(c, &y, &ti, 0, kcols, false);
+}
+
+/// One ormlq panel application. Y (n x b): row reflector t+i lives in
+/// Afac[t+i, t+i+2:], unit at t+i+1 (model.op_ormlq_step). Shared by the
+/// scalar `ormlq_step` op and each lane of `ormlq_step_k`.
+fn ormlq_panel_apply(
+    c: &mut Matrix,
+    afac: &Matrix,
+    tau: &[f64],
+    t: usize,
+    b: usize,
+    n: usize,
+    kcols: usize,
+) {
+    let mut y = Matrix::zeros(n, b);
+    for i in 0..b {
+        let g = t + i;
+        if g + 1 < n {
+            y[(g + 1, i)] = 1.0;
+            for r in g + 2..n {
+                y[(r, i)] = afac.at(g, r);
+            }
+        }
+    }
+    let ti = qr::tinv(&y, tau);
+    qr::larfb(c, &y, &ti, 0, kcols, false);
 }
 
 /// The fused lasd3 secular stage (model.op_bdc_secular): from padded d,
@@ -1231,6 +1311,98 @@ mod tests {
                 &packed[l * stride + nb + nb * nb..(l + 1) * stride],
                 "V lane {l}"
             );
+        }
+    }
+
+    #[test]
+    fn back_transform_k_ops_match_scalar_lanes_bitexactly() {
+        // ormqr_step_k / ormlq_step_k vs the per-lane scalar steps, for
+        // the satellite's k in {2, 3, 7} including an n = 1 lane shape
+        for (k, n, bsz) in [(2usize, 6usize, 2usize), (3, 5, 5), (7, 4, 2), (3, 1, 1)] {
+            let mut rng = Rng::new(1000 + (k * 31 + n) as u64);
+            let cs: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..n * n).map(|_| rng.gaussian()).collect())
+                .collect();
+            let afacs: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..n * n).map(|_| rng.gaussian()).collect())
+                .collect();
+            let taus: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..bsz).map(|_| rng.gaussian()).collect())
+                .collect();
+            let t = 0usize;
+            let mut b = HostBackend::new();
+            let kp = [("k", k as i64), ("n", n as i64), ("b", bsz as i64)];
+            let sp = [("m", n as i64), ("n", n as i64), ("k", n as i64), ("b", bsz as i64)];
+            for (kop, sop) in [("ormqr_step_k", "ormqr_step"), ("ormlq_step_k", "ormlq_step")] {
+                let args = [
+                    HostBuf::F64(cs.concat()),
+                    HostBuf::F64(afacs.concat()),
+                    HostBuf::F64(taus.concat()),
+                    HostBuf::I64(vec![t as i64]),
+                ];
+                let argrefs: Vec<&HostBuf> = args.iter().collect();
+                let got = run(&mut b, kop, &kp, &argrefs);
+                for l in 0..k {
+                    let sargs = [
+                        HostBuf::F64(cs[l].clone()),
+                        HostBuf::F64(afacs[l].clone()),
+                        HostBuf::F64(taus[l].clone()),
+                        HostBuf::I64(vec![t as i64]),
+                    ];
+                    let sargrefs: Vec<&HostBuf> = sargs.iter().collect();
+                    let want = run(&mut b, sop, &sp, &sargrefs);
+                    assert_eq!(
+                        &got[l * n * n..(l + 1) * n * n],
+                        &want[..],
+                        "{kop} k={k} n={n} lane {l}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q_gemm_k_and_stack_k_match_scalar_lanes() {
+        // tall-skinny lanes: U_l = Q_l U0_l must equal the scalar gemm
+        // per lane, and stack_k must be plain lane concatenation
+        for k in [2usize, 3, 7] {
+            let (m, n) = (8usize, 3usize);
+            let mut rng = Rng::new(77 + k as u64);
+            let qs: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..m * n).map(|_| rng.gaussian()).collect())
+                .collect();
+            let us: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..n * n).map(|_| rng.gaussian()).collect())
+                .collect();
+            let mut b = HostBackend::new();
+            let qargs: Vec<HostBuf> = qs.iter().map(|q| HostBuf::F64(q.clone())).collect();
+            let qrefs: Vec<&HostBuf> = qargs.iter().collect();
+            let qstack = run(
+                &mut b,
+                "stack_k",
+                &[("k", k as i64), ("len", (m * n) as i64)],
+                &qrefs,
+            );
+            assert_eq!(qstack, qs.concat(), "stack_k k={k}");
+            let args = [HostBuf::F64(qs.concat()), HostBuf::F64(us.concat())];
+            let argrefs: Vec<&HostBuf> = args.iter().collect();
+            let got = run(
+                &mut b,
+                "q_gemm_k",
+                &[("k", k as i64), ("m", m as i64), ("n", n as i64)],
+                &argrefs,
+            );
+            for l in 0..k {
+                let sargs = [HostBuf::F64(qs[l].clone()), HostBuf::F64(us[l].clone())];
+                let sargrefs: Vec<&HostBuf> = sargs.iter().collect();
+                let want = run(
+                    &mut b,
+                    "gemm",
+                    &[("m", m as i64), ("k", n as i64), ("n", n as i64)],
+                    &sargrefs,
+                );
+                assert_eq!(&got[l * m * n..(l + 1) * m * n], &want[..], "k={k} lane {l}");
+            }
         }
     }
 

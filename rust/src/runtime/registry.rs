@@ -169,7 +169,8 @@ impl Manifest {
         for &n in &ns {
             bdc_ops(&mut put, n);
         }
-        // k-wide fused-tree ops (runtime/bdc_engine_k.rs): the host
+        // k-wide fused-tree + fused back-transform ops
+        // (runtime/bdc_engine_k.rs, svd/qr.rs `*_device_k`): the host
         // backend executes any lane count; the grid mirrors the lane
         // widths aot.py would emit so the bench harness can enumerate
         // fused shapes the same way it enumerates scalar ones.
@@ -188,6 +189,19 @@ impl Manifest {
                         put("merge_gemm_k", &[("k", kk), ("n", n), ("kb", kb as i64)]);
                     }
                 }
+                // post-BDC phase: factor packing + panel-wide ormqr/ormlq
+                put("stack_k", &[("k", kk), ("len", n * n)]);
+                let bq = DEFAULT_B.min(n);
+                put("ormqr_step_k", &[("k", kk), ("n", n), ("b", bq)]);
+                put("ormlq_step_k", &[("k", kk), ("n", n), ("b", bq)]);
+            }
+        }
+        // TS fused buckets additionally pack the thin Q stacks and run
+        // the k-wide U = Q U0 gemm
+        for (m, n) in TS {
+            for kk in FUSE_K {
+                put("stack_k", &[("k", kk), ("len", m * n)]);
+                put("q_gemm_k", &[("k", kk), ("m", m), ("n", n)]);
             }
         }
         let nmax2 = ns.last().copied().unwrap_or(0);

@@ -17,7 +17,9 @@ use crate::runtime::bdc_engine::DeviceEngine;
 use crate::runtime::bdc_engine_k::DeviceEngineK;
 use crate::runtime::{BufId, Device};
 use crate::svd::gebrd::{gebrd_device, DeviceGebrd};
-use crate::svd::qr::{geqrf_device, orgqr_device, ormlq_device, ormqr_device};
+use crate::svd::qr::{
+    geqrf_device, orgqr_device, ormlq_device, ormlq_device_k, ormqr_device, ormqr_device_k,
+};
 
 /// Full SVD result: A = U diag(sigma) V^T, sigma DESCENDING.
 pub struct SvdResult {
@@ -175,6 +177,133 @@ fn back_end(
     Ok((Matrix::from_rows(m, n, u_host?), Matrix::from_rows(n, n, v_host?)))
 }
 
+/// k-wide back-transforms + the TS final gemm + ONE stacked download per
+/// matrix family for a fused bucket whose packed BDC output (`pu`, `pv`,
+/// both `[k, n, n]`) is already on the device. The per-lane gebrd
+/// factors are packed into one `[k, n, n]` stack (`stack_k`) and every
+/// panel step is a single k-wide op (`ormqr_step_k` / `ormlq_step_k`,
+/// then `q_gemm_k` on the TS path), so the whole post-BDC phase issues
+/// one op stream per panel instead of per lane. Consumes `pu`/`pv` and
+/// every front's device buffers on all paths; the shared phase walls are
+/// charged to lane 0's profile (the convention the fused driver already
+/// uses for the shared tree). Returns per-lane (U, V) in lane order.
+fn back_end_k(
+    dev: &Device,
+    fronts: &mut [FrontEnd],
+    pu: BufId,
+    pv: BufId,
+    m: usize,
+    n: usize,
+    b: usize,
+) -> Result<Vec<(Matrix, Matrix)>> {
+    let lanes = fronts.len();
+    let t4 = std::time::Instant::now();
+
+    // ---- pack the per-lane gebrd factors; release the lane buffers as
+    // soon as the stack exists (persistent pool-worker device) ----
+    let afac_ids: Vec<BufId> = fronts.iter().map(|f| f.fac.afac).collect();
+    let afacs = dev.op(
+        "stack_k",
+        &[("k", lanes as i64), ("len", (n * n) as i64)],
+        &afac_ids,
+    );
+    for id in afac_ids {
+        dev.free(id);
+    }
+    let q_thins: Vec<Option<BufId>> = fronts.iter_mut().map(|f| f.q_thin.take()).collect();
+
+    // ---- back-transforms: U2 <- U1 U2, V2 <- V1 V2, k lanes per op.
+    // The chain drivers are currently infallible, but a failure must
+    // still release everything the solve owns (the device is a
+    // persistent pool worker — the "on all paths" contract above). ----
+    let tauqs: Vec<&[f64]> = fronts.iter().map(|f| f.fac.tauq.as_slice()).collect();
+    let taups: Vec<&[f64]> = fronts.iter().map(|f| f.fac.taup.as_slice()).collect();
+    let u2 = match ormqr_device_k(dev, afacs, &tauqs, pu, n, b) {
+        Ok(u2) => u2,
+        Err(e) => {
+            for id in [afacs, pv].into_iter().chain(q_thins.into_iter().flatten()) {
+                dev.free(id);
+            }
+            return Err(e);
+        }
+    };
+    let v2 = match ormlq_device_k(dev, afacs, &taups, pv, n, b) {
+        Ok(v2) => v2,
+        Err(e) => {
+            for id in [afacs, u2].into_iter().chain(q_thins.into_iter().flatten()) {
+                dev.free(id);
+            }
+            return Err(e);
+        }
+    };
+    dev.free(afacs);
+    if let Err(e) = dev.sync() {
+        for id in [u2, v2].into_iter().chain(q_thins.into_iter().flatten()) {
+            dev.free(id);
+        }
+        return Err(e);
+    }
+    let dt = t4.elapsed().as_secs_f64();
+    for (l, f) in fronts.iter_mut().enumerate() {
+        f.profile.record("ormqr+ormlq", if l == 0 { dt } else { 0.0 }, "gpu");
+    }
+
+    // ---- TS final gemm: U_l = Q_l U0_l, one k-wide op for the bucket
+    // (all lanes share (m, n), so either every lane has a thin Q or
+    // none does) ----
+    let (u_final, urows) = if q_thins.iter().all(|q| q.is_some()) {
+        let t5 = std::time::Instant::now();
+        let q_ids: Vec<BufId> = q_thins.iter().map(|q| q.expect("TS lane Q")).collect();
+        let qs = dev.op(
+            "stack_k",
+            &[("k", lanes as i64), ("len", (m * n) as i64)],
+            &q_ids,
+        );
+        for id in q_ids {
+            dev.free(id);
+        }
+        let u = dev.op(
+            "q_gemm_k",
+            &[("k", lanes as i64), ("m", m as i64), ("n", n as i64)],
+            &[qs, u2],
+        );
+        dev.free(qs);
+        dev.free(u2);
+        if let Err(e) = dev.sync() {
+            dev.free(u);
+            dev.free(v2);
+            return Err(e);
+        }
+        let dt = t5.elapsed().as_secs_f64();
+        for (l, f) in fronts.iter_mut().enumerate() {
+            f.profile.record("gemm", if l == 0 { dt } else { 0.0 }, "gpu");
+        }
+        (u, m)
+    } else {
+        (u2, n)
+    };
+
+    // ---- stacked result download: one D2H read per matrix family for
+    // the whole bucket (the per-lane reads collapse too); the buffers
+    // are released whether or not the reads succeed ----
+    let u_host = dev.read(u_final);
+    let v_host = dev.read(v2);
+    dev.free(u_final);
+    dev.free(v2);
+    let (u_host, v_host) = (u_host?, v_host?);
+    anyhow::ensure!(
+        u_host.len() == lanes * urows * n && v_host.len() == lanes * n * n,
+        "fused back end: stacked result size mismatch"
+    );
+    let mut out = Vec::with_capacity(lanes);
+    for l in 0..lanes {
+        let u = Matrix::from_rows(urows, n, u_host[l * urows * n..(l + 1) * urows * n].to_vec());
+        let v = Matrix::from_rows(n, n, v_host[l * n * n..(l + 1) * n * n].to_vec());
+        out.push((u, v));
+    }
+    Ok(out)
+}
+
 /// The paper's solver ("ours"). `a` is the host input (m x n, m >= n).
 pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
     let (m, n) = (a.rows, a.cols);
@@ -201,10 +330,11 @@ pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
 /// the per-lane front ends (geqrf/orgqr/gebrd) back-to-back on one
 /// device, then ONE shared BDC tree over all k bidiagonals (packed
 /// `[k, n, n]` vector stacks, k-wide node ops — `bdc/driver_k.rs`), then
-/// per-lane back-transforms over `lane_slice` views of the packed
-/// result. Lane `l`'s result is bit-identical to `gesdd_ours` on input
-/// `l` alone. Returns the per-lane results in input order plus the
-/// fused-tree counters.
+/// the k-wide back end ([`back_end_k`]): ormqr/ormlq chains, the TS
+/// `U = Q U0` gemm and the result download all operate on the packed
+/// stacks, one op stream per panel step for the whole bucket. Lane `l`'s
+/// result is bit-identical to `gesdd_ours` on input `l` alone. Returns
+/// the per-lane results in input order plus the fused-tree counters.
 pub fn gesdd_ours_fused(
     dev: &Device,
     inputs: &[&Matrix],
@@ -261,35 +391,20 @@ pub fn gesdd_ours_fused(
     }
     let bdc_sec = t3.elapsed().as_secs_f64();
 
-    // ---- per-lane back-transforms over lane slices of the stacks ----
+    // ---- k-wide back-transforms straight on the packed stacks: the
+    // post-BDC phase (ormqr/ormlq chains + the TS gemm + the result
+    // download) is one op stream per panel step for the whole bucket,
+    // not per lane — back_end_k consumes the stacks and every front's
+    // device buffers on all paths ----
     let (_, pu, pv) = engine.take();
-    let kp = [("k", lanes as i64), ("n", n as i64)];
+    // the tree is shared: charge its wall time to lane 0's profile
+    for (l, f) in fronts.iter_mut().enumerate() {
+        f.profile.record("bdcdc", if l == 0 { bdc_sec } else { 0.0 }, "hybrid");
+    }
+    let uvs = back_end_k(dev, &mut fronts, pu, pv, m, n, b).context("fused back end")?;
     let mut results = Vec::with_capacity(lanes);
-    let mut sigs = sigs.into_iter();
-    let mut fronts = fronts.into_iter().enumerate();
-    let ran: Result<()> = (&mut fronts).try_for_each(|(l, front)| {
-        let FrontEnd { fac, q_thin, mut profile } = front;
-        // the tree is shared: charge its wall time to lane 0's profile
-        profile.record("bdcdc", if l == 0 { bdc_sec } else { 0.0 }, "hybrid");
-        let lb = dev.scalar_i64(l as i64);
-        let u2 = dev.op("lane_slice", &kp, &[pu, lb]);
-        let v2 = dev.op("lane_slice", &kp, &[pv, lb]);
-        dev.free(lb);
-        let (u, v) = back_end(dev, &fac, q_thin, u2, v2, m, n, b, &mut profile)
-            .with_context(|| format!("fused lane {l}"))?;
-        let sig_asc = sigs.next().expect("one sigma vector per lane");
-        results.push(finalize(sig_asc, u, v, profile)?);
-        Ok(())
-    });
-    // the packed stacks are released whether or not every lane landed;
-    // a failed lane also releases the unconsumed lanes' front-end state
-    dev.free(pu);
-    dev.free(pv);
-    if let Err(e) = ran {
-        for (_, f) in fronts {
-            free_front(dev, f);
-        }
-        return Err(e);
+    for ((front, (u, v)), sig_asc) in fronts.into_iter().zip(uvs).zip(sigs) {
+        results.push(finalize(sig_asc, u, v, front.profile)?);
     }
     Ok((results, kstats))
 }

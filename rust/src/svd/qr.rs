@@ -145,6 +145,94 @@ pub fn ormqr_device_with(
     Ok(cur)
 }
 
+/// k-wide ormqr for a fused bucket: apply every lane's own gebrd column
+/// reflectors to its lane of the packed `[k, n, n]` stack `c` (consumed),
+/// ONE `ormqr_step_k` per panel serving all k lanes. `afacs` is the
+/// packed `[k, n, n]` factor stack (`stack_k` of the per-lane gebrd
+/// factors, borrowed); `tauqs[l]` is lane l's tauq. The panel walk
+/// mirrors [`ormqr_device`] exactly (block-reverse, ragged first panel)
+/// and the host op shares its inner loop with the scalar step, so lane
+/// `l` is bit-identical to `ormqr_device` on lane `l` alone.
+pub fn ormqr_device_k(
+    dev: &Device,
+    afacs: BufId,
+    tauqs: &[&[f64]],
+    c: BufId,
+    n: usize,
+    b: usize,
+) -> Result<BufId> {
+    assert!(b >= 1 && b <= n);
+    let lanes = tauqs.len();
+    let mut cur = c;
+    // block-reverse application; the first (rightmost) panel may be ragged
+    let mut t = ((n - 1) / b) * b;
+    loop {
+        let bb = b.min(n - t);
+        let p = [("b", bb as i64), ("k", lanes as i64), ("n", n as i64)];
+        let tb = dev.scalar_i64(t as i64);
+        let mut taus = dev.stage_zeroed(lanes * bb);
+        for (l, tq) in tauqs.iter().enumerate() {
+            taus[l * bb..(l + 1) * bb].copy_from_slice(&tq[t..t + bb]);
+        }
+        let taub = dev.upload(taus, &[lanes, bb]);
+        let c2 = dev.op("ormqr_step_k", &p, &[cur, afacs, taub, tb]);
+        dev.free(cur);
+        dev.free(tb);
+        dev.free(taub);
+        cur = c2;
+        if t == 0 {
+            break;
+        }
+        t -= b;
+    }
+    Ok(cur)
+}
+
+/// k-wide ormlq for a fused bucket (see [`ormqr_device_k`]); mirrors the
+/// [`ormlq_device`] panel walk, including the tau masking of reflectors
+/// past n-2 (tau == 0, identity) and the n == 1 early return.
+pub fn ormlq_device_k(
+    dev: &Device,
+    afacs: BufId,
+    taups: &[&[f64]],
+    c: BufId,
+    n: usize,
+    b: usize,
+) -> Result<BufId> {
+    assert!(b >= 1 && b <= n);
+    let lanes = taups.len();
+    let nref = n - 1;
+    if nref == 0 {
+        return Ok(c);
+    }
+    let mut cur = c;
+    let mut t = ((nref - 1) / b) * b;
+    loop {
+        let bb = b.min(n - t);
+        let p = [("b", bb as i64), ("k", lanes as i64), ("n", n as i64)];
+        let tb = dev.scalar_i64(t as i64);
+        let mut taus = dev.stage_zeroed(lanes * bb);
+        for (l, tp) in taups.iter().enumerate() {
+            for i in 0..bb {
+                if t + i < n - 1 {
+                    taus[l * bb + i] = tp[t + i];
+                }
+            }
+        }
+        let taub = dev.upload(taus, &[lanes, bb]);
+        let c2 = dev.op("ormlq_step_k", &p, &[cur, afacs, taub, tb]);
+        dev.free(cur);
+        dev.free(tb);
+        dev.free(taub);
+        cur = c2;
+        if t == 0 {
+            break;
+        }
+        t -= b;
+    }
+    Ok(cur)
+}
+
 /// Back-transform C <- V1 C with gebrd's row reflectors (ormlq). C (n x k).
 pub fn ormlq_device(
     dev: &Device,

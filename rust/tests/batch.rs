@@ -1,9 +1,11 @@
 //! Batched-SVD guarantees: batched-vs-serial parity over mixed shapes
 //! (including n=1 and tall-skinny), bit-determinism of the pool
 //! schedule regardless of thread count, fused-vs-serial bit-exactness
-//! of the shared-tree path (k in {2, 3, 7}, heavy deflation, n=1
-//! leaves), the sublinear fused op-stream shape, and the buffer-leak
-//! regression gauge.
+//! of the shared-tree + k-wide back-transform path (k in {2, 3, 7},
+//! heavy deflation, n=1 leaves), the sublinear fused op-stream shape —
+//! now covering the WHOLE post-front-end pipeline (tree + ormqr/ormlq
+//! chains + TS gemm, lane-count-independent op counts) — and the
+//! buffer-leak regression gauge.
 
 #![allow(clippy::needless_range_loop)]
 
@@ -238,12 +240,19 @@ fn fused_bucket_issues_one_sublinear_op_stream() {
     );
     assert_eq!(unfused.fused_buckets, 0);
 
-    // the tree ran on k-wide ops, not k scalar streams
+    // the tree AND the back-transforms ran on k-wide ops, not k scalar
+    // streams (the post-BDC phase is fused since the k-wide back end)
     let ops = &fused.device.per_op_count;
-    for op in ["eye_k", "set_block_k", "permute_k", "secular_k", "merge_gemm_k", "lane_slice"] {
+    for op in [
+        "eye_k", "set_block_k", "permute_k", "secular_k", "merge_gemm_k", "stack_k",
+        "ormqr_step_k", "ormlq_step_k",
+    ] {
         assert!(ops.contains_key(op), "fused stream missing {op}: {ops:?}");
     }
-    for op in ["bdc_rots", "bdc_permute_cols", "bdc_secular", "bdc_block_gemm", "set_block"] {
+    for op in [
+        "bdc_rots", "bdc_permute_cols", "bdc_secular", "bdc_block_gemm", "set_block",
+        "ormqr_step", "ormlq_step", "gemm", "lane_slice",
+    ] {
         assert!(!ops.contains_key(op), "scalar op {op} leaked into the fused stream");
     }
 
@@ -263,6 +272,65 @@ fn fused_bucket_issues_one_sublinear_op_stream() {
         k,
         single.device.exec_count
     );
+}
+
+/// One fused solve's per-op device counts for `k` same-shape inputs.
+fn fused_op_counts(
+    m: usize,
+    n: usize,
+    k: usize,
+    seed: u64,
+) -> std::collections::HashMap<String, u64> {
+    let mut rng = Rng::new(seed);
+    let inputs: Vec<Matrix> = (0..k)
+        .map(|_| Matrix::from_fn(m, n, |_, _| rng.gaussian()))
+        .collect();
+    let mut cfg = cfg_with_threads(1);
+    cfg.fuse = true;
+    let (_, st) = gesvd_batched_with_stats(&inputs, &cfg, Solver::Ours).expect("fused");
+    st.device.per_op_count.clone()
+}
+
+#[test]
+fn fused_back_transform_op_counts_are_lane_independent() {
+    // end-to-end acceptance for the k-wide back end: everything after
+    // the per-lane front end — the shared tree AND the ormqr/ormlq
+    // chains AND the TS U = Q U0 gemm — must issue the SAME number of
+    // device ops for k = 2 and k = 5 lanes (only the front end scales
+    // with k), on both a square and a tall-skinny bucket
+    // n = 40 > leaf 32, so the shared tree has real merges (secular_k /
+    // merge_gemm_k present) on top of the leaf and back-end families
+    for &(m, n, ts) in &[(40usize, 40usize, false), (80, 40, true)] {
+        let ops2 = fused_op_counts(m, n, 2, 808);
+        let ops5 = fused_op_counts(m, n, 5, 808);
+        for op in [
+            "stack_k", "ormqr_step_k", "ormlq_step_k", "q_gemm_k", "eye_k", "set_block_k",
+            "secular_k", "merge_gemm_k", "bdc_row_k",
+        ] {
+            assert_eq!(
+                ops2.get(op),
+                ops5.get(op),
+                "{m}x{n}: {op} count must not scale with lanes"
+            );
+        }
+        // the back end ran k-wide: exactly one packed ormqr/ormlq chain
+        assert!(ops5["ormqr_step_k"] >= 1);
+        assert!(!ops5.contains_key("ormqr_step"), "scalar ormqr in fused back end");
+        assert!(!ops5.contains_key("ormlq_step"), "scalar ormlq in fused back end");
+        assert!(
+            !ops5.contains_key("lane_slice"),
+            "per-lane slicing survived the k-wide back end"
+        );
+        if ts {
+            // two stacks packed (factors + thin Qs), one k-wide gemm
+            assert_eq!(ops5.get("stack_k"), Some(&2));
+            assert_eq!(ops5.get("q_gemm_k"), Some(&1));
+            assert!(!ops5.contains_key("gemm"), "scalar gemm in TS fused back end");
+        } else {
+            assert_eq!(ops5.get("stack_k"), Some(&1));
+            assert!(!ops5.contains_key("q_gemm_k"));
+        }
+    }
 }
 
 #[test]
