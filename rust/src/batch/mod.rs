@@ -96,6 +96,13 @@ pub struct BatchStats {
     /// exactly as dealt to the pool (so callers report what actually
     /// ran instead of re-deriving it).
     pub schedule: Vec<plan::Bucket>,
+    /// Commands shape- and lifetime-checked by the op-stream verifier
+    /// (`runtime/verify.rs`) summed over every pool worker's device; 0
+    /// when verification is disabled.
+    pub verified_ops: u64,
+    /// Wall seconds spent inside the verifier across the batch — the
+    /// audit overhead `BENCH_batch.json` records (~0 when disabled).
+    pub verify_sec: f64,
 }
 
 /// One unit's outcome: (input index, result) pairs — one pair for a
@@ -169,7 +176,7 @@ pub fn gesvd_batched_with_stats(
                     Ok(d) => d,
                     Err(e) => return Err((lowest, e.clone())),
                 };
-                match unit {
+                let solved: UnitOut = match unit {
                     WorkUnit::Single(i) => gesvd(d, &inputs[i], &solve_cfg, solver)
                         .map(|r| (vec![(i, r)], None))
                         .map_err(|e| (lowest, format!("{e:#}"))),
@@ -183,7 +190,17 @@ pub fn gesvd_batched_with_stats(
                             })
                             .map_err(|e| (lowest, format!("{e:#}")))
                     }
+                };
+                // audit the worker's persistent device after each unit:
+                // a clean solve leaves zero stranded buffers, so any
+                // live-never-read buffer here is a solver leak. No-op
+                // unless the op-stream verifier is enabled.
+                if solved.is_ok() {
+                    if let Err(e) = d.verify_leaks() {
+                        return Err((lowest, format!("{e:#}")));
+                    }
                 }
+                solved
             }));
             let r: UnitOut = match solved {
                 Ok(r) => r,
@@ -243,9 +260,14 @@ pub fn gesvd_batched_with_stats(
     // aggregate per-worker device counters (op-count assertions, the
     // live-buffer leak gauge, staging reuse)
     let mut device = DeviceStats::default();
+    let (mut verified_ops, mut verify_sec) = (0u64, 0.0f64);
     for st in states.into_iter().flatten() {
         if let Ok(d) = st {
             device.absorb(&d.stats());
+            if let Some((ops, sec)) = d.verify_counters() {
+                verified_ops += ops;
+                verify_sec += sec;
+            }
         }
     }
 
@@ -270,6 +292,8 @@ pub fn gesvd_batched_with_stats(
         device,
         phase_sec,
         schedule: plan.buckets,
+        verified_ops,
+        verify_sec,
     };
     Ok((results, stats))
 }

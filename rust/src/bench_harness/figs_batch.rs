@@ -129,6 +129,10 @@ pub fn fig_batch(ctx: &Ctx) -> Result<()> {
             ("fused_op_count", op_counts(&fused_stats)),
             ("pool_phase_sec", phase_split(&pool_stats)),
             ("fused_phase_sec", phase_split(&fused_stats)),
+            // verifier overhead (both ~0 unless GCSVD_VERIFY/--verify):
+            // the bench trajectory records what stream auditing costs
+            ("verified_ops", Json::uint(pool_stats.verified_ops)),
+            ("verify_sec", Json::num(pool_stats.verify_sec)),
         ]));
     }
 

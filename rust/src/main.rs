@@ -4,7 +4,7 @@
 //!   svd       --m M --n N [--kind K] [--theta T] [--solver S] [--block B]
 //!             run one SVD, print sigma head, accuracy and the phase profile
 //!   svd-batch [--batch N] [--m M] [--n N] [--mixed] [--solver S]
-//!             [--threads T] [--fuse] [--check] [--json FILE]
+//!             [--threads T] [--fuse] [--check] [--verify] [--json FILE]
 //!             batched SVD over the work-stealing pool; prints bucket
 //!             schedule + throughput (matrices/s, aggregate GFLOP/s), and
 //!             with --check the serial-loop baseline + parity; --fuse
@@ -19,7 +19,10 @@
 //!   info      list artifact coverage
 //!
 //! Global flags: --backend host|pjrt (or GCSVD_BACKEND; default host),
-//! --artifacts DIR (pjrt only), --kernel pallas|xla, --no-transfer-model
+//! --artifacts DIR (pjrt only), --kernel pallas|xla, --no-transfer-model,
+//! --verify (audit every recorded op stream with the static verifier —
+//! shape/lane signature checks plus buffer lifetime analysis; also
+//! GCSVD_VERIFY=1, on by default in debug builds)
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -100,6 +103,11 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if args.get("no-transfer-model").is_some() {
         cfg.transfer.enabled = false;
+    }
+    if args.get("verify").is_some() {
+        // force the op-stream verifier on for every device this process
+        // constructs (pool workers included)
+        gcsvd::runtime::verify::force(true);
     }
     Ok(cfg)
 }
@@ -241,6 +249,12 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
             .collect();
         println!("phase split (summed over items): {}", split.join(" | "));
     }
+    if stats.verified_ops > 0 {
+        println!(
+            "verify: {} ops checked in {:.3}s (op-stream verifier clean)",
+            stats.verified_ops, stats.verify_sec
+        );
+    }
 
     let mut serial_wall: Option<f64> = None;
     if args.get("check").is_some() {
@@ -310,6 +324,8 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
             ("device_exec_count", Json::uint(stats.device.exec_count)),
             ("staging_hits", Json::uint(stats.device.staging_hits)),
             ("live_buffers", Json::int(stats.device.live_buffers as i64)),
+            ("verified_ops", Json::uint(stats.verified_ops)),
+            ("verify_sec", Json::num(stats.verify_sec)),
             // same mappings the bench figure writes into BENCH_batch.json,
             // so the two artifacts cannot drift in key format
             ("device_op_count", figs_batch::op_counts(&stats)),

@@ -155,8 +155,11 @@ impl BdcEngine for DeviceEngine {
         let rb = self.dev.scalar_i64(row as i64);
         let out = self.dev.op("bdc_row", &[("n", self.n as i64)], &[self.v_buf(), rb]);
         self.dev.free(rb);
-        let full = self.dev.read(out).expect("v_row read");
+        // free before unwrapping so a failed read does not strand the
+        // buffer on the (possibly long-lived pool-worker) device
+        let full = self.dev.read(out);
         self.dev.free(out);
+        let full = full.expect("v_row read");
         let row = full[c0..c0 + len].to_vec();
         self.dev.recycle(full);
         row

@@ -131,8 +131,11 @@ impl BdcEngineK for DeviceEngineK {
             .dev
             .op("bdc_row_k", &[("k", k as i64), ("n", n as i64)], &[self.v_buf(), rb]);
         self.dev.free(rb);
-        let full = self.dev.read(out).expect("v_row_k read");
+        // free before unwrapping so a failed read does not strand the
+        // buffer on the (possibly long-lived pool-worker) device
+        let full = self.dev.read(out);
         self.dev.free(out);
+        let full = full.expect("v_row_k read");
         let rows = (0..k)
             .map(|l| full[l * n + c0..l * n + c0 + len].to_vec())
             .collect();

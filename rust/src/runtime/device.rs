@@ -25,6 +25,7 @@ use crate::runtime::backend::Backend;
 use crate::runtime::host::HostBackend;
 use crate::runtime::registry::OpKey;
 use crate::runtime::transfer::{TransferModel, TransferStats};
+use crate::runtime::verify::{self, TraceCmd, Verifier};
 
 /// Which backend a [`Device`] executes on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,6 +83,20 @@ impl BackendKind {
 /// Handle to a device buffer (valid on the worker thread only).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct BufId(u64);
+
+impl BufId {
+    /// Raw handle value (stream-verifier tooling).
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild a handle from a raw value — for hand-authored verifier
+    /// streams (`tests/verify.rs`). A forged id fed to a live device is
+    /// caught by the verifier/worker, not by construction.
+    pub fn from_raw(v: u64) -> BufId {
+        BufId(v)
+    }
+}
 
 enum Cmd {
     UploadF64 { id: BufId, data: Vec<f64>, dims: Vec<usize> },
@@ -172,6 +187,11 @@ pub struct Device {
     /// Transfer accounting + model charging for the *baseline* paths.
     pub model: TransferModel,
     pub tstats: Arc<Mutex<TransferStats>>,
+    /// Op-stream verifier shim (`runtime/verify.rs`): when present,
+    /// every enqueued command is statically checked before the worker
+    /// executes it; violations surface at the next synchronising call.
+    /// `None` (the release default) costs nothing on the hot path.
+    verifier: Option<Arc<Mutex<Verifier>>>,
 }
 
 impl Device {
@@ -247,6 +267,7 @@ impl Device {
             staging_hits: Arc::new(AtomicU64::new(0)),
             model,
             tstats: Arc::new(Mutex::new(TransferStats::default())),
+            verifier: verify::enabled().then(|| Arc::new(Mutex::new(Verifier::new()))),
         })
     }
 
@@ -268,11 +289,47 @@ impl Device {
         self.tx.send(cmd).expect("device worker gone");
     }
 
+    /// Feed one command to the verifier shim (no-op when disabled).
+    fn vcheck(&self, cmd: &TraceCmd) {
+        if let Some(v) = &self.verifier {
+            v.lock().unwrap().check(cmd);
+        }
+    }
+
+    /// Drain latched verifier violations into one error (like the
+    /// worker's `pending_err`, the latch clears so the device recovers).
+    fn vtake(&self) -> Option<anyhow::Error> {
+        let v = self.verifier.as_ref()?;
+        v.lock().unwrap().take_report().map(|r| anyhow!(r))
+    }
+
+    /// End-of-stream leak audit: flags every live, never-read buffer,
+    /// naming its allocating op. No-op when verification is disabled.
+    pub fn verify_leaks(&self) -> Result<()> {
+        if let Some(v) = &self.verifier {
+            let mut g = v.lock().unwrap();
+            g.leak_check();
+            if let Some(r) = g.take_report() {
+                return Err(anyhow!(r));
+            }
+        }
+        Ok(())
+    }
+
+    /// Verifier overhead counters `(checked ops, wall seconds)`; `None`
+    /// when verification is disabled.
+    pub fn verify_counters(&self) -> Option<(u64, f64)> {
+        let v = self.verifier.as_ref()?;
+        let g = v.lock().unwrap();
+        Some((g.checked_ops, g.elapsed_sec))
+    }
+
     /// Asynchronous f64 upload (no transfer-model charge — the
     /// GPU-centered path only ships vectors, which we account but do not
     /// penalise; baselines use `upload_charged`).
     pub fn upload(&self, data: Vec<f64>, dims: &[usize]) -> BufId {
         let id = self.fresh();
+        self.vcheck(&TraceCmd::UploadF64 { id, len: data.len() });
         self.send(Cmd::UploadF64 { id, data, dims: dims.to_vec() });
         id
     }
@@ -350,6 +407,7 @@ impl Device {
 
     pub fn upload_i64(&self, data: Vec<i64>, dims: &[usize]) -> BufId {
         let id = self.fresh();
+        self.vcheck(&TraceCmd::UploadI64 { id, len: data.len() });
         self.send(Cmd::UploadI64 { id, data, dims: dims.to_vec() });
         id
     }
@@ -361,6 +419,9 @@ impl Device {
     /// Enqueue an op; returns the output handle immediately.
     pub fn exec(&self, op: OpKey, args: &[BufId]) -> BufId {
         let out = self.fresh();
+        if self.verifier.is_some() {
+            self.vcheck(&TraceCmd::Exec { op: op.clone(), args: args.to_vec(), out });
+        }
         self.send(Cmd::Exec { op, args: args.to_vec(), out });
         out
     }
@@ -369,11 +430,18 @@ impl Device {
         self.exec(OpKey::new(name, params), args)
     }
 
-    /// Blocking full read.
+    /// Blocking full read. A verifier violation latched since the last
+    /// synchronising call surfaces here (and takes priority over the
+    /// worker's own latched error — its diagnostic is richer).
     pub fn read(&self, id: BufId) -> Result<Vec<f64>> {
+        self.vcheck(&TraceCmd::Read { id });
         let (reply, rx) = channel();
         self.send(Cmd::Read { id, reply });
-        rx.recv().context("device worker gone")?
+        let r = rx.recv().context("device worker gone")?;
+        match self.vtake() {
+            Some(e) => Err(e),
+            None => r,
+        }
     }
 
     /// Blocking read charging the PCIe model (baseline D2H traffic).
@@ -388,12 +456,18 @@ impl Device {
 
     /// Blocking prefix read (offset-0 raw copy; used for packed headers).
     pub fn read_prefix(&self, id: BufId, len: usize) -> Result<Vec<f64>> {
+        self.vcheck(&TraceCmd::ReadPrefix { id, len });
         let (reply, rx) = channel();
         self.send(Cmd::ReadPrefix { id, len, reply });
-        rx.recv().context("device worker gone")?
+        let r = rx.recv().context("device worker gone")?;
+        match self.vtake() {
+            Some(e) => Err(e),
+            None => r,
+        }
     }
 
     pub fn free(&self, id: BufId) {
+        self.vcheck(&TraceCmd::Free { id });
         self.send(Cmd::Free { id });
     }
 
@@ -401,7 +475,11 @@ impl Device {
     pub fn sync(&self) -> Result<()> {
         let (reply, rx) = channel();
         self.send(Cmd::Sync { reply });
-        rx.recv().context("device worker gone")?
+        let r = rx.recv().context("device worker gone")?;
+        match self.vtake() {
+            Some(e) => Err(e),
+            None => r,
+        }
     }
 
     pub fn stats(&self) -> DeviceStats {

@@ -12,8 +12,10 @@ pub mod pjrt;
 pub mod pool;
 pub mod registry;
 pub mod transfer;
+pub mod verify;
 
 pub use backend::Backend;
 pub use device::{BackendKind, BufId, Device, DeviceStats};
 pub use pool::StealPool;
 pub use registry::OpKey;
+pub use verify::{verify_stream, TraceCmd, Verifier, Violation, ViolationKind};

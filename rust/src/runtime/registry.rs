@@ -248,6 +248,14 @@ impl Manifest {
         self.files.contains_key(key)
     }
 
+    /// Every key in the manifest, sorted (the verifier's grid-coverage
+    /// test diffs this against the signature table).
+    pub fn keys(&self) -> Vec<OpKey> {
+        let mut v: Vec<OpKey> = self.files.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
     /// All keys for an op family (benches enumerate available shapes).
     pub fn keys_for(&self, name: &str) -> Vec<OpKey> {
         let mut v: Vec<OpKey> = self

@@ -1,0 +1,902 @@
+//! Op-stream verifier: a borrow-checker for device buffers.
+//!
+//! The device records long GPU-resident op streams with no CPU round
+//! trips, so a use-after-free of a [`BufId`], a leaked intermediate, or a
+//! k-wide op fed a mismatched `[k, n, n]` stack surfaces only as silent
+//! wrong numbers deep inside a fused BDC tree. This module checks the
+//! stream *statically, before execution*:
+//!
+//! 1. a declarative **op signature table** ([`signature`]) giving, for
+//!    every op in the builtin registry grid, the operand arity, dtypes
+//!    and symbolic shape expressions over the op-key params (`m`, `n`,
+//!    `b`, `k`, …), plus the output shape — so every `exec` is shape-
+//!    and lane-count-checked without running it;
+//! 2. a **buffer lifetime analysis** over the command trace
+//!    ([`Verifier`]): use-after-free, double-free, read-of-never-written
+//!    and leak detection, pinpointing the allocating op of the offending
+//!    buffer.
+//!
+//! The live integration is a recording shim inside [`Device`]: when
+//! verification is enabled (see [`enabled`]), every enqueued command is
+//! checked *at enqueue time* — i.e. before the worker executes it — and
+//! the first violations are surfaced as an error at the next
+//! synchronising call (`read`/`read_prefix`/`sync`), mirroring the
+//! worker's own error latching. Hand-authored streams can instead be
+//! checked with nothing executed at all via [`verify_stream`].
+//!
+//! Enablement (first match wins):
+//! * [`force`] — process-wide override (the CLI's `--verify` flag);
+//! * `GCSVD_VERIFY=1` / `GCSVD_VERIFY=0` in the environment;
+//! * default: on under `debug_assertions` (so `cargo test` audits every
+//!   stream it records), off in release builds.
+//!
+//! Adding a new op: give it an entry in [`table`] next to its host-
+//! backend arm. The grid-coverage test below diffs the builtin registry
+//! grid against the table, so a new op without a signature fails CI.
+//!
+//! [`Device`]: crate::runtime::Device
+//! [`BufId`]: crate::runtime::BufId
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::runtime::device::BufId;
+use crate::runtime::registry::OpKey;
+
+// ---------------------------------------------------------------------------
+// enablement
+// ---------------------------------------------------------------------------
+
+/// 0 = unset (env / build default), 1 = forced off, 2 = forced on.
+static FORCE: AtomicU8 = AtomicU8::new(0);
+
+/// Process-wide override of the verification default (the CLI `--verify`
+/// flag). Devices constructed *after* this call honour it.
+pub fn force(on: bool) {
+    FORCE.store(if on { 2 } else { 1 }, Ordering::SeqCst);
+}
+
+/// Whether newly-constructed devices should record and verify their
+/// streams: [`force`] override, else `GCSVD_VERIFY` (`1`/`0`), else on
+/// under `debug_assertions` and off in release.
+pub fn enabled() -> bool {
+    match FORCE.load(Ordering::SeqCst) {
+        2 => true,
+        1 => false,
+        _ => match std::env::var("GCSVD_VERIFY") {
+            Ok(v) => !matches!(v.as_str(), "" | "0" | "false" | "off"),
+            Err(_) => cfg!(debug_assertions),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// symbolic shape expressions
+// ---------------------------------------------------------------------------
+
+/// A symbolic element-count expression over an op key's integer params.
+#[derive(Clone, Debug)]
+pub enum Dim {
+    /// Literal element count.
+    Const(i64),
+    /// The named key param.
+    Param(&'static str),
+    /// The first of two params present in the key (`gemv_t` is keyed by
+    /// `n` in the SVD pipelines and by `k` in the Fig. 5 sweeps).
+    Either(&'static str, &'static str),
+    /// Product of two sub-expressions.
+    Mul(Box<Dim>, Box<Dim>),
+    /// Sum of two sub-expressions.
+    Add(Box<Dim>, Box<Dim>),
+}
+
+/// Shorthand: the named key param.
+fn p(name: &'static str) -> Dim {
+    Dim::Param(name)
+}
+
+/// Shorthand: a literal count.
+fn c(v: i64) -> Dim {
+    Dim::Const(v)
+}
+
+/// Shorthand: first present of two params.
+fn por(a: &'static str, b: &'static str) -> Dim {
+    Dim::Either(a, b)
+}
+
+impl std::ops::Mul for Dim {
+    type Output = Dim;
+    fn mul(self, rhs: Dim) -> Dim {
+        Dim::Mul(Box::new(self), Box::new(rhs))
+    }
+}
+
+impl std::ops::Add for Dim {
+    type Output = Dim;
+    fn add(self, rhs: Dim) -> Dim {
+        Dim::Add(Box::new(self), Box::new(rhs))
+    }
+}
+
+impl Dim {
+    /// Evaluate against an op key; `Err` names the missing param.
+    pub fn eval(&self, key: &OpKey) -> Result<i64, String> {
+        match self {
+            Dim::Const(v) => Ok(*v),
+            Dim::Param(name) => key
+                .params
+                .get(*name)
+                .copied()
+                .ok_or_else(|| format!("missing param `{name}`")),
+            Dim::Either(a, b) => key
+                .params
+                .get(*a)
+                .or_else(|| key.params.get(*b))
+                .copied()
+                .ok_or_else(|| format!("missing param `{a}` (or `{b}`)")),
+            Dim::Mul(l, r) => Ok(l.eval(key)? * r.eval(key)?),
+            Dim::Add(l, r) => Ok(l.eval(key)? + r.eval(key)?),
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dim::Const(v) => write!(f, "{v}"),
+            Dim::Param(n) => write!(f, "{n}"),
+            Dim::Either(a, b) => write!(f, "{a}|{b}"),
+            Dim::Mul(l, r) => write!(f, "{l}*{r}"),
+            Dim::Add(l, r) => write!(f, "({l} + {r})"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// signature table
+// ---------------------------------------------------------------------------
+
+/// Element dtype of a device buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F64,
+    I64,
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::F64 => write!(f, "f64"),
+            DType::I64 => write!(f, "i64"),
+        }
+    }
+}
+
+/// One operand's declared dtype and symbolic length.
+#[derive(Clone, Debug)]
+pub enum ArgSpec {
+    /// f64 array of the given element count.
+    F64(Dim),
+    /// i64 array of the given element count.
+    I64(Dim),
+    /// Length-1 index/count operand; either dtype is accepted (the host
+    /// backend's `.scalar()` does the same).
+    Scalar,
+}
+
+/// Declared operand list of an op.
+#[derive(Clone, Debug)]
+pub enum Arity {
+    /// Fixed operand list.
+    Fixed(Vec<ArgSpec>),
+    /// `count` operands, each an f64 array of `each` elements
+    /// (`stack_k`: one arg per lane).
+    PerLane { count: Dim, each: Dim },
+}
+
+/// Full signature of one op family: operands plus output element count.
+/// Every output of the host op set is f64.
+#[derive(Clone, Debug)]
+pub struct Sig {
+    pub args: Arity,
+    pub out: Dim,
+}
+
+/// Look up the signature for an op family by name.
+pub fn signature(name: &str) -> Option<&'static Sig> {
+    table().get(name)
+}
+
+/// Every op family with a declared signature (sorted; the grid-coverage
+/// test and `info`-style tooling enumerate this).
+pub fn signature_names() -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = table().keys().copied().collect();
+    v.sort_unstable();
+    v
+}
+
+fn fixed(args: Vec<ArgSpec>, out: Dim) -> Sig {
+    Sig { args: Arity::Fixed(args), out }
+}
+
+/// The declarative signature table. Dims are element counts; matrices
+/// are row-major `rows*cols`. The table mirrors the host-backend arms in
+/// `runtime/host.rs` — keep the two adjacent in review.
+fn table() -> &'static HashMap<&'static str, Sig> {
+    static TABLE: OnceLock<HashMap<&'static str, Sig>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        use ArgSpec::{Scalar, F64, I64};
+        let mut t: HashMap<&'static str, Sig> = HashMap::new();
+        let mut put = |name: &'static str, sig: Sig| {
+            t.insert(name, sig);
+        };
+        // labrd workspace: [d e tauq taup | A | P(m x 2b) | Q(n x 2b)]
+        let ws = || c(4) * p("b") + p("m") * p("n") + (p("m") + p("n")) * (c(2) * p("b"));
+        let mn = || p("m") * p("n");
+        let knn = || p("k") * p("n") * p("n");
+        // packed secular result: [sigma | U(nb x nb) | V(nb x nb)]
+        let sec = || p("nb") + c(2) * p("nb") * p("nb");
+
+        // ---- dense basics ----
+        put("eye", fixed(vec![], mn()));
+        put("zeros", fixed(vec![], p("n") * p("n")));
+        put("gemm", fixed(vec![F64(p("m") * p("k")), F64(p("k") * p("n"))], mn()));
+
+        // ---- gebrd: panel + trailing update ----
+        put("labrd", fixed(vec![F64(mn()), Scalar], ws()));
+        for op in ["gebrd_update", "gebrd_update_xla", "gebrd_update2_ws"] {
+            put(op, fixed(vec![F64(ws()), Scalar], mn()));
+        }
+        put(
+            "gebrd_update2",
+            fixed(
+                vec![
+                    F64(mn()),
+                    F64(p("m") * p("b")),
+                    F64(p("n") * p("b")),
+                    F64(p("m") * p("b")),
+                    F64(p("n") * p("b")),
+                    Scalar,
+                ],
+                mn(),
+            ),
+        );
+        put("extract_a", fixed(vec![F64(ws())], mn()));
+        put("ws_head", fixed(vec![F64(ws())], c(4) * p("b")));
+
+        // ---- QR steps (modified CWY + classic baselines) ----
+        for op in ["geqrf_step", "geqrf_step_classic"] {
+            put(op, fixed(vec![F64(mn()), Scalar], p("b") + mn()));
+        }
+        put("qr_head", fixed(vec![F64(p("b") + mn())], p("b")));
+        put("geqrf_extract_a", fixed(vec![F64(p("b") + mn())], mn()));
+        for op in ["orgqr_step", "orgqr_step_classic"] {
+            put(op, fixed(vec![F64(mn()), F64(mn()), F64(p("b")), Scalar], mn()));
+        }
+        for op in ["ormqr_step", "ormqr_step_classic"] {
+            put(
+                op,
+                fixed(
+                    vec![F64(p("m") * p("k")), F64(mn()), F64(p("b")), Scalar],
+                    p("m") * p("k"),
+                ),
+            );
+        }
+        for op in ["ormlq_step", "ormlq_step_classic"] {
+            put(
+                op,
+                fixed(
+                    vec![F64(p("n") * p("k")), F64(mn()), F64(p("b")), Scalar],
+                    p("n") * p("k"),
+                ),
+            );
+        }
+        put("set_cols", fixed(vec![F64(mn()), F64(p("m") * p("b")), Scalar], mn()));
+        put("set_rows", fixed(vec![F64(mn()), F64(p("b") * p("n")), Scalar], mn()));
+        put(
+            "larfb_up",
+            fixed(
+                vec![F64(mn()), F64(p("m") * p("b")), F64(p("b") * p("b")), Scalar],
+                mn(),
+            ),
+        );
+        put(
+            "larfb_full",
+            fixed(vec![F64(mn()), F64(p("m") * p("b")), F64(p("b") * p("b"))], mn()),
+        );
+
+        // ---- gemv micro-ops (SVD pipelines key by n, Fig. 5 by k) ----
+        for op in ["gemv_t", "gemv_tall_t"] {
+            put(
+                op,
+                fixed(vec![F64(p("m") * por("n", "k")), F64(p("m"))], por("n", "k")),
+            );
+        }
+        for op in ["gemv_n", "gemv_tall_n"] {
+            put(
+                op,
+                fixed(vec![F64(p("m") * por("n", "k")), F64(por("n", "k"))], p("m")),
+            );
+        }
+        put(
+            "gemv_tall_n_acc",
+            fixed(vec![F64(p("m") * p("k")), F64(p("k")), F64(p("m"))], p("m")),
+        );
+
+        // ---- Fig. 5 merged-update kernels ----
+        let mk = || p("m") * p("k");
+        let m2k = || p("m") * (c(2) * p("k"));
+        put("rank_update", fixed(vec![F64(p("m") * p("m")), F64(mk()), F64(mk())], p("m") * p("m")));
+        put(
+            "fig5_gemv4",
+            fixed(vec![F64(mk()), F64(mk()), F64(mk()), F64(mk()), F64(p("m"))], p("m")),
+        );
+        put("fig5_gemv2", fixed(vec![F64(m2k()), F64(m2k()), F64(p("m"))], p("m")));
+        put(
+            "fig5_gemm2",
+            fixed(
+                vec![F64(p("m") * p("m")), F64(mk()), F64(mk()), F64(mk()), F64(mk())],
+                p("m") * p("m"),
+            ),
+        );
+        for op in ["fig5_gemm1", "fig5_gemm1_xla"] {
+            put(
+                op,
+                fixed(vec![F64(p("m") * p("m")), F64(m2k()), F64(m2k())], p("m") * p("m")),
+            );
+        }
+
+        // ---- scalar BDC tree ops ----
+        put("bdc_row", fixed(vec![F64(p("n") * p("n")), Scalar], p("n")));
+        put(
+            "bdc_rots",
+            fixed(
+                vec![F64(p("n") * p("n")), F64(p("rmax") * c(4)), Scalar],
+                p("n") * p("n"),
+            ),
+        );
+        put(
+            "bdc_permute_cols",
+            fixed(vec![F64(p("n") * p("n")), I64(p("n"))], p("n") * p("n")),
+        );
+        for op in ["bdc_secular", "bdc_secular_xla"] {
+            put(
+                op,
+                fixed(
+                    vec![F64(p("nb")), F64(p("nb")), F64(p("nb")), F64(p("nb")), Scalar],
+                    sec(),
+                ),
+            );
+        }
+        put("bdc_secular_u", fixed(vec![F64(sec())], p("nb") * p("nb")));
+        put("bdc_secular_v", fixed(vec![F64(sec())], p("nb") * p("nb")));
+        put(
+            "bdc_block_gemm",
+            fixed(
+                vec![F64(p("n") * p("n")), F64(p("kb") * p("kb")), Scalar, Scalar, Scalar],
+                p("n") * p("n"),
+            ),
+        );
+        put(
+            "set_block",
+            fixed(
+                vec![F64(p("n") * p("n")), F64(p("bs") * p("bs")), Scalar, Scalar, Scalar],
+                p("n") * p("n"),
+            ),
+        );
+
+        // ---- k-wide fused-tree ops over packed [k, n, n] stacks ----
+        put("eye_k", fixed(vec![], knn()));
+        put("lane_slice", fixed(vec![F64(knn()), Scalar], p("n") * p("n")));
+        put(
+            "set_block_k",
+            fixed(
+                vec![F64(knn()), F64(p("k") * p("bs") * p("bs")), Scalar, Scalar, Scalar],
+                knn(),
+            ),
+        );
+        put("bdc_row_k", fixed(vec![F64(knn()), Scalar], p("k") * p("n")));
+        put(
+            "rot_cols_k",
+            fixed(
+                vec![F64(knn()), F64(p("k") * p("rmax") * c(4)), I64(p("k"))],
+                knn(),
+            ),
+        );
+        put("permute_k", fixed(vec![F64(knn()), I64(p("k") * p("n"))], knn()));
+        let knb = || p("k") * p("nb");
+        put(
+            "secular_k",
+            fixed(
+                vec![F64(knb()), F64(knb()), F64(knb()), F64(knb()), I64(p("k"))],
+                p("k") * sec(),
+            ),
+        );
+        for op in ["secular_u_k", "secular_v_k"] {
+            put(op, fixed(vec![F64(p("k") * sec())], p("k") * p("nb") * p("nb")));
+        }
+        put(
+            "merge_gemm_k",
+            fixed(
+                vec![F64(knn()), F64(p("k") * p("kb") * p("kb")), Scalar, Scalar, I64(p("k"))],
+                knn(),
+            ),
+        );
+        put(
+            "stack_k",
+            Sig { args: Arity::PerLane { count: p("k"), each: p("len") }, out: p("k") * p("len") },
+        );
+        for op in ["ormqr_step_k", "ormlq_step_k"] {
+            put(
+                op,
+                fixed(vec![F64(knn()), F64(knn()), F64(p("k") * p("b")), Scalar], knn()),
+            );
+        }
+        put(
+            "q_gemm_k",
+            fixed(vec![F64(p("k") * mn()), F64(knn())], p("k") * mn()),
+        );
+
+        t
+    })
+}
+
+// ---------------------------------------------------------------------------
+// trace commands + lifetime analysis
+// ---------------------------------------------------------------------------
+
+/// One recorded device command, as the verifier sees it. Mirrors the
+/// device's internal command enum minus the payloads (only element
+/// counts matter for checking).
+#[derive(Clone, Debug)]
+pub enum TraceCmd {
+    UploadF64 { id: BufId, len: usize },
+    UploadI64 { id: BufId, len: usize },
+    Exec { op: OpKey, args: Vec<BufId>, out: BufId },
+    Read { id: BufId },
+    ReadPrefix { id: BufId, len: usize },
+    Free { id: BufId },
+}
+
+/// What a violation is, for table-driven assertions; the human-readable
+/// detail (op name, buffer, allocating site) lives in [`Violation::msg`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// Exec of an op with no signature table entry.
+    UnknownOp,
+    /// A signature dim referenced a param the key does not carry.
+    BadParams,
+    /// Operand count differs from the declared arity.
+    Arity,
+    /// Operand dtype differs from the declared dtype.
+    Dtype,
+    /// Operand element count differs from the declared symbolic shape
+    /// (includes lane-count mismatches of `[k, n, n]` stacks).
+    Shape,
+    /// A freed buffer was used (exec operand, read, or free target).
+    UseAfterFree,
+    /// A buffer that was never written was used or read.
+    Undefined,
+    /// Second free of the same buffer.
+    DoubleFree,
+    /// `read_prefix` longer than the buffer.
+    PrefixOverrun,
+    /// A live buffer's id was written again (forged/reused handle).
+    Redefined,
+    /// Live and never read at an end-of-stream audit point.
+    Leak,
+}
+
+/// One diagnosed violation: the command index it was detected at, its
+/// kind, and a message naming the offending op and buffer (and, for
+/// lifetime violations, the allocating op).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub at: usize,
+    pub kind: ViolationKind,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cmd #{}: [{:?}] {}", self.at, self.kind, self.msg)
+    }
+}
+
+/// Per-buffer lifetime state.
+#[derive(Clone, Debug)]
+struct Buf {
+    dtype: DType,
+    /// Element count; `None` when the producing op was unknown (checks
+    /// on such buffers are skipped instead of cascading).
+    len: Option<usize>,
+    /// Allocating site: `upload` or the producing op key.
+    origin: String,
+    born: usize,
+    freed: Option<usize>,
+    read: bool,
+    leak_reported: bool,
+}
+
+/// Streaming checker over a device command trace. Feed commands with
+/// [`check`](Verifier::check) in enqueue order; collected violations are
+/// drained with [`take_report`](Verifier::take_report) (the device shim
+/// surfaces them at synchronising calls) or inspected directly.
+#[derive(Debug, Default)]
+pub struct Verifier {
+    bufs: HashMap<BufId, Buf>,
+    violations: Vec<Violation>,
+    at: usize,
+    /// Execs checked against the signature table.
+    pub checked_ops: u64,
+    /// Wall seconds spent checking (the verifier-overhead counter).
+    pub elapsed_sec: f64,
+}
+
+impl Verifier {
+    pub fn new() -> Verifier {
+        Verifier::default()
+    }
+
+    pub fn violations(&self) -> &[Violation] {
+        &self.violations
+    }
+
+    /// Drain every collected violation into one report, or `None` when
+    /// the stream is clean so far.
+    pub fn take_report(&mut self) -> Option<String> {
+        if self.violations.is_empty() {
+            return None;
+        }
+        Some(render(&std::mem::take(&mut self.violations)))
+    }
+
+    fn flag(&mut self, kind: ViolationKind, msg: String) {
+        self.violations.push(Violation { at: self.at, kind, msg });
+    }
+
+    /// Define `id`; flags a redefinition if the handle is already live.
+    fn define(&mut self, id: BufId, dtype: DType, len: Option<usize>, origin: String) {
+        let born = self.at;
+        let live_from = self
+            .bufs
+            .get(&id)
+            .filter(|old| old.freed.is_none())
+            .map(|old| (old.origin.clone(), old.born));
+        if let Some((old_origin, old_born)) = live_from {
+            self.flag(
+                ViolationKind::Redefined,
+                format!(
+                    "buffer {id:?} written by `{origin}` is still live from `{old_origin}` \
+                     (cmd #{old_born})"
+                ),
+            );
+        }
+        self.bufs.insert(
+            id,
+            Buf { dtype, len, origin, born, freed: None, read: false, leak_reported: false },
+        );
+    }
+
+    /// Look up `id` for a use inside `what`; flags and returns `None`
+    /// when the buffer is undefined or freed.
+    fn use_buf(&mut self, id: BufId, what: &str) -> Option<&Buf> {
+        let freed_info = match self.bufs.get(&id) {
+            None => {
+                self.flag(
+                    ViolationKind::Undefined,
+                    format!("{what}: buffer {id:?} was never written"),
+                );
+                return None;
+            }
+            Some(b) => b.freed.map(|f| (b.origin.clone(), b.born, f)),
+        };
+        if let Some((origin, born, freed_at)) = freed_info {
+            self.flag(
+                ViolationKind::UseAfterFree,
+                format!(
+                    "{what}: buffer {id:?} (from `{origin}`, cmd #{born}) was freed at \
+                     cmd #{freed_at}"
+                ),
+            );
+            return None;
+        }
+        self.bufs.get(&id)
+    }
+
+    /// Check one command (enqueue order). Violations accumulate; the
+    /// stream may keep going so one report covers everything found.
+    pub fn check(&mut self, cmd: &TraceCmd) {
+        let t0 = std::time::Instant::now();
+        match cmd {
+            TraceCmd::UploadF64 { id, len } => {
+                self.define(*id, DType::F64, Some(*len), "upload".to_string());
+            }
+            TraceCmd::UploadI64 { id, len } => {
+                self.define(*id, DType::I64, Some(*len), "upload".to_string());
+            }
+            TraceCmd::Exec { op, args, out } => {
+                self.checked_ops += 1;
+                self.check_exec(op, args, *out);
+            }
+            TraceCmd::Read { id } => {
+                if self.use_buf(*id, "read").is_some() {
+                    self.bufs.get_mut(id).unwrap().read = true;
+                }
+            }
+            TraceCmd::ReadPrefix { id, len } => {
+                let over = match self.use_buf(*id, "read_prefix") {
+                    Some(b) => b.len.is_some_and(|have| *len > have),
+                    None => false,
+                };
+                if let Some(b) = self.bufs.get_mut(id) {
+                    if b.freed.is_none() {
+                        b.read = true;
+                    }
+                }
+                if over {
+                    let have = self.bufs[id].len.unwrap();
+                    self.flag(
+                        ViolationKind::PrefixOverrun,
+                        format!("read_prefix of {len} elements from buffer {id:?} of {have}"),
+                    );
+                }
+            }
+            TraceCmd::Free { id } => match self.bufs.get_mut(id) {
+                None => {
+                    self.flag(
+                        ViolationKind::Undefined,
+                        format!("free: buffer {id:?} was never written"),
+                    );
+                }
+                Some(b) => match b.freed {
+                    Some(prev) => {
+                        let msg = format!(
+                            "double free of buffer {id:?} (from `{}`, cmd #{}); first freed at cmd #{prev}",
+                            b.origin, b.born
+                        );
+                        self.flag(ViolationKind::DoubleFree, msg);
+                    }
+                    None => b.freed = Some(self.at),
+                },
+            },
+        }
+        self.at += 1;
+        self.elapsed_sec += t0.elapsed().as_secs_f64();
+    }
+
+    fn check_exec(&mut self, op: &OpKey, args: &[BufId], out: BufId) {
+        let Some(sig) = signature(&op.name) else {
+            self.flag(
+                ViolationKind::UnknownOp,
+                format!("exec `{op}` (output {out:?}): no signature table entry"),
+            );
+            self.define(out, DType::F64, None, format!("{op}"));
+            return;
+        };
+
+        // resolve the operand spec list (lane fan-out for stack_k)
+        let specs: Vec<ArgSpec> = match &sig.args {
+            Arity::Fixed(v) => v.clone(),
+            Arity::PerLane { count, each } => match count.eval(op) {
+                Ok(k) => vec![ArgSpec::F64(each.clone()); k.max(0) as usize],
+                Err(e) => {
+                    self.flag(ViolationKind::BadParams, format!("exec `{op}`: {e}"));
+                    vec![]
+                }
+            },
+        };
+        if args.len() != specs.len() {
+            self.flag(
+                ViolationKind::Arity,
+                format!("exec `{op}`: {} operands, signature declares {}", args.len(), specs.len()),
+            );
+        }
+
+        for (i, (id, spec)) in args.iter().zip(&specs).enumerate() {
+            let Some(buf) = self.use_buf(*id, &format!("exec `{op}` operand {i}")) else {
+                continue;
+            };
+            let (dtype, len) = (buf.dtype, buf.len);
+            match spec {
+                ArgSpec::Scalar => {
+                    if len.is_some_and(|l| l != 1) {
+                        self.flag(
+                            ViolationKind::Shape,
+                            format!(
+                                "exec `{op}` operand {i}: buffer {id:?} has {} elements, \
+                                 signature declares a scalar",
+                                len.unwrap()
+                            ),
+                        );
+                    }
+                }
+                ArgSpec::F64(dim) | ArgSpec::I64(dim) => {
+                    let want_dtype =
+                        if matches!(spec, ArgSpec::F64(_)) { DType::F64 } else { DType::I64 };
+                    if dtype != want_dtype {
+                        self.flag(
+                            ViolationKind::Dtype,
+                            format!(
+                                "exec `{op}` operand {i}: buffer {id:?} is {dtype}, \
+                                 signature declares {want_dtype}"
+                            ),
+                        );
+                    }
+                    match dim.eval(op) {
+                        Err(e) => {
+                            self.flag(ViolationKind::BadParams, format!("exec `{op}`: {e}"));
+                        }
+                        Ok(want) => {
+                            if let Some(got) = len {
+                                if got as i64 != want {
+                                    self.flag(
+                                        ViolationKind::Shape,
+                                        format!(
+                                            "exec `{op}` operand {i}: buffer {id:?} has {got} \
+                                             elements, signature declares {dim} = {want}"
+                                        ),
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let out_len = match sig.out.eval(op) {
+            Ok(v) => Some(v.max(0) as usize),
+            Err(e) => {
+                self.flag(ViolationKind::BadParams, format!("exec `{op}` output: {e}"));
+                None
+            }
+        };
+        self.define(out, DType::F64, out_len, format!("{op}"));
+    }
+
+    /// End-of-stream audit: flag every live buffer that was never read —
+    /// nothing can ever consume it, so it is a leak. Each buffer is
+    /// reported once even if the audit runs again (pool workers audit
+    /// after every batch item on one long-lived verifier).
+    pub fn leak_check(&mut self) {
+        let mut leaks: Vec<(BufId, String, usize)> = self
+            .bufs
+            .iter()
+            .filter(|(_, b)| b.freed.is_none() && !b.read && !b.leak_reported)
+            .map(|(id, b)| (*id, b.origin.clone(), b.born))
+            .collect();
+        leaks.sort_by_key(|(_, _, born)| *born);
+        for (id, origin, born) in leaks {
+            self.violations.push(Violation {
+                at: self.at,
+                kind: ViolationKind::Leak,
+                msg: format!(
+                    "buffer {id:?} allocated by `{origin}` (cmd #{born}) is still live and \
+                     was never read or freed"
+                ),
+            });
+            self.bufs.get_mut(&id).unwrap().leak_reported = true;
+        }
+    }
+}
+
+/// Render a violation list as the one-per-line report the CLI prints.
+pub fn render(violations: &[Violation]) -> String {
+    let mut s = format!("op-stream verification failed ({} violations):", violations.len());
+    for v in violations {
+        s.push_str("\n  ");
+        s.push_str(&v.to_string());
+    }
+    s
+}
+
+/// Counters from a clean [`verify_stream`] pass.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamReport {
+    pub cmds: usize,
+    pub checked_ops: u64,
+}
+
+/// Statically verify a hand-authored command stream with nothing
+/// executed: full signature + lifetime analysis, then the end-of-stream
+/// leak audit. `Err` carries every violation found.
+pub fn verify_stream(cmds: &[TraceCmd]) -> Result<StreamReport, Vec<Violation>> {
+    let mut v = Verifier::new();
+    for cmd in cmds {
+        v.check(cmd);
+    }
+    v.leak_check();
+    if v.violations.is_empty() {
+        Ok(StreamReport { cmds: cmds.len(), checked_ops: v.checked_ops })
+    } else {
+        Err(v.violations)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::registry::Manifest;
+
+    /// Acceptance gate: every op key in the builtin registry grid has a
+    /// signature entry whose dims all evaluate against that key — a new
+    /// op (or a new param spelling) without a signature fails here.
+    #[test]
+    fn builtin_grid_is_fully_covered() {
+        let manifest = Manifest::builtin();
+        let mut seen = 0usize;
+        for key in manifest.keys() {
+            let sig = signature(&key.name)
+                .unwrap_or_else(|| panic!("no signature for builtin op `{key}`"));
+            let specs: Vec<ArgSpec> = match &sig.args {
+                Arity::Fixed(v) => v.clone(),
+                Arity::PerLane { count, each } => {
+                    let k = count.eval(&key).unwrap_or_else(|e| panic!("`{key}`: {e}"));
+                    assert!(k >= 1, "`{key}`: non-positive lane count {k}");
+                    vec![ArgSpec::F64(each.clone()); k as usize]
+                }
+            };
+            for (i, spec) in specs.iter().enumerate() {
+                if let ArgSpec::F64(d) | ArgSpec::I64(d) = spec {
+                    let v = d
+                        .eval(&key)
+                        .unwrap_or_else(|e| panic!("`{key}` operand {i}: {e}"));
+                    assert!(v >= 1, "`{key}` operand {i}: dim {d} = {v}");
+                }
+            }
+            let out = sig.out.eval(&key).unwrap_or_else(|e| panic!("`{key}` output: {e}"));
+            assert!(out >= 1, "`{key}` output: dim {} = {out}", sig.out);
+            seen += 1;
+        }
+        assert!(seen > 100, "builtin grid unexpectedly small ({seen} keys)");
+    }
+
+    #[test]
+    fn dim_eval_and_display() {
+        let key = OpKey::new("labrd", &[("m", 8), ("n", 4), ("b", 2)]);
+        let ws = c(4) * p("b") + p("m") * p("n") + (p("m") + p("n")) * (c(2) * p("b"));
+        assert_eq!(ws.eval(&key).unwrap(), 8 + 32 + 48);
+        assert_eq!(por("n", "k").eval(&key).unwrap(), 4);
+        assert!(p("zzz").eval(&key).unwrap_err().contains("zzz"));
+        assert_eq!(format!("{}", p("m") * p("n")), "m*n");
+    }
+
+    #[test]
+    fn enablement_forced_overrides_default() {
+        // don't leave the override set for other tests in this process
+        struct Reset;
+        impl Drop for Reset {
+            fn drop(&mut self) {
+                FORCE.store(0, Ordering::SeqCst);
+            }
+        }
+        let _r = Reset;
+        force(true);
+        assert!(enabled());
+        force(false);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn clean_stream_passes() {
+        let a = BufId::from_raw(1);
+        let out = BufId::from_raw(2);
+        let cmds = vec![
+            TraceCmd::UploadF64 { id: a, len: 12 },
+            TraceCmd::Exec {
+                op: OpKey::new("gemm", &[("m", 3), ("k", 4), ("n", 3)]),
+                args: vec![a, a],
+                out,
+            },
+            TraceCmd::Free { id: a },
+            TraceCmd::Read { id: out },
+            TraceCmd::Free { id: out },
+        ];
+        let rep = verify_stream(&cmds).expect("clean stream");
+        assert_eq!(rep.checked_ops, 1);
+    }
+}

@@ -107,6 +107,7 @@ pub fn gebrd_device_with(
         }
         tauq[t..t + bb].copy_from_slice(&h[2 * bb..3 * bb]);
         taup[t..t + bb].copy_from_slice(&h[3 * bb..4 * bb]);
+        dev.recycle(h);
     }
 
     Ok(DeviceGebrd { afac: a_cur, d, e, tauq, taup })

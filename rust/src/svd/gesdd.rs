@@ -316,7 +316,19 @@ pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
     let t3 = std::time::Instant::now();
     let mut engine = DeviceEngine::new(dev.clone());
     let (sig_asc, _stats) = bdc_solve(&fac.bidiagonal(), &mut engine, cfg.leaf, cfg.threads);
-    dev.sync()?;
+    // a device error latched during the tree surfaces here — release
+    // everything the solve still owns (the device is a persistent pool
+    // worker, not a per-solve throwaway)
+    if let Err(e) = dev.sync() {
+        let (_, u2, v2) = engine.take();
+        dev.free(u2);
+        dev.free(v2);
+        dev.free(fac.afac);
+        if let Some(q) = q_thin {
+            dev.free(q);
+        }
+        return Err(e);
+    }
     profile.record("bdcdc", t3.elapsed().as_secs_f64(), "hybrid");
 
     let (_, u2, v2) = engine.take();

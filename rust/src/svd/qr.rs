@@ -54,6 +54,7 @@ pub fn geqrf_device_with(
             }
         };
         tau[t..t + bb].copy_from_slice(&h[..bb]);
+        dev.recycle(h);
         t += bb;
     }
     Ok(DeviceQr { afac: a_cur, tau })
