@@ -1,0 +1,362 @@
+//! Baseline comparison for the batch-bench artifact — the CI
+//! perf-regression gate behind `svd-batch --compare-baseline`.
+//!
+//! Reads a fresh `BENCH_batch.json` and the committed
+//! `BENCH_baseline.json` and enforces, in order of trust:
+//!
+//! 1. **Lane-independence (machine-free, fresh-only).** Rows whose
+//!    every shape bucket has >= 2 lanes run fully fused; grouped by
+//!    their distinct-shape signature, such rows must report the SAME
+//!    `fused_exec_count` — the fused op stream must not grow with
+//!    batch size. This is the PR's acceptance property and holds
+//!    exactly on any machine.
+//! 2. **No scalar panel ops (machine-free, fresh-only).** A fully
+//!    fused row's `fused_op_count` must not contain any scalar
+//!    per-lane op (`labrd`, `geqrf_step`, `ormqr_step`, ...); one
+//!    leaking in means a bucket silently fell off the k-wide path.
+//! 3. **Op-count ceiling (vs baseline, exact).** Per batch size,
+//!    `fused_exec_count` must not exceed the committed baseline's —
+//!    improvements land silently, regressions require a deliberate
+//!    baseline refresh in the same PR.
+//! 4. **Throughput ratio (vs baseline, tolerant).** At the largest
+//!    common batch size, `fused_sec / serial_sec` must stay within
+//!    `tol` x the baseline ratio. The ratio is machine-portable where
+//!    wall seconds are not; `tol` absorbs CI-runner noise.
+//!
+//! A baseline with no rows (the committed seed before the first
+//! CI-generated refresh) skips checks 3-4 with a notice; checks 1-2
+//! always gate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench_harness::json::Value;
+
+/// Scalar per-lane ops that must never appear in a fully fused stream
+/// (each has a `_k` replacement; `gemm`/`eye` cover the TS tail and the
+/// per-solve leaf init).
+const SCALAR_OPS: [&str; 15] = [
+    "labrd",
+    "gebrd_update",
+    "gebrd_update_xla",
+    "extract_a",
+    "ws_head",
+    "geqrf_step",
+    "qr_head",
+    "geqrf_extract_a",
+    "orgqr_step",
+    "ormqr_step",
+    "ormlq_step",
+    "gemm",
+    "eye",
+    "lane_slice",
+    "set_block",
+];
+
+/// One parsed bench row, reduced to what the gate consumes.
+struct Row {
+    batch: u64,
+    /// distinct (m, n) -> lane count in this batch
+    shape_counts: BTreeMap<(u64, u64), u64>,
+    fused_exec: u64,
+    fused_ops: Vec<String>,
+    serial_sec: f64,
+    fused_sec: f64,
+}
+
+impl Row {
+    /// Every shape bucket has >= 2 lanes, so no bucket ran per-solve.
+    fn fully_fused(&self) -> bool {
+        !self.shape_counts.is_empty() && self.shape_counts.values().all(|&c| c >= 2)
+    }
+
+    /// Group key for lane-independence: the distinct shapes solved
+    /// (NOT their multiplicities — that is the variable under test).
+    fn shape_signature(&self) -> String {
+        let parts: Vec<String> = self
+            .shape_counts
+            .keys()
+            .map(|(m, n)| format!("{m}x{n}"))
+            .collect();
+        parts.join(",")
+    }
+}
+
+fn load_rows(path: &Path) -> Result<Vec<Row>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench artifact {}", path.display()))?;
+    let doc = Value::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    let rows = doc
+        .get("rows")
+        .and_then(Value::as_arr)
+        .with_context(|| format!("{}: no \"rows\" array", path.display()))?;
+    let mut out = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let num = |key: &str| -> Result<f64> {
+            row.get(key)
+                .and_then(Value::as_f64)
+                .with_context(|| format!("{} row {i}: missing number {key:?}", path.display()))
+        };
+        let mut shape_counts = BTreeMap::new();
+        let shapes = row
+            .get("shapes")
+            .and_then(Value::as_arr)
+            .with_context(|| format!("{} row {i}: missing \"shapes\"", path.display()))?;
+        for s in shapes {
+            let dims = s.as_arr().unwrap_or(&[]);
+            let (Some(m), Some(n)) = (
+                dims.first().and_then(Value::as_f64),
+                dims.get(1).and_then(Value::as_f64),
+            ) else {
+                bail!("{} row {i}: malformed shape entry", path.display());
+            };
+            *shape_counts.entry((m as u64, n as u64)).or_insert(0) += 1;
+        }
+        let fused_ops = row
+            .get("fused_op_count")
+            .and_then(Value::as_obj)
+            .with_context(|| format!("{} row {i}: missing \"fused_op_count\"", path.display()))?
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect();
+        out.push(Row {
+            batch: num("batch")? as u64,
+            shape_counts,
+            fused_exec: num("fused_exec_count")? as u64,
+            fused_ops,
+            serial_sec: num("serial_sec")?,
+            fused_sec: num("fused_sec")?,
+        });
+    }
+    Ok(out)
+}
+
+/// The gate. `tol` multiplies the baseline's fused/serial throughput
+/// ratio (check 4); op-count checks are exact.
+pub fn compare_batch_baseline(baseline: &Path, fresh: &Path, tol: f64) -> Result<()> {
+    anyhow::ensure!(tol >= 1.0, "--tolerance must be >= 1 (got {tol})");
+    let fresh_rows = load_rows(fresh)?;
+    let base_rows = load_rows(baseline)?;
+    anyhow::ensure!(!fresh_rows.is_empty(), "{}: no bench rows", fresh.display());
+
+    // ---- 1. fused exec counts are lane-count-independent ----
+    let mut by_sig: BTreeMap<String, Vec<&Row>> = BTreeMap::new();
+    for row in fresh_rows.iter().filter(|r| r.fully_fused()) {
+        by_sig.entry(row.shape_signature()).or_default().push(row);
+    }
+    let mut fully_fused = 0usize;
+    for (sig, rows) in &by_sig {
+        fully_fused += rows.len();
+        let execs: Vec<(u64, u64)> = rows.iter().map(|r| (r.batch, r.fused_exec)).collect();
+        if execs.iter().any(|&(_, e)| e != execs[0].1) {
+            bail!(
+                "fused op stream grows with lane count for shapes [{sig}]: \
+                 (batch, fused_exec_count) = {execs:?}"
+            );
+        }
+        println!(
+            "  lane-independence OK for [{sig}]: fused_exec_count {} across batches {:?}",
+            execs[0].1,
+            rows.iter().map(|r| r.batch).collect::<Vec<_>>()
+        );
+    }
+    anyhow::ensure!(
+        fully_fused >= 2,
+        "{}: fewer than two fully-fused rows — the bench sweep no longer \
+         exercises lane-independence",
+        fresh.display()
+    );
+
+    // ---- 2. no scalar per-lane ops in fully fused streams ----
+    for row in fresh_rows.iter().filter(|r| r.fully_fused()) {
+        for op in SCALAR_OPS {
+            if row.fused_ops.iter().any(|o| o == op) {
+                bail!(
+                    "batch {}: scalar op {op:?} in a fully fused stream \
+                     (a bucket fell off the k-wide path)",
+                    row.batch
+                );
+            }
+        }
+    }
+    println!("  scalar-op scan OK: {fully_fused} fully fused rows are k-wide only");
+
+    if base_rows.is_empty() {
+        println!(
+            "  baseline {} has no rows (seed) — op-count ceiling and throughput \
+             checks skipped; commit a CI-generated baseline to arm them",
+            baseline.display()
+        );
+        return Ok(());
+    }
+
+    // ---- 3. per-batch fused exec count <= baseline ----
+    let base_by_batch: BTreeMap<u64, &Row> = base_rows.iter().map(|r| (r.batch, r)).collect();
+    let mut compared = 0usize;
+    for row in &fresh_rows {
+        let Some(base) = base_by_batch.get(&row.batch) else {
+            continue;
+        };
+        if row.fused_exec > base.fused_exec {
+            bail!(
+                "batch {}: fused_exec_count regressed {} -> {} vs baseline \
+                 (refresh {} deliberately if the new stream is intended)",
+                row.batch,
+                base.fused_exec,
+                row.fused_exec,
+                baseline.display()
+            );
+        }
+        compared += 1;
+    }
+    anyhow::ensure!(compared > 0, "no common batch sizes between fresh and baseline");
+    println!("  op-count ceiling OK: {compared} batch sizes at or below baseline");
+
+    // ---- 4. throughput ratio at the largest common batch ----
+    let largest = fresh_rows
+        .iter()
+        .filter(|r| base_by_batch.contains_key(&r.batch))
+        .max_by_key(|r| r.batch)
+        .expect("compared > 0 guarantees a common batch");
+    let base = base_by_batch[&largest.batch];
+    let fresh_ratio = largest.fused_sec / largest.serial_sec.max(1e-12);
+    let base_ratio = base.fused_sec / base.serial_sec.max(1e-12);
+    if fresh_ratio > base_ratio * tol {
+        bail!(
+            "batch {}: fused/serial time ratio regressed {base_ratio:.3} -> \
+             {fresh_ratio:.3} (tolerance x{tol})",
+            largest.batch
+        );
+    }
+    println!(
+        "  throughput OK at batch {}: fused/serial ratio {fresh_ratio:.3} \
+         (baseline {base_ratio:.3}, tolerance x{tol})",
+        largest.batch
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::json::Json;
+
+    /// Build one bench row; `shapes` are (m, n, lanes).
+    fn row(
+        batch: u64,
+        shapes: &[(u64, u64, u64)],
+        fused_exec: u64,
+        ops: &[&str],
+        serial_sec: f64,
+        fused_sec: f64,
+    ) -> Json {
+        let mut shape_list = Vec::new();
+        for &(m, n, lanes) in shapes {
+            for _ in 0..lanes {
+                shape_list.push(Json::arr([Json::uint(m), Json::uint(n)]));
+            }
+        }
+        Json::obj([
+            ("batch", Json::uint(batch)),
+            ("shapes", Json::arr(shape_list)),
+            ("serial_sec", Json::num(serial_sec)),
+            ("fused_sec", Json::num(fused_sec)),
+            ("fused_exec_count", Json::uint(fused_exec)),
+            (
+                "fused_op_count",
+                Json::sorted_obj(ops.iter().map(|o| (o.to_string(), Json::uint(7)))),
+            ),
+        ])
+    }
+
+    fn doc(rows: Vec<Json>) -> Json {
+        Json::obj([("bench", Json::str("batch")), ("rows", Json::arr(rows))])
+    }
+
+    /// Unique-per-test scratch file (no wall clock: pid + name).
+    fn write_tmp(name: &str, j: &Json) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("gcsvd-cmp-{}-{name}.json", std::process::id()));
+        j.write_to(&p).expect("write temp artifact");
+        p
+    }
+
+    /// Mixed rows like the real sweep: batch 4 has single-lane buckets
+    /// (not fully fused), batches 8/16 are fully fused with equal exec.
+    fn healthy_rows(exec: u64, fused_sec16: f64) -> Vec<Json> {
+        let ops = ["labrd_k", "stack_k", "ormqr_step_k", "secular_k"];
+        vec![
+            row(4, &[(48, 48, 1), (96, 48, 1)], 999, &["labrd", "gemm"], 0.4, 0.5),
+            row(8, &[(48, 48, 2), (96, 48, 2)], exec, &ops, 0.8, 0.5),
+            row(16, &[(48, 48, 4), (96, 48, 4)], exec, &ops, 1.6, fused_sec16),
+        ]
+    }
+
+    #[test]
+    fn healthy_artifact_passes_against_itself() {
+        let d = doc(healthy_rows(120, 0.9));
+        let p = write_tmp("healthy", &d);
+        compare_batch_baseline(&p, &p, 1.5).expect("self-compare must pass");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn lane_dependent_exec_counts_fail() {
+        let mut rows = healthy_rows(120, 0.9);
+        rows[2] = row(16, &[(48, 48, 4), (96, 48, 4)], 150, &["stack_k"], 1.6, 0.9);
+        let d = doc(rows);
+        let p = write_tmp("lanedep", &d);
+        let err = compare_batch_baseline(&p, &p, 1.5).unwrap_err();
+        assert!(format!("{err:#}").contains("grows with lane count"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn scalar_op_in_fused_stream_fails() {
+        let mut rows = healthy_rows(120, 0.9);
+        rows[1] = row(8, &[(48, 48, 2), (96, 48, 2)], 120, &["stack_k", "labrd"], 0.8, 0.5);
+        let d = doc(rows);
+        let p = write_tmp("scalarop", &d);
+        let err = compare_batch_baseline(&p, &p, 1.5).unwrap_err();
+        assert!(format!("{err:#}").contains("scalar op \"labrd\""), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn exec_count_regression_vs_baseline_fails() {
+        let base = write_tmp("base-exec", &doc(healthy_rows(100, 0.9)));
+        let fresh = write_tmp("fresh-exec", &doc(healthy_rows(130, 0.9)));
+        let err = compare_batch_baseline(&base, &fresh, 1.5).unwrap_err();
+        assert!(format!("{err:#}").contains("fused_exec_count regressed"), "{err:#}");
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+    }
+
+    #[test]
+    fn throughput_regression_vs_baseline_fails_and_tolerance_absorbs() {
+        let base = write_tmp("base-thr", &doc(healthy_rows(120, 0.8)));
+        // ratio 1.6/1.6 = 1.0 vs baseline 0.5: beyond x1.5, within x3
+        let fresh = write_tmp("fresh-thr", &doc(healthy_rows(120, 1.6)));
+        let err = compare_batch_baseline(&base, &fresh, 1.5).unwrap_err();
+        assert!(format!("{err:#}").contains("ratio regressed"), "{err:#}");
+        compare_batch_baseline(&base, &fresh, 3.0).expect("x3 tolerance absorbs it");
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+    }
+
+    #[test]
+    fn seed_baseline_without_rows_gates_fresh_only() {
+        let base = write_tmp("base-seed", &doc(vec![]));
+        let fresh = write_tmp("fresh-seed", &doc(healthy_rows(120, 0.9)));
+        compare_batch_baseline(&base, &fresh, 1.5).expect("seed baseline must pass");
+        // ...but the fresh-only invariants still gate
+        let mut rows = healthy_rows(120, 0.9);
+        rows[1] = row(8, &[(48, 48, 2), (96, 48, 2)], 777, &["stack_k"], 0.8, 0.5);
+        let bad = write_tmp("fresh-seed-bad", &doc(rows));
+        assert!(compare_batch_baseline(&base, &bad, 1.5).is_err());
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+        std::fs::remove_file(&bad).ok();
+    }
+}

@@ -4,13 +4,15 @@
 //! Mixed shapes (square, tall-skinny, n=1) so the shape-bucketing
 //! scheduler is exercised, not just the pool; once the batch cycles the
 //! shape list, buckets of size >= 2 appear and `--fuse` semantics (one
-//! k-wide op stream per bucket, tree AND back-transforms) become
-//! visible in the fused column.
+//! k-wide op stream per bucket — front end, tree AND back-transforms)
+//! become visible in the fused column.
 //!
 //! With `--json FILE` the same rows are written as one machine-readable
 //! JSON document (shapes, fused-vs-unfused wall time, device op counts,
 //! phase split) — CI uploads it as `BENCH_batch.json`, seeding the
-//! cross-PR perf trajectory.
+//! cross-PR perf trajectory, and diffs it against the committed
+//! `BENCH_baseline.json` (`svd-batch --compare-baseline`,
+//! `bench_harness/compare.rs`).
 
 use anyhow::Result;
 
@@ -80,8 +82,8 @@ pub fn fig_batch(ctx: &Ctx) -> Result<()> {
         });
 
         // fused-vs-unfused: same inputs, same pool, buckets of size >= 2
-        // collapsed into shared-tree units whose whole pipeline tail
-        // (tree + ormqr/ormlq + TS gemm) is k-wide op streams
+        // collapsed into units whose whole pipeline (gebrd/QR front end
+        // + tree + ormqr/ormlq + TS gemm) is one k-wide op stream
         let mut fused_cfg = ctx.cfg.clone();
         fused_cfg.fuse = true;
         let mut fused_stats: Option<BatchStats> = None;

@@ -1,9 +1,12 @@
-//! Minimal JSON emission for the machine-readable perf artifacts
-//! (`BENCH_batch.json` in CI). No serde — the crate is dependency-free
-//! by design — so this is a tiny *writer*: a [`Json`] value is its own
-//! serialized text, built bottom-up with the constructors below. Output
-//! is always a single valid JSON document (objects keep insertion
-//! order, non-finite numbers serialize as `null`).
+//! Minimal JSON emission AND parsing for the machine-readable perf
+//! artifacts (`BENCH_batch.json` / `BENCH_baseline.json` in CI). No
+//! serde — the crate is dependency-free by design — so this is a tiny
+//! *writer* ([`Json`]: a value is its own serialized text, built
+//! bottom-up with the constructors below; output is always a single
+//! valid JSON document, objects keep insertion order, non-finite
+//! numbers serialize as `null`) plus a tiny recursive-descent *reader*
+//! ([`Value`]) for the baseline-comparison gate, which must re-read
+//! what the writer committed.
 
 use std::fmt::Write as _;
 
@@ -97,6 +100,222 @@ impl Json {
     }
 }
 
+/// A parsed JSON document (the reader half of this module). Objects
+/// keep source order as (key, value) pairs — the artifacts this parses
+/// are written by [`Json`], whose objects are already deterministic —
+/// and numbers are all f64 (the artifacts' counters fit exactly).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Parse one JSON document (trailing whitespace allowed, trailing
+    /// garbage rejected).
+    pub fn parse(text: &str) -> anyhow::Result<Value> {
+        let b = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        anyhow::ensure!(pos == b.len(), "JSON: trailing garbage at byte {pos}");
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Obj(fields) => Some(fields),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        *pos < b.len() && b[*pos] == c,
+        "JSON: expected '{}' at byte {pos}",
+        c as char
+    );
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> anyhow::Result<Value> {
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "JSON: unexpected end of input");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Value::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Value::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Value::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Value::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Value) -> anyhow::Result<Value> {
+    anyhow::ensure!(
+        b[*pos..].starts_with(lit.as_bytes()),
+        "JSON: bad literal at byte {pos}"
+    );
+    *pos += lit.len();
+    Ok(v)
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> anyhow::Result<Value> {
+    let start = *pos;
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).expect("ascii number bytes");
+    let x: f64 = s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("JSON: bad number {s:?} at byte {start}"))?;
+    Ok(Value::Num(x))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        anyhow::ensure!(*pos < b.len(), "JSON: unterminated string");
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                anyhow::ensure!(*pos < b.len(), "JSON: unterminated escape");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        anyhow::ensure!(*pos + 4 < b.len(), "JSON: short \\u escape");
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                            .map_err(|_| anyhow::anyhow!("JSON: bad \\u escape"))?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| anyhow::anyhow!("JSON: bad \\u escape {hex:?}"))?;
+                        // the writer only emits \u for control chars, so
+                        // surrogate pairs are out of scope — map lone
+                        // surrogates to the replacement char
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => anyhow::bail!("JSON: bad escape '\\{}'", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // consume one UTF-8 scalar (multi-byte sequences pass
+                // through unchanged)
+                let s = std::str::from_utf8(&b[*pos..])
+                    .map_err(|_| anyhow::anyhow!("JSON: invalid UTF-8 in string"))?;
+                let c = s.chars().next().expect("non-empty by ensure above");
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> anyhow::Result<Value> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Value::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "JSON: unterminated array");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Value::Arr(items));
+            }
+            c => anyhow::bail!("JSON: expected ',' or ']', got '{}'", c as char),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Value> {
+    expect(b, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Value::Obj(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        fields.push((key, val));
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "JSON: unterminated object");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Value::Obj(fields));
+            }
+            c => anyhow::bail!("JSON: expected ',' or '}}', got '{}'", c as char),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +349,53 @@ mod tests {
     #[test]
     fn control_chars_escape() {
         assert_eq!(Json::str("\u{1}").text(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn parser_roundtrips_writer_output() {
+        let doc = Json::obj([
+            ("bench", Json::str("batch")),
+            ("reps", Json::int(3)),
+            ("ok", Json::bool(true)),
+            ("hole", Json::num(f64::NAN)),
+            (
+                "rows",
+                Json::arr([Json::obj([
+                    ("batch", Json::uint(8)),
+                    ("fused_sec", Json::num(0.125)),
+                    ("ops", Json::sorted_obj([("stack_k".to_string(), Json::uint(1))])),
+                    ("label", Json::str("a\"b\\c\nd\u{1}")),
+                ])]),
+            ),
+        ]);
+        let v = Value::parse(doc.text()).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("batch"));
+        assert_eq!(v.get("reps").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("hole"), Some(&Value::Null));
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("batch").unwrap().as_f64(), Some(8.0));
+        assert_eq!(rows[0].get("fused_sec").unwrap().as_f64(), Some(0.125));
+        let ops = rows[0].get("ops").unwrap().as_obj().unwrap();
+        assert_eq!(ops, &[("stack_k".to_string(), Value::Num(1.0))]);
+        assert_eq!(rows[0].get("label").unwrap().as_str(), Some("a\"b\\c\nd\u{1}"));
+    }
+
+    #[test]
+    fn parser_handles_whitespace_nesting_and_negatives() {
+        let v = Value::parse(" { \"a\" : [ -1.5e2 , [ ] , { } , null ] }\n").unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a[0].as_f64(), Some(-150.0));
+        assert_eq!(a[1], Value::Arr(vec![]));
+        assert_eq!(a[2], Value::Obj(vec![]));
+        assert_eq!(a[3], Value::Null);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        for bad in ["", "{", "[1,", "{\"a\":}", "{\"a\":1} x", "tru", "\"abc", "1..2"] {
+            assert!(Value::parse(bad).is_err(), "accepted {bad:?}");
+        }
     }
 }

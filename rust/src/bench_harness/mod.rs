@@ -6,6 +6,7 @@
 //! target. All figures respect the shapes actually present in the
 //! artifact manifest, so `--quick` artifact sets run a reduced sweep.
 
+pub mod compare;
 pub mod figs_batch;
 pub mod figs_bdc;
 pub mod figs_gebrd;

@@ -8,9 +8,16 @@
 //!             batched SVD over the work-stealing pool; prints bucket
 //!             schedule + throughput (matrices/s, aggregate GFLOP/s), and
 //!             with --check the serial-loop baseline + parity; --fuse
-//!             routes same-shape buckets through one shared BDC tree and
-//!             k-wide back-transforms and prints fused node/occupancy
-//!             stats; --json writes the run as a machine-readable record
+//!             routes same-shape buckets through one k-wide pipeline
+//!             (front-end panel walks + shared BDC tree +
+//!             back-transforms) and prints fused node/occupancy stats;
+//!             --json writes the run as a machine-readable record
+//!   svd-batch --compare-baseline BASE --json FRESH [--tolerance T]
+//!             no solves: diff the fresh `bench batch --json` artifact
+//!             against the committed baseline and fail on fused op-count
+//!             growth, scalar ops in fused streams, or a fused/serial
+//!             throughput ratio beyond T x baseline (default 3) — the CI
+//!             perf-regression gate
 //!   bench     <fig4|fig5a|fig5b|fig6..fig20|batch|all> [--reps R]
 //!             [--json FILE]
 //!             regenerate a paper figure (see DESIGN.md experiment
@@ -185,6 +192,21 @@ fn batch_shapes(batch: usize, m: usize, n: usize, mixed: bool) -> Vec<(usize, us
 }
 
 fn cmd_svd_batch(args: &Args) -> Result<()> {
+    // compare mode: no solves — diff a fresh bench artifact against the
+    // committed baseline and exit non-zero on a perf regression (the CI
+    // gate; see bench_harness/compare.rs for the checks)
+    if let Some(baseline) = args.get("compare-baseline") {
+        let fresh = args
+            .get("json")
+            .ok_or_else(|| anyhow!("--compare-baseline needs --json FRESH_ARTIFACT"))?;
+        let tol = args.get_f64("tolerance", 3.0)?;
+        println!("comparing {fresh} against baseline {baseline} (tolerance x{tol})");
+        return gcsvd::bench_harness::compare::compare_batch_baseline(
+            std::path::Path::new(baseline),
+            std::path::Path::new(fresh),
+            tol,
+        );
+    }
     let cfg = build_config(args)?;
     let batch = cfg.batch;
     let m = args.get_usize("m", 96)?;

@@ -162,17 +162,8 @@ impl Backend for HostBackend {
                 let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
                 let t = arg(op, args, 1)?.scalar()?;
                 ensure!(t + b <= n, "labrd: panel [{t}, {}) exceeds n={n}", t + b);
-                let mut a = arg(op, args, 0)?.matrix(m, n)?;
-                let panel = gebrd_cpu::labrd(&mut a, t, b);
-                let mut ws = Vec::with_capacity(4 * b + m * n + (m + n) * 2 * b);
-                ws.extend_from_slice(&panel.d);
-                ws.extend_from_slice(&panel.e);
-                ws.extend_from_slice(&panel.tauq);
-                ws.extend_from_slice(&panel.taup);
-                ws.extend_from_slice(&a.data);
-                ws.extend_from_slice(&panel.p.data);
-                ws.extend_from_slice(&panel.q.data);
-                ws
+                let a = arg(op, args, 0)?.matrix(m, n)?;
+                labrd_ws(a, t, b)
             }
             // merged (gemm x1) and non-merged (gemm x2) trailing updates
             // compute the same A - P Q^T on the trailing block
@@ -180,7 +171,7 @@ impl Backend for HostBackend {
             "gebrd_update" | "gebrd_update_xla" | "gebrd_update2_ws" => {
                 let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
                 let t = arg(op, args, 1)?.scalar()?;
-                let (mut a, pm, qm) = unpack_labrd_ws(op, arg(op, args, 0)?, m, n, b)?;
+                let (mut a, pm, qm) = unpack_labrd_ws(op, arg(op, args, 0)?.f64s()?, m, n, b)?;
                 gebrd_cpu::trailing_update(&mut a, &pm, &qm, t, b);
                 a.data
             }
@@ -225,17 +216,8 @@ impl Backend for HostBackend {
                 let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
                 let t = arg(op, args, 1)?.scalar()?;
                 ensure!(t + b <= n, "geqrf_step: panel [{t}, {}) exceeds n={n}", t + b);
-                let mut a = arg(op, args, 0)?.matrix(m, n)?;
-                let taus = qr::geqrf_panel(&mut a, t, b);
-                if t + b < n {
-                    let y = qr::build_y(&a, t, b);
-                    let ti = qr::tinv(&y, &taus);
-                    qr::larfb(&mut a, &y, &ti, t + b, n, true);
-                }
-                let mut ws = Vec::with_capacity(b + m * n);
-                ws.extend_from_slice(&taus);
-                ws.extend_from_slice(&a.data);
-                ws
+                let a = arg(op, args, 0)?.matrix(m, n)?;
+                geqrf_step_ws(a, t, b)
             }
             "qr_head" => {
                 let b = p(op, "b")?;
@@ -256,9 +238,9 @@ impl Backend for HostBackend {
                 let tau = arg(op, args, 2)?.f64s()?;
                 let t = arg(op, args, 3)?.scalar()?;
                 ensure!(tau.len() == b, "orgqr_step: tau length");
-                let y = qr::build_y(&afac, t, b);
-                let ti = qr::tinv(&y, tau);
-                qr::larfb(&mut q, &y, &ti, 0, n, false);
+                // orgqr's panel product is the same (I - Y T^{-1} Y^T) C
+                // as ormqr's, so the arms share the helper
+                ormqr_panel_apply(&mut q, &afac, tau, t, b, n);
                 q.data
             }
             "ormqr_step" | "ormqr_step_classic" => {
@@ -507,11 +489,14 @@ impl Backend for HostBackend {
             // vectors and mask each lane's work to its own state. ----
             "eye_k" => {
                 let (k, n) = (p(op, "k")?, p(op, "n")?);
+                // square [k, n, n] by default (the fused tree); the fused
+                // TS front end keys an explicit m for [k, m, n] stacks
+                let m = p(op, "m").unwrap_or(n);
                 ensure!(k >= 1, "eye_k: lanes");
-                let mut out = vec![0.0; k * n * n];
+                let mut out = vec![0.0; k * m * n];
                 for l in 0..k {
-                    for i in 0..n {
-                        out[l * n * n + i * n + i] = 1.0;
+                    for i in 0..m.min(n) {
+                        out[l * m * n + i * n + i] = 1.0;
                     }
                 }
                 out
@@ -724,21 +709,174 @@ impl Backend for HostBackend {
                 out
             }
 
+            // ---- k-wide front-end panel ops (fused buckets, pre-BDC).
+            // One op runs a gebrd/QR panel step for EVERY lane of a
+            // packed [k, m, n] stack, making the front end's op count
+            // lane-count-independent like the tree and back-transforms
+            // already are. The inner per-lane loops are the SAME helpers
+            // the scalar labrd / gebrd_update / geqrf_step / orgqr_step
+            // arms use, so a fused lane stays bit-identical to a
+            // per-solve run. ----
+            "labrd_k" => {
+                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+                let t = arg(op, args, 1)?.scalar()?;
+                ensure!(t + b <= n, "labrd_k: panel [{t}, {}) exceeds n={n}", t + b);
+                let stack = arg(op, args, 0)?.f64s()?;
+                ensure!(stack.len() == k * m * n, "labrd_k: stack size");
+                let wslen = 4 * b + m * n + (m + n) * 2 * b;
+                let mut out = Vec::with_capacity(k * wslen);
+                for l in 0..k {
+                    let a = Matrix::from_rows(m, n, stack[l * m * n..(l + 1) * m * n].to_vec());
+                    out.extend_from_slice(&labrd_ws(a, t, b));
+                }
+                out
+            }
+            "gebrd_update_k" | "gebrd_update_xla_k" => {
+                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+                let t = arg(op, args, 1)?.scalar()?;
+                let ws = arg(op, args, 0)?.f64s()?;
+                let wslen = 4 * b + m * n + (m + n) * 2 * b;
+                ensure!(ws.len() == k * wslen, "{}: stack size", op.name);
+                let mut out = Vec::with_capacity(k * m * n);
+                for l in 0..k {
+                    let (mut a, pm, qm) =
+                        unpack_labrd_ws(op, &ws[l * wslen..(l + 1) * wslen], m, n, b)?;
+                    gebrd_cpu::trailing_update(&mut a, &pm, &qm, t, b);
+                    out.extend_from_slice(&a.data);
+                }
+                out
+            }
+            "extract_a_k" => {
+                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+                let ws = arg(op, args, 0)?.f64s()?;
+                let wslen = 4 * b + m * n + (m + n) * 2 * b;
+                ensure!(ws.len() == k * wslen, "extract_a_k: stack size");
+                let off = 4 * b;
+                let mut out = Vec::with_capacity(k * m * n);
+                for l in 0..k {
+                    out.extend_from_slice(&ws[l * wslen + off..l * wslen + off + m * n]);
+                }
+                out
+            }
+            "ws_head_k" => {
+                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+                let ws = arg(op, args, 0)?.f64s()?;
+                let wslen = 4 * b + m * n + (m + n) * 2 * b;
+                ensure!(ws.len() == k * wslen, "ws_head_k: stack size");
+                let mut out = Vec::with_capacity(k * 4 * b);
+                for l in 0..k {
+                    out.extend_from_slice(&ws[l * wslen..l * wslen + 4 * b]);
+                }
+                out
+            }
+            "geqrf_step_k" => {
+                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+                let t = arg(op, args, 1)?.scalar()?;
+                ensure!(t + b <= n, "geqrf_step_k: panel [{t}, {}) exceeds n={n}", t + b);
+                let stack = arg(op, args, 0)?.f64s()?;
+                ensure!(stack.len() == k * m * n, "geqrf_step_k: stack size");
+                let mut out = Vec::with_capacity(k * (b + m * n));
+                for l in 0..k {
+                    let a = Matrix::from_rows(m, n, stack[l * m * n..(l + 1) * m * n].to_vec());
+                    out.extend_from_slice(&geqrf_step_ws(a, t, b));
+                }
+                out
+            }
+            "qr_head_k" => {
+                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+                let ws = arg(op, args, 0)?.f64s()?;
+                let wslen = b + m * n;
+                ensure!(ws.len() == k * wslen, "qr_head_k: stack size");
+                let mut out = Vec::with_capacity(k * b);
+                for l in 0..k {
+                    out.extend_from_slice(&ws[l * wslen..l * wslen + b]);
+                }
+                out
+            }
+            "geqrf_extract_a_k" => {
+                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+                let ws = arg(op, args, 0)?.f64s()?;
+                let wslen = b + m * n;
+                ensure!(ws.len() == k * wslen, "geqrf_extract_a_k: stack size");
+                let mut out = Vec::with_capacity(k * m * n);
+                for l in 0..k {
+                    out.extend_from_slice(&ws[l * wslen + b..(l + 1) * wslen]);
+                }
+                out
+            }
+            "orgqr_step_k" => {
+                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+                let qs = arg(op, args, 0)?.f64s()?;
+                let afacs = arg(op, args, 1)?.f64s()?;
+                let tau = arg(op, args, 2)?.f64s()?;
+                let t = arg(op, args, 3)?.scalar()?;
+                ensure!(
+                    qs.len() == k * m * n && afacs.len() == k * m * n,
+                    "orgqr_step_k: stack sizes"
+                );
+                ensure!(tau.len() == k * b, "orgqr_step_k: tau length");
+                let mut out = Vec::with_capacity(k * m * n);
+                for l in 0..k {
+                    let mut q = Matrix::from_rows(m, n, qs[l * m * n..(l + 1) * m * n].to_vec());
+                    let afac =
+                        Matrix::from_rows(m, n, afacs[l * m * n..(l + 1) * m * n].to_vec());
+                    ormqr_panel_apply(&mut q, &afac, &tau[l * b..(l + 1) * b], t, b, n);
+                    out.extend_from_slice(&q.data);
+                }
+                out
+            }
+
             other => bail!("host backend: unknown op {other} ({op})"),
         };
         Ok(HostBuf::F64(out))
     }
 }
 
+/// One labrd panel: factor panel `t` of `a` (consumed) and pack the
+/// workspace [d e tauq taup | A | P(m x 2b) | Q(n x 2b)]. Shared by the
+/// scalar `labrd` op and each lane of `labrd_k`, so fused lanes
+/// reproduce the per-solve arithmetic exactly.
+fn labrd_ws(mut a: Matrix, t: usize, b: usize) -> Vec<f64> {
+    let (m, n) = (a.rows, a.cols);
+    let panel = gebrd_cpu::labrd(&mut a, t, b);
+    let mut ws = Vec::with_capacity(4 * b + m * n + (m + n) * 2 * b);
+    ws.extend_from_slice(&panel.d);
+    ws.extend_from_slice(&panel.e);
+    ws.extend_from_slice(&panel.tauq);
+    ws.extend_from_slice(&panel.taup);
+    ws.extend_from_slice(&a.data);
+    ws.extend_from_slice(&panel.p.data);
+    ws.extend_from_slice(&panel.q.data);
+    ws
+}
+
+/// One geqrf panel step: factor panel `t` of `a` (consumed), apply the
+/// block reflector to the trailing columns, pack [taus | A]. Shared by
+/// the scalar `geqrf_step` op and each lane of `geqrf_step_k`.
+fn geqrf_step_ws(mut a: Matrix, t: usize, b: usize) -> Vec<f64> {
+    let n = a.cols;
+    let taus = qr::geqrf_panel(&mut a, t, b);
+    if t + b < n {
+        let y = qr::build_y(&a, t, b);
+        let ti = qr::tinv(&y, &taus);
+        qr::larfb(&mut a, &y, &ti, t + b, n, true);
+    }
+    let mut ws = Vec::with_capacity(b + a.data.len());
+    ws.extend_from_slice(&taus);
+    ws.extend_from_slice(&a.data);
+    ws
+}
+
 /// Unpack a labrd workspace into (A, P, Q) (model.labrd_ws_layout).
+/// Takes a plain slice so the `gebrd_update*` arms and each lane of
+/// `gebrd_update*_k` (a slice of the packed workspace stack) share it.
 fn unpack_labrd_ws(
     op: &OpKey,
-    ws: &HostBuf,
+    ws: &[f64],
     m: usize,
     n: usize,
     b: usize,
 ) -> Result<(Matrix, Matrix, Matrix)> {
-    let ws = ws.f64s()?;
     let total = 4 * b + m * n + (m + n) * 2 * b;
     ensure!(ws.len() == total, "op {op}: workspace {} != {total}", ws.len());
     let a0 = 4 * b;
@@ -833,8 +971,9 @@ fn set_block_apply(
 
 /// One ormqr panel application, C <- (I - Y T^{-1} Y^T) C for the column
 /// reflectors at panel `t` (model.op_ormqr_step). Shared by the scalar
-/// `ormqr_step` op and each lane of `ormqr_step_k`, so fused lanes
-/// reproduce the per-solve arithmetic exactly.
+/// `ormqr_step` / `orgqr_step` ops and each lane of `ormqr_step_k` /
+/// `orgqr_step_k` (orgqr applies the same product to an identity), so
+/// fused lanes reproduce the per-solve arithmetic exactly.
 fn ormqr_panel_apply(c: &mut Matrix, afac: &Matrix, tau: &[f64], t: usize, b: usize, kcols: usize) {
     let y = qr::build_y(afac, t, b);
     let ti = qr::tinv(&y, tau);
@@ -1357,6 +1496,168 @@ mod tests {
                         "{kop} k={k} n={n} lane {l}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn front_end_k_ops_match_scalar_lanes_bitexactly() {
+        // the k-wide gebrd/QR panel ops vs the per-lane scalar chain,
+        // for the satellite's k in {2, 3, 7}: square, tall-skinny
+        // (ragged final panel), n = 1, and a near-diagonal lane 0 (the
+        // deflation-heavy input shape). Both walks mirror the device
+        // drivers (gebrd_device_k / geqrf_device_k / orgqr_device_k),
+        // so every panel of every lane must agree to the last bit.
+        for (k, m, n, bsz) in
+            [(2usize, 6usize, 6usize, 2usize), (3, 8, 5, 3), (7, 4, 4, 2), (3, 1, 1, 1)]
+        {
+            let mut rng = Rng::new(4000 + (k * 131 + m * 17 + n) as u64);
+            let lanes: Vec<Vec<f64>> = (0..k)
+                .map(|l| {
+                    (0..m * n)
+                        .map(|i| {
+                            // lane 0 near-diagonal: deflation-heavy input
+                            if l == 0 && i % (n + 1) != 0 {
+                                0.0
+                            } else {
+                                rng.gaussian()
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut b = HostBackend::new();
+
+            // ---- gebrd walk: labrd -> ws_head -> update / extract ----
+            let mut curk = lanes.concat();
+            let mut curs = lanes.clone();
+            let mut t = 0usize;
+            while t < n {
+                let bb = bsz.min(n - t);
+                let kp = [("k", k as i64), ("m", m as i64), ("n", n as i64), ("b", bb as i64)];
+                let sp = [("m", m as i64), ("n", n as i64), ("b", bb as i64)];
+                let tb = HostBuf::I64(vec![t as i64]);
+                let ak = HostBuf::F64(curk.clone());
+                let wsk = run(&mut b, "labrd_k", &kp, &[&ak, &tb]);
+                let wskb = HostBuf::F64(wsk.clone());
+                let headk = run(&mut b, "ws_head_k", &kp, &[&wskb]);
+                curk = if t + bb < n {
+                    run(&mut b, "gebrd_update_xla_k", &kp, &[&wskb, &tb])
+                } else {
+                    run(&mut b, "extract_a_k", &kp, &[&wskb])
+                };
+                let wslen = 4 * bb + m * n + (m + n) * 2 * bb;
+                for l in 0..k {
+                    let a = HostBuf::F64(curs[l].clone());
+                    let ws = run(&mut b, "labrd", &sp, &[&a, &tb]);
+                    let wsb = HostBuf::F64(ws.clone());
+                    let head = run(&mut b, "ws_head", &sp, &[&wsb]);
+                    curs[l] = if t + bb < n {
+                        run(&mut b, "gebrd_update_xla", &sp, &[&wsb, &tb])
+                    } else {
+                        run(&mut b, "extract_a", &sp, &[&wsb])
+                    };
+                    assert_eq!(
+                        &wsk[l * wslen..(l + 1) * wslen],
+                        &ws[..],
+                        "labrd_k k={k} {m}x{n} t={t} lane {l}"
+                    );
+                    assert_eq!(
+                        &headk[l * 4 * bb..(l + 1) * 4 * bb],
+                        &head[..],
+                        "ws_head_k k={k} {m}x{n} t={t} lane {l}"
+                    );
+                    assert_eq!(
+                        &curk[l * m * n..(l + 1) * m * n],
+                        &curs[l][..],
+                        "gebrd update k={k} {m}x{n} t={t} lane {l}"
+                    );
+                }
+                t += bb;
+            }
+
+            // ---- QR walk: geqrf_step -> qr_head / extract, then the
+            // block-reverse orgqr accumulation over an eye_k stack ----
+            let mut curk = lanes.concat();
+            let mut curs = lanes.clone();
+            let mut taus: Vec<Vec<f64>> = vec![vec![0.0; n]; k];
+            let mut t = 0usize;
+            while t < n {
+                let bb = bsz.min(n - t);
+                let kp = [("k", k as i64), ("m", m as i64), ("n", n as i64), ("b", bb as i64)];
+                let sp = [("m", m as i64), ("n", n as i64), ("b", bb as i64)];
+                let tb = HostBuf::I64(vec![t as i64]);
+                let ak = HostBuf::F64(curk.clone());
+                let wsk = run(&mut b, "geqrf_step_k", &kp, &[&ak, &tb]);
+                let wskb = HostBuf::F64(wsk.clone());
+                let headk = run(&mut b, "qr_head_k", &kp, &[&wskb]);
+                curk = run(&mut b, "geqrf_extract_a_k", &kp, &[&wskb]);
+                let wslen = bb + m * n;
+                for l in 0..k {
+                    taus[l][t..t + bb].copy_from_slice(&headk[l * bb..(l + 1) * bb]);
+                    let a = HostBuf::F64(curs[l].clone());
+                    let ws = run(&mut b, "geqrf_step", &sp, &[&a, &tb]);
+                    let wsb = HostBuf::F64(ws.clone());
+                    let head = run(&mut b, "qr_head", &sp, &[&wsb]);
+                    curs[l] = run(&mut b, "geqrf_extract_a", &sp, &[&wsb]);
+                    assert_eq!(
+                        &wsk[l * wslen..(l + 1) * wslen],
+                        &ws[..],
+                        "geqrf_step_k k={k} {m}x{n} t={t} lane {l}"
+                    );
+                    assert_eq!(&headk[l * bb..(l + 1) * bb], &head[..], "qr_head_k lane {l}");
+                    assert_eq!(
+                        &curk[l * m * n..(l + 1) * m * n],
+                        &curs[l][..],
+                        "geqrf_extract_a_k k={k} {m}x{n} t={t} lane {l}"
+                    );
+                }
+                t += bb;
+            }
+            let mut qk = run(
+                &mut b,
+                "eye_k",
+                &[("k", k as i64), ("m", m as i64), ("n", n as i64)],
+                &[],
+            );
+            let mut qs: Vec<Vec<f64>> = (0..k)
+                .map(|_| run(&mut b, "eye", &[("m", m as i64), ("n", n as i64)], &[]))
+                .collect();
+            assert_eq!(qk, qs.concat(), "eye_k with explicit m, k={k} {m}x{n}");
+            let mut t = ((n - 1) / bsz) * bsz;
+            loop {
+                let bb = bsz.min(n - t);
+                let kp = [("k", k as i64), ("m", m as i64), ("n", n as i64), ("b", bb as i64)];
+                let sp = [("m", m as i64), ("n", n as i64), ("b", bb as i64)];
+                let taustack: Vec<f64> =
+                    taus.iter().flat_map(|tl| tl[t..t + bb].to_vec()).collect();
+                let args = [
+                    HostBuf::F64(qk.clone()),
+                    HostBuf::F64(curk.clone()),
+                    HostBuf::F64(taustack),
+                    HostBuf::I64(vec![t as i64]),
+                ];
+                let argrefs: Vec<&HostBuf> = args.iter().collect();
+                qk = run(&mut b, "orgqr_step_k", &kp, &argrefs);
+                for l in 0..k {
+                    let sargs = [
+                        HostBuf::F64(qs[l].clone()),
+                        HostBuf::F64(curs[l].clone()),
+                        HostBuf::F64(taus[l][t..t + bb].to_vec()),
+                        HostBuf::I64(vec![t as i64]),
+                    ];
+                    let sargrefs: Vec<&HostBuf> = sargs.iter().collect();
+                    qs[l] = run(&mut b, "orgqr_step", &sp, &sargrefs);
+                    assert_eq!(
+                        &qk[l * m * n..(l + 1) * m * n],
+                        &qs[l][..],
+                        "orgqr_step_k k={k} {m}x{n} t={t} lane {l}"
+                    );
+                }
+                if t == 0 {
+                    break;
+                }
+                t -= bsz;
             }
         }
     }

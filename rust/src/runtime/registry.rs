@@ -169,12 +169,26 @@ impl Manifest {
         for &n in &ns {
             bdc_ops(&mut put, n);
         }
-        // k-wide fused-tree + fused back-transform ops
-        // (runtime/bdc_engine_k.rs, svd/qr.rs `*_device_k`): the host
-        // backend executes any lane count; the grid mirrors the lane
-        // widths aot.py would emit so the bench harness can enumerate
-        // fused shapes the same way it enumerates scalar ones.
+        // k-wide fused-tree + fused front-end/back-transform ops
+        // (runtime/bdc_engine_k.rs, svd/gebrd.rs + svd/qr.rs
+        // `*_device_k`): the host backend executes any lane count; the
+        // grid mirrors the lane widths aot.py would emit so the bench
+        // harness can enumerate fused shapes the same way it enumerates
+        // scalar ones.
         const FUSE_K: [i64; 4] = [2, 4, 8, 16];
+        // the fused front end: one gebrd/QR panel op per step over a
+        // packed [k, m, n] stack (square lanes run gebrd directly; TS
+        // lanes run the k-wide QR first, then the n x n gebrd stage)
+        let front_k_ops =
+            |put: &mut dyn FnMut(&str, &[(&str, i64)]), k: i64, m: i64, n: i64, b: i64| {
+                for op in [
+                    "labrd_k", "gebrd_update_k", "gebrd_update_xla_k", "extract_a_k",
+                    "ws_head_k", "geqrf_step_k", "qr_head_k", "geqrf_extract_a_k",
+                    "orgqr_step_k",
+                ] {
+                    put(op, &[("k", k), ("m", m), ("n", n), ("b", b)]);
+                }
+            };
         for &n in &ns {
             for kk in FUSE_K {
                 for op in ["eye_k", "lane_slice", "bdc_row_k", "permute_k"] {
@@ -189,19 +203,25 @@ impl Manifest {
                         put("merge_gemm_k", &[("k", kk), ("n", n), ("kb", kb as i64)]);
                     }
                 }
-                // post-BDC phase: factor packing + panel-wide ormqr/ormlq
+                // pre-BDC phase: input packing + k-wide panel walks
+                // (stack_k doubles as the post-BDC factor packer)
                 put("stack_k", &[("k", kk), ("len", n * n)]);
                 let bq = DEFAULT_B.min(n);
+                front_k_ops(&mut put, kk, n, n, bq);
+                // post-BDC phase: panel-wide ormqr/ormlq
                 put("ormqr_step_k", &[("k", kk), ("n", n), ("b", bq)]);
                 put("ormlq_step_k", &[("k", kk), ("n", n), ("b", bq)]);
             }
         }
-        // TS fused buckets additionally pack the thin Q stacks and run
-        // the k-wide U = Q U0 gemm
+        // TS fused buckets additionally run the k-wide QR phase over
+        // [k, m, n] stacks (eye_k keyed with an explicit m for the
+        // orgqr identity) and finish with the k-wide U = Q U0 gemm
         for (m, n) in TS {
             for kk in FUSE_K {
                 put("stack_k", &[("k", kk), ("len", m * n)]);
                 put("q_gemm_k", &[("k", kk), ("m", m), ("n", n)]);
+                put("eye_k", &[("k", kk), ("m", m), ("n", n)]);
+                front_k_ops(&mut put, kk, m, n, DEFAULT_B.min(n));
             }
         }
         let nmax2 = ns.last().copied().unwrap_or(0);

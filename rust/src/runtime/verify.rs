@@ -389,7 +389,9 @@ fn table() -> &'static HashMap<&'static str, Sig> {
         );
 
         // ---- k-wide fused-tree ops over packed [k, n, n] stacks ----
-        put("eye_k", fixed(vec![], knn()));
+        // eye_k: square [k, n, n] when keyed (k, n) (the fused tree);
+        // [k, m, n] when the fused TS front end keys an explicit m
+        put("eye_k", fixed(vec![], p("k") * por("m", "n") * p("n")));
         put("lane_slice", fixed(vec![F64(knn()), Scalar], p("n") * p("n")));
         put(
             "set_block_k",
@@ -438,6 +440,26 @@ fn table() -> &'static HashMap<&'static str, Sig> {
         put(
             "q_gemm_k",
             fixed(vec![F64(p("k") * mn()), F64(knn())], p("k") * mn()),
+        );
+
+        // ---- k-wide front-end panel ops over packed [k, m, n] stacks
+        // (fused gebrd/QR walks; per-lane workspace layouts match the
+        // scalar ops, concatenated lane-major) ----
+        let kmn = || p("k") * mn();
+        let kws = || p("k") * (c(4) * p("b") + mn() + (p("m") + p("n")) * (c(2) * p("b")));
+        let kqr = || p("k") * (p("b") + mn());
+        put("labrd_k", fixed(vec![F64(kmn()), Scalar], kws()));
+        for op in ["gebrd_update_k", "gebrd_update_xla_k"] {
+            put(op, fixed(vec![F64(kws()), Scalar], kmn()));
+        }
+        put("extract_a_k", fixed(vec![F64(kws())], kmn()));
+        put("ws_head_k", fixed(vec![F64(kws())], p("k") * (c(4) * p("b"))));
+        put("geqrf_step_k", fixed(vec![F64(kmn()), Scalar], kqr()));
+        put("qr_head_k", fixed(vec![F64(kqr())], p("k") * p("b")));
+        put("geqrf_extract_a_k", fixed(vec![F64(kqr())], kmn()));
+        put(
+            "orgqr_step_k",
+            fixed(vec![F64(kmn()), F64(kmn()), F64(p("k") * p("b")), Scalar], kmn()),
         );
 
         t

@@ -118,3 +118,106 @@ impl DeviceGebrd {
         Bidiagonal::new(self.d.clone(), self.e.clone())
     }
 }
+
+/// Host-side scalars of one lane of a fused gebrd run (the packed
+/// factor stack stays on device — see [`DeviceGebrdK`]).
+pub struct GebrdFactors {
+    pub d: Vec<f64>,
+    pub e: Vec<f64>,
+    pub tauq: Vec<f64>,
+    pub taup: Vec<f64>,
+}
+
+impl GebrdFactors {
+    pub fn bidiagonal(&self) -> Bidiagonal {
+        Bidiagonal::new(self.d.clone(), self.e.clone())
+    }
+}
+
+/// Device-resident result of a fused k-wide gebrd: ONE packed
+/// `[k, m, n]` factor stack plus each lane's bidiagonal/tau scalars.
+pub struct DeviceGebrdK {
+    pub afacs: BufId,
+    pub facs: Vec<GebrdFactors>,
+}
+
+/// Fused gebrd over a packed `[lanes, m, n]` stack `a` (consumed). The
+/// panel walk mirrors [`gebrd_device_with`] exactly — ragged final
+/// panel, stacked `[lanes, 4b]` headers read together at the end, first
+/// error wins — but each step is ONE k-wide op serving every lane, so
+/// the op count is lane-count-independent. The host arms share their
+/// inner loops with the scalar ops, making lane `l` bit-identical to
+/// [`gebrd_device`] on lane `l` alone.
+pub fn gebrd_device_k(
+    dev: &Device,
+    a: BufId,
+    lanes: usize,
+    m: usize,
+    n: usize,
+    b: usize,
+    kernel: &str,
+) -> Result<DeviceGebrdK> {
+    assert!(m >= n && b >= 1 && b <= n, "gebrd_device_k needs m>=n, 1<=b<=n");
+    let update_op = if kernel == "pallas" { "gebrd_update_k" } else { "gebrd_update_xla_k" };
+
+    let mut a_cur = a;
+    let mut heads = Vec::with_capacity(n.div_ceil(b));
+    let mut t = 0usize;
+    while t < n {
+        let bb = b.min(n - t);
+        let p = [("b", bb as i64), ("k", lanes as i64), ("m", m as i64), ("n", n as i64)];
+        let tb = dev.scalar_i64(t as i64);
+        let ws = dev.op("labrd_k", &p, &[a_cur, tb]);
+        dev.free(a_cur);
+        heads.push((t, bb, dev.op("ws_head_k", &p, &[ws])));
+        if t + bb < n {
+            a_cur = dev.op(update_op, &p, &[ws, tb]);
+        } else {
+            a_cur = dev.op("extract_a_k", &p, &[ws]);
+        }
+        dev.free(ws);
+        dev.free(tb);
+        t += bb;
+    }
+    // read every stacked header before parsing: on a latched device
+    // error all headers (and the factor stack) are still freed, keeping
+    // a persistent pool-worker device leak-free; the FIRST error wins
+    let mut fail: Option<anyhow::Error> = None;
+    let mut parsed = Vec::with_capacity(heads.len());
+    for (t, bb, head) in heads {
+        let r = dev.read(head);
+        dev.free(head);
+        match r {
+            Ok(h) => parsed.push((t, bb, h)),
+            Err(err) => fail = fail.or(Some(err)),
+        }
+    }
+    if let Some(err) = fail {
+        dev.free(a_cur);
+        return Err(err);
+    }
+    let mut facs: Vec<GebrdFactors> = (0..lanes)
+        .map(|_| GebrdFactors {
+            d: vec![0.0; n],
+            e: vec![0.0; n.saturating_sub(1)],
+            tauq: vec![0.0; n],
+            taup: vec![0.0; n],
+        })
+        .collect();
+    for (t, bb, h) in parsed {
+        for (l, fac) in facs.iter_mut().enumerate() {
+            let hl = &h[l * 4 * bb..(l + 1) * 4 * bb];
+            fac.d[t..t + bb].copy_from_slice(&hl[..bb]);
+            for k in 0..bb {
+                if t + k + 1 < n {
+                    fac.e[t + k] = hl[bb + k];
+                }
+            }
+            fac.tauq[t..t + bb].copy_from_slice(&hl[2 * bb..3 * bb]);
+            fac.taup[t..t + bb].copy_from_slice(&hl[3 * bb..4 * bb]);
+        }
+        dev.recycle(h);
+    }
+
+    Ok(DeviceGebrdK { afacs: a_cur, facs })
+}

@@ -16,9 +16,10 @@ use crate::matrix::{Bidiagonal, Matrix};
 use crate::runtime::bdc_engine::DeviceEngine;
 use crate::runtime::bdc_engine_k::DeviceEngineK;
 use crate::runtime::{BufId, Device};
-use crate::svd::gebrd::{gebrd_device, DeviceGebrd};
+use crate::svd::gebrd::{gebrd_device, gebrd_device_k, DeviceGebrd, GebrdFactors};
 use crate::svd::qr::{
-    geqrf_device, orgqr_device, ormlq_device, ormlq_device_k, ormqr_device, ormqr_device_k,
+    geqrf_device, geqrf_device_k, orgqr_device, orgqr_device_k, ormlq_device, ormlq_device_k,
+    ormqr_device, ormqr_device_k,
 };
 
 /// Full SVD result: A = U diag(sigma) V^T, sigma DESCENDING.
@@ -177,51 +178,169 @@ fn back_end(
     Ok((Matrix::from_rows(m, n, u_host?), Matrix::from_rows(n, n, v_host?)))
 }
 
+/// Charge a shared k-wide phase wall to lane 0's profile (the
+/// convention the fused driver uses for the shared tree); the other
+/// lanes record 0 so per-phase totals stay correct when summed.
+fn record_shared(profiles: &mut [PhaseProfile], phase: &str, dt: f64, loc: &str) {
+    for (l, pr) in profiles.iter_mut().enumerate() {
+        pr.record(phase, if l == 0 { dt } else { 0.0 }, loc);
+    }
+}
+
+/// Device-resident state after the fused k-wide front end of a bucket:
+/// ONE packed `[k, n, n]` gebrd factor stack (plus, on the TS path, the
+/// packed `[k, m, n]` thin-Q stack), each lane's bidiagonal/tau
+/// scalars, and the per-lane phase profiles (shared walls on lane 0).
+struct FrontEndK {
+    afacs: BufId,
+    q_thin: Option<BufId>,
+    facs: Vec<GebrdFactors>,
+    profiles: Vec<PhaseProfile>,
+}
+
+/// The fused front end: per-lane staged uploads packed into ONE
+/// `[k, m, n]` stack (`stack_k`), then every gebrd/QR panel step is a
+/// single k-wide op serving all lanes ([`geqrf_device_k`] /
+/// [`orgqr_device_k`] / [`gebrd_device_k`]) — the op count of the whole
+/// pre-BDC phase is lane-count-independent. On the TS path the R
+/// extraction is ONE stacked D2H read (recycled into the staging pool)
+/// and ONE re-upload of the packed `[k, n, n]` R stack. Lane `l` stays
+/// bit-identical to [`front_end`] on input `l` alone because the k-wide
+/// host arms share their inner loops with the scalar ops.
+fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEndK> {
+    let lanes = inputs.len();
+    let (m, n) = (inputs[0].rows, inputs[0].cols);
+    let b = cfg.block.clamp(1, n);
+    let mut profiles: Vec<PhaseProfile> = (0..lanes).map(|_| PhaseProfile::default()).collect();
+
+    // initial uploads: input handoff, not a pipeline transfer (staged so
+    // back-to-back buckets on one pool worker recycle the allocations);
+    // ONE stack_k packs the bucket and everything after it is k-wide
+    let ids: Vec<BufId> = inputs
+        .iter()
+        .map(|a| dev.upload(dev.stage(&a.data), &[m, n]))
+        .collect();
+    let astack = dev.op(
+        "stack_k",
+        &[("k", lanes as i64), ("len", (m * n) as i64)],
+        &ids,
+    );
+    for id in ids {
+        dev.free(id);
+    }
+
+    let (r_or_a, q_thin): (BufId, Option<BufId>) = if m > n {
+        // ---- TS path: k-wide QR first (Chan). Error paths free
+        // whatever is still device-resident — the device is a
+        // persistent pool worker, not a per-solve throwaway. ----
+        let t0 = std::time::Instant::now();
+        let f = geqrf_device_k(dev, astack, lanes, m, n, b)?;
+        if let Err(e) = dev.sync() {
+            dev.free(f.afacs);
+            return Err(e);
+        }
+        record_shared(&mut profiles, "geqrf", t0.elapsed().as_secs_f64(), "gpu");
+
+        let t1 = std::time::Instant::now();
+        let q = match orgqr_device_k(dev, &f, m, n, b) {
+            Ok(q) => q,
+            Err(e) => {
+                dev.free(f.afacs);
+                return Err(e);
+            }
+        };
+        if let Err(e) = dev.sync() {
+            dev.free(f.afacs);
+            dev.free(q);
+            return Err(e);
+        }
+        record_shared(&mut profiles, "orgqr", t1.elapsed().as_secs_f64(), "gpu");
+
+        // R_l = triu of lane l's factor top n x n — ONE stacked D2H
+        // read for the bucket; the big readback vector goes back to the
+        // staging pool once the triangles are extracted
+        let afac_host = dev.read(f.afacs);
+        dev.free(f.afacs);
+        let afac_host = match afac_host {
+            Ok(h) => h,
+            Err(e) => {
+                dev.free(q);
+                return Err(e);
+            }
+        };
+        let mut r = dev.stage_zeroed(lanes * n * n);
+        for l in 0..lanes {
+            for i in 0..n {
+                for j in i..n {
+                    r[l * n * n + i * n + j] = afac_host[l * m * n + i * n + j];
+                }
+            }
+        }
+        dev.recycle(afac_host);
+        let r_dev = dev.upload(r, &[lanes, n, n]);
+        (r_dev, Some(q))
+    } else {
+        (astack, None)
+    };
+
+    // ---- k-wide bidiagonalisation (square [k, n, n] stack now) ----
+    let t2 = std::time::Instant::now();
+    let fk = match gebrd_device_k(dev, r_or_a, lanes, n, n, b, &cfg.kernel) {
+        Ok(fk) => fk,
+        Err(e) => {
+            if let Some(q) = q_thin {
+                dev.free(q);
+            }
+            return Err(e);
+        }
+    };
+    if let Err(e) = dev.sync() {
+        dev.free(fk.afacs);
+        if let Some(q) = q_thin {
+            dev.free(q);
+        }
+        return Err(e);
+    }
+    record_shared(&mut profiles, "gebrd", t2.elapsed().as_secs_f64(), "gpu");
+    Ok(FrontEndK { afacs: fk.afacs, q_thin, facs: fk.facs, profiles })
+}
+
 /// k-wide back-transforms + the TS final gemm + ONE stacked download per
 /// matrix family for a fused bucket whose packed BDC output (`pu`, `pv`,
-/// both `[k, n, n]`) is already on the device. The per-lane gebrd
-/// factors are packed into one `[k, n, n]` stack (`stack_k`) and every
-/// panel step is a single k-wide op (`ormqr_step_k` / `ormlq_step_k`,
-/// then `q_gemm_k` on the TS path), so the whole post-BDC phase issues
-/// one op stream per panel instead of per lane. Consumes `pu`/`pv` and
-/// every front's device buffers on all paths; the shared phase walls are
-/// charged to lane 0's profile (the convention the fused driver already
-/// uses for the shared tree). Returns per-lane (U, V) in lane order.
+/// both `[k, n, n]`) is already on the device. The gebrd factors arrive
+/// pre-packed from the fused front end (`afacs`, `[k, n, n]`; the TS
+/// thin Qs likewise as `q_thin`, `[k, m, n]`) and every panel step is a
+/// single k-wide op (`ormqr_step_k` / `ormlq_step_k`, then `q_gemm_k` on
+/// the TS path), so the whole post-BDC phase issues one op stream per
+/// panel instead of per lane. Consumes `pu`/`pv`/`afacs`/`q_thin` on all
+/// paths; the shared phase walls are charged to lane 0's profile.
+/// Returns per-lane (U, V) in lane order.
+#[allow(clippy::too_many_arguments)]
 fn back_end_k(
     dev: &Device,
-    fronts: &mut [FrontEnd],
+    afacs: BufId,
+    q_thin: Option<BufId>,
+    facs: &[GebrdFactors],
+    profiles: &mut [PhaseProfile],
     pu: BufId,
     pv: BufId,
     m: usize,
     n: usize,
     b: usize,
 ) -> Result<Vec<(Matrix, Matrix)>> {
-    let lanes = fronts.len();
+    let lanes = facs.len();
     let t4 = std::time::Instant::now();
-
-    // ---- pack the per-lane gebrd factors; release the lane buffers as
-    // soon as the stack exists (persistent pool-worker device) ----
-    let afac_ids: Vec<BufId> = fronts.iter().map(|f| f.fac.afac).collect();
-    let afacs = dev.op(
-        "stack_k",
-        &[("k", lanes as i64), ("len", (n * n) as i64)],
-        &afac_ids,
-    );
-    for id in afac_ids {
-        dev.free(id);
-    }
-    let q_thins: Vec<Option<BufId>> = fronts.iter_mut().map(|f| f.q_thin.take()).collect();
 
     // ---- back-transforms: U2 <- U1 U2, V2 <- V1 V2, k lanes per op.
     // The chain drivers are currently infallible, but a failure must
     // still release everything the solve owns (the device is a
     // persistent pool worker — the "on all paths" contract above). ----
-    let tauqs: Vec<&[f64]> = fronts.iter().map(|f| f.fac.tauq.as_slice()).collect();
-    let taups: Vec<&[f64]> = fronts.iter().map(|f| f.fac.taup.as_slice()).collect();
+    let tauqs: Vec<&[f64]> = facs.iter().map(|f| f.tauq.as_slice()).collect();
+    let taups: Vec<&[f64]> = facs.iter().map(|f| f.taup.as_slice()).collect();
     let u2 = match ormqr_device_k(dev, afacs, &tauqs, pu, n, b) {
         Ok(u2) => u2,
         Err(e) => {
-            for id in [afacs, pv].into_iter().chain(q_thins.into_iter().flatten()) {
+            for id in [Some(afacs), Some(pv), q_thin].into_iter().flatten() {
                 dev.free(id);
             }
             return Err(e);
@@ -230,7 +349,7 @@ fn back_end_k(
     let v2 = match ormlq_device_k(dev, afacs, &taups, pv, n, b) {
         Ok(v2) => v2,
         Err(e) => {
-            for id in [afacs, u2].into_iter().chain(q_thins.into_iter().flatten()) {
+            for id in [Some(afacs), Some(u2), q_thin].into_iter().flatten() {
                 dev.free(id);
             }
             return Err(e);
@@ -238,30 +357,18 @@ fn back_end_k(
     };
     dev.free(afacs);
     if let Err(e) = dev.sync() {
-        for id in [u2, v2].into_iter().chain(q_thins.into_iter().flatten()) {
+        for id in [Some(u2), Some(v2), q_thin].into_iter().flatten() {
             dev.free(id);
         }
         return Err(e);
     }
-    let dt = t4.elapsed().as_secs_f64();
-    for (l, f) in fronts.iter_mut().enumerate() {
-        f.profile.record("ormqr+ormlq", if l == 0 { dt } else { 0.0 }, "gpu");
-    }
+    record_shared(profiles, "ormqr+ormlq", t4.elapsed().as_secs_f64(), "gpu");
 
     // ---- TS final gemm: U_l = Q_l U0_l, one k-wide op for the bucket
-    // (all lanes share (m, n), so either every lane has a thin Q or
-    // none does) ----
-    let (u_final, urows) = if q_thins.iter().all(|q| q.is_some()) {
+    // over the pre-packed thin-Q stack (all lanes share (m, n), so
+    // either the bucket has a Q stack or none does) ----
+    let (u_final, urows) = if let Some(qs) = q_thin {
         let t5 = std::time::Instant::now();
-        let q_ids: Vec<BufId> = q_thins.iter().map(|q| q.expect("TS lane Q")).collect();
-        let qs = dev.op(
-            "stack_k",
-            &[("k", lanes as i64), ("len", (m * n) as i64)],
-            &q_ids,
-        );
-        for id in q_ids {
-            dev.free(id);
-        }
         let u = dev.op(
             "q_gemm_k",
             &[("k", lanes as i64), ("m", m as i64), ("n", n as i64)],
@@ -274,10 +381,7 @@ fn back_end_k(
             dev.free(v2);
             return Err(e);
         }
-        let dt = t5.elapsed().as_secs_f64();
-        for (l, f) in fronts.iter_mut().enumerate() {
-            f.profile.record("gemm", if l == 0 { dt } else { 0.0 }, "gpu");
-        }
+        record_shared(profiles, "gemm", t5.elapsed().as_secs_f64(), "gpu");
         (u, m)
     } else {
         (u2, n)
@@ -301,6 +405,11 @@ fn back_end_k(
         let v = Matrix::from_rows(n, n, v_host[l * n * n..(l + 1) * n * n].to_vec());
         out.push((u, v));
     }
+    // the large stacked D2H vectors go back to the staging pool: the
+    // next fused bucket on this worker reuses them instead of
+    // reallocating per result family (hits surface in `staging_hits`)
+    dev.recycle(u_host);
+    dev.recycle(v_host);
     Ok(out)
 }
 
@@ -338,15 +447,17 @@ pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
     finalize(sig_asc, u, v, profile)
 }
 
-/// The fused bucket solver: one call solves k same-shape inputs, running
-/// the per-lane front ends (geqrf/orgqr/gebrd) back-to-back on one
-/// device, then ONE shared BDC tree over all k bidiagonals (packed
-/// `[k, n, n]` vector stacks, k-wide node ops — `bdc/driver_k.rs`), then
-/// the k-wide back end ([`back_end_k`]): ormqr/ormlq chains, the TS
-/// `U = Q U0` gemm and the result download all operate on the packed
-/// stacks, one op stream per panel step for the whole bucket. Lane `l`'s
-/// result is bit-identical to `gesdd_ours` on input `l` alone. Returns
-/// the per-lane results in input order plus the fused-tree counters.
+/// The fused bucket solver: one call solves k same-shape inputs with a
+/// lane-count-independent device op stream end to end. The k-wide front
+/// end ([`front_end_k`]) packs the inputs into one `[k, m, n]` stack and
+/// runs every geqrf/orgqr/gebrd panel step as ONE op for all lanes, then
+/// ONE shared BDC tree covers all k bidiagonals (packed `[k, n, n]`
+/// vector stacks, k-wide node ops — `bdc/driver_k.rs`), then the k-wide
+/// back end ([`back_end_k`]): ormqr/ormlq chains, the TS `U = Q U0` gemm
+/// and the result download all operate on the packed stacks, one op
+/// stream per panel step for the whole bucket. Lane `l`'s result is
+/// bit-identical to `gesdd_ours` on input `l` alone. Returns the
+/// per-lane results in input order plus the fused-tree counters.
 pub fn gesdd_ours_fused(
     dev: &Device,
     inputs: &[&Matrix],
@@ -366,27 +477,12 @@ pub fn gesdd_ours_fused(
     let lanes = inputs.len();
     let b = cfg.block.clamp(1, n);
 
-    // per-lane front end (not fused in this PR: the k-wide gebrd/QR
-    // panel ops are the ROADMAP follow-up; BDC dominates the small-n
-    // regime this path targets)
-    let mut fronts: Vec<FrontEnd> = Vec::with_capacity(lanes);
-    for (i, a) in inputs.iter().enumerate() {
-        match front_end(dev, a, cfg).with_context(|| format!("fused lane {i}")) {
-            Ok(f) => fronts.push(f),
-            Err(e) => {
-                // release the lanes already prepared: the device is a
-                // persistent pool worker, not a per-solve throwaway
-                for f in fronts {
-                    free_front(dev, f);
-                }
-                return Err(e);
-            }
-        }
-    }
+    // ---- k-wide front end: one op per panel step for the bucket ----
+    let mut fk = front_end_k(dev, inputs, cfg).context("fused front end")?;
 
     // ---- ONE shared BDC tree for all lanes ----
     let t3 = std::time::Instant::now();
-    let bds: Vec<Bidiagonal> = fronts.iter().map(|f| f.fac.bidiagonal()).collect();
+    let bds: Vec<Bidiagonal> = fk.facs.iter().map(GebrdFactors::bidiagonal).collect();
     let mut engine = DeviceEngineK::new(dev.clone());
     let (sigs, kstats) = bdc_solve_k(&bds, &mut engine, cfg.leaf, cfg.threads);
     // DeviceEngineK defers its flush to this fallible sync, so a device
@@ -394,40 +490,37 @@ pub fn gesdd_ours_fused(
     // worker panic) — release everything the solve still owns
     if let Err(e) = dev.sync() {
         let (_, pu, pv) = engine.take();
-        dev.free(pu);
-        dev.free(pv);
-        for f in fronts {
-            free_front(dev, f);
+        for id in [Some(pu), Some(pv), Some(fk.afacs), fk.q_thin].into_iter().flatten() {
+            dev.free(id);
         }
         return Err(e);
     }
-    let bdc_sec = t3.elapsed().as_secs_f64();
+    // the tree is shared: charge its wall time to lane 0's profile
+    record_shared(&mut fk.profiles, "bdcdc", t3.elapsed().as_secs_f64(), "hybrid");
 
     // ---- k-wide back-transforms straight on the packed stacks: the
     // post-BDC phase (ormqr/ormlq chains + the TS gemm + the result
     // download) is one op stream per panel step for the whole bucket,
-    // not per lane — back_end_k consumes the stacks and every front's
-    // device buffers on all paths ----
+    // not per lane — back_end_k consumes the stacks on all paths ----
     let (_, pu, pv) = engine.take();
-    // the tree is shared: charge its wall time to lane 0's profile
-    for (l, f) in fronts.iter_mut().enumerate() {
-        f.profile.record("bdcdc", if l == 0 { bdc_sec } else { 0.0 }, "hybrid");
-    }
-    let uvs = back_end_k(dev, &mut fronts, pu, pv, m, n, b).context("fused back end")?;
+    let uvs = back_end_k(
+        dev,
+        fk.afacs,
+        fk.q_thin,
+        &fk.facs,
+        &mut fk.profiles,
+        pu,
+        pv,
+        m,
+        n,
+        b,
+    )
+    .context("fused back end")?;
     let mut results = Vec::with_capacity(lanes);
-    for ((front, (u, v)), sig_asc) in fronts.into_iter().zip(uvs).zip(sigs) {
-        results.push(finalize(sig_asc, u, v, front.profile)?);
+    for ((profile, (u, v)), sig_asc) in fk.profiles.into_iter().zip(uvs).zip(sigs) {
+        results.push(finalize(sig_asc, u, v, profile)?);
     }
     Ok((results, kstats))
-}
-
-/// Release the device buffers a [`FrontEnd`] still owns (error-path
-/// cleanup — the devices here are persistent pool workers).
-fn free_front(dev: &Device, front: FrontEnd) {
-    dev.free(front.fac.afac);
-    if let Some(q) = front.q_thin {
-        dev.free(q);
-    }
 }
 
 /// Shared tail: flip ascending (sigma, U cols, V cols) to descending and

@@ -98,6 +98,97 @@ pub fn orgqr_device_with(
     Ok(q)
 }
 
+/// Device-resident k-wide QR factor: ONE packed `[k, m, n]` stack of
+/// the per-lane factors plus each lane's taus.
+pub struct DeviceQrK {
+    pub afacs: BufId,
+    pub taus: Vec<Vec<f64>>,
+}
+
+/// Fused blocked QR of the packed `[lanes, m, n]` stack `a` (consumed).
+/// The panel walk mirrors [`geqrf_device_with`] exactly (forward walk,
+/// ragged final panel, per-panel head read — now a stacked `[lanes, b]`
+/// read) with ONE k-wide op per step; the host arm shares its inner
+/// loop with the scalar `geqrf_step`, so lane `l` is bit-identical to
+/// [`geqrf_device`] on lane `l` alone.
+pub fn geqrf_device_k(
+    dev: &Device,
+    a: BufId,
+    lanes: usize,
+    m: usize,
+    n: usize,
+    b: usize,
+) -> Result<DeviceQrK> {
+    assert!(m >= n && b >= 1 && b <= n);
+    let mut taus = vec![vec![0.0; n]; lanes];
+    let mut a_cur = a;
+    let mut t = 0usize;
+    while t < n {
+        let bb = b.min(n - t);
+        let p = [("b", bb as i64), ("k", lanes as i64), ("m", m as i64), ("n", n as i64)];
+        let tb = dev.scalar_i64(t as i64);
+        let ws = dev.op("geqrf_step_k", &p, &[a_cur, tb]);
+        dev.free(a_cur);
+        dev.free(tb);
+        let head = dev.op("qr_head_k", &p, &[ws]);
+        a_cur = dev.op("geqrf_extract_a_k", &p, &[ws]);
+        dev.free(ws);
+        let h = dev.read(head);
+        dev.free(head);
+        // free the in-flight factor stack before surfacing a latched
+        // error — the device may be a persistent pool worker
+        let h = match h {
+            Ok(h) => h,
+            Err(e) => {
+                dev.free(a_cur);
+                return Err(e);
+            }
+        };
+        for (l, tl) in taus.iter_mut().enumerate() {
+            tl[t..t + bb].copy_from_slice(&h[l * bb..(l + 1) * bb]);
+        }
+        dev.recycle(h);
+        t += bb;
+    }
+    Ok(DeviceQrK { afacs: a_cur, taus })
+}
+
+/// k-wide thin-Q generation from a fused QR factor — the block-reverse
+/// walk of [`orgqr_device`] (ragged first panel, per-panel packed tau
+/// upload) over a `[k, m, n]` identity stack (`eye_k` keyed with an
+/// explicit m), one `orgqr_step_k` per panel for all lanes.
+pub fn orgqr_device_k(dev: &Device, f: &DeviceQrK, m: usize, n: usize, b: usize) -> Result<BufId> {
+    assert!(b >= 1 && b <= n);
+    let lanes = f.taus.len();
+    let mut q = dev.op(
+        "eye_k",
+        &[("k", lanes as i64), ("m", m as i64), ("n", n as i64)],
+        &[],
+    );
+    // block-reverse application; the first (rightmost) panel may be ragged
+    let mut t = ((n - 1) / b) * b;
+    loop {
+        let bb = b.min(n - t);
+        let p = [("b", bb as i64), ("k", lanes as i64), ("m", m as i64), ("n", n as i64)];
+        let tb = dev.scalar_i64(t as i64);
+        let mut taub_v = dev.stage_zeroed(lanes * bb);
+        for (l, tl) in f.taus.iter().enumerate() {
+            taub_v[l * bb..(l + 1) * bb].copy_from_slice(&tl[t..t + bb]);
+        }
+        let taub = dev.upload(taub_v, &[lanes, bb]);
+        let q2 = dev.op("orgqr_step_k", &p, &[q, f.afacs, taub, tb]);
+        dev.free(q);
+        dev.free(tb);
+        dev.free(taub);
+        q = q2;
+        if t == 0 {
+            break;
+        }
+        t -= b;
+    }
+    Ok(q)
+}
+
 /// Back-transform C <- U1 C with gebrd's column reflectors (ormqr),
 /// all on device. C is (m x k) with k == n in our pipelines.
 pub fn ormqr_device(

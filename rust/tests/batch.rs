@@ -1,11 +1,11 @@
 //! Batched-SVD guarantees: batched-vs-serial parity over mixed shapes
 //! (including n=1 and tall-skinny), bit-determinism of the pool
 //! schedule regardless of thread count, fused-vs-serial bit-exactness
-//! of the shared-tree + k-wide back-transform path (k in {2, 3, 7},
-//! heavy deflation, n=1 leaves), the sublinear fused op-stream shape —
-//! now covering the WHOLE post-front-end pipeline (tree + ormqr/ormlq
-//! chains + TS gemm, lane-count-independent op counts) — and the
-//! buffer-leak regression gauge.
+//! of the shared-tree + k-wide pipeline (k in {2, 3, 7}, heavy
+//! deflation, n=1 leaves), the sublinear fused op-stream shape — now
+//! covering the WHOLE pipeline (k-wide front-end panel walks + tree +
+//! ormqr/ormlq chains + TS gemm, lane-count-independent op counts end
+//! to end) — and the buffer-leak regression gauge.
 
 #![allow(clippy::needless_range_loop)]
 
@@ -201,7 +201,7 @@ fn fused_parity_heavy_deflation() {
 #[test]
 fn fused_parity_n1_and_tall_skinny_buckets() {
     // n = 1: the BDC tree is a single 1x1 leaf per lane; the TS bucket
-    // runs per-lane QR front ends before the shared tree
+    // runs the k-wide QR front end before the shared tree
     let mut rng = Rng::new(99);
     let cols: Vec<Matrix> = (0..3)
         .map(|_| Matrix::from_fn(9, 1, |_, _| rng.gaussian()))
@@ -240,25 +240,30 @@ fn fused_bucket_issues_one_sublinear_op_stream() {
     );
     assert_eq!(unfused.fused_buckets, 0);
 
-    // the tree AND the back-transforms ran on k-wide ops, not k scalar
-    // streams (the post-BDC phase is fused since the k-wide back end)
+    // the front end AND the tree AND the back-transforms ran on k-wide
+    // ops, not k scalar streams (the whole pipeline is fused since the
+    // k-wide front end; default kernel is xla, so the gebrd trailing
+    // update is gebrd_update_xla_k)
     let ops = &fused.device.per_op_count;
     for op in [
-        "eye_k", "set_block_k", "permute_k", "secular_k", "merge_gemm_k", "stack_k",
-        "ormqr_step_k", "ormlq_step_k",
+        "labrd_k", "ws_head_k", "gebrd_update_xla_k", "extract_a_k", "eye_k", "set_block_k",
+        "permute_k", "secular_k", "merge_gemm_k", "stack_k", "ormqr_step_k", "ormlq_step_k",
     ] {
         assert!(ops.contains_key(op), "fused stream missing {op}: {ops:?}");
     }
     for op in [
-        "bdc_rots", "bdc_permute_cols", "bdc_secular", "bdc_block_gemm", "set_block",
-        "ormqr_step", "ormlq_step", "gemm", "lane_slice",
+        "labrd", "gebrd_update", "gebrd_update_xla", "extract_a", "ws_head", "geqrf_step",
+        "qr_head", "geqrf_extract_a", "orgqr_step", "eye", "bdc_rots", "bdc_permute_cols",
+        "bdc_secular", "bdc_block_gemm", "set_block", "ormqr_step", "ormlq_step", "gemm",
+        "lane_slice",
     ] {
         assert!(!ops.contains_key(op), "scalar op {op} leaked into the fused stream");
     }
 
     // sublinear growth: the fused batch issues strictly fewer device ops
-    // than k independent trees, and stays under k x the single-solve
-    // budget (the per-lane front/back ends are the only linear part)
+    // than k independent streams, and stays under k x the single-solve
+    // budget (per-lane uploads are transfers, not execs, so the exec
+    // stream is lane-count-independent end to end)
     assert!(
         fused.device.exec_count < unfused.device.exec_count,
         "fused {} >= unfused {}",
@@ -292,43 +297,44 @@ fn fused_op_counts(
 }
 
 #[test]
-fn fused_back_transform_op_counts_are_lane_independent() {
-    // end-to-end acceptance for the k-wide back end: everything after
-    // the per-lane front end — the shared tree AND the ormqr/ormlq
-    // chains AND the TS U = Q U0 gemm — must issue the SAME number of
-    // device ops for k = 2 and k = 5 lanes (only the front end scales
-    // with k), on both a square and a tall-skinny bucket
-    // n = 40 > leaf 32, so the shared tree has real merges (secular_k /
-    // merge_gemm_k present) on top of the leaf and back-end families
+fn fused_op_counts_are_lane_independent_end_to_end() {
+    // end-to-end acceptance for the k-wide pipeline: the ENTIRE device
+    // op stream — front-end panel walks, the shared tree, the
+    // ormqr/ormlq chains and the TS U = Q U0 gemm — must be the SAME
+    // map of per-op counts for k = 2 and k = 5 lanes (per-lane uploads
+    // are transfers, not execs), on both a square and a tall-skinny
+    // bucket. n = 40 > leaf 32, so the shared tree has real merges
+    // (secular_k / merge_gemm_k present) on top of the leaf, panel and
+    // back-end families.
     for &(m, n, ts) in &[(40usize, 40usize, false), (80, 40, true)] {
         let ops2 = fused_op_counts(m, n, 2, 808);
         let ops5 = fused_op_counts(m, n, 5, 808);
-        for op in [
-            "stack_k", "ormqr_step_k", "ormlq_step_k", "q_gemm_k", "eye_k", "set_block_k",
-            "secular_k", "merge_gemm_k", "bdc_row_k",
-        ] {
-            assert_eq!(
-                ops2.get(op),
-                ops5.get(op),
-                "{m}x{n}: {op} count must not scale with lanes"
-            );
+        assert_eq!(ops2, ops5, "{m}x{n}: fused op stream must not scale with lanes");
+
+        // the front end ran k-wide (default kernel xla)
+        for op in ["labrd_k", "ws_head_k", "gebrd_update_xla_k", "extract_a_k"] {
+            assert!(ops5.contains_key(op), "{m}x{n}: fused stream missing {op}");
         }
         // the back end ran k-wide: exactly one packed ormqr/ormlq chain
         assert!(ops5["ormqr_step_k"] >= 1);
-        assert!(!ops5.contains_key("ormqr_step"), "scalar ormqr in fused back end");
-        assert!(!ops5.contains_key("ormlq_step"), "scalar ormlq in fused back end");
-        assert!(
-            !ops5.contains_key("lane_slice"),
-            "per-lane slicing survived the k-wide back end"
-        );
+        // the ONLY stack_k left is the input packing in the front end —
+        // the factor and thin-Q stacks are born packed
+        assert_eq!(ops5.get("stack_k"), Some(&1), "{m}x{n}: stack_k");
+        for op in [
+            "labrd", "gebrd_update", "gebrd_update_xla", "geqrf_step", "orgqr_step", "eye",
+            "ormqr_step", "ormlq_step", "gemm", "lane_slice",
+        ] {
+            assert!(!ops5.contains_key(op), "{m}x{n}: scalar op {op} in fused stream");
+        }
         if ts {
-            // two stacks packed (factors + thin Qs), one k-wide gemm
-            assert_eq!(ops5.get("stack_k"), Some(&2));
+            // the TS front end is k-wide QR + one k-wide final gemm
+            for op in ["geqrf_step_k", "qr_head_k", "geqrf_extract_a_k", "orgqr_step_k"] {
+                assert!(ops5.contains_key(op), "{m}x{n}: fused stream missing {op}");
+            }
             assert_eq!(ops5.get("q_gemm_k"), Some(&1));
-            assert!(!ops5.contains_key("gemm"), "scalar gemm in TS fused back end");
         } else {
-            assert_eq!(ops5.get("stack_k"), Some(&1));
             assert!(!ops5.contains_key("q_gemm_k"));
+            assert!(!ops5.contains_key("geqrf_step_k"));
         }
     }
 }
