@@ -23,24 +23,30 @@
 //!     (and every non-"ours" solver) keep the per-solve path; fused
 //!     lanes are bit-identical to per-solve runs;
 //!   * [`runtime::StealPool`] executes the flattened schedule with
-//!     work-stealing, one persistent [`Device`] per worker (created
-//!     lazily on the worker's first item and reused for every solve it
-//!     takes — the old one-device-per-solve assumption is gone);
-//!   * the pool width is `min(cfg.threads, backend fan-out hint, batch)`
-//!     where the hint is [`Backend::max_parallelism`] — host interpreter:
-//!     one worker per core; PJRT: 1 (the client already owns the cores).
+//!     work-stealing at width `min(cfg.threads, batch)`; the workers
+//!     share `min(width, backend fan-out hint)` persistent [`Device`]s
+//!     through a [`DeviceMux`] — a strict-FIFO ticket queue, so the
+//!     [`Backend::max_parallelism`] hint bounds *in-flight execution*
+//!     instead of collapsing the pool width (a PJRT hint of 1 used to
+//!     serialise the whole batch onto one worker; now four workers
+//!     take fair turns on the single device slot);
+//!   * each leased device runs two logical streams (compute +
+//!     transfer) so fused-bucket uploads double-buffer against compute
+//!     (`svd/gesdd.rs` `front_end_k`); the hidden-transfer seconds
+//!     surface as the `overlap_sec` entry of [`BatchStats::phase_sec`].
 //!
 //! Results are returned in input order and are bit-identical for any
 //! thread count: items are independent, the item -> result mapping is
 //! index-keyed, and every intra-solve stage is deterministic.
 //!
 //! A future real-GPU backend maps this scheduler onto streams instead of
-//! worker threads: one stream (+ one `Device`) per pool worker, buckets
-//! as graph/plan-cache units, and the heaviest-first deal becomes the
-//! stream-priority order (DESIGN.md §Batch scheduler).
+//! worker threads: one hardware queue per mux slot, buckets as
+//! graph/plan-cache units, and the heaviest-first deal becomes the
+//! stream-priority order (DESIGN.md §Batch scheduler, §Async streams).
 //!
 //! [`runtime::StealPool`]: crate::runtime::StealPool
 //! [`Device`]: crate::runtime::Device
+//! [`DeviceMux`]: crate::runtime::DeviceMux
 //! [`Backend::max_parallelism`]: crate::runtime::Backend::max_parallelism
 
 pub mod plan;
@@ -49,10 +55,11 @@ use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::bdc::driver_k::BdcStatsK;
+use crate::bench_harness::overlap_split;
 use crate::config::{Config, Solver};
 use crate::matrix::Matrix;
 use crate::runtime::pool::StealPool;
-use crate::runtime::{Device, DeviceStats};
+use crate::runtime::{Device, DeviceMux, DeviceStats};
 use crate::svd::gesdd::gesdd_ours_fused;
 use crate::svd::{gesvd, SvdResult};
 use plan::{fused_plan, WorkUnit};
@@ -60,8 +67,18 @@ use plan::{fused_plan, WorkUnit};
 /// Scheduling counters from one batched solve.
 #[derive(Clone, Debug, Default)]
 pub struct BatchStats {
-    /// Pool workers actually used (after the hint/batch clamps).
+    /// Pool workers actually used (`min(cfg.threads, units)` — the
+    /// backend fan-out hint no longer clamps the width, it bounds
+    /// [`device_slots`](Self::device_slots)).
     pub threads: usize,
+    /// Devices the workers multiplexed over: `min(threads, backend
+    /// fan-out hint)`. The `max_parallelism` hint bounds *in-flight
+    /// execution* here, not pool width.
+    pub device_slots: usize,
+    /// Device leases granted per pool worker by the mux's strict-FIFO
+    /// ticket queue — the fairness observable the concurrency harness
+    /// asserts on (`tests/async_stream.rs`).
+    pub worker_leases: Vec<u64>,
     /// Distinct shape buckets.
     pub buckets: usize,
     /// Items that ran on a worker other than the one they were dealt to.
@@ -91,6 +108,10 @@ pub struct BatchStats {
     /// `BENCH_batch.json` artifact report where fused time goes without
     /// re-walking the per-item profiles. Shared fused phases are
     /// charged once (to lane 0), so the sums do not double-count.
+    /// When the transfer stream carried any work, an `overlap_sec`
+    /// entry records the seconds of H2D upload hidden behind queued
+    /// compute (guarded by [`overlap_split`], so an empty transfer
+    /// phase yields no entry rather than a 0/negative one).
     pub phase_sec: std::collections::BTreeMap<String, f64>,
     /// The executed schedule: shape buckets, heaviest-per-matrix first,
     /// exactly as dealt to the pool (so callers report what actually
@@ -151,15 +172,28 @@ pub fn gesvd_batched_with_stats(
     const SKIPPED: &str = "skipped: an earlier batch item failed";
     let aborted = AtomicBool::new(false);
 
+    // Devices are built eagerly on the calling thread — construction
+    // errors surface before the pool spins up — and shared through a
+    // strict-FIFO mux: `width` workers submit, at most `slots` devices
+    // execute. The backend hint bounds in-flight execution, not width.
+    let slots = width.min(cfg.backend.max_parallelism_hint()).max(1);
+    let mut devices = Vec::with_capacity(slots);
+    for _ in 0..slots {
+        devices.push(Device::with_backend_sched(
+            cfg.backend,
+            &cfg.artifacts,
+            cfg.transfer,
+            cfg.sched_policy(),
+        )?);
+    }
+    let mux = DeviceMux::new(devices, width);
+
     let pool = StealPool::new(width);
-    let (slots, pstats, states) = pool.run_with_states(
+    let (outs, pstats, _states) = pool.run_with_states(
         plan.units.len(),
-        // one persistent device per worker, built on the worker thread
-        |_worker| {
-            Device::with_backend(cfg.backend, &cfg.artifacts, cfg.transfer)
-                .map_err(|e| format!("{e:#}"))
-        },
-        |dev, j| -> UnitOut {
+        // worker state is just the lane id; devices come from the mux
+        |worker| worker,
+        |worker, j| -> UnitOut {
             let unit = plan.units[j];
             let lowest = plan.lowest_index(unit);
             if aborted.load(Ordering::Relaxed) {
@@ -169,38 +203,40 @@ pub fn gesvd_batched_with_stats(
             // traits are infallible, so a device error latched mid-tree
             // panics inside the solve; without the catch that would tear
             // down the whole pool scope and lose every completed result.
-            // (The worker's device may strand buffers until the batch
-            // returns and drops it — bounded by the batch lifetime.)
+            // The panic unwinds through the mux lease's Drop first, so
+            // the device slot returns to the free list and the other
+            // lanes keep draining the queue (the leased device may
+            // strand buffers until the batch returns and drops the mux
+            // — bounded by the batch lifetime).
+            let w = *worker;
             let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                let d = match dev {
-                    Ok(d) => d,
-                    Err(e) => return Err((lowest, e.clone())),
-                };
-                let solved: UnitOut = match unit {
-                    WorkUnit::Single(i) => gesvd(d, &inputs[i], &solve_cfg, solver)
-                        .map(|r| (vec![(i, r)], None))
-                        .map_err(|e| (lowest, format!("{e:#}"))),
-                    WorkUnit::Fused { bucket, start, len } => {
-                        let items = &plan.buckets[bucket].items[start..start + len];
-                        let lane_inputs: Vec<&Matrix> =
-                            items.iter().map(|&i| &inputs[i]).collect();
-                        gesdd_ours_fused(d, &lane_inputs, &solve_cfg)
-                            .map(|(rs, st)| {
-                                (items.iter().copied().zip(rs).collect(), Some(st))
-                            })
-                            .map_err(|e| (lowest, format!("{e:#}")))
+                mux.with_device(w, |d| {
+                    let solved: UnitOut = match unit {
+                        WorkUnit::Single(i) => gesvd(d, &inputs[i], &solve_cfg, solver)
+                            .map(|r| (vec![(i, r)], None))
+                            .map_err(|e| (lowest, format!("{e:#}"))),
+                        WorkUnit::Fused { bucket, start, len } => {
+                            let items = &plan.buckets[bucket].items[start..start + len];
+                            let lane_inputs: Vec<&Matrix> =
+                                items.iter().map(|&i| &inputs[i]).collect();
+                            gesdd_ours_fused(d, &lane_inputs, &solve_cfg)
+                                .map(|(rs, st)| {
+                                    (items.iter().copied().zip(rs).collect(), Some(st))
+                                })
+                                .map_err(|e| (lowest, format!("{e:#}")))
+                        }
+                    };
+                    // audit the leased device after each unit: a clean
+                    // solve leaves zero stranded buffers, so any
+                    // live-never-read buffer here is a solver leak.
+                    // No-op unless the op-stream verifier is enabled.
+                    if solved.is_ok() {
+                        if let Err(e) = d.verify_leaks() {
+                            return Err((lowest, format!("{e:#}")));
+                        }
                     }
-                };
-                // audit the worker's persistent device after each unit:
-                // a clean solve leaves zero stranded buffers, so any
-                // live-never-read buffer here is a solver leak. No-op
-                // unless the op-stream verifier is enabled.
-                if solved.is_ok() {
-                    if let Err(e) = d.verify_leaks() {
-                        return Err((lowest, format!("{e:#}")));
-                    }
-                }
-                solved
+                    solved
+                })
             }));
             let r: UnitOut = match solved {
                 Ok(r) => r,
@@ -229,7 +265,7 @@ pub fn gesvd_batched_with_stats(
     let mut fused_buckets = 0usize;
     let mut fused_nodes = 0usize;
     let (mut occ_num, mut occ_den) = (0.0f64, 0.0f64);
-    for slot in slots {
+    for slot in outs {
         match slot {
             Ok((pairs, st)) => {
                 if let Some(st) = st {
@@ -257,17 +293,16 @@ pub fn gesvd_batched_with_stats(
         .map(|o| o.expect("every input index is scheduled exactly once"))
         .collect();
 
-    // aggregate per-worker device counters (op-count assertions, the
-    // live-buffer leak gauge, staging reuse)
+    // aggregate per-device counters over every mux slot (op-count
+    // assertions, the live-buffer leak gauge, staging reuse, and the
+    // transfer/overlap seconds the stream split measures)
     let mut device = DeviceStats::default();
     let (mut verified_ops, mut verify_sec) = (0u64, 0.0f64);
-    for st in states.into_iter().flatten() {
-        if let Ok(d) = st {
-            device.absorb(&d.stats());
-            if let Some((ops, sec)) = d.verify_counters() {
-                verified_ops += ops;
-                verify_sec += sec;
-            }
+    for d in mux.devices() {
+        device.absorb(&d.stats());
+        if let Some((ops, sec)) = d.verify_counters() {
+            verified_ops += ops;
+            verify_sec += sec;
         }
     }
 
@@ -279,9 +314,16 @@ pub fn gesvd_batched_with_stats(
             *phase_sec.entry(p.clone()).or_insert(0.0) += s;
         }
     }
+    // the upload-behind-compute split: absent (not 0) when the transfer
+    // stream carried nothing, clamped sane otherwise (bench_harness)
+    if let Some(ov) = overlap_split(device.transfer_sec, device.overlap_sec) {
+        phase_sec.insert("overlap_sec".to_string(), ov);
+    }
 
     let stats = BatchStats {
         threads: pstats.workers,
+        device_slots: mux.slots(),
+        worker_leases: mux.lease_counts(),
         buckets: plan.buckets.len(),
         steals: pstats.steals,
         flops,
@@ -298,18 +340,17 @@ pub fn gesvd_batched_with_stats(
     Ok((results, stats))
 }
 
-/// Pool width: `min(cfg.threads, backend fan-out hint, batch size)`.
-/// The hint comes from `BackendKind::max_parallelism_hint` — the static
-/// projection of `Backend::max_parallelism`, readable before any device
-/// exists, so no probe device is built just to ask. Backend
-/// construction errors surface from the first pool worker, tagged with
-/// its batch item.
+/// Pool width: `min(cfg.threads, batch size)`. The backend fan-out
+/// hint (`BackendKind::max_parallelism_hint`, the static projection of
+/// `Backend::max_parallelism`) deliberately does NOT clamp the width
+/// any more — it bounds the *device slots* the workers multiplex over
+/// ([`DeviceMux`]), so a hint of 1 serialises execution fairly across
+/// all workers instead of collapsing the pool to one lane.
 fn pool_width(items: usize, cfg: &Config) -> usize {
     if items <= 1 || cfg.threads <= 1 {
         return 1;
     }
-    let hint = cfg.backend.max_parallelism_hint();
-    cfg.threads.min(hint).min(items).max(1)
+    cfg.threads.min(items).max(1)
 }
 
 #[cfg(test)]

@@ -11,6 +11,13 @@
 //! bucket contiguous in the work queue, and (c) orders buckets by
 //! descending per-matrix cost so the heavy work is dealt first and the
 //! steal tail is made of cheap items.
+//!
+//! The units planned here are leased onto *multiplexed* devices at run
+//! time (`batch::gesvd_batched_with_stats` + `runtime::DeviceMux`):
+//! the plan fixes WHAT runs together (units, lane packing), the mux
+//! fixes HOW MANY run at once (device slots), and neither decision
+//! leaks into the other — a unit never observes which slot it ran on,
+//! which is what keeps results schedule-independent.
 
 use anyhow::Result;
 

@@ -14,17 +14,27 @@
 //!    fused row's `fused_op_count` must not contain any scalar
 //!    per-lane op (`labrd`, `geqrf_step`, `ormqr_step`, ...); one
 //!    leaking in means a bucket silently fell off the k-wide path.
-//! 3. **Op-count ceiling (vs baseline, exact).** Per batch size,
+//! 3. **Stream overlap present (fresh-only).** Summed over the fully
+//!    fused rows that report the stream split
+//!    (`fused_transfer_sec`/`fused_overlap_sec` — optional, so
+//!    pre-stream artifacts still parse): if the transfer stream
+//!    carried any work, some of it must have been hidden behind
+//!    compute (`overlap_sec > 0`), and per row the overlap can never
+//!    exceed the transfer wall it hides inside. Catches the
+//!    double-buffer path silently degrading to serial uploads.
+//! 4. **Op-count ceiling (vs baseline, exact).** Per batch size,
 //!    `fused_exec_count` must not exceed the committed baseline's —
 //!    improvements land silently, regressions require a deliberate
 //!    baseline refresh in the same PR.
-//! 4. **Throughput ratio (vs baseline, tolerant).** At the largest
+//! 5. **Throughput ratio (vs baseline, tolerant).** At the largest
 //!    common batch size, `fused_sec / serial_sec` must stay within
 //!    `tol` x the baseline ratio. The ratio is machine-portable where
-//!    wall seconds are not; `tol` absorbs CI-runner noise.
+//!    wall seconds are not; `tol` absorbs CI-runner noise. When both
+//!    artifacts report the stream split, the overlap *fraction*
+//!    (`overlap/transfer`) must also stay within `tol` of baseline.
 //!
 //! A baseline with no rows (the committed seed before the first
-//! CI-generated refresh) skips checks 3-4 with a notice; checks 1-2
+//! CI-generated refresh) skips checks 4-5 with a notice; checks 1-3
 //! always gate.
 
 use std::collections::BTreeMap;
@@ -64,6 +74,10 @@ struct Row {
     fused_ops: Vec<String>,
     serial_sec: f64,
     fused_sec: f64,
+    /// Stream split of the fused run (absent in pre-stream artifacts —
+    /// optional so old baselines keep parsing).
+    fused_transfer_sec: Option<f64>,
+    fused_overlap_sec: Option<f64>,
 }
 
 impl Row {
@@ -128,6 +142,8 @@ fn load_rows(path: &Path) -> Result<Vec<Row>> {
             fused_ops,
             serial_sec: num("serial_sec")?,
             fused_sec: num("fused_sec")?,
+            fused_transfer_sec: row.get("fused_transfer_sec").and_then(Value::as_f64),
+            fused_overlap_sec: row.get("fused_overlap_sec").and_then(Value::as_f64),
         });
     }
     Ok(out)
@@ -183,6 +199,34 @@ pub fn compare_batch_baseline(baseline: &Path, fresh: &Path, tol: f64) -> Result
     }
     println!("  scalar-op scan OK: {fully_fused} fully fused rows are k-wide only");
 
+    // ---- 3. stream overlap present and sane (fresh-only) ----
+    for row in fresh_rows.iter().filter(|r| r.fully_fused()) {
+        if let (Some(t), Some(o)) = (row.fused_transfer_sec, row.fused_overlap_sec) {
+            if o > t + 1e-9 {
+                bail!(
+                    "batch {}: fused_overlap_sec {o:.6} exceeds fused_transfer_sec {t:.6} \
+                     (overlap counts a subset of transfer wall — the accounting is broken)",
+                    row.batch
+                );
+            }
+        }
+    }
+    match stream_totals(&fresh_rows) {
+        None => println!("  stream split absent (pre-stream artifact) — overlap check skipped"),
+        Some((tr, _)) if tr <= 0.0 => {
+            println!("  transfer stream idle (--no-streams?) — overlap check skipped");
+        }
+        Some((tr, ov)) => {
+            if ov <= 0.0 {
+                bail!(
+                    "fully fused rows spent {tr:.6}s uploading on the transfer stream with \
+                     zero overlap_sec — double-buffering degraded to serial uploads"
+                );
+            }
+            println!("  stream overlap OK: {ov:.6}s of {tr:.6}s uploads hidden behind compute");
+        }
+    }
+
     if base_rows.is_empty() {
         println!(
             "  baseline {} has no rows (seed) — op-count ceiling and throughput \
@@ -235,7 +279,42 @@ pub fn compare_batch_baseline(baseline: &Path, fresh: &Path, tol: f64) -> Result
          (baseline {base_ratio:.3}, tolerance x{tol})",
         largest.batch
     );
+
+    // ---- 5b. overlap fraction vs baseline (only when both report it) ----
+    if let (Some((btr, bov)), Some((ftr, fov))) =
+        (stream_totals(&base_rows), stream_totals(&fresh_rows))
+    {
+        if btr > 0.0 && ftr > 0.0 {
+            let base_frac = bov / btr;
+            let fresh_frac = fov / ftr;
+            if fresh_frac < base_frac / tol {
+                bail!(
+                    "stream overlap fraction regressed {base_frac:.3} -> {fresh_frac:.3} \
+                     (tolerance x{tol}): uploads stopped hiding behind compute"
+                );
+            }
+            println!(
+                "  overlap fraction OK: {fresh_frac:.3} vs baseline {base_frac:.3} \
+                 (tolerance x{tol})"
+            );
+        }
+    }
     Ok(())
+}
+
+/// Summed (transfer, overlap) seconds over the fully fused rows that
+/// report the stream split; `None` when none do (pre-stream artifact).
+fn stream_totals(rows: &[Row]) -> Option<(f64, f64)> {
+    let mut any = false;
+    let (mut tr, mut ov) = (0.0, 0.0);
+    for r in rows.iter().filter(|r| r.fully_fused()) {
+        if let (Some(t), Some(o)) = (r.fused_transfer_sec, r.fused_overlap_sec) {
+            any = true;
+            tr += t;
+            ov += o;
+        }
+    }
+    any.then_some((tr, ov))
 }
 
 #[cfg(test)]
@@ -268,6 +347,39 @@ mod tests {
                 "fused_op_count",
                 Json::sorted_obj(ops.iter().map(|o| (o.to_string(), Json::uint(7)))),
             ),
+        ])
+    }
+
+    /// [`row`] plus the stream split fields newer artifacts carry.
+    #[allow(clippy::too_many_arguments)]
+    fn srow(
+        batch: u64,
+        shapes: &[(u64, u64, u64)],
+        fused_exec: u64,
+        ops: &[&str],
+        serial_sec: f64,
+        fused_sec: f64,
+        transfer_sec: f64,
+        overlap_sec: f64,
+    ) -> Json {
+        let mut shape_list = Vec::new();
+        for &(m, n, lanes) in shapes {
+            for _ in 0..lanes {
+                shape_list.push(Json::arr([Json::uint(m), Json::uint(n)]));
+            }
+        }
+        Json::obj([
+            ("batch", Json::uint(batch)),
+            ("shapes", Json::arr(shape_list)),
+            ("serial_sec", Json::num(serial_sec)),
+            ("fused_sec", Json::num(fused_sec)),
+            ("fused_exec_count", Json::uint(fused_exec)),
+            (
+                "fused_op_count",
+                Json::sorted_obj(ops.iter().map(|o| (o.to_string(), Json::uint(7)))),
+            ),
+            ("fused_transfer_sec", Json::num(transfer_sec)),
+            ("fused_overlap_sec", Json::num(overlap_sec)),
         ])
     }
 
@@ -343,6 +455,59 @@ mod tests {
         compare_batch_baseline(&base, &fresh, 3.0).expect("x3 tolerance absorbs it");
         std::fs::remove_file(&base).ok();
         std::fs::remove_file(&fresh).ok();
+    }
+
+    /// Like [`healthy_rows`] but carrying the stream split: the fused
+    /// rows hide `frac` of their transfer wall behind compute.
+    fn stream_rows(frac: f64) -> Vec<Json> {
+        let ops = ["labrd_k", "stack_k", "ormqr_step_k", "secular_k"];
+        vec![
+            row(4, &[(48, 48, 1), (96, 48, 1)], 999, &["labrd", "gemm"], 0.4, 0.5),
+            srow(8, &[(48, 48, 2), (96, 48, 2)], 120, &ops, 0.8, 0.5, 0.10, 0.10 * frac),
+            srow(16, &[(48, 48, 4), (96, 48, 4)], 120, &ops, 1.6, 0.9, 0.20, 0.20 * frac),
+        ]
+    }
+
+    #[test]
+    fn zero_overlap_with_nonzero_transfer_fails() {
+        let d = doc(stream_rows(0.0));
+        let p = write_tmp("zero-ov", &d);
+        let err = compare_batch_baseline(&p, &p, 1.5).unwrap_err();
+        assert!(format!("{err:#}").contains("zero overlap_sec"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn overlap_beyond_transfer_wall_fails() {
+        let mut rows = stream_rows(0.5);
+        rows[2] = srow(16, &[(48, 48, 4), (96, 48, 4)], 120, &["stack_k"], 1.6, 0.9, 0.2, 0.3);
+        let p = write_tmp("ov-gt-tr", &doc(rows));
+        let err = compare_batch_baseline(&p, &p, 1.5).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds fused_transfer_sec"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn overlap_fraction_regression_vs_baseline_fails_and_tolerance_absorbs() {
+        let base = write_tmp("base-ov", &doc(stream_rows(0.6)));
+        // fraction 0.25 vs baseline 0.6: beyond x1.5, within x4
+        let fresh = write_tmp("fresh-ov", &doc(stream_rows(0.25)));
+        let err = compare_batch_baseline(&base, &fresh, 1.5).unwrap_err();
+        assert!(format!("{err:#}").contains("overlap fraction regressed"), "{err:#}");
+        compare_batch_baseline(&base, &fresh, 4.0).expect("x4 tolerance absorbs it");
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+    }
+
+    #[test]
+    fn pre_stream_artifacts_still_pass() {
+        // rows without the stream split (old baselines) skip checks 3/5b
+        let old = write_tmp("old-art", &doc(healthy_rows(120, 0.9)));
+        let new = write_tmp("new-art", &doc(stream_rows(0.5)));
+        compare_batch_baseline(&old, &new, 1.5).expect("old baseline vs new fresh");
+        compare_batch_baseline(&old, &old, 1.5).expect("old vs old");
+        std::fs::remove_file(&old).ok();
+        std::fs::remove_file(&new).ok();
     }
 
     #[test]

@@ -131,6 +131,11 @@ pub fn fig_batch(ctx: &Ctx) -> Result<()> {
             ("fused_op_count", op_counts(&fused_stats)),
             ("pool_phase_sec", phase_split(&pool_stats)),
             ("fused_phase_sec", phase_split(&fused_stats)),
+            // stream split of the fused run: wall seconds the transfer
+            // stream spent uploading, and how much of that was hidden
+            // behind queued compute (0 both when --no-streams)
+            ("fused_transfer_sec", Json::num(fused_stats.device.transfer_sec)),
+            ("fused_overlap_sec", Json::num(fused_stats.device.overlap_sec)),
             // verifier overhead (both ~0 unless GCSVD_VERIFY/--verify):
             // the bench trajectory records what stream auditing costs
             ("verified_ops", Json::uint(pool_stats.verified_ops)),

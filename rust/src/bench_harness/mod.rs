@@ -44,6 +44,25 @@ pub fn gflops(flops: f64, secs: f64) -> f64 {
     flops / secs / 1e9
 }
 
+/// Guarded transfer/compute overlap split for the phase timers
+/// (`BatchStats::phase_sec`, `BENCH_batch.json`).
+///
+/// Clock skew between the two per-stream accumulators (they are sampled
+/// by independent `Instant` reads on the device worker) can make the raw
+/// `overlap_sec` epsilon-negative or larger than `transfer_sec`; and
+/// when a phase issued no transfer-stream work at all, reporting
+/// `overlap = 0.0` would read as "measured, none found" instead of "not
+/// measurable". So: `None` when the transfer phase is empty, otherwise
+/// the overlap clamped into `[0, transfer_sec]` — the same
+/// never-report-a-nonsense-sample discipline as [`time_median`]'s reps
+/// clamp.
+pub fn overlap_split(transfer_sec: f64, overlap_sec: f64) -> Option<f64> {
+    if transfer_sec <= 0.0 {
+        return None;
+    }
+    Some(overlap_sec.clamp(0.0, transfer_sec))
+}
+
 /// 8/3 n^3 — the gebrd / BDC flop convention the paper uses.
 pub fn gebrd_flops(m: usize, n: usize) -> f64 {
     let (m, n) = (m as f64, n as f64);
@@ -243,5 +262,20 @@ mod tests {
         // distinguishes median from min (1.0), mean (4.25) and max (9.0)
         assert_eq!(median_of(vec![9.0, 1.0, 2.0, 5.0]), 5.0);
         assert_eq!(median_of(vec![0.0, 0.0, 0.0, 6.0, 6.0]), 0.0);
+    }
+
+    #[test]
+    fn overlap_split_guards_empty_and_skewed_phases() {
+        // empty transfer phase: no sample at all, not a zero sample
+        assert_eq!(overlap_split(0.0, 0.0), None);
+        assert_eq!(overlap_split(0.0, 0.5), None);
+        assert_eq!(overlap_split(-1.0, 0.5), None);
+        // epsilon-negative overlap from clock skew clamps to 0, not
+        // a negative phase second
+        assert_eq!(overlap_split(1.0, -1e-9), Some(0.0));
+        // overlap can never exceed the transfer wall it hides inside
+        assert_eq!(overlap_split(1.0, 1.5), Some(1.0));
+        // the well-formed case passes through untouched
+        assert_eq!(overlap_split(2.0, 0.75), Some(0.75));
     }
 }

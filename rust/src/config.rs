@@ -55,7 +55,10 @@ pub struct Config {
     pub leaf: usize,
     /// Host parallelism budget. Inside one solve this bounds the secular
     /// root solver; for batched solves it bounds the work-stealing pool
-    /// width (further clamped by the backend's `max_parallelism` hint).
+    /// width. The backend's `max_parallelism` hint no longer clamps the
+    /// width — it bounds the *device slots* the pool multiplexes over
+    /// (`runtime::DeviceMux`), so extra workers queue fairly instead of
+    /// collapsing the pool.
     pub threads: usize,
     /// Batch size for the `svd-batch` driver: how many matrices it
     /// generates per call when `--batch` is absent (the library API
@@ -71,6 +74,27 @@ pub struct Config {
     pub kernel: String,
     /// Simulated PCIe model for baseline transfer accounting.
     pub transfer: crate::runtime::transfer::TransferModel,
+    /// Route fused-bucket H2D uploads through the device's transfer
+    /// stream, double-buffered against compute with record/wait events
+    /// (DESIGN.md §Async streams). On by default; `--no-streams` falls
+    /// back to compute-stream uploads (the pre-stream single FIFO).
+    pub streams: bool,
+    /// Seed for the device's deterministic stream-pick scheduler
+    /// (`--sched-seed N`): permutes which ready stream head runs next.
+    /// `None` (default) is strict FIFO — the exact pre-stream order.
+    /// Results are bit-identical either way; the knob exists to shake
+    /// schedule-dependent bugs out in CI and the concurrency harness.
+    pub sched_seed: Option<u64>,
+}
+
+impl Config {
+    /// The device stream-pick policy these knobs select.
+    pub fn sched_policy(&self) -> crate::runtime::SchedPolicy {
+        match self.sched_seed {
+            Some(s) => crate::runtime::SchedPolicy::Seeded(s),
+            None => crate::runtime::SchedPolicy::Fifo,
+        }
+    }
 }
 
 impl Default for Config {
@@ -87,6 +111,8 @@ impl Default for Config {
             fuse: false,
             kernel: "xla".to_string(),
             transfer: Default::default(),
+            streams: true,
+            sched_seed: None,
         }
     }
 }

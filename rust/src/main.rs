@@ -29,7 +29,11 @@
 //! --artifacts DIR (pjrt only), --kernel pallas|xla, --no-transfer-model,
 //! --verify (audit every recorded op stream with the static verifier —
 //! shape/lane signature checks plus buffer lifetime analysis; also
-//! GCSVD_VERIFY=1, on by default in debug builds)
+//! GCSVD_VERIFY=1, on by default in debug builds),
+//! --no-streams (disable the transfer-stream double-buffered uploads;
+//! compute-stream FIFO as before), --sched-seed N (deterministic seeded
+//! pick among ready stream heads instead of global FIFO — results are
+//! bit-identical, schedules are not; the concurrency-harness knob)
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -110,6 +114,14 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if args.get("no-transfer-model").is_some() {
         cfg.transfer.enabled = false;
+    }
+    if args.get("no-streams").is_some() {
+        // fall back to compute-stream uploads (the pre-stream FIFO)
+        cfg.streams = false;
+    }
+    if let Some(s) = args.get("sched-seed") {
+        let seed = s.parse().map_err(|_| anyhow!("--sched-seed: bad integer {s}"))?;
+        cfg.sched_seed = Some(seed);
     }
     if args.get("verify").is_some() {
         // force the op-stream verifier on for every device this process
@@ -252,11 +264,18 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "\nsolver={} pool: {} workers, {} steals",
+        "\nsolver={} pool: {} workers over {} device slot(s), {} steals",
         solver.name(),
         stats.threads,
+        stats.device_slots,
         stats.steals
     );
+    if stats.device.transfer_sec > 0.0 {
+        println!(
+            "streams: {:.3}s transfer-stream uploads, {:.3}s overlapped with compute",
+            stats.device.transfer_sec, stats.device.overlap_sec
+        );
+    }
     println!(
         "batch wall {:.3}s | {:.1} matrices/s | {:.2} GFLOP/s aggregate",
         stats.wall,
@@ -321,6 +340,11 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
             ("mixed", Json::bool(mixed)),
             ("fuse", Json::bool(cfg.fuse)),
             ("threads", Json::int(stats.threads as i64)),
+            ("device_slots", Json::int(stats.device_slots as i64)),
+            (
+                "worker_leases",
+                Json::arr(stats.worker_leases.iter().map(|&c| Json::uint(c))),
+            ),
             ("steals", Json::int(stats.steals as i64)),
             ("wall_sec", Json::num(stats.wall)),
             (
@@ -344,6 +368,8 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
             ("fused_nodes", Json::int(stats.fused_nodes as i64)),
             ("lane_occupancy", Json::num(stats.lane_occupancy)),
             ("device_exec_count", Json::uint(stats.device.exec_count)),
+            ("transfer_sec", Json::num(stats.device.transfer_sec)),
+            ("overlap_sec", Json::num(stats.device.overlap_sec)),
             ("staging_hits", Json::uint(stats.device.staging_hits)),
             ("live_buffers", Json::int(stats.device.live_buffers as i64)),
             ("verified_ops", Json::uint(stats.verified_ops)),

@@ -70,8 +70,12 @@ pub trait Backend {
     }
 
     /// How many sibling instances of this backend can productively run
-    /// at once — the batch scheduler's fan-out hint (one pool worker per
-    /// instance, each with its own `Device`). The default assumes a
+    /// at once — the batch scheduler's fan-out hint. This bounds
+    /// *in-flight execution*, not pool width: the batch scheduler
+    /// builds `min(width, hint)` devices and multiplexes its workers
+    /// over them through a fair FIFO queue (`runtime::DeviceMux`), so
+    /// a hint of 1 serialises device time across all workers instead
+    /// of collapsing the pool to one lane. The default assumes a
     /// host-resident backend: one per CPU core. Substrates that
     /// serialise on shared thread-bound state (the PJRT CPU client)
     /// should override this to 1.

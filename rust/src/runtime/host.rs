@@ -134,6 +134,22 @@ impl Backend for HostBackend {
         "host"
     }
 
+    /// One instance per core by default; `GCSVD_HOST_PAR` overrides.
+    /// The hint bounds the *device slots* the batch pool multiplexes
+    /// over (`runtime::DeviceMux`), so forcing it to 1 makes every
+    /// pool worker contend for a single device — the starvation /
+    /// fairness regression in `tests/async_stream.rs` and the sanitize
+    /// CI leg run exactly that configuration.
+    fn max_parallelism(&self) -> usize {
+        std::env::var("GCSVD_HOST_PAR")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&par| par >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+            })
+    }
+
     fn exec(&mut self, op: &OpKey, args: &[&HostBuf]) -> Result<HostBuf> {
         if !self.seen.contains(op) {
             self.seen.insert(op.clone());

@@ -11,6 +11,7 @@ pub mod host;
 pub mod pjrt;
 pub mod pool;
 pub mod registry;
+pub mod stream;
 pub mod transfer;
 pub mod verify;
 
@@ -18,4 +19,5 @@ pub use backend::Backend;
 pub use device::{BackendKind, BufId, Device, DeviceStats};
 pub use pool::StealPool;
 pub use registry::OpKey;
-pub use verify::{verify_stream, TraceCmd, Verifier, Violation, ViolationKind};
+pub use stream::{DeviceMux, EventId, SchedPolicy, COMPUTE, TRANSFER};
+pub use verify::{verify_stream, verify_tagged_stream, TraceCmd, Verifier, Violation, ViolationKind};

@@ -18,12 +18,14 @@
 //!
 //! Workers carry optional per-worker state (`run_with`'s `init`), created
 //! lazily on the worker thread at its first item. The batch scheduler
-//! uses this to give every worker a persistent [`Device`] that survives
-//! across all the items the worker executes — replacing the old
-//! one-`Device`-per-solve assumption with one device (and one warm
-//! compile cache) per worker.
+//! keeps only the worker's lane id there: its [`Device`]s are shared
+//! through a [`DeviceMux`] — workers lease one per item from a
+//! strict-FIFO ticket queue, so the backend's `max_parallelism` bounds
+//! how many solves execute at once without clamping how many workers
+//! submit (see `batch::pool_width`).
 //!
 //! [`Device`]: crate::runtime::Device
+//! [`DeviceMux`]: crate::runtime::DeviceMux
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -14,7 +14,14 @@
 //! 2. a **buffer lifetime analysis** over the command trace
 //!    ([`Verifier`]): use-after-free, double-free, read-of-never-written
 //!    and leak detection, pinpointing the allocating op of the offending
-//!    buffer.
+//!    buffer. The analysis is stream-aware (DESIGN.md §Async streams):
+//!    commands carry a logical stream id ([`Verifier::check_on`]), each
+//!    stream advances a vector clock, and `record`/`wait` events join
+//!    clocks across streams — so a buffer defined on the transfer stream
+//!    and consumed on the compute stream without an intervening event
+//!    edge is flagged ([`ViolationKind::CrossStream`]) even though both
+//!    commands are individually well-formed, and a cross-stream
+//!    use-after-free is still a use-after-free.
 //!
 //! The live integration is a recording shim inside [`Device`]: when
 //! verification is enabled (see [`enabled`]), every enqueued command is
@@ -481,6 +488,10 @@ pub enum TraceCmd {
     Read { id: BufId },
     ReadPrefix { id: BufId, len: usize },
     Free { id: BufId },
+    /// Event record on the carrying stream (`Device::record_event`).
+    RecordEvent { ev: u64 },
+    /// Event wait on the carrying stream (`Device::wait_event`).
+    WaitEvent { ev: u64 },
 }
 
 /// What a violation is, for table-driven assertions; the human-readable
@@ -510,6 +521,11 @@ pub enum ViolationKind {
     Redefined,
     /// Live and never read at an end-of-stream audit point.
     Leak,
+    /// Missing cross-stream ordering: a buffer was used on a stream that
+    /// never synchronised (record/wait) with the defining stream, an
+    /// event was waited on before being recorded, or an event id was
+    /// recorded twice.
+    CrossStream,
 }
 
 /// One diagnosed violation: the command index it was detected at, its
@@ -538,9 +554,31 @@ struct Buf {
     /// Allocating site: `upload` or the producing op key.
     origin: String,
     born: usize,
+    /// Stream the defining command ran on.
+    def_stream: usize,
+    /// Defining stream's vector clock at definition; a use on stream `s`
+    /// is ordered iff this clock is `<=` stream `s`'s clock pointwise.
+    def_clock: Vec<u64>,
     freed: Option<usize>,
     read: bool,
     leak_reported: bool,
+}
+
+/// Pointwise `a <= b`, missing components reading as 0.
+fn clock_le(a: &[u64], b: &[u64]) -> bool {
+    a.iter()
+        .enumerate()
+        .all(|(i, &x)| x <= b.get(i).copied().unwrap_or(0))
+}
+
+/// Pointwise join: `dst = max(dst, src)`.
+fn clock_join(dst: &mut Vec<u64>, src: &[u64]) {
+    if dst.len() < src.len() {
+        dst.resize(src.len(), 0);
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = (*d).max(s);
+    }
 }
 
 /// Streaming checker over a device command trace. Feed commands with
@@ -552,6 +590,13 @@ pub struct Verifier {
     bufs: HashMap<BufId, Buf>,
     violations: Vec<Violation>,
     at: usize,
+    /// Per-stream vector clocks: `clocks[s][t]` = how many stream-`t`
+    /// commands stream `s` is ordered after. Grows on demand.
+    clocks: Vec<Vec<u64>>,
+    /// Recorded events: id -> the recording stream's clock snapshot.
+    events: HashMap<u64, Vec<u64>>,
+    /// Stream of the command currently being checked.
+    cur_stream: usize,
     /// Execs checked against the signature table.
     pub checked_ops: u64,
     /// Wall seconds spent checking (the verifier-overhead counter).
@@ -580,6 +625,29 @@ impl Verifier {
         self.violations.push(Violation { at: self.at, kind, msg });
     }
 
+    /// Grow the clock matrix to cover stream `s`.
+    fn ensure_stream(&mut self, s: usize) {
+        while self.clocks.len() <= s {
+            self.clocks.push(Vec::new());
+        }
+        if self.clocks[s].len() <= s {
+            self.clocks[s].resize(s + 1, 0);
+        }
+    }
+
+    /// Model a global barrier (`read`/`read_prefix` park until every
+    /// stream queue drains): all streams become ordered after everything
+    /// enqueued so far, i.e. every clock jumps to the pointwise max.
+    fn barrier_join(&mut self) {
+        let mut all: Vec<u64> = Vec::new();
+        for c in &self.clocks {
+            clock_join(&mut all, c);
+        }
+        for c in &mut self.clocks {
+            clock_join(c, &all);
+        }
+    }
+
     /// Define `id`; flags a redefinition if the handle is already live.
     fn define(&mut self, id: BufId, dtype: DType, len: Option<usize>, origin: String) {
         let born = self.at;
@@ -597,14 +665,53 @@ impl Verifier {
                 ),
             );
         }
+        let def_stream = self.cur_stream;
+        let def_clock = self.clocks.get(def_stream).cloned().unwrap_or_default();
         self.bufs.insert(
             id,
-            Buf { dtype, len, origin, born, freed: None, read: false, leak_reported: false },
+            Buf {
+                dtype,
+                len,
+                origin,
+                born,
+                def_stream,
+                def_clock,
+                freed: None,
+                read: false,
+                leak_reported: false,
+            },
         );
     }
 
+    /// Flag a use of `id` on the current stream that is not ordered
+    /// after its definition (missing record/wait edge). Returns whether
+    /// it flagged.
+    fn check_ordered(&mut self, id: BufId, what: &str) -> bool {
+        let Some(b) = self.bufs.get(&id) else { return false };
+        if b.def_stream == self.cur_stream {
+            return false;
+        }
+        let (origin, born, def_stream, def_clock) =
+            (b.origin.clone(), b.born, b.def_stream, b.def_clock.clone());
+        let cur = self.clocks.get(self.cur_stream).cloned().unwrap_or_default();
+        if clock_le(&def_clock, &cur) {
+            return false;
+        }
+        let cur_stream = self.cur_stream;
+        self.flag(
+            ViolationKind::CrossStream,
+            format!(
+                "{what}: buffer {id:?} (from `{origin}`, cmd #{born}) was defined on stream \
+                 {def_stream} with no record/wait ordering it before stream {cur_stream}"
+            ),
+        );
+        true
+    }
+
     /// Look up `id` for a use inside `what`; flags and returns `None`
-    /// when the buffer is undefined or freed.
+    /// when the buffer is undefined or freed. A live-but-unordered
+    /// cross-stream use is flagged too (the shape checks still run —
+    /// the buffer's contents are what's racy, not its metadata).
     fn use_buf(&mut self, id: BufId, what: &str) -> Option<&Buf> {
         let freed_info = match self.bufs.get(&id) {
             None => {
@@ -626,13 +733,26 @@ impl Verifier {
             );
             return None;
         }
+        self.check_ordered(id, what);
         self.bufs.get(&id)
     }
 
-    /// Check one command (enqueue order). Violations accumulate; the
-    /// stream may keep going so one report covers everything found.
+    /// Check one compute-stream command — the single-stream entry point
+    /// ([`verify_stream`], hand-authored traces). Equivalent to
+    /// `check_on(0, cmd)`.
     pub fn check(&mut self, cmd: &TraceCmd) {
+        self.check_on(0, cmd);
+    }
+
+    /// Check one command carried by logical stream `stream` (enqueue
+    /// order per stream, which is the order the device shim calls in).
+    /// Violations accumulate; the stream may keep going so one report
+    /// covers everything found.
+    pub fn check_on(&mut self, stream: usize, cmd: &TraceCmd) {
         let t0 = std::time::Instant::now();
+        self.ensure_stream(stream);
+        self.cur_stream = stream;
+        self.clocks[stream][stream] += 1;
         match cmd {
             TraceCmd::UploadF64 { id, len } => {
                 self.define(*id, DType::F64, Some(*len), "upload".to_string());
@@ -645,11 +765,13 @@ impl Verifier {
                 self.check_exec(op, args, *out);
             }
             TraceCmd::Read { id } => {
+                self.barrier_join();
                 if self.use_buf(*id, "read").is_some() {
                     self.bufs.get_mut(id).unwrap().read = true;
                 }
             }
             TraceCmd::ReadPrefix { id, len } => {
+                self.barrier_join();
                 let over = match self.use_buf(*id, "read_prefix") {
                     Some(b) => b.len.is_some_and(|have| *len > have),
                     None => false,
@@ -667,7 +789,7 @@ impl Verifier {
                     );
                 }
             }
-            TraceCmd::Free { id } => match self.bufs.get_mut(id) {
+            TraceCmd::Free { id } => match self.bufs.get(id) {
                 None => {
                     self.flag(
                         ViolationKind::Undefined,
@@ -682,8 +804,32 @@ impl Verifier {
                         );
                         self.flag(ViolationKind::DoubleFree, msg);
                     }
-                    None => b.freed = Some(self.at),
+                    None => {
+                        self.check_ordered(*id, "free");
+                        self.bufs.get_mut(id).unwrap().freed = Some(self.at);
+                    }
                 },
+            },
+            TraceCmd::RecordEvent { ev } => {
+                let snap = self.clocks[stream].clone();
+                if self.events.insert(*ev, snap).is_some() {
+                    self.flag(
+                        ViolationKind::CrossStream,
+                        format!("event {ev} recorded twice"),
+                    );
+                }
+            }
+            TraceCmd::WaitEvent { ev } => match self.events.get(ev).cloned() {
+                None => {
+                    self.flag(
+                        ViolationKind::CrossStream,
+                        format!(
+                            "wait on event {ev} that was never recorded (enqueue the record \
+                             before the wait)"
+                        ),
+                    );
+                }
+                Some(snap) => clock_join(&mut self.clocks[stream], &snap),
             },
         }
         self.at += 1;
@@ -825,15 +971,29 @@ pub struct StreamReport {
 
 /// Statically verify a hand-authored command stream with nothing
 /// executed: full signature + lifetime analysis, then the end-of-stream
-/// leak audit. `Err` carries every violation found.
+/// leak audit. `Err` carries every violation found. Single-stream; for
+/// multi-stream traces use [`verify_tagged_stream`].
 pub fn verify_stream(cmds: &[TraceCmd]) -> Result<StreamReport, Vec<Violation>> {
+    verify_tagged_stream_inner(cmds.iter().map(|c| (0, c)), cmds.len())
+}
+
+/// [`verify_stream`] for hand-authored *multi-stream* traces: each
+/// command carries its logical stream id, in global enqueue order.
+pub fn verify_tagged_stream(cmds: &[(usize, TraceCmd)]) -> Result<StreamReport, Vec<Violation>> {
+    verify_tagged_stream_inner(cmds.iter().map(|(s, c)| (*s, c)), cmds.len())
+}
+
+fn verify_tagged_stream_inner<'a>(
+    cmds: impl Iterator<Item = (usize, &'a TraceCmd)>,
+    n: usize,
+) -> Result<StreamReport, Vec<Violation>> {
     let mut v = Verifier::new();
-    for cmd in cmds {
-        v.check(cmd);
+    for (stream, cmd) in cmds {
+        v.check_on(stream, cmd);
     }
     v.leak_check();
     if v.violations.is_empty() {
-        Ok(StreamReport { cmds: cmds.len(), checked_ops: v.checked_ops })
+        Ok(StreamReport { cmds: n, checked_ops: v.checked_ops })
     } else {
         Err(v.violations)
     }
@@ -920,5 +1080,109 @@ mod tests {
         ];
         let rep = verify_stream(&cmds).expect("clean stream");
         assert_eq!(rep.checked_ops, 1);
+    }
+
+    /// The canonical front_end_k shape: uploads on the transfer stream,
+    /// record/wait edge, consume + free on compute. Clean.
+    #[test]
+    fn event_ordered_cross_stream_use_passes() {
+        let (a, b, out) = (BufId::from_raw(1), BufId::from_raw(2), BufId::from_raw(3));
+        let cmds = vec![
+            (1, TraceCmd::UploadF64 { id: a, len: 12 }),
+            (1, TraceCmd::UploadF64 { id: b, len: 12 }),
+            (1, TraceCmd::RecordEvent { ev: 7 }),
+            (0, TraceCmd::WaitEvent { ev: 7 }),
+            (
+                0,
+                TraceCmd::Exec {
+                    op: OpKey::new("stack_k", &[("k", 2), ("len", 12)]),
+                    args: vec![a, b],
+                    out,
+                },
+            ),
+            (0, TraceCmd::Free { id: a }),
+            (0, TraceCmd::Free { id: b }),
+            (0, TraceCmd::Read { id: out }),
+            (0, TraceCmd::Free { id: out }),
+        ];
+        let rep = verify_tagged_stream(&cmds).expect("event-ordered trace is clean");
+        assert_eq!(rep.checked_ops, 1);
+    }
+
+    #[test]
+    fn unordered_cross_stream_use_is_flagged() {
+        let (a, out) = (BufId::from_raw(1), BufId::from_raw(2));
+        // same trace minus the record/wait edge: racy
+        let cmds = vec![
+            (1, TraceCmd::UploadF64 { id: a, len: 12 }),
+            (
+                0,
+                TraceCmd::Exec {
+                    op: OpKey::new("stack_k", &[("k", 1), ("len", 12)]),
+                    args: vec![a],
+                    out,
+                },
+            ),
+            (0, TraceCmd::Free { id: a }),
+            (0, TraceCmd::Read { id: out }),
+            (0, TraceCmd::Free { id: out }),
+        ];
+        let errs = verify_tagged_stream(&cmds).expect_err("race must be flagged");
+        assert!(
+            errs.iter().any(|v| v.kind == ViolationKind::CrossStream),
+            "no CrossStream violation in: {}",
+            render(&errs)
+        );
+    }
+
+    #[test]
+    fn cross_stream_use_after_free_is_still_caught() {
+        let (a, out) = (BufId::from_raw(1), BufId::from_raw(2));
+        let cmds = vec![
+            (0, TraceCmd::UploadF64 { id: a, len: 4 }),
+            (0, TraceCmd::Free { id: a }),
+            (0, TraceCmd::RecordEvent { ev: 1 }),
+            (1, TraceCmd::WaitEvent { ev: 1 }),
+            // ordered after the free — but it IS freed: still UAF
+            (
+                1,
+                TraceCmd::Exec {
+                    op: OpKey::new("stack_k", &[("k", 1), ("len", 4)]),
+                    args: vec![a],
+                    out,
+                },
+            ),
+            (1, TraceCmd::Read { id: out }),
+            (1, TraceCmd::Free { id: out }),
+        ];
+        let errs = verify_tagged_stream(&cmds).expect_err("cross-stream UAF must be flagged");
+        assert!(
+            errs.iter().any(|v| v.kind == ViolationKind::UseAfterFree),
+            "no UseAfterFree violation in: {}",
+            render(&errs)
+        );
+    }
+
+    #[test]
+    fn wait_on_unrecorded_event_is_flagged() {
+        let cmds = vec![(0, TraceCmd::WaitEvent { ev: 99 })];
+        let errs = verify_tagged_stream(&cmds).expect_err("unrecorded wait must be flagged");
+        assert!(errs.iter().any(|v| v.kind == ViolationKind::CrossStream));
+    }
+
+    #[test]
+    fn read_barrier_orders_streams_globally() {
+        let (a, b) = (BufId::from_raw(1), BufId::from_raw(2));
+        // the read is a global barrier on the device, so a later use of a
+        // transfer-defined buffer on compute needs no event edge
+        let cmds = vec![
+            (1, TraceCmd::UploadF64 { id: a, len: 4 }),
+            (0, TraceCmd::UploadF64 { id: b, len: 4 }),
+            (0, TraceCmd::Read { id: b }),
+            (0, TraceCmd::Read { id: a }),
+            (0, TraceCmd::Free { id: a }),
+            (0, TraceCmd::Free { id: b }),
+        ];
+        verify_tagged_stream(&cmds).expect("barrier-ordered trace is clean");
     }
 }

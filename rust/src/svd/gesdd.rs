@@ -15,7 +15,7 @@ use crate::coordinator::PhaseProfile;
 use crate::matrix::{Bidiagonal, Matrix};
 use crate::runtime::bdc_engine::DeviceEngine;
 use crate::runtime::bdc_engine_k::DeviceEngineK;
-use crate::runtime::{BufId, Device};
+use crate::runtime::{BufId, Device, COMPUTE, TRANSFER};
 use crate::svd::gebrd::{gebrd_device, gebrd_device_k, DeviceGebrd, GebrdFactors};
 use crate::svd::qr::{
     geqrf_device, geqrf_device_k, orgqr_device, orgqr_device_k, ormlq_device, ormlq_device_k,
@@ -215,11 +215,28 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
 
     // initial uploads: input handoff, not a pipeline transfer (staged so
     // back-to-back buckets on one pool worker recycle the allocations);
-    // ONE stack_k packs the bucket and everything after it is k-wide
-    let ids: Vec<BufId> = inputs
-        .iter()
-        .map(|a| dev.upload(dev.stage(&a.data), &[m, n]))
-        .collect();
+    // ONE stack_k packs the bucket and everything after it is k-wide.
+    // With streams on (the default) every lane is staged host-side
+    // first, then the uploads ride the transfer stream back-to-back
+    // with the pack already queued on compute behind a record/wait
+    // edge — so lane l+1's H2D overlaps the device's work on lane l's,
+    // the paper's Algorithm 3 double-buffering. `--no-streams` keeps
+    // the old compute-stream uploads (same results, no overlap).
+    let ids: Vec<BufId> = if cfg.streams {
+        let staged: Vec<Vec<f64>> = inputs.iter().map(|a| dev.stage(&a.data)).collect();
+        let ids: Vec<BufId> = staged
+            .into_iter()
+            .map(|s| dev.upload_on(TRANSFER, s, &[m, n]))
+            .collect();
+        let ev = dev.record_event(TRANSFER);
+        dev.wait_event(COMPUTE, ev);
+        ids
+    } else {
+        inputs
+            .iter()
+            .map(|a| dev.upload(dev.stage(&a.data), &[m, n]))
+            .collect()
+    };
     let astack = dev.op(
         "stack_k",
         &[("k", lanes as i64), ("len", (m * n) as i64)],
@@ -277,7 +294,16 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
             }
         }
         dev.recycle(afac_host);
-        let r_dev = dev.upload(r, &[lanes, n, n]);
+        // the packed R stack re-upload likewise rides the transfer
+        // stream, overlapping whatever gebrd work gets queued next
+        let r_dev = if cfg.streams {
+            let id = dev.upload_on(TRANSFER, r, &[lanes, n, n]);
+            let ev = dev.record_event(TRANSFER);
+            dev.wait_event(COMPUTE, ev);
+            id
+        } else {
+            dev.upload(r, &[lanes, n, n])
+        };
         (r_dev, Some(q))
     } else {
         (astack, None)

@@ -1,0 +1,341 @@
+//! Concurrency harness for the async op-stream runtime (DESIGN.md
+//! §Async streams): a deterministic virtual-clock scheduler shim that
+//! permutes stream interleavings, plus the device-multiplexing
+//! fairness and panic-containment regressions.
+//!
+//! The properties pinned down here:
+//!
+//!   * every legal interleaving of the compute/transfer queues drains,
+//!     preserves per-stream order, honours record/wait edges, and ends
+//!     in the SAME state (exhaustive DFS over `StreamSched::ready`);
+//!   * fused k-wide solves are bit-identical to the strict-FIFO path
+//!     under N seeded schedules, with the op-stream verifier forced on
+//!     and zero leaks (the failing seed is printed by the assert);
+//!   * a `DeviceMux` with one slot and four workers starves nobody:
+//!     every lane completes its cycles, in-flight execution never
+//!     exceeds the slot count, and the per-worker lease counts are
+//!     exactly fair;
+//!   * a panicking lane unwinds through its lease without wedging the
+//!     shared ticket queue — the other lanes finish and the panic
+//!     surfaces as a deterministic error.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use gcsvd::batch::gesvd_batched_with_stats;
+use gcsvd::config::{Config, Solver};
+use gcsvd::matrix::Matrix;
+use gcsvd::runtime::stream::StreamSched;
+use gcsvd::runtime::transfer::TransferModel;
+use gcsvd::runtime::{Device, DeviceMux, SchedPolicy, COMPUTE, TRANSFER};
+use gcsvd::util::Rng;
+
+// ---------------------------------------------------------------------
+// 1. Exhaustive virtual-clock interleaving of the scheduler shim
+// ---------------------------------------------------------------------
+
+/// One modelled op: (name, what it does to the virtual memory).
+type Op = &'static str;
+
+/// Apply one op to the virtual memory. Reads `unwrap` on purpose: if a
+/// schedule lets a consumer run before its producer, the test dies
+/// loudly instead of comparing garbage.
+fn apply(mem: &mut BTreeMap<&'static str, i64>, op: Op) {
+    match op {
+        "pre" => {
+            mem.insert("p", 1);
+        }
+        "u0" => {
+            mem.insert("a", 3);
+        }
+        "u1" => {
+            mem.insert("b", 4);
+        }
+        "c0" => {
+            let v = mem["a"] * mem["b"];
+            mem.insert("x", v);
+        }
+        "c1" => {
+            let v = mem["x"] + mem["p"];
+            mem.insert("y", v);
+        }
+        other => panic!("unknown op {other}"),
+    }
+}
+
+/// The double-buffered upload pattern `front_end_k` emits: compute has
+/// an independent op, then waits on the transfer stream's record before
+/// consuming the uploads.
+fn program() -> StreamSched<Op> {
+    let mut s = StreamSched::new(2, SchedPolicy::Fifo);
+    s.push(COMPUTE, "pre");
+    s.push(TRANSFER, "u0");
+    s.push(TRANSFER, "u1");
+    let ev = s.record(TRANSFER);
+    s.wait(COMPUTE, ev);
+    s.push(COMPUTE, "c0");
+    s.push(COMPUTE, "c1");
+    s
+}
+
+/// Fork the scheduler at every ready-head choice, collecting each
+/// complete schedule's op trace.
+fn dfs(sched: &StreamSched<Op>, trace: &mut Vec<Op>, out: &mut Vec<Vec<Op>>) {
+    let ready = sched.ready();
+    if ready.is_empty() {
+        assert!(
+            sched.is_empty(),
+            "schedule wedged with work queued: trace so far {trace:?}"
+        );
+        out.push(trace.clone());
+        return;
+    }
+    for stream in ready {
+        let mut fork = sched.clone();
+        let popped = fork.pop_from(stream);
+        if let Some(op) = popped {
+            trace.push(op);
+            dfs(&fork, trace, out);
+            trace.pop();
+        } else {
+            // marker slot (record/wait): a scheduler step, not an op
+            dfs(&fork, trace, out);
+        }
+    }
+}
+
+#[test]
+fn every_interleaving_drains_ordered_and_converges() {
+    let mut traces = Vec::new();
+    dfs(&program(), &mut Vec::new(), &mut traces);
+    assert!(!traces.is_empty());
+
+    let mut reference: Option<BTreeMap<&'static str, i64>> = None;
+    let mut distinct = std::collections::HashSet::new();
+    for trace in &traces {
+        // per-stream program order is preserved in every schedule
+        let compute: Vec<Op> = trace
+            .iter()
+            .copied()
+            .filter(|op| matches!(*op, "pre" | "c0" | "c1"))
+            .collect();
+        let transfer: Vec<Op> =
+            trace.iter().copied().filter(|op| matches!(*op, "u0" | "u1")).collect();
+        assert_eq!(compute, vec!["pre", "c0", "c1"], "schedule {trace:?}");
+        assert_eq!(transfer, vec!["u0", "u1"], "schedule {trace:?}");
+        // the record/wait edge: both uploads land before the consumer
+        let pos = |op: Op| trace.iter().position(|o| *o == op).unwrap();
+        assert!(pos("u0") < pos("c0") && pos("u1") < pos("c0"), "schedule {trace:?}");
+
+        // the virtual clock: every schedule converges to one memory state
+        let mut mem = BTreeMap::new();
+        for &op in trace {
+            apply(&mut mem, op);
+        }
+        match &reference {
+            None => reference = Some(mem),
+            Some(r) => assert_eq!(&mem, r, "divergent end state for {trace:?}"),
+        }
+        distinct.insert(trace.clone());
+    }
+    // the fork actually explored concurrency, not one serial order
+    assert!(distinct.len() > 1, "DFS found a single schedule — no interleaving explored");
+}
+
+// ---------------------------------------------------------------------
+// 2. Seeded schedule fuzz over real fused solves (verifier forced on)
+// ---------------------------------------------------------------------
+
+fn base_cfg() -> Config {
+    Config {
+        threads: 2,
+        fuse: true,
+        transfer: TransferModel { enabled: false, ..Default::default() },
+        ..Config::default()
+    }
+}
+
+/// Two fusable buckets (3 + 2 lanes) plus a singleton, so the fuzz
+/// crosses the k-wide front end, the shared tree AND the per-solve
+/// path in one batch.
+fn fuzz_inputs() -> Vec<Matrix> {
+    let mut rng = Rng::new(4099);
+    let shapes = [(12usize, 12usize), (16, 8), (12, 12), (16, 8), (12, 12), (7, 7)];
+    shapes.iter().map(|&(m, n)| Matrix::from_fn(m, n, |_, _| rng.gaussian())).collect()
+}
+
+#[test]
+fn seeded_schedules_are_bit_exact_and_leak_free() {
+    // force the op-stream verifier for every device this test builds
+    // (pool devices included) — violations and leaks become errors
+    gcsvd::runtime::verify::force(true);
+    let inputs = fuzz_inputs();
+
+    let fifo_cfg = base_cfg();
+    assert_eq!(fifo_cfg.sched_policy(), SchedPolicy::Fifo);
+    let (baseline, base_stats) =
+        gesvd_batched_with_stats(&inputs, &fifo_cfg, Solver::Ours).expect("fifo batch");
+    assert!(base_stats.verified_ops > 0, "verifier was not actually on");
+    assert!(base_stats.fused_buckets >= 2, "fuzz inputs stopped fusing");
+
+    for seed in 0..12u64 {
+        let cfg = Config { sched_seed: Some(seed), ..base_cfg() };
+        let (permuted, stats) = gesvd_batched_with_stats(&inputs, &cfg, Solver::Ours)
+            .unwrap_or_else(|e| panic!("sched-seed {seed}: batch failed: {e:#}"));
+        assert!(stats.verified_ops > 0, "sched-seed {seed}: verifier off");
+        for (i, (p, b)) in permuted.iter().zip(&baseline).enumerate() {
+            assert_eq!(p.sigma, b.sigma, "sched-seed {seed} item {i}: sigma");
+            assert_eq!(p.u.data, b.u.data, "sched-seed {seed} item {i}: U");
+            assert_eq!(p.vt.data, b.vt.data, "sched-seed {seed} item {i}: V^T");
+        }
+    }
+}
+
+#[test]
+fn no_streams_fallback_matches_streamed_results() {
+    gcsvd::runtime::verify::force(true);
+    let inputs = fuzz_inputs();
+    let streamed = gesvd_batched_with_stats(&inputs, &base_cfg(), Solver::Ours)
+        .expect("streamed batch");
+    let sync_cfg = Config { streams: false, ..base_cfg() };
+    let sync = gesvd_batched_with_stats(&inputs, &sync_cfg, Solver::Ours).expect("sync batch");
+    for (i, (a, b)) in streamed.0.iter().zip(&sync.0).enumerate() {
+        assert_eq!(a.sigma, b.sigma, "item {i}: sigma");
+        assert_eq!(a.u.data, b.u.data, "item {i}: U");
+        assert_eq!(a.vt.data, b.vt.data, "item {i}: V^T");
+    }
+    // the streamed run measured its transfer stream; the sync run has
+    // nothing to measure, so its overlap entry is absent (not zero)
+    assert!(streamed.1.device.transfer_sec > 0.0, "transfer stream never ran");
+    assert!(streamed.1.phase_sec.contains_key("overlap_sec"));
+    let ov = streamed.1.phase_sec["overlap_sec"];
+    assert!(
+        (0.0..=streamed.1.device.transfer_sec).contains(&ov),
+        "overlap {ov} outside [0, transfer {}]",
+        streamed.1.device.transfer_sec
+    );
+    assert_eq!(sync.1.device.transfer_sec, 0.0);
+    assert!(!sync.1.phase_sec.contains_key("overlap_sec"));
+}
+
+// ---------------------------------------------------------------------
+// 3. Mux fairness: one device slot, four workers, nobody starves
+// ---------------------------------------------------------------------
+
+#[test]
+fn single_slot_four_workers_all_make_progress() {
+    const WORKERS: usize = 4;
+    const CYCLES: u64 = 8;
+    let mux = DeviceMux::new(vec![Device::host()], WORKERS);
+    let in_flight = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for w in 0..WORKERS {
+            let mux = &mux;
+            let in_flight = &in_flight;
+            scope.spawn(move || {
+                for cycle in 0..CYCLES {
+                    mux.with_device(w, |d| {
+                        // max_parallelism = 1 slot: leases never overlap
+                        let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                        assert!(now <= 1, "worker {w}: {now} leases in flight on 1 slot");
+                        let v = (w as f64) * 100.0 + cycle as f64;
+                        let id = d.upload(vec![v, v + 1.0], &[2]);
+                        let back = d.read(id).expect("read");
+                        assert_eq!(back, vec![v, v + 1.0], "worker {w} cycle {cycle}");
+                        d.free(id);
+                        in_flight.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        }
+    });
+
+    // exact fairness: every worker got precisely its CYCLES leases —
+    // the strict-FIFO ticket queue cannot drop or double-grant
+    assert_eq!(mux.lease_counts(), vec![CYCLES; WORKERS]);
+    assert!(mux.devices()[0].verify_leaks().is_ok());
+}
+
+#[test]
+fn pool_width_no_longer_collapses_to_the_slot_count() {
+    // 8 units, 4 threads: the pool must run 4 workers even if the
+    // backend hint is smaller — the hint bounds device slots instead
+    let mut rng = Rng::new(5151);
+    let inputs: Vec<Matrix> =
+        (0..8).map(|_| Matrix::from_fn(8, 8, |_, _| rng.gaussian())).collect();
+    let cfg = Config {
+        threads: 4,
+        transfer: TransferModel { enabled: false, ..Default::default() },
+        ..Config::default()
+    };
+    let (results, stats) =
+        gesvd_batched_with_stats(&inputs, &cfg, Solver::Ours).expect("batch");
+    assert_eq!(results.len(), 8);
+    assert_eq!(stats.threads, 4, "pool width collapsed");
+    assert!(stats.device_slots >= 1 && stats.device_slots <= 4);
+    assert_eq!(stats.worker_leases.len(), 4);
+    // every unit leased a device exactly once, whichever worker ran it
+    let total: u64 = stats.worker_leases.iter().sum();
+    assert_eq!(total, 8, "leases {:?}", stats.worker_leases);
+}
+
+// ---------------------------------------------------------------------
+// 4. Panic containment under multiplexing
+// ---------------------------------------------------------------------
+
+#[test]
+fn panicking_lane_does_not_wedge_the_queue() {
+    const WORKERS: usize = 4;
+    const CYCLES: u64 = 4;
+    let mux = DeviceMux::new(vec![Device::host()], WORKERS);
+
+    let panic_msg = std::thread::scope(|scope| {
+        // lane 0 dies mid-lease; its unwind must release the slot
+        let dead = {
+            let mux = &mux;
+            scope.spawn(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    mux.with_device(0, |d| {
+                        let id = d.upload(vec![1.0], &[1]);
+                        let _ = d.read(id).expect("read");
+                        panic!("lane 0 cancelled");
+                    });
+                }));
+                r.unwrap_err()
+            })
+        };
+        // the surviving lanes complete their full workload
+        for w in 1..WORKERS {
+            let mux = &mux;
+            scope.spawn(move || {
+                for cycle in 0..CYCLES {
+                    mux.with_device(w, |d| {
+                        let v = (w as f64) * 10.0 + cycle as f64;
+                        let id = d.upload(vec![v], &[1]);
+                        assert_eq!(d.read(id).expect("read"), vec![v]);
+                        d.free(id);
+                    });
+                }
+            });
+        }
+        dead.join().expect("catch_unwind already contained the panic")
+    });
+
+    // the error is deterministic, not a poisoned-mutex side effect
+    let msg = panic_msg
+        .downcast_ref::<&str>()
+        .copied()
+        .unwrap_or("not a str payload");
+    assert_eq!(msg, "lane 0 cancelled");
+
+    let counts = mux.lease_counts();
+    assert_eq!(counts[0], 1, "leases {counts:?}");
+    assert_eq!(&counts[1..], &[CYCLES; WORKERS - 1], "leases {counts:?}");
+    // the queue still grants after the panic — nothing is wedged
+    mux.with_device(2, |d| {
+        let id = d.upload(vec![9.0], &[1]);
+        assert_eq!(d.read(id).expect("read"), vec![9.0]);
+        d.free(id);
+    });
+}
