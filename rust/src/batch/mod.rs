@@ -11,7 +11,8 @@
 //!     a worker solving a bucket back-to-back hits its device's warm
 //!     compile cache — and orders buckets heaviest-first;
 //!   * with `cfg.fuse` (CLI `--fuse`), buckets of size >= 2 become ONE
-//!     schedule unit solved by `gesdd_ours_fused`: all k members advance
+//!     schedule unit solved by the fused "ours" driver (at
+//!     `cfg.precision` — f64, f32, or mixed): all k members advance
 //!     through one shared BDC tree with k-wide device ops over packed
 //!     `[k, n, n]` stacks (`bdc/driver_k.rs`), so each secular solve and
 //!     lasd3 gemm is issued once per tree node instead of once per
@@ -60,7 +61,7 @@ use crate::config::{Config, Solver};
 use crate::matrix::Matrix;
 use crate::runtime::pool::StealPool;
 use crate::runtime::{Device, DeviceMux, DeviceStats};
-use crate::svd::gesdd::gesdd_ours_fused;
+use crate::svd::gesdd::gesdd_ours_fused_prec;
 use crate::svd::{gesvd, SvdResult};
 use plan::{fused_plan, WorkUnit};
 
@@ -219,7 +220,7 @@ pub fn gesvd_batched_with_stats(
                             let items = &plan.buckets[bucket].items[start..start + len];
                             let lane_inputs: Vec<&Matrix> =
                                 items.iter().map(|&i| &inputs[i]).collect();
-                            gesdd_ours_fused(d, &lane_inputs, &solve_cfg)
+                            gesdd_ours_fused_prec(d, &lane_inputs, &solve_cfg)
                                 .map(|(rs, st)| {
                                     (items.iter().copied().zip(rs).collect(), Some(st))
                                 })

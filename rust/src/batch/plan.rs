@@ -23,6 +23,7 @@ use anyhow::Result;
 
 use crate::config::Config;
 use crate::matrix::Matrix;
+use crate::scalar::Precision;
 
 /// Bucket key: matrices sharing this solve identical op sequences.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -31,6 +32,10 @@ pub struct ShapeKey {
     pub n: usize,
     /// Effective panel block (`cfg.block` clamped to `n`).
     pub block: usize,
+    /// Compute dtype: op keys (and so the compile cache) are per-dtype,
+    /// so an f32 solve never shares a bucket with an f64 one even at
+    /// the same shape — the replay guarantee above is dtype-exact.
+    pub precision: Precision,
 }
 
 /// The shape-derived scheduling facts for one bucket: the bucket key
@@ -48,7 +53,10 @@ pub struct SolvePlan {
 impl SolvePlan {
     pub fn for_shape(m: usize, n: usize, cfg: &Config) -> SolvePlan {
         let block = cfg.block.clamp(1, n.max(1));
-        SolvePlan { key: ShapeKey { m, n, block }, flops: svd_flops(m, n) }
+        SolvePlan {
+            key: ShapeKey { m, n, block, precision: cfg.precision },
+            flops: svd_flops(m, n),
+        }
     }
 }
 
@@ -205,7 +213,7 @@ mod tests {
         // membership preserved, in input order
         let b64 = buckets
             .iter()
-            .find(|b| b.plan.key == ShapeKey { m: 64, n: 64, block: 32 })
+            .find(|b| b.plan.key == ShapeKey { m: 64, n: 64, block: 32, precision: Precision::F64 })
             .unwrap();
         assert_eq!(b64.items, vec![1, 4]);
         let total: usize = buckets.iter().map(|b| b.items.len()).sum();
@@ -216,9 +224,9 @@ mod tests {
     fn plan_clamps_block_into_the_key() {
         let cfg = Config::default(); // block 32
         let p = SolvePlan::for_shape(5, 5, &cfg);
-        assert_eq!(p.key, ShapeKey { m: 5, n: 5, block: 5 });
+        assert_eq!(p.key, ShapeKey { m: 5, n: 5, block: 5, precision: Precision::F64 });
         let q = SolvePlan::for_shape(100, 70, &cfg);
-        assert_eq!(q.key, ShapeKey { m: 100, n: 70, block: 32 });
+        assert_eq!(q.key, ShapeKey { m: 100, n: 70, block: 32, precision: Precision::F64 });
         assert!(q.flops > p.flops);
     }
 
@@ -293,6 +301,24 @@ mod tests {
             }
         }
         assert_eq!(covered, inputs.len());
+    }
+
+    #[test]
+    fn same_shape_different_dtype_never_shares_a_bucket() {
+        let c32 = Config { precision: Precision::F32, ..Config::default() };
+        let c64 = Config::default();
+        let k32 = SolvePlan::for_shape(64, 64, &c32).key;
+        let k64 = SolvePlan::for_shape(64, 64, &c64).key;
+        assert_ne!(k32, k64);
+        assert_eq!((k32.m, k32.n, k32.block), (k64.m, k64.n, k64.block));
+        // and through the planner: identical shapes, per-dtype buckets
+        let inputs = vec![Matrix::zeros(8, 8), Matrix::zeros(8, 8)];
+        let b32 = bucket_inputs(&inputs, &c32).unwrap();
+        let b64 = bucket_inputs(&inputs, &c64).unwrap();
+        assert_eq!(b32.len(), 1);
+        assert_eq!(b64.len(), 1);
+        assert_ne!(b32[0].plan.key, b64[0].plan.key);
+        assert_eq!(b32[0].plan.key.precision, Precision::F32);
     }
 
     #[test]

@@ -22,16 +22,24 @@
 //!    compute (`overlap_sec > 0`), and per row the overlap can never
 //!    exceed the transfer wall it hides inside. Catches the
 //!    double-buffer path silently degrading to serial uploads.
-//! 4. **Op-count ceiling (vs baseline, exact).** Per batch size,
-//!    `fused_exec_count` must not exceed the committed baseline's —
-//!    improvements land silently, regressions require a deliberate
-//!    baseline refresh in the same PR.
-//! 5. **Throughput ratio (vs baseline, tolerant).** At the largest
-//!    common batch size, `fused_sec / serial_sec` must stay within
-//!    `tol` x the baseline ratio. The ratio is machine-portable where
-//!    wall seconds are not; `tol` absorbs CI-runner noise. When both
-//!    artifacts report the stream split, the overlap *fraction*
+//! 4. **Op-count ceiling (vs baseline, exact).** Per (batch, dtype)
+//!    pair, `fused_exec_count` must not exceed the committed
+//!    baseline's — improvements land silently, regressions require a
+//!    deliberate baseline refresh in the same PR. Rows are matched by
+//!    BOTH batch size and dtype (rows without a `dtype` field — the
+//!    pre-scalar-layer format — read as "f64"); when the baseline and
+//!    fresh artifact disagree on which dtypes were swept at all, the
+//!    gate fails loudly instead of silently comparing nothing.
+//! 5. **Throughput ratio (vs baseline, tolerant).** Per dtype, at the
+//!    largest common batch size, `fused_sec / serial_sec` must stay
+//!    within `tol` x the baseline ratio. The ratio is machine-portable
+//!    where wall seconds are not; `tol` absorbs CI-runner noise. When
+//!    both artifacts report the stream split, the overlap *fraction*
 //!    (`overlap/transfer`) must also stay within `tol` of baseline.
+//! 6. **f32/f64 bandwidth ratio (vs baseline, tolerant).** When a
+//!    sweep carries both dtypes, the f32-over-f64 fused wall ratio at
+//!    the largest shared batch must stay within `tol` x the baseline's
+//!    — the "half the bytes" payoff can't silently erode.
 //!
 //! A baseline with no rows (the committed seed before the first
 //! CI-generated refresh) skips checks 4-5 with a notice; checks 1-3
@@ -68,6 +76,9 @@ const SCALAR_OPS: [&str; 15] = [
 /// One parsed bench row, reduced to what the gate consumes.
 struct Row {
     batch: u64,
+    /// Compute dtype of the row ("f64" when the artifact predates the
+    /// scalar layer).
+    dtype: String,
     /// distinct (m, n) -> lane count in this batch
     shape_counts: BTreeMap<(u64, u64), u64>,
     fused_exec: u64,
@@ -137,6 +148,11 @@ fn load_rows(path: &Path) -> Result<Vec<Row>> {
             .collect();
         out.push(Row {
             batch: num("batch")? as u64,
+            dtype: row
+                .get("dtype")
+                .and_then(Value::as_str)
+                .unwrap_or("f64")
+                .to_string(),
             shape_counts,
             fused_exec: num("fused_exec_count")? as u64,
             fused_ops,
@@ -160,7 +176,10 @@ pub fn compare_batch_baseline(baseline: &Path, fresh: &Path, tol: f64) -> Result
     // ---- 1. fused exec counts are lane-count-independent ----
     let mut by_sig: BTreeMap<String, Vec<&Row>> = BTreeMap::new();
     for row in fresh_rows.iter().filter(|r| r.fully_fused()) {
-        by_sig.entry(row.shape_signature()).or_default().push(row);
+        // per-dtype grouping: an f32 sweep legitimately has different
+        // exec counts from f64's (the mixed pipeline adds cast ops)
+        let sig = format!("{} {}", row.shape_signature(), row.dtype);
+        by_sig.entry(sig).or_default().push(row);
     }
     let mut fully_fused = 0usize;
     for (sig, rows) in &by_sig {
@@ -236,18 +255,36 @@ pub fn compare_batch_baseline(baseline: &Path, fresh: &Path, tol: f64) -> Result
         return Ok(());
     }
 
-    // ---- 3. per-batch fused exec count <= baseline ----
-    let base_by_batch: BTreeMap<u64, &Row> = base_rows.iter().map(|r| (r.batch, r)).collect();
+    // ---- dtype coverage must agree before any pairwise check ----
+    let dtypes = |rows: &[Row]| -> std::collections::BTreeSet<String> {
+        rows.iter().map(|r| r.dtype.clone()).collect()
+    };
+    let (base_dts, fresh_dts) = (dtypes(&base_rows), dtypes(&fresh_rows));
+    if base_dts != fresh_dts {
+        bail!(
+            "dtype sweeps disagree: baseline has {base_dts:?}, fresh has {fresh_dts:?} \
+             — a dtype's rows went missing (refresh {} deliberately if the \
+             sweep changed)",
+            baseline.display()
+        );
+    }
+
+    // ---- 4. per-(batch, dtype) fused exec count <= baseline ----
+    let base_by_key: BTreeMap<(u64, &str), &Row> = base_rows
+        .iter()
+        .map(|r| ((r.batch, r.dtype.as_str()), r))
+        .collect();
     let mut compared = 0usize;
     for row in &fresh_rows {
-        let Some(base) = base_by_batch.get(&row.batch) else {
+        let Some(base) = base_by_key.get(&(row.batch, row.dtype.as_str())) else {
             continue;
         };
         if row.fused_exec > base.fused_exec {
             bail!(
-                "batch {}: fused_exec_count regressed {} -> {} vs baseline \
+                "batch {} dtype {}: fused_exec_count regressed {} -> {} vs baseline \
                  (refresh {} deliberately if the new stream is intended)",
                 row.batch,
+                row.dtype,
                 base.fused_exec,
                 row.fused_exec,
                 baseline.display()
@@ -255,30 +292,50 @@ pub fn compare_batch_baseline(baseline: &Path, fresh: &Path, tol: f64) -> Result
         }
         compared += 1;
     }
-    anyhow::ensure!(compared > 0, "no common batch sizes between fresh and baseline");
-    println!("  op-count ceiling OK: {compared} batch sizes at or below baseline");
+    anyhow::ensure!(compared > 0, "no common (batch, dtype) rows between fresh and baseline");
+    println!("  op-count ceiling OK: {compared} (batch, dtype) rows at or below baseline");
 
-    // ---- 4. throughput ratio at the largest common batch ----
-    let largest = fresh_rows
-        .iter()
-        .filter(|r| base_by_batch.contains_key(&r.batch))
-        .max_by_key(|r| r.batch)
-        .expect("compared > 0 guarantees a common batch");
-    let base = base_by_batch[&largest.batch];
-    let fresh_ratio = largest.fused_sec / largest.serial_sec.max(1e-12);
-    let base_ratio = base.fused_sec / base.serial_sec.max(1e-12);
-    if fresh_ratio > base_ratio * tol {
-        bail!(
-            "batch {}: fused/serial time ratio regressed {base_ratio:.3} -> \
-             {fresh_ratio:.3} (tolerance x{tol})",
+    // ---- 5. throughput ratio per dtype at the largest common batch ----
+    for dt in &fresh_dts {
+        let Some(largest) = fresh_rows
+            .iter()
+            .filter(|r| r.dtype == *dt && base_by_key.contains_key(&(r.batch, r.dtype.as_str())))
+            .max_by_key(|r| r.batch)
+        else {
+            continue;
+        };
+        let base = base_by_key[&(largest.batch, largest.dtype.as_str())];
+        let fresh_ratio = largest.fused_sec / largest.serial_sec.max(1e-12);
+        let base_ratio = base.fused_sec / base.serial_sec.max(1e-12);
+        if fresh_ratio > base_ratio * tol {
+            bail!(
+                "batch {} dtype {dt}: fused/serial time ratio regressed {base_ratio:.3} -> \
+                 {fresh_ratio:.3} (tolerance x{tol})",
+                largest.batch
+            );
+        }
+        println!(
+            "  throughput OK at batch {} dtype {dt}: fused/serial ratio {fresh_ratio:.3} \
+             (baseline {base_ratio:.3}, tolerance x{tol})",
             largest.batch
         );
     }
-    println!(
-        "  throughput OK at batch {}: fused/serial ratio {fresh_ratio:.3} \
-         (baseline {base_ratio:.3}, tolerance x{tol})",
-        largest.batch
-    );
+
+    // ---- 6. f32-over-f64 fused wall ratio (the bandwidth payoff) ----
+    if let (Some((fresh_b, fresh_r)), Some((_, base_r))) =
+        (f32_over_f64(&fresh_rows), f32_over_f64(&base_rows))
+    {
+        if fresh_r > base_r * tol {
+            bail!(
+                "batch {fresh_b}: f32/f64 fused wall ratio regressed {base_r:.3} -> \
+                 {fresh_r:.3} (tolerance x{tol}) — the f32 bandwidth win eroded"
+            );
+        }
+        println!(
+            "  f32/f64 fused wall ratio OK at batch {fresh_b}: {fresh_r:.3} \
+             (baseline {base_r:.3}, tolerance x{tol})"
+        );
+    }
 
     // ---- 5b. overlap fraction vs baseline (only when both report it) ----
     if let (Some((btr, bov)), Some((ftr, fov))) =
@@ -300,6 +357,21 @@ pub fn compare_batch_baseline(baseline: &Path, fresh: &Path, tol: f64) -> Result
         }
     }
     Ok(())
+}
+
+/// The f32-over-f64 fused wall ratio at the largest batch size both
+/// dtypes swept (`None` unless some batch has both dtypes' rows).
+fn f32_over_f64(rows: &[Row]) -> Option<(u64, f64)> {
+    let mut best: Option<(u64, f64)> = None;
+    for r32 in rows.iter().filter(|r| r.dtype == "f32") {
+        if let Some(r64) = rows.iter().find(|r| r.dtype == "f64" && r.batch == r32.batch) {
+            let ratio = r32.fused_sec / r64.fused_sec.max(1e-12);
+            if !best.is_some_and(|(b, _)| b >= r32.batch) {
+                best = Some((r32.batch, ratio));
+            }
+        }
+    }
+    best
 }
 
 /// Summed (transfer, overlap) seconds over the fully fused rows that
@@ -495,6 +567,109 @@ mod tests {
         let err = compare_batch_baseline(&base, &fresh, 1.5).unwrap_err();
         assert!(format!("{err:#}").contains("overlap fraction regressed"), "{err:#}");
         compare_batch_baseline(&base, &fresh, 4.0).expect("x4 tolerance absorbs it");
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+    }
+
+    /// [`row`] plus an explicit dtype field (scalar-layer artifacts).
+    #[allow(clippy::too_many_arguments)]
+    fn drow(
+        batch: u64,
+        shapes: &[(u64, u64, u64)],
+        fused_exec: u64,
+        ops: &[&str],
+        serial_sec: f64,
+        fused_sec: f64,
+        dtype: &str,
+    ) -> Json {
+        let mut shape_list = Vec::new();
+        for &(m, n, lanes) in shapes {
+            for _ in 0..lanes {
+                shape_list.push(Json::arr([Json::uint(m), Json::uint(n)]));
+            }
+        }
+        Json::obj([
+            ("batch", Json::uint(batch)),
+            ("dtype", Json::str(dtype)),
+            ("shapes", Json::arr(shape_list)),
+            ("serial_sec", Json::num(serial_sec)),
+            ("fused_sec", Json::num(fused_sec)),
+            ("fused_exec_count", Json::uint(fused_exec)),
+            (
+                "fused_op_count",
+                Json::sorted_obj(ops.iter().map(|o| (o.to_string(), Json::uint(7)))),
+            ),
+        ])
+    }
+
+    /// A two-dtype sweep: f64 rows plus f32 rows whose fused wall is
+    /// `f32_fused` at batch 16 (f32 serial wall `f32_serial`).
+    fn dtype_rows(f32_serial: f64, f32_fused: f64) -> Vec<Json> {
+        let ops = ["labrd_k", "stack_k", "ormqr_step_k", "secular_k"];
+        let sh = [(48u64, 48u64, 2u64), (96, 48, 2)];
+        let sh16 = [(48u64, 48u64, 4u64), (96, 48, 4)];
+        vec![
+            drow(8, &sh, 120, &ops, 0.8, 0.5, "f64"),
+            drow(16, &sh16, 120, &ops, 1.6, 0.5, "f64"),
+            drow(8, &sh, 120, &ops, 0.5, 0.3, "f32"),
+            drow(16, &sh16, 120, &ops, f32_serial, f32_fused, "f32"),
+        ]
+    }
+
+    #[test]
+    fn missing_dtype_rows_fail_loudly() {
+        let base = write_tmp("base-dts", &doc(dtype_rows(1.0, 0.25)));
+        // fresh sweep silently dropped its f32 rows (all-f64 legacy rows)
+        let fresh = write_tmp("fresh-dts", &doc(healthy_rows(120, 0.9)));
+        let err = compare_batch_baseline(&base, &fresh, 1.5).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype sweeps disagree"), "{err:#}");
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+    }
+
+    #[test]
+    fn rows_match_by_batch_and_dtype() {
+        // the f32 batch-16 row regresses its exec count; the f64 row at
+        // the same batch does not — the (batch, dtype) key must catch it
+        let base = write_tmp("base-key", &doc(dtype_rows(1.0, 0.25)));
+        let mut rows = dtype_rows(1.0, 0.25);
+        rows[3] = drow(
+            16,
+            &[(48, 48, 4), (96, 48, 4)],
+            130,
+            &["labrd_k", "stack_k", "ormqr_step_k", "secular_k"],
+            1.0,
+            0.25,
+            "f32",
+        );
+        // keep the f32 lane-independence group consistent
+        rows[2] = drow(
+            8,
+            &[(48, 48, 2), (96, 48, 2)],
+            130,
+            &["labrd_k", "stack_k", "ormqr_step_k", "secular_k"],
+            0.5,
+            0.3,
+            "f32",
+        );
+        let fresh = write_tmp("fresh-key", &doc(rows));
+        let err = compare_batch_baseline(&base, &fresh, 1.5).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("dtype f32") && msg.contains("fused_exec_count regressed"), "{msg}");
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&fresh).ok();
+    }
+
+    #[test]
+    fn f32_bandwidth_ratio_regression_fails_and_tolerance_absorbs() {
+        // baseline: f32 fused wall is half f64's (ratio 0.5); fresh: f32
+        // slower than f64 (ratio 1.2) while every per-dtype fused/serial
+        // ratio stays healthy — only the cross-dtype check can see it
+        let base = write_tmp("base-f32r", &doc(dtype_rows(1.0, 0.25)));
+        let fresh = write_tmp("fresh-f32r", &doc(dtype_rows(4.0, 0.6)));
+        let err = compare_batch_baseline(&base, &fresh, 1.5).unwrap_err();
+        assert!(format!("{err:#}").contains("f32/f64 fused wall ratio"), "{err:#}");
+        compare_batch_baseline(&base, &fresh, 3.0).expect("x3 tolerance absorbs it");
         std::fs::remove_file(&base).ok();
         std::fs::remove_file(&fresh).ok();
     }

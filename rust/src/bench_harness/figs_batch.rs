@@ -7,6 +7,10 @@
 //! k-wide op stream per bucket — front end, tree AND back-transforms)
 //! become visible in the fused column.
 //!
+//! Each batch size is swept once per compute dtype (f64, f32, mixed —
+//! DESIGN.md §Scalar layer), so the artifact carries per-dtype rows and
+//! the baseline gate can watch the f32-over-f64 bandwidth ratio.
+//!
 //! With `--json FILE` the same rows are written as one machine-readable
 //! JSON document (shapes, fused-vs-unfused wall time, device op counts,
 //! phase split) — CI uploads it as `BENCH_batch.json`, seeding the
@@ -21,7 +25,9 @@ use crate::bench_harness::json::Json;
 use crate::bench_harness::{gflops, header, time_median, Ctx};
 use crate::config::Solver;
 use crate::gen::{generate, MatrixKind};
+use crate::matrix::Matrix;
 use crate::runtime::Device;
+use crate::scalar::Precision;
 use crate::svd::gesvd;
 
 /// Batch sizes swept (matrices per call).
@@ -48,11 +54,99 @@ pub fn phase_split(st: &BatchStats) -> Json {
     )
 }
 
+/// One (batch size, dtype) sweep point: serial loop vs pool vs fused
+/// over the same inputs, returned as the artifact's JSON row.
+fn sweep_point(ctx: &Ctx, inputs: &[Matrix], batch: usize, flops: f64, prec: Precision) -> Json {
+    let mut cfg = ctx.cfg.clone();
+    cfg.precision = prec;
+
+    // baseline: the pre-batch idiom — one device, a plain loop. The
+    // device is built inside the timed region, mirroring the batched
+    // call (which constructs its worker devices per invocation), so
+    // neither side rides a warm cache the other paid for.
+    let t_serial = time_median(ctx.reps, || {
+        let dev = Device::with_backend(cfg.backend, &cfg.artifacts, cfg.transfer)
+            .expect("serial device");
+        for a in inputs {
+            let _ = gesvd(&dev, a, &cfg, Solver::Ours).expect("serial solve");
+        }
+    });
+
+    let mut pool_stats: Option<BatchStats> = None;
+    let t_batch = time_median(ctx.reps, || {
+        let (_, st) = gesvd_batched_with_stats(inputs, &cfg, Solver::Ours).expect("batched solve");
+        pool_stats = Some(st);
+    });
+
+    // fused-vs-unfused: same inputs, same pool, buckets of size >= 2
+    // collapsed into units whose whole pipeline (gebrd/QR front end
+    // + tree + ormqr/ormlq + TS gemm) is one k-wide op stream
+    let mut fused_cfg = cfg;
+    fused_cfg.fuse = true;
+    let mut fused_stats: Option<BatchStats> = None;
+    let t_fused = time_median(ctx.reps, || {
+        let (_, st) = gesvd_batched_with_stats(inputs, &fused_cfg, Solver::Ours)
+            .expect("fused batched solve");
+        fused_stats = Some(st);
+    });
+
+    let pool_stats = pool_stats.expect("one timed pool rep ran");
+    let fused_stats = fused_stats.expect("one timed fused rep ran");
+    let workers = pool_stats.threads;
+    let fused_nodes = fused_stats.fused_nodes;
+    let occupancy = fused_stats.lane_occupancy;
+
+    println!(
+        "  batch {batch:>3} {:>5}: serial {t_serial:8.4}s | pool({workers}) {t_batch:8.4}s \
+         (x{:4.2}) | fused {t_fused:8.4}s (x{:4.2}, {fused_nodes} nodes, occ {occupancy:4.2}) \
+         | {:6.1} mat/s | {:7.3} GFLOP/s",
+        prec.name(),
+        t_serial / t_batch.max(1e-12),
+        t_serial / t_fused.max(1e-12),
+        batch as f64 / t_batch.max(1e-12),
+        gflops(flops, t_batch.max(1e-12)),
+    );
+
+    Json::obj([
+        ("batch", Json::int(batch as i64)),
+        ("dtype", Json::str(prec.name())),
+        (
+            "shapes",
+            Json::arr(inputs.iter().map(|a| {
+                Json::arr([Json::int(a.rows as i64), Json::int(a.cols as i64)])
+            })),
+        ),
+        ("flops", Json::num(flops)),
+        ("serial_sec", Json::num(t_serial)),
+        ("pool_sec", Json::num(t_batch)),
+        ("fused_sec", Json::num(t_fused)),
+        ("workers", Json::int(workers as i64)),
+        ("fused_buckets", Json::int(fused_stats.fused_buckets as i64)),
+        ("fused_nodes", Json::int(fused_nodes as i64)),
+        ("lane_occupancy", Json::num(occupancy)),
+        ("pool_exec_count", Json::uint(pool_stats.device.exec_count)),
+        ("fused_exec_count", Json::uint(fused_stats.device.exec_count)),
+        ("pool_op_count", op_counts(&pool_stats)),
+        ("fused_op_count", op_counts(&fused_stats)),
+        ("pool_phase_sec", phase_split(&pool_stats)),
+        ("fused_phase_sec", phase_split(&fused_stats)),
+        // stream split of the fused run: wall seconds the transfer
+        // stream spent uploading, and how much of that was hidden
+        // behind queued compute (0 both when --no-streams)
+        ("fused_transfer_sec", Json::num(fused_stats.device.transfer_sec)),
+        ("fused_overlap_sec", Json::num(fused_stats.device.overlap_sec)),
+        // verifier overhead (both ~0 unless GCSVD_VERIFY/--verify):
+        // the bench trajectory records what stream auditing costs
+        ("verified_ops", Json::uint(pool_stats.verified_ops)),
+        ("verify_sec", Json::num(pool_stats.verify_sec)),
+    ])
+}
+
 pub fn fig_batch(ctx: &Ctx) -> Result<()> {
     header("Batch — pool vs serial vs fused throughput (ours, mixed shapes)");
     let n = 48usize;
     let shapes = [(n, n), (2 * n, n), (n / 2, n / 2), (n, 1)];
-    let mut rows: Vec<Json> = Vec::with_capacity(BATCHES.len());
+    let mut rows: Vec<Json> = Vec::with_capacity(3 * BATCHES.len());
     for batch in BATCHES {
         let inputs: Vec<_> = (0..batch)
             .map(|i| {
@@ -62,85 +156,11 @@ pub fn fig_batch(ctx: &Ctx) -> Result<()> {
             .collect();
         let flops: f64 = inputs.iter().map(|a| plan::svd_flops(a.rows, a.cols)).sum();
 
-        // baseline: the pre-batch idiom — one device, a plain loop. The
-        // device is built inside the timed region, mirroring the batched
-        // call (which constructs its worker devices per invocation), so
-        // neither side rides a warm cache the other paid for.
-        let t_serial = time_median(ctx.reps, || {
-            let dev = Device::with_backend(ctx.cfg.backend, &ctx.cfg.artifacts, ctx.cfg.transfer)
-                .expect("serial device");
-            for a in &inputs {
-                let _ = gesvd(&dev, a, &ctx.cfg, Solver::Ours).expect("serial solve");
-            }
-        });
-
-        let mut pool_stats: Option<BatchStats> = None;
-        let t_batch = time_median(ctx.reps, || {
-            let (_, st) = gesvd_batched_with_stats(&inputs, &ctx.cfg, Solver::Ours)
-                .expect("batched solve");
-            pool_stats = Some(st);
-        });
-
-        // fused-vs-unfused: same inputs, same pool, buckets of size >= 2
-        // collapsed into units whose whole pipeline (gebrd/QR front end
-        // + tree + ormqr/ormlq + TS gemm) is one k-wide op stream
-        let mut fused_cfg = ctx.cfg.clone();
-        fused_cfg.fuse = true;
-        let mut fused_stats: Option<BatchStats> = None;
-        let t_fused = time_median(ctx.reps, || {
-            let (_, st) = gesvd_batched_with_stats(&inputs, &fused_cfg, Solver::Ours)
-                .expect("fused batched solve");
-            fused_stats = Some(st);
-        });
-
-        let pool_stats = pool_stats.expect("one timed pool rep ran");
-        let fused_stats = fused_stats.expect("one timed fused rep ran");
-        let workers = pool_stats.threads;
-        let fused_nodes = fused_stats.fused_nodes;
-        let occupancy = fused_stats.lane_occupancy;
-
-        println!(
-            "  batch {batch:>3}: serial {t_serial:8.4}s | pool({workers}) {t_batch:8.4}s \
-             (x{:4.2}) | fused {t_fused:8.4}s (x{:4.2}, {fused_nodes} nodes, occ {occupancy:4.2}) \
-             | {:6.1} mat/s | {:7.3} GFLOP/s",
-            t_serial / t_batch.max(1e-12),
-            t_serial / t_fused.max(1e-12),
-            batch as f64 / t_batch.max(1e-12),
-            gflops(flops, t_batch.max(1e-12)),
-        );
-
-        rows.push(Json::obj([
-            ("batch", Json::int(batch as i64)),
-            (
-                "shapes",
-                Json::arr(inputs.iter().map(|a| {
-                    Json::arr([Json::int(a.rows as i64), Json::int(a.cols as i64)])
-                })),
-            ),
-            ("flops", Json::num(flops)),
-            ("serial_sec", Json::num(t_serial)),
-            ("pool_sec", Json::num(t_batch)),
-            ("fused_sec", Json::num(t_fused)),
-            ("workers", Json::int(workers as i64)),
-            ("fused_buckets", Json::int(fused_stats.fused_buckets as i64)),
-            ("fused_nodes", Json::int(fused_nodes as i64)),
-            ("lane_occupancy", Json::num(occupancy)),
-            ("pool_exec_count", Json::uint(pool_stats.device.exec_count)),
-            ("fused_exec_count", Json::uint(fused_stats.device.exec_count)),
-            ("pool_op_count", op_counts(&pool_stats)),
-            ("fused_op_count", op_counts(&fused_stats)),
-            ("pool_phase_sec", phase_split(&pool_stats)),
-            ("fused_phase_sec", phase_split(&fused_stats)),
-            // stream split of the fused run: wall seconds the transfer
-            // stream spent uploading, and how much of that was hidden
-            // behind queued compute (0 both when --no-streams)
-            ("fused_transfer_sec", Json::num(fused_stats.device.transfer_sec)),
-            ("fused_overlap_sec", Json::num(fused_stats.device.overlap_sec)),
-            // verifier overhead (both ~0 unless GCSVD_VERIFY/--verify):
-            // the bench trajectory records what stream auditing costs
-            ("verified_ops", Json::uint(pool_stats.verified_ops)),
-            ("verify_sec", Json::num(pool_stats.verify_sec)),
-        ]));
+        // one row per compute dtype so the artifact records the f32
+        // bandwidth win (and the mixed premium) next to the f64 walls
+        for prec in [Precision::F64, Precision::F32, Precision::Mixed] {
+            rows.push(sweep_point(ctx, &inputs, batch, flops, prec));
+        }
     }
 
     if let Some(path) = &ctx.json {

@@ -56,7 +56,7 @@ fn run_v1(ctx: &Ctx, bd: &Bidiagonal) -> Run {
 
 fn run_ours(ctx: &Ctx, bd: &Bidiagonal) -> Run {
     let t0 = std::time::Instant::now();
-    let mut eng = DeviceEngine::new(ctx.dev.clone());
+    let mut eng = DeviceEngine::<f64>::new(ctx.dev.clone());
     let (_, stats) = bdc_solve(bd, &mut eng, ctx.cfg.leaf, ctx.cfg.threads);
     Run { total: t0.elapsed().as_secs_f64(), stats, transfer_sec: 0.0 }
 }

@@ -33,7 +33,7 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
         for b in ctx.blocks_for("labrd", m, n) {
             let t = time_median(ctx.reps, || {
                 let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
-                gebrd_device_with(&ctx.dev, ab, m, n, b, "gebrd_update_xla").unwrap();
+                gebrd_device_with::<f64>(&ctx.dev, ab, m, n, b, "gebrd_update_xla").unwrap();
                 ctx.dev.sync().unwrap();
             });
             let gf = gflops(gebrd_flops(m, n), t);
@@ -162,12 +162,12 @@ pub fn fig6(ctx: &Ctx) -> Result<()> {
         let b = ctx.cfg.block;
         let t_ours = time_median(ctx.reps, || {
             let ab = ctx.dev.upload(a.data.clone(), &[n, n]);
-            gebrd_device_with(&ctx.dev, ab, n, n, b, "gebrd_update_xla").unwrap();
+            gebrd_device_with::<f64>(&ctx.dev, ab, n, n, b, "gebrd_update_xla").unwrap();
             ctx.dev.sync().unwrap();
         });
         let t_roc = time_median(ctx.reps, || {
             let ab = ctx.dev.upload(a.data.clone(), &[n, n]);
-            gebrd_device_with(&ctx.dev, ab, n, n, b, "gebrd_update2_ws").unwrap();
+            gebrd_device_with::<f64>(&ctx.dev, ab, n, n, b, "gebrd_update2_ws").unwrap();
             ctx.dev.sync().unwrap();
         });
         let mut prof = crate::coordinator::PhaseProfile::default();

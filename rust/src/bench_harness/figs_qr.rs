@@ -30,7 +30,7 @@ pub fn fig13(ctx: &Ctx) -> Result<()> {
         for b in ctx.blocks_for("geqrf_step", m, n) {
             let t = time_median(ctx.reps, || {
                 let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
-                let f = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
+                let f = geqrf_device_with::<f64>(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
                 ctx.dev.sync().unwrap();
                 ctx.dev.free(f.afac);
             });
@@ -40,7 +40,7 @@ pub fn fig13(ctx: &Ctx) -> Result<()> {
         print!("  orgqr {m}x{n}:");
         for b in ctx.blocks_for("orgqr_step", m, n) {
             let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
-            let f = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
+            let f = geqrf_device_with::<f64>(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
             let t = time_median(ctx.reps, || {
                 let q = orgqr_device_with(&ctx.dev, &f, m, n, b, "orgqr_step").unwrap();
                 ctx.dev.sync().unwrap();
@@ -64,13 +64,13 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
         let f = qr_flops(m, n);
         let t_ours = time_median(ctx.reps, || {
             let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
-            let fq = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
+            let fq = geqrf_device_with::<f64>(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
             ctx.dev.sync().unwrap();
             ctx.dev.free(fq.afac);
         });
         let t_classic = time_median(ctx.reps, || {
             let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
-            let fq = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step_classic").unwrap();
+            let fq = geqrf_device_with::<f64>(&ctx.dev, ab, m, n, b, "geqrf_step_classic").unwrap();
             ctx.dev.sync().unwrap();
             ctx.dev.free(fq.afac);
         });
@@ -89,7 +89,7 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
 
         // orgqr comparison over the same factor
         let ab = ctx.dev.upload(a.data.clone(), &[m, n]);
-        let fq = geqrf_device_with(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
+        let fq = geqrf_device_with::<f64>(&ctx.dev, ab, m, n, b, "geqrf_step").unwrap();
         let t_oours = time_median(ctx.reps, || {
             let q = orgqr_device_with(&ctx.dev, &fq, m, n, b, "orgqr_step").unwrap();
             ctx.dev.sync().unwrap();

@@ -79,6 +79,12 @@ pub struct Config {
     /// (DESIGN.md §Async streams). On by default; `--no-streams` falls
     /// back to compute-stream uploads (the pre-stream single FIFO).
     pub streams: bool,
+    /// Compute dtype for the "ours" pipeline (`--dtype f32|f64|mixed`):
+    /// f32 halves every device byte moved, mixed wraps the f64 BDC core
+    /// in an f32 front end + back-transforms and refines sigma in f64
+    /// (DESIGN.md §Scalar layer). Baseline solvers ignore this and stay
+    /// f64.
+    pub precision: crate::scalar::Precision,
     /// Seed for the device's deterministic stream-pick scheduler
     /// (`--sched-seed N`): permutes which ready stream head runs next.
     /// `None` (default) is strict FIFO — the exact pre-stream order.
@@ -112,6 +118,7 @@ impl Default for Config {
             kernel: "xla".to_string(),
             transfer: Default::default(),
             streams: true,
+            precision: Default::default(),
             sched_seed: None,
         }
     }

@@ -39,7 +39,9 @@ pub mod gen;
 pub mod linalg;
 pub mod matrix;
 pub mod runtime;
+pub mod scalar;
 pub mod svd;
 pub mod util;
 
 pub use matrix::Matrix;
+pub use scalar::{DType, DynVec, Precision, Scalar};

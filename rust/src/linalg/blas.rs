@@ -3,16 +3,23 @@
 //! `gemm` is cache-blocked with a transposed-B micro layout; it is not
 //! competitive with a vendor BLAS but is good enough for CPU panels and
 //! reference solvers (the device side uses XLA's gemm).
+//!
+//! Every routine is generic over [`Scalar`] (DESIGN.md §Scalar layer):
+//! the f64 paths read exactly as before (the default `Matrix` type
+//! parameter keeps old call sites untyped), and the host backend's f32
+//! op arms reuse the same loops so an f32 lane is the same arithmetic
+//! at half the width.
 
 use crate::matrix::Matrix;
+use crate::scalar::Scalar;
 
 /// y += alpha * A x (A: m x n).
-pub fn gemv(a: &Matrix, x: &[f64], y: &mut [f64], alpha: f64) {
+pub fn gemv<S: Scalar>(a: &Matrix<S>, x: &[S], y: &mut [S], alpha: S) {
     assert_eq!(x.len(), a.cols);
     assert_eq!(y.len(), a.rows);
     for i in 0..a.rows {
         let row = a.row(i);
-        let mut acc = 0.0;
+        let mut acc = S::ZERO;
         for j in 0..a.cols {
             acc += row[j] * x[j];
         }
@@ -21,13 +28,13 @@ pub fn gemv(a: &Matrix, x: &[f64], y: &mut [f64], alpha: f64) {
 }
 
 /// y += alpha * A^T x (A: m x n, x: m, y: n).
-pub fn gemv_t(a: &Matrix, x: &[f64], y: &mut [f64], alpha: f64) {
+pub fn gemv_t<S: Scalar>(a: &Matrix<S>, x: &[S], y: &mut [S], alpha: S) {
     assert_eq!(x.len(), a.rows);
     assert_eq!(y.len(), a.cols);
     for i in 0..a.rows {
         let row = a.row(i);
         let xi = alpha * x[i];
-        if xi != 0.0 {
+        if xi != S::ZERO {
             for j in 0..a.cols {
                 y[j] += row[j] * xi;
             }
@@ -36,7 +43,7 @@ pub fn gemv_t(a: &Matrix, x: &[f64], y: &mut [f64], alpha: f64) {
 }
 
 /// C += alpha * A B (A: m x k, B: k x n). Cache-blocked.
-pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
+pub fn gemm<S: Scalar>(a: &Matrix<S>, b: &Matrix<S>, c: &mut Matrix<S>, alpha: S) {
     assert_eq!(a.cols, b.rows);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
@@ -55,7 +62,7 @@ pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
                     let crow = c.row_mut(i);
                     for kk in k0..km {
                         let aik = alpha * arow[kk];
-                        if aik != 0.0 {
+                        if aik != S::ZERO {
                             let brow = b.row(kk);
                             for j in j0..jm {
                                 crow[j] += aik * brow[j];
@@ -69,7 +76,7 @@ pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
 }
 
 /// C += alpha * A B^T (A: m x k, B: n x k).
-pub fn gemm_nt(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
+pub fn gemm_nt<S: Scalar>(a: &Matrix<S>, b: &Matrix<S>, c: &mut Matrix<S>, alpha: S) {
     assert_eq!(a.cols, b.cols);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.rows);
@@ -78,7 +85,7 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
         let crow = c.row_mut(i);
         for j in 0..b.rows {
             let brow = b.row(j);
-            let mut acc = 0.0;
+            let mut acc = S::ZERO;
             for kk in 0..a.cols {
                 acc += arow[kk] * brow[kk];
             }
@@ -88,7 +95,7 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
 }
 
 /// C += alpha * A^T B (A: k x m, B: k x n).
-pub fn gemm_tn(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
+pub fn gemm_tn<S: Scalar>(a: &Matrix<S>, b: &Matrix<S>, c: &mut Matrix<S>, alpha: S) {
     assert_eq!(a.rows, b.rows);
     assert_eq!(c.rows, a.cols);
     assert_eq!(c.cols, b.cols);
@@ -97,7 +104,7 @@ pub fn gemm_tn(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
         let brow = b.row(kk);
         for i in 0..a.cols {
             let aik = alpha * arow[i];
-            if aik != 0.0 {
+            if aik != S::ZERO {
                 let crow = c.row_mut(i);
                 for j in 0..b.cols {
                     crow[j] += aik * brow[j];
@@ -108,36 +115,36 @@ pub fn gemm_tn(a: &Matrix, b: &Matrix, c: &mut Matrix, alpha: f64) {
 }
 
 /// Convenience: C = A B.
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+pub fn matmul<S: Scalar>(a: &Matrix<S>, b: &Matrix<S>) -> Matrix<S> {
     let mut c = Matrix::zeros(a.rows, b.cols);
-    gemm(a, b, &mut c, 1.0);
+    gemm(a, b, &mut c, S::ONE);
     c
 }
 
-pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+pub fn dot<S: Scalar>(x: &[S], y: &[S]) -> S {
     assert_eq!(x.len(), y.len());
-    x.iter().zip(y).map(|(a, b)| a * b).sum()
+    x.iter().zip(y).map(|(&a, &b)| a * b).sum()
 }
 
-pub fn nrm2(x: &[f64]) -> f64 {
+pub fn nrm2<S: Scalar>(x: &[S]) -> S {
     // two-pass scaled norm, dlassq-style, to avoid overflow
-    let amax = x.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
-    if amax == 0.0 {
-        return 0.0;
+    let amax = x.iter().fold(S::ZERO, |a, &v| a.maxv(v.abs()));
+    if amax == S::ZERO {
+        return S::ZERO;
     }
-    let s: f64 = x.iter().map(|&v| (v / amax) * (v / amax)).sum();
+    let s: S = x.iter().map(|&v| (v / amax) * (v / amax)).sum();
     amax * s.sqrt()
 }
 
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    for (yi, xi) in y.iter_mut().zip(x) {
+pub fn axpy<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
     }
 }
 
 /// Solve R w = z in place for upper-triangular R (trsm with one rhs column
 /// at a time). `trans` solves R^T w = z instead.
-pub fn trsv_upper(r: &Matrix, z: &mut [f64], trans: bool) {
+pub fn trsv_upper<S: Scalar>(r: &Matrix<S>, z: &mut [S], trans: bool) {
     let n = r.rows;
     assert_eq!(r.cols, n);
     assert_eq!(z.len(), n);
@@ -218,7 +225,26 @@ mod tests {
     fn nrm2_no_overflow() {
         let x = vec![1e200, 1e200];
         assert!((nrm2(&x) - 1e200 * 2f64.sqrt()).abs() / 1e200 < 1e-14);
-        assert_eq!(nrm2(&[0.0, 0.0]), 0.0);
+        assert_eq!(nrm2(&[0.0f64, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn f32_kernels_track_f64() {
+        // the same arithmetic at half width: f32 gemm/nrm2 agree with the
+        // f64 result to f32 epsilon-scaled tolerance
+        let mut r = Rng::new(9);
+        let a = randm(&mut r, 12, 9);
+        let b = randm(&mut r, 9, 7);
+        let c = matmul(&a, &b);
+        let (a32, b32) = (a.cast::<f32>(), b.cast::<f32>());
+        let c32 = matmul(&a32, &b32);
+        for i in 0..c.rows {
+            for j in 0..c.cols {
+                assert!((c.at(i, j) - f64::from(c32.at(i, j))).abs() < 1e-4);
+            }
+        }
+        let x: Vec<f32> = vec![3.0, 4.0];
+        assert!((nrm2(&x) - 5.0).abs() < 1e-6);
     }
 
     #[test]

@@ -4,57 +4,62 @@
 //!   * the MAGMA-sim baseline's CPU panel (`labrd_cpu` with pluggable
 //!     trailing gemv so the device can supply A^T v / A u),
 //!   * the pure-CPU LAPACK-reference SVD path.
+//!
+//! Generic over [`Scalar`]: the host backend's f32 `labrd`/update arms
+//! run these same loops, so an f32 lane is the identical reduction at
+//! half the bandwidth.
 
 use crate::linalg::blas;
 use crate::linalg::householder::larfg;
 use crate::matrix::{Bidiagonal, Matrix};
+use crate::scalar::Scalar;
 
 /// Output of one panel reduction: the updated matrix region is written in
 /// place; P (m x 2b) and Q (n x 2b) are the merged operands.
-pub struct Panel {
-    pub p: Matrix,
-    pub q: Matrix,
-    pub d: Vec<f64>,
-    pub e: Vec<f64>,
-    pub tauq: Vec<f64>,
-    pub taup: Vec<f64>,
+pub struct Panel<S = f64> {
+    pub p: Matrix<S>,
+    pub q: Matrix<S>,
+    pub d: Vec<S>,
+    pub e: Vec<S>,
+    pub tauq: Vec<S>,
+    pub taup: Vec<S>,
 }
 
 /// Full gebrd result: reflectors packed in `a` LAPACK-style.
-pub struct GebrdFactor {
-    pub a: Matrix,
-    pub d: Vec<f64>,
-    pub e: Vec<f64>,
-    pub tauq: Vec<f64>,
-    pub taup: Vec<f64>,
+pub struct GebrdFactor<S = f64> {
+    pub a: Matrix<S>,
+    pub d: Vec<S>,
+    pub e: Vec<S>,
+    pub tauq: Vec<S>,
+    pub taup: Vec<S>,
 }
 
 /// Panel reduction at offset t, block size b, with host trailing products.
-pub fn labrd(a: &mut Matrix, t: usize, b: usize) -> Panel {
+pub fn labrd<S: Scalar>(a: &mut Matrix<S>, t: usize, b: usize) -> Panel<S> {
     labrd_inplace(a, t, b)
 }
 
-fn labrd_inplace(a: &mut Matrix, t: usize, b: usize) -> Panel {
+fn labrd_inplace<S: Scalar>(a: &mut Matrix<S>, t: usize, b: usize) -> Panel<S> {
     let (m, n) = (a.rows, a.cols);
     let mut p = Matrix::zeros(m, 2 * b);
     let mut q = Matrix::zeros(n, 2 * b);
-    let mut d = vec![0.0; b];
-    let mut e = vec![0.0; b];
-    let mut tauq = vec![0.0; b];
-    let mut taup = vec![0.0; b];
+    let mut d = vec![S::ZERO; b];
+    let mut e = vec![S::ZERO; b];
+    let mut tauq = vec![S::ZERO; b];
+    let mut taup = vec![S::ZERO; b];
 
     for i in 0..b {
         let g = t + i;
         // (a) delayed column update: A[g:, g] -= P[g:, :2i] Q[g, :2i]
         for r in g..m {
-            let mut acc = 0.0;
+            let mut acc = S::ZERO;
             for k in 0..2 * i {
                 acc += p.at(r, k) * q.at(g, k);
             }
             a[(r, g)] -= acc;
         }
         // (b) column Householder
-        let col: Vec<f64> = (g..m).map(|r| a.at(r, g)).collect();
+        let col: Vec<S> = (g..m).map(|r| a.at(r, g)).collect();
         let rf = larfg(&col);
         tauq[i] = rf.tau;
         d[i] = rf.beta;
@@ -62,28 +67,28 @@ fn labrd_inplace(a: &mut Matrix, t: usize, b: usize) -> Panel {
         for (k, &vk) in rf.v.iter().enumerate().skip(1) {
             a[(g + k, g)] = vk;
         }
-        let mut vfull = vec![0.0; m];
+        let mut vfull = vec![S::ZERO; m];
         vfull[g..].copy_from_slice(&rf.v);
         // (c) y_i = tau (A^T v - Q_{2i} (P_{2i}^T v)) — merged gemv x2
-        let mut y = vec![0.0; n];
-        blas::gemv_t(a, &vfull, &mut y, 1.0);
-        let mut pv = vec![0.0; 2 * i];
+        let mut y = vec![S::ZERO; n];
+        blas::gemv_t(a, &vfull, &mut y, S::ONE);
+        let mut pv = vec![S::ZERO; 2 * i];
         for k in 0..2 * i {
-            let mut acc = 0.0;
+            let mut acc = S::ZERO;
             for r in g..m {
                 acc += p.at(r, k) * vfull[r];
             }
             pv[k] = acc;
         }
         for j in 0..n {
-            let mut corr = 0.0;
+            let mut corr = S::ZERO;
             for k in 0..2 * i {
                 corr += q.at(j, k) * pv[k];
             }
             y[j] = rf.tau * (y[j] - corr);
         }
         for item in y.iter_mut().take(g + 1) {
-            *item = 0.0;
+            *item = S::ZERO;
         }
         p.set_col(2 * i, &vfull);
         q.set_col(2 * i, &y);
@@ -91,14 +96,14 @@ fn labrd_inplace(a: &mut Matrix, t: usize, b: usize) -> Panel {
         if g + 1 < n {
             // (d) delayed row update: A[g, g+1:] -= P[g, :2i+1] Q[g+1:, :2i+1]^T
             for c in g + 1..n {
-                let mut acc = 0.0;
+                let mut acc = S::ZERO;
                 for k in 0..2 * i + 1 {
                     acc += p.at(g, k) * q.at(c, k);
                 }
                 a[(g, c)] -= acc;
             }
             // (e) row Householder
-            let row: Vec<f64> = (g + 1..n).map(|c| a.at(g, c)).collect();
+            let row: Vec<S> = (g + 1..n).map(|c| a.at(g, c)).collect();
             let rf2 = larfg(&row);
             taup[i] = rf2.tau;
             e[i] = rf2.beta;
@@ -106,28 +111,28 @@ fn labrd_inplace(a: &mut Matrix, t: usize, b: usize) -> Panel {
             for (k, &uk) in rf2.v.iter().enumerate().skip(1) {
                 a[(g, g + 1 + k)] = uk;
             }
-            let mut ufull = vec![0.0; n];
+            let mut ufull = vec![S::ZERO; n];
             ufull[g + 1..].copy_from_slice(&rf2.v);
             // (f) x_i = pi (A u - P_{2i+1} (Q_{2i+1}^T u)) — merged gemv x2
-            let mut x = vec![0.0; m];
-            blas::gemv(a, &ufull, &mut x, 1.0);
-            let mut qu = vec![0.0; 2 * i + 1];
+            let mut x = vec![S::ZERO; m];
+            blas::gemv(a, &ufull, &mut x, S::ONE);
+            let mut qu = vec![S::ZERO; 2 * i + 1];
             for (k, quk) in qu.iter_mut().enumerate() {
-                let mut acc = 0.0;
+                let mut acc = S::ZERO;
                 for c in g + 1..n {
                     acc += q.at(c, k) * ufull[c];
                 }
                 *quk = acc;
             }
             for (r, xr) in x.iter_mut().enumerate() {
-                let mut corr = 0.0;
+                let mut corr = S::ZERO;
                 for k in 0..2 * i + 1 {
                     corr += p.at(r, k) * qu[k];
                 }
                 *xr = rf2.tau * (*xr - corr);
             }
             for item in x.iter_mut().take(g + 1) {
-                *item = 0.0;
+                *item = S::ZERO;
             }
             p.set_col(2 * i + 1, &x);
             q.set_col(2 * i + 1, &ufull);
@@ -137,14 +142,20 @@ fn labrd_inplace(a: &mut Matrix, t: usize, b: usize) -> Panel {
 }
 
 /// Merged-rank-(2b) trailing update (eq. 10): A[s:, s:] -= P[s:] Q[s:]^T.
-pub fn trailing_update(a: &mut Matrix, p: &Matrix, q: &Matrix, t: usize, b: usize) {
+pub fn trailing_update<S: Scalar>(
+    a: &mut Matrix<S>,
+    p: &Matrix<S>,
+    q: &Matrix<S>,
+    t: usize,
+    b: usize,
+) {
     let s = t + b;
     let (m, n) = (a.rows, a.cols);
     for r in s..m {
         let prow = p.row(r);
         for c in s..n {
             let qrow = q.row(c);
-            let mut acc = 0.0;
+            let mut acc = S::ZERO;
             for k in 0..p.cols {
                 acc += prow[k] * qrow[k];
             }
@@ -154,13 +165,13 @@ pub fn trailing_update(a: &mut Matrix, p: &Matrix, q: &Matrix, t: usize, b: usiz
 }
 
 /// Full blocked bidiagonalisation (upper, m >= n).
-pub fn gebrd(mut a: Matrix, b: usize) -> GebrdFactor {
+pub fn gebrd<S: Scalar>(mut a: Matrix<S>, b: usize) -> GebrdFactor<S> {
     let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "gebrd requires m >= n");
-    let mut d = vec![0.0; n];
-    let mut e = vec![0.0; n.saturating_sub(1)];
-    let mut tauq = vec![0.0; n];
-    let mut taup = vec![0.0; n];
+    let mut d = vec![S::ZERO; n];
+    let mut e = vec![S::ZERO; n.saturating_sub(1)];
+    let mut tauq = vec![S::ZERO; n];
+    let mut taup = vec![S::ZERO; n];
     let mut t = 0;
     while t < n {
         let bb = b.min(n - t);
@@ -181,20 +192,22 @@ pub fn gebrd(mut a: Matrix, b: usize) -> GebrdFactor {
     GebrdFactor { a, d, e, tauq, taup }
 }
 
-impl GebrdFactor {
+impl<S: Scalar> GebrdFactor<S> {
+    /// The bidiagonal band, promoted to f64 — the BDC tree is host-side
+    /// f64 for every precision mode (DESIGN.md §Scalar layer).
     pub fn bidiagonal(&self) -> Bidiagonal {
-        Bidiagonal::new(self.d.clone(), self.e.clone())
+        Bidiagonal::new(S::vec_to_f64(&self.d), S::vec_to_f64(&self.e))
     }
 }
 
 /// Apply U1 = H_0..H_{n-1} to C (m x k) from the left, unblocked (reference
 /// back-transform used by the CPU baselines; the device path uses the
 /// blocked ormqr_step artifact).
-pub fn ormqr_unblocked(f: &GebrdFactor, c: &mut Matrix) {
+pub fn ormqr_unblocked<S: Scalar>(f: &GebrdFactor<S>, c: &mut Matrix<S>) {
     let (m, n) = (f.a.rows, f.a.cols);
     for i in (0..n).rev() {
-        let mut v = vec![0.0; m - i];
-        v[0] = 1.0;
+        let mut v = vec![S::ZERO; m - i];
+        v[0] = S::ONE;
         for r in i + 1..m {
             v[r - i] = f.a.at(r, i);
         }
@@ -203,14 +216,14 @@ pub fn ormqr_unblocked(f: &GebrdFactor, c: &mut Matrix) {
 }
 
 /// Apply V1 = G_0..G_{n-2} to C (n x k) from the left.
-pub fn ormlq_unblocked(f: &GebrdFactor, c: &mut Matrix) {
+pub fn ormlq_unblocked<S: Scalar>(f: &GebrdFactor<S>, c: &mut Matrix<S>) {
     let n = f.a.cols;
     if n < 2 {
         return;
     }
     for i in (0..n - 1).rev() {
-        let mut v = vec![0.0; n - i - 1];
-        v[0] = 1.0;
+        let mut v = vec![S::ZERO; n - i - 1];
+        v[0] = S::ONE;
         for cc in i + 2..n {
             v[cc - i - 1] = f.a.at(i, cc);
         }
@@ -264,6 +277,22 @@ mod tests {
         assert!(crate::util::max_abs_diff(&f1.d, &f4.d) < 1e-10);
         assert!(crate::util::max_abs_diff(&f1.e, &f4.e) < 1e-10);
         assert!(crate::util::max_abs_diff(&f1.d, &f12.d) < 1e-10);
+    }
+
+    #[test]
+    fn gebrd_f32_band_tracks_f64() {
+        // the f32 reduction is the same algorithm at half precision: its
+        // band should match the f64 band to a few hundred ulps
+        let mut rng = Rng::new(24);
+        let a = Matrix::from_fn(12, 8, |_, _| rng.gaussian());
+        let f64f = gebrd(a.clone(), 4);
+        let f32f = gebrd(a.cast::<f32>(), 4);
+        for i in 0..8 {
+            assert!((f64f.d[i] - f64::from(f32f.d[i])).abs() < 1e-3, "d[{i}]");
+        }
+        // promoted band constructor
+        let b = f32f.bidiagonal();
+        assert_eq!(b.d.len(), 8);
     }
 
     #[test]

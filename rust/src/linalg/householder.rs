@@ -1,47 +1,50 @@
 //! Householder reflector primitives (LAPACK dlarfg/dlarf conventions —
 //! identical to python/compile/kernels/ref.py, enforced by cross-tests).
+//! Generic over [`Scalar`] so the f32 pipeline shares the exact loops
+//! (slarfg is dlarfg at half width).
 
 use crate::linalg::blas;
 use crate::matrix::Matrix;
+use crate::scalar::Scalar;
 
 /// Result of `larfg`: `v` has v[0] == 1; H = I - tau v v^T maps the input
 /// to beta * e_1.
-pub struct Reflector {
-    pub v: Vec<f64>,
-    pub tau: f64,
-    pub beta: f64,
+pub struct Reflector<S = f64> {
+    pub v: Vec<S>,
+    pub tau: S,
+    pub beta: S,
 }
 
 /// LAPACK dlarfg on x (len >= 1).
-pub fn larfg(x: &[f64]) -> Reflector {
+pub fn larfg<S: Scalar>(x: &[S]) -> Reflector<S> {
     let alpha = x[0];
     let xnorm = blas::nrm2(&x[1..]);
-    if xnorm == 0.0 {
-        let mut v = vec![0.0; x.len()];
-        v[0] = 1.0;
-        return Reflector { v, tau: 0.0, beta: alpha };
+    if xnorm == S::ZERO {
+        let mut v = vec![S::ZERO; x.len()];
+        v[0] = S::ONE;
+        return Reflector { v, tau: S::ZERO, beta: alpha };
     }
-    let sgn = if alpha >= 0.0 { 1.0 } else { -1.0 };
+    let sgn = if alpha >= S::ZERO { S::ONE } else { -S::ONE };
     let beta = -sgn * alpha.hypot(xnorm);
     let tau = (beta - alpha) / beta;
-    let scale = 1.0 / (alpha - beta);
+    let scale = S::ONE / (alpha - beta);
     let mut v = Vec::with_capacity(x.len());
-    v.push(1.0);
+    v.push(S::ONE);
     v.extend(x[1..].iter().map(|&t| t * scale));
     Reflector { v, tau, beta }
 }
 
 /// A <- (I - tau v v^T) A, applied to rows [r0, r0+v.len()) of A's columns
 /// [c0, c1).
-pub fn larf_left(a: &mut Matrix, v: &[f64], tau: f64, r0: usize, c0: usize, c1: usize) {
-    if tau == 0.0 {
+pub fn larf_left<S: Scalar>(a: &mut Matrix<S>, v: &[S], tau: S, r0: usize, c0: usize, c1: usize) {
+    if tau == S::ZERO {
         return;
     }
     let k = v.len();
     // w = tau * A^T v over the window
-    let mut w = vec![0.0; c1 - c0];
+    let mut w = vec![S::ZERO; c1 - c0];
     for (ir, &vi) in v.iter().enumerate() {
-        if vi != 0.0 {
+        if vi != S::ZERO {
             let row = &a.row(r0 + ir)[c0..c1];
             for (j, &r) in row.iter().enumerate() {
                 w[j] += vi * r;
@@ -53,7 +56,7 @@ pub fn larf_left(a: &mut Matrix, v: &[f64], tau: f64, r0: usize, c0: usize, c1: 
     }
     for ir in 0..k {
         let vi = v[ir];
-        if vi != 0.0 {
+        if vi != S::ZERO {
             let row = &mut a.row_mut(r0 + ir)[c0..c1];
             for (j, r) in row.iter_mut().enumerate() {
                 *r -= vi * w[j];
@@ -64,14 +67,14 @@ pub fn larf_left(a: &mut Matrix, v: &[f64], tau: f64, r0: usize, c0: usize, c1: 
 
 /// A <- A (I - tau v v^T), applied to columns [c0, c0+v.len()) of A's rows
 /// [r0, r1).
-pub fn larf_right(a: &mut Matrix, v: &[f64], tau: f64, r0: usize, r1: usize, c0: usize) {
-    if tau == 0.0 {
+pub fn larf_right<S: Scalar>(a: &mut Matrix<S>, v: &[S], tau: S, r0: usize, r1: usize, c0: usize) {
+    if tau == S::ZERO {
         return;
     }
     let k = v.len();
     for i in r0..r1 {
         let row = &mut a.row_mut(i)[c0..c0 + k];
-        let mut w = 0.0;
+        let mut w = S::ZERO;
         for (j, &vj) in v.iter().enumerate() {
             w += row[j] * vj;
         }
@@ -111,9 +114,21 @@ mod tests {
 
     #[test]
     fn larfg_zero_tail() {
-        let rf = larfg(&[3.0, 0.0, 0.0]);
+        let rf = larfg(&[3.0f64, 0.0, 0.0]);
         assert_eq!(rf.tau, 0.0);
         assert_eq!(rf.beta, 3.0);
+    }
+
+    #[test]
+    fn larfg_f32_annihilates() {
+        let x: Vec<f32> = vec![1.5, -0.25, 2.0, 0.75];
+        let rf = larfg(&x);
+        let w = blas::dot(&rf.v, &x) * rf.tau;
+        let hx: Vec<f32> = x.iter().zip(&rf.v).map(|(&xi, &vi)| xi - w * vi).collect();
+        assert!((hx[0] - rf.beta).abs() < 1e-5);
+        for &t in &hx[1..] {
+            assert!(t.abs() < 1e-5, "f32 tail not annihilated: {t}");
+        }
     }
 
     #[test]

@@ -3,25 +3,29 @@
 //!
 //! Used by: the MAGMA-sim baseline (CPU panel factorisation), the matrix
 //! generator (random orthogonal factors), and the pure-CPU reference SVD.
+//! Generic over [`Scalar`]: the host backend's f32 QR ops run these same
+//! loops, with the `1/0` sentinel in [`tinv`] scaled to the dtype
+//! ([`Scalar::BIG`] — an f64 `1e300` would be infinite in f32).
 
 use crate::linalg::blas;
 use crate::linalg::householder::{larf_left, larfg};
 use crate::matrix::Matrix;
+use crate::scalar::Scalar;
 
 /// Packed QR factorisation: R on/above the diagonal, reflector tails below,
 /// plus the tau scalars.
-pub struct QrFactor {
-    pub a: Matrix,
-    pub tau: Vec<f64>,
+pub struct QrFactor<S = f64> {
+    pub a: Matrix<S>,
+    pub tau: Vec<S>,
 }
 
 /// Factor one b-column panel at offset t in place; returns taus.
-pub fn geqrf_panel(a: &mut Matrix, t: usize, b: usize) -> Vec<f64> {
+pub fn geqrf_panel<S: Scalar>(a: &mut Matrix<S>, t: usize, b: usize) -> Vec<S> {
     let m = a.rows;
-    let mut taus = vec![0.0; b];
+    let mut taus = vec![S::ZERO; b];
     for i in 0..b {
         let g = t + i;
-        let col: Vec<f64> = (g..m).map(|r| a.at(r, g)).collect();
+        let col: Vec<S> = (g..m).map(|r| a.at(r, g)).collect();
         let rf = larfg(&col);
         taus[i] = rf.tau;
         // apply to the remaining panel columns
@@ -35,12 +39,12 @@ pub fn geqrf_panel(a: &mut Matrix, t: usize, b: usize) -> Vec<f64> {
 }
 
 /// Unit-lower Y (m x b) for the panel at offset t of a packed factor.
-pub fn build_y(a: &Matrix, t: usize, b: usize) -> Matrix {
+pub fn build_y<S: Scalar>(a: &Matrix<S>, t: usize, b: usize) -> Matrix<S> {
     let m = a.rows;
     let mut y = Matrix::zeros(m, b);
     for i in 0..b {
         let g = t + i;
-        y[(g, i)] = 1.0;
+        y[(g, i)] = S::ONE;
         for r in g + 1..m {
             y[(r, i)] = a.at(r, g);
         }
@@ -49,22 +53,29 @@ pub fn build_y(a: &Matrix, t: usize, b: usize) -> Matrix {
 }
 
 /// Modified CWY triangular factor: T^{-1} = triu(Y^T Y), diag 1/tau.
-pub fn tinv(y: &Matrix, tau: &[f64]) -> Matrix {
+pub fn tinv<S: Scalar>(y: &Matrix<S>, tau: &[S]) -> Matrix<S> {
     let b = y.cols;
     let mut g = Matrix::zeros(b, b);
-    blas::gemm_tn(y, y, &mut g, 1.0);
+    blas::gemm_tn(y, y, &mut g, S::ONE);
     for i in 0..b {
         for j in 0..i {
-            g[(i, j)] = 0.0;
+            g[(i, j)] = S::ZERO;
         }
-        g[(i, i)] = if tau[i] != 0.0 { 1.0 / tau[i] } else { 1e300 };
+        g[(i, i)] = if tau[i] != S::ZERO { S::ONE / tau[i] } else { S::BIG };
     }
     g
 }
 
 /// C <- (I - Y T^(T?) Y^T) C via gemm/trsm/gemm on the column window
 /// [c0, c1). `trans=true` applies H_b..H_1 (geqrf update), false H_1..H_b.
-pub fn larfb(c: &mut Matrix, y: &Matrix, tinv_m: &Matrix, c0: usize, c1: usize, trans: bool) {
+pub fn larfb<S: Scalar>(
+    c: &mut Matrix<S>,
+    y: &Matrix<S>,
+    tinv_m: &Matrix<S>,
+    c0: usize,
+    c1: usize,
+    trans: bool,
+) {
     let b = y.cols;
     let ncols = c1 - c0;
     // Z = Y^T C (b x ncols)
@@ -74,7 +85,7 @@ pub fn larfb(c: &mut Matrix, y: &Matrix, tinv_m: &Matrix, c0: usize, c1: usize, 
         let crow = &c.row(r)[c0..c1];
         for i in 0..b {
             let yv = yrow[i];
-            if yv != 0.0 {
+            if yv != S::ZERO {
                 let zrow = z.row_mut(i);
                 for j in 0..ncols {
                     zrow[j] += yv * crow[j];
@@ -84,7 +95,7 @@ pub fn larfb(c: &mut Matrix, y: &Matrix, tinv_m: &Matrix, c0: usize, c1: usize, 
     }
     // W = T^(T?) Z, i.e. solve Tinv^(T?) W = Z column-wise
     for j in 0..ncols {
-        let mut coljv: Vec<f64> = (0..b).map(|i| z.at(i, j)).collect();
+        let mut coljv: Vec<S> = (0..b).map(|i| z.at(i, j)).collect();
         blas::trsv_upper(tinv_m, &mut coljv, trans);
         for i in 0..b {
             z[(i, j)] = coljv[i];
@@ -96,7 +107,7 @@ pub fn larfb(c: &mut Matrix, y: &Matrix, tinv_m: &Matrix, c0: usize, c1: usize, 
         let crow = &mut c.row_mut(r)[c0..c1];
         for i in 0..b {
             let yv = yrow[i];
-            if yv != 0.0 {
+            if yv != S::ZERO {
                 let zrow = z.row(i);
                 for j in 0..ncols {
                     crow[j] -= yv * zrow[j];
@@ -107,9 +118,9 @@ pub fn larfb(c: &mut Matrix, y: &Matrix, tinv_m: &Matrix, c0: usize, c1: usize, 
 }
 
 /// Blocked QR of A (m >= n), modified CWY.
-pub fn geqrf(mut a: Matrix, b: usize) -> QrFactor {
+pub fn geqrf<S: Scalar>(mut a: Matrix<S>, b: usize) -> QrFactor<S> {
     let n = a.cols;
-    let mut tau = vec![0.0; n];
+    let mut tau = vec![S::ZERO; n];
     let mut t = 0;
     while t < n {
         let bb = b.min(n - t);
@@ -126,7 +137,7 @@ pub fn geqrf(mut a: Matrix, b: usize) -> QrFactor {
 }
 
 /// Thin Q (m x n) from a packed factor.
-pub fn orgqr(f: &QrFactor, b: usize) -> Matrix {
+pub fn orgqr<S: Scalar>(f: &QrFactor<S>, b: usize) -> Matrix<S> {
     let (m, n) = (f.a.rows, f.a.cols);
     let mut q = Matrix::eye(m, n);
     let mut t = ((n - 1) / b) * b;
@@ -144,7 +155,7 @@ pub fn orgqr(f: &QrFactor, b: usize) -> Matrix {
 }
 
 /// Upper-triangular R (n x n) from a packed factor.
-pub fn extract_r(f: &QrFactor) -> Matrix {
+pub fn extract_r<S: Scalar>(f: &QrFactor<S>) -> Matrix<S> {
     let n = f.a.cols;
     let mut r = Matrix::zeros(n, n);
     for i in 0..n {
@@ -172,6 +183,18 @@ mod tests {
             assert!(qr.max_diff(&a) < 1e-11, "({m},{n},{b}): {:e}", qr.max_diff(&a));
             assert!(q.orthonormality_defect() < 1e-12);
         }
+    }
+
+    #[test]
+    fn qr_reconstructs_f32() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::from_fn(12, 8, |_, _| rng.gaussian()).cast::<f32>();
+        let f = geqrf(a.clone(), 4);
+        let q = orgqr(&f, 4);
+        let r = extract_r(&f);
+        let qr = blas::matmul(&q, &r);
+        assert!(qr.max_diff(&a) < 1e-4, "f32 QR: {:e}", qr.max_diff(&a));
+        assert!(q.orthonormality_defect() < 1e-5);
     }
 
     #[test]

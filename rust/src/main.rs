@@ -4,7 +4,8 @@
 //!   svd       --m M --n N [--kind K] [--theta T] [--solver S] [--block B]
 //!             run one SVD, print sigma head, accuracy and the phase profile
 //!   svd-batch [--batch N] [--m M] [--n N] [--mixed] [--solver S]
-//!             [--threads T] [--fuse] [--check] [--verify] [--json FILE]
+//!             [--dtype f32|f64|mixed] [--threads T] [--fuse] [--check]
+//!             [--verify] [--json FILE]
 //!             batched SVD over the work-stealing pool; prints bucket
 //!             schedule + throughput (matrices/s, aggregate GFLOP/s), and
 //!             with --check the serial-loop baseline + parity; --fuse
@@ -26,7 +27,11 @@
 //!   info      list artifact coverage
 //!
 //! Global flags: --backend host|pjrt (or GCSVD_BACKEND; default host),
-//! --artifacts DIR (pjrt only), --kernel pallas|xla, --no-transfer-model,
+//! --artifacts DIR (pjrt only), --kernel pallas|xla,
+//! --dtype f32|f64|mixed (compute dtype of the "ours" pipeline — f32
+//! halves every device byte, mixed = f32 front end around the f64 BDC
+//! core with an f64 sigma refinement; DESIGN.md §Scalar layer),
+//! --no-transfer-model,
 //! --verify (audit every recorded op stream with the static verifier —
 //! shape/lane signature checks plus buffer lifetime analysis; also
 //! GCSVD_VERIFY=1, on by default in debug builds),
@@ -118,6 +123,10 @@ fn build_config(args: &Args) -> Result<Config> {
     if args.get("no-streams").is_some() {
         // fall back to compute-stream uploads (the pre-stream FIFO)
         cfg.streams = false;
+    }
+    if let Some(d) = args.get("dtype") {
+        cfg.precision = gcsvd::scalar::Precision::parse(d)
+            .ok_or_else(|| anyhow!("--dtype must be f32, f64 or mixed"))?;
     }
     if let Some(s) = args.get("sched-seed") {
         let seed = s.parse().map_err(|_| anyhow!("--sched-seed: bad integer {s}"))?;
@@ -264,8 +273,9 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "\nsolver={} pool: {} workers over {} device slot(s), {} steals",
+        "\nsolver={} dtype={} pool: {} workers over {} device slot(s), {} steals",
         solver.name(),
+        cfg.precision.name(),
         stats.threads,
         stats.device_slots,
         stats.steals
@@ -333,6 +343,7 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
         let doc = Json::obj([
             ("cmd", Json::str("svd-batch")),
             ("solver", Json::str(solver.name())),
+            ("dtype", Json::str(cfg.precision.name())),
             ("backend", Json::str(cfg.backend.name())),
             ("batch", Json::int(batch as i64)),
             ("m", Json::int(m as i64)),

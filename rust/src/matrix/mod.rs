@@ -2,31 +2,37 @@
 //!
 //! Row-major matches XLA's default literal layout, so `Matrix::data` moves
 //! to/from `PjRtBuffer`s without transposition.
+//!
+//! Storage is generic over the [`Scalar`] dtype with `f64` as the default
+//! type parameter, so pre-existing call sites keep reading `Matrix`.
+//! Norms and defect measures accumulate and return `f64` regardless of
+//! the element dtype — they feed residual checks against f64 references.
 
+use crate::scalar::Scalar;
 use std::fmt;
 
-/// Dense row-major f64 matrix.
+/// Dense row-major matrix over a [`Scalar`] dtype (`f64` by default).
 #[derive(Clone, PartialEq)]
-pub struct Matrix {
+pub struct Matrix<S = f64> {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<f64>,
+    pub data: Vec<S>,
 }
 
-impl Matrix {
+impl<S: Scalar> Matrix<S> {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Matrix { rows, cols, data: vec![S::ZERO; rows * cols] }
     }
 
     pub fn eye(rows: usize, cols: usize) -> Self {
         let mut m = Self::zeros(rows, cols);
         for i in 0..rows.min(cols) {
-            m[(i, i)] = 1.0;
+            m[(i, i)] = S::ONE;
         }
         m
     }
 
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> S) -> Self {
         let mut m = Self::zeros(rows, cols);
         for i in 0..rows {
             for j in 0..cols {
@@ -36,13 +42,13 @@ impl Matrix {
         m
     }
 
-    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<S>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Matrix { rows, cols, data }
     }
 
     /// Build from a diagonal.
-    pub fn from_diag(d: &[f64]) -> Self {
+    pub fn from_diag(d: &[S]) -> Self {
         let n = d.len();
         let mut m = Self::zeros(n, n);
         for i in 0..n {
@@ -52,32 +58,32 @@ impl Matrix {
     }
 
     #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> S {
         self.data[i * self.cols + j]
     }
 
     #[inline]
-    pub fn row(&self, i: usize) -> &[f64] {
+    pub fn row(&self, i: usize) -> &[S] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
-    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    pub fn col(&self, j: usize) -> Vec<f64> {
+    pub fn col(&self, j: usize) -> Vec<S> {
         (0..self.rows).map(|i| self.at(i, j)).collect()
     }
 
-    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+    pub fn set_col(&mut self, j: usize, v: &[S]) {
         assert_eq!(v.len(), self.rows);
         for i in 0..self.rows {
             self[(i, j)] = v[i];
         }
     }
 
-    pub fn transpose(&self) -> Matrix {
+    pub fn transpose(&self) -> Matrix<S> {
         let mut t = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
             for j in 0..self.cols {
@@ -88,7 +94,7 @@ impl Matrix {
     }
 
     /// Copy of the sub-block [r0, r0+nr) x [c0, c0+nc).
-    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Matrix {
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Matrix<S> {
         assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
         let mut b = Matrix::zeros(nr, nc);
         for i in 0..nr {
@@ -97,7 +103,7 @@ impl Matrix {
         b
     }
 
-    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Matrix) {
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Matrix<S>) {
         assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols);
         for i in 0..b.rows {
             let dst = &mut self.row_mut(r0 + i)[c0..c0 + b.cols];
@@ -105,18 +111,38 @@ impl Matrix {
         }
     }
 
+    /// Element-wise cast to another dtype (one rounding per element
+    /// when narrowing — the only place a dtype change can happen).
+    pub fn cast<T: Scalar>(&self) -> Matrix<T> {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| T::from_f64(x.to_f64())).collect(),
+        }
+    }
+
     pub fn frob_norm(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+        self.data
+            .iter()
+            .map(|x| {
+                let v = x.to_f64();
+                v * v
+            })
+            .sum::<f64>()
+            .sqrt()
     }
 
     pub fn max_abs(&self) -> f64 {
-        self.data.iter().fold(0.0, |a, &x| a.max(x.abs()))
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.to_f64().abs()))
     }
 
     /// ||self - other||_max (test helper).
-    pub fn max_diff(&self, other: &Matrix) -> f64 {
+    pub fn max_diff(&self, other: &Matrix<S>) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        crate::util::max_abs_diff(&self.data, &other.data)
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |a, (&x, &y)| a.max((x.to_f64() - y.to_f64()).abs()))
     }
 
     /// ||self^T self - I||_max — orthonormality defect of the columns.
@@ -126,7 +152,7 @@ impl Matrix {
             for j2 in j1..self.cols {
                 let mut dot = 0.0;
                 for i in 0..self.rows {
-                    dot += self.at(i, j1) * self.at(i, j2);
+                    dot += self.at(i, j1).to_f64() * self.at(i, j2).to_f64();
                 }
                 let want = if j1 == j2 { 1.0 } else { 0.0 };
                 worst = worst.max((dot - want).abs());
@@ -136,24 +162,24 @@ impl Matrix {
     }
 }
 
-impl std::ops::Index<(usize, usize)> for Matrix {
-    type Output = f64;
+impl<S: Scalar> std::ops::Index<(usize, usize)> for Matrix<S> {
+    type Output = S;
     #[inline]
-    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+    fn index(&self, (i, j): (usize, usize)) -> &S {
         &self.data[i * self.cols + j]
     }
 }
 
-impl std::ops::IndexMut<(usize, usize)> for Matrix {
+impl<S: Scalar> std::ops::IndexMut<(usize, usize)> for Matrix<S> {
     #[inline]
-    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut S {
         &mut self.data[i * self.cols + j]
     }
 }
 
-impl fmt::Debug for Matrix {
+impl<S: Scalar> fmt::Debug for Matrix<S> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        writeln!(f, "Matrix {}x{} ({}) [", self.rows, self.cols, S::DTYPE)?;
         let rshow = self.rows.min(8);
         let cshow = self.cols.min(8);
         for i in 0..rshow {
@@ -171,6 +197,9 @@ impl fmt::Debug for Matrix {
 }
 
 /// Upper bidiagonal matrix: diagonal `d` (n) and superdiagonal `e` (n-1).
+///
+/// Stays `f64`-only: the BDC tree logic (deflation thresholds, secular
+/// solves) runs on the host in f64 for every precision mode.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Bidiagonal {
     pub d: Vec<f64>,
@@ -232,8 +261,19 @@ mod tests {
 
     #[test]
     fn eye_orthonormal() {
-        let m = Matrix::eye(5, 3);
+        let m: Matrix = Matrix::eye(5, 3);
         assert!(m.orthonormality_defect() < 1e-15);
+    }
+
+    #[test]
+    fn generic_f32_storage_and_cast() {
+        let m: Matrix<f32> = Matrix::from_fn(3, 3, |i, j| (i + j) as f32);
+        assert_eq!(m[(1, 2)], 3.0f32);
+        let d = m.cast::<f64>();
+        assert_eq!(d[(1, 2)], 3.0f64);
+        assert_eq!(d.cast::<f32>(), m);
+        let e: Matrix<f32> = Matrix::eye(4, 4);
+        assert!(e.orthonormality_defect() < 1e-7);
     }
 
     #[test]

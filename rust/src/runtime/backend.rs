@@ -1,14 +1,16 @@
 //! The device backend seam.
 //!
 //! [`Backend`] is the contract between the device worker loop
-//! (`runtime::device`) and whatever actually executes ops: upload f64/i64
-//! arrays, execute an op by [`OpKey`], read buffers back, report compile
-//! accounting. The op vocabulary spans the scalar pipeline steps
-//! (gebrd/geqrf/orm* panels, BDC vector ops) and their k-wide fused
-//! counterparts (`*_k` over packed `[k, n, n]` lane stacks — the shared
-//! BDC tree AND the post-BDC back-transforms / TS gemm), all executed
-//! through the same `exec` seam and counted per name in
-//! `DeviceStats::per_op_count`. Two implementations exist:
+//! (`runtime::device`) and whatever actually executes ops: upload
+//! dtype-tagged host arrays ([`DynVec`]: f32/f64/i64), execute an op by
+//! [`OpKey`] (whose `dtype` selects the compiled precision), read
+//! buffers back in their natural dtype, report compile accounting. The
+//! op vocabulary spans the scalar pipeline steps (gebrd/geqrf/orm*
+//! panels, BDC vector ops) and their k-wide fused counterparts (`*_k`
+//! over packed `[k, n, n]` lane stacks — the shared BDC tree AND the
+//! post-BDC back-transforms / TS gemm), all executed through the same
+//! `exec` seam and counted per name in `DeviceStats::per_op_count`.
+//! Two implementations exist:
 //!
 //!   * `runtime::host::HostBackend` — a pure-Rust interpreter that
 //!     natively implements every op the coordinator emits, with semantics
@@ -27,38 +29,50 @@
 use anyhow::Result;
 
 use crate::runtime::registry::OpKey;
+use crate::scalar::DynVec;
 
 /// A device execution substrate. Buffers are opaque to the worker; the
 /// worker maps caller-allocated `BufId`s to `Self::Buf` values.
 pub trait Backend {
     type Buf;
 
-    /// Upload a row-major f64 array with the given dims ([] = scalar).
-    fn upload_f64(&mut self, data: Vec<f64>, dims: &[usize]) -> Result<Self::Buf>;
-
-    /// Upload an i64 array (index vectors / runtime scalars).
-    fn upload_i64(&mut self, data: Vec<i64>, dims: &[usize]) -> Result<Self::Buf>;
+    /// Upload a row-major host array with the given dims ([] = scalar).
+    /// The buffer's element dtype is the payload's [`DynVec`] dtype.
+    fn upload(&mut self, data: DynVec, dims: &[usize]) -> Result<Self::Buf>;
 
     /// Execute one op; args are borrowed input buffers, the result is a
     /// fresh output buffer (ops never mutate inputs — stream semantics).
+    /// The output dtype is `op.dtype` (i64 for index-table producers).
     fn exec(&mut self, op: &OpKey, args: &[&Self::Buf]) -> Result<Self::Buf>;
 
-    /// Full f64 read-back of a buffer (row-major).
-    fn read(&mut self, buf: &Self::Buf) -> Result<Vec<f64>>;
+    /// Full read-back of a buffer (row-major) in its natural dtype.
+    fn read(&mut self, buf: &Self::Buf) -> Result<DynVec>;
 
     /// Read only the first `len` elements. Backends that can avoid
     /// materialising the rest should; the default truncates a full read.
-    fn read_prefix(&mut self, buf: &Self::Buf, len: usize) -> Result<Vec<f64>> {
-        let mut v = self.read(buf)?;
-        v.truncate(len);
-        Ok(v)
+    fn read_prefix(&mut self, buf: &Self::Buf, len: usize) -> Result<DynVec> {
+        let v = self.read(buf)?;
+        Ok(match v {
+            DynVec::F32(mut v) => {
+                v.truncate(len);
+                DynVec::F32(v)
+            }
+            DynVec::F64(mut v) => {
+                v.truncate(len);
+                DynVec::F64(v)
+            }
+            DynVec::I64(mut v) => {
+                v.truncate(len);
+                DynVec::I64(v)
+            }
+        })
     }
 
-    /// Reclaim the host-side f64 storage of a freed buffer so the device
+    /// Reclaim the host-side storage of a freed buffer so the device
     /// can recycle it as upload staging (`Device::stage`). Backends whose
     /// buffers live in device memory (PJRT, real GPUs) return `None` —
     /// for those, staging reuse happens in pinned host pools instead.
-    fn reclaim_f64(&mut self, _buf: Self::Buf) -> Option<Vec<f64>> {
+    fn reclaim(&mut self, _buf: Self::Buf) -> Option<DynVec> {
         None
     }
 

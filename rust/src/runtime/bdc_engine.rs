@@ -7,6 +7,16 @@
 //! Asynchrony: every mutation enqueues on the device stream and returns
 //! immediately, so the CPU deflation scan of the NEXT node overlaps with
 //! the device work of the previous one — the Algorithm 3 timeline.
+//!
+//! Generic over [`Scalar`] (DESIGN.md §Scalar layer): the device-side
+//! U/V stacks and kernels run at `S` while the host-side tree
+//! (deflation scans, secular roots) always runs in f64. Every f64 host
+//! vector is converted exactly once at the upload boundary
+//! ([`Device::upload_f64_as`]), elementwise — the k-wide engine shares
+//! the same boundary, so a fused lane stays bit-identical to a scalar
+//! run at the same dtype.
+
+use std::marker::PhantomData;
 
 use crate::bdc::driver::{BdcEngine, Mat};
 use crate::linalg::givens::PlaneRot;
@@ -14,6 +24,7 @@ use crate::linalg::secular::SecularRoot;
 use crate::matrix::Matrix;
 use crate::runtime::registry::bucket_for;
 use crate::runtime::{BufId, Device};
+use crate::scalar::Scalar;
 
 // Shared with the k-wide engine (`bdc_engine_k.rs`) so the two cannot
 // drift from each other or from the aot.py emission grid they mirror.
@@ -21,11 +32,12 @@ pub(crate) const ROT_BATCH: usize = 512; // largest aot.py ROT_BUCKETS entry
 pub(crate) const ROT_BUCKETS: [usize; 3] = [8, 64, 512]; // mirrors aot.py ROT_BUCKETS
 pub(crate) const LEAF_TILE: usize = 64; // mirrors aot.py set_block bs
 
-pub struct DeviceEngine {
+pub struct DeviceEngine<S = f64> {
     dev: Device,
     n: usize,
     u: Option<BufId>,
     v: Option<BufId>,
+    _dtype: PhantomData<S>,
 }
 
 /// Fill one lane's padded secular-kernel inputs: d/dbase over the live
@@ -34,7 +46,8 @@ pub struct DeviceEngine {
 /// (the padding values). Shared by [`DeviceEngine::secular_apply`] and
 /// the k-wide `DeviceEngineK::secular_apply_k` so the two paddings
 /// cannot drift — the fused path's bit-exactness contract depends on
-/// them staying identical.
+/// them staying identical. Always f64: dtype conversion happens once at
+/// the upload boundary, after packing.
 pub(crate) fn pack_secular_lane(
     dp: &mut [f64],
     basep: &mut [f64],
@@ -61,9 +74,9 @@ pub(crate) fn pack_secular_lane(
     }
 }
 
-impl DeviceEngine {
+impl<S: Scalar> DeviceEngine<S> {
     pub fn new(dev: Device) -> Self {
-        DeviceEngine { dev, n: 0, u: None, v: None }
+        DeviceEngine { dev, n: 0, u: None, v: None, _dtype: PhantomData }
     }
 
     pub fn u_buf(&self) -> BufId {
@@ -93,10 +106,10 @@ impl DeviceEngine {
         }
     }
 
-    /// Read back a host copy (end of solve).
+    /// Read back a host copy (end of solve), promoted to f64.
     pub fn download(&self, which: Mat) -> anyhow::Result<Matrix> {
-        let data = self.dev.read(self.mat(which))?;
-        Ok(Matrix::from_rows(self.n, self.n, data))
+        let data = self.dev.read_t::<S>(self.mat(which))?;
+        Ok(Matrix::from_rows(self.n, self.n, S::wrap_vec(data).into_f64_vec()))
     }
 
     fn apply_block(&mut self, which: Mat, blk: &Matrix, off: usize, len: usize) {
@@ -114,12 +127,12 @@ impl DeviceEngine {
                 tile[(loc + i) * bs + loc + j] = blk.at(i, j);
             }
         }
-        let tb = self.dev.upload(tile, &[bs, bs]);
+        let tb = self.dev.upload_f64_as::<S>(tile, &[bs, bs]);
         let woffb = self.dev.scalar_i64(woff as i64);
         let locb = self.dev.scalar_i64(loc as i64);
         let lenb = self.dev.scalar_i64(len as i64);
         let cur = self.mat(which);
-        let out = self.dev.op(
+        let out = self.dev.op_t::<S>(
             "set_block",
             &[("n", n as i64), ("bs", bs as i64)],
             &[cur, tb, woffb, locb, lenb],
@@ -131,11 +144,11 @@ impl DeviceEngine {
     }
 }
 
-impl BdcEngine for DeviceEngine {
+impl<S: Scalar> BdcEngine for DeviceEngine<S> {
     fn init(&mut self, n: usize) {
         self.n = n;
-        let e1 = self.dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
-        let e2 = self.dev.op("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+        let e1 = self.dev.op_t::<S>("eye", &[("m", n as i64), ("n", n as i64)], &[]);
+        let e2 = self.dev.op_t::<S>("eye", &[("m", n as i64), ("n", n as i64)], &[]);
         if let Some(u) = self.u.take() {
             self.dev.free(u);
         }
@@ -153,15 +166,17 @@ impl BdcEngine for DeviceEngine {
 
     fn v_row(&mut self, row: usize, c0: usize, len: usize) -> Vec<f64> {
         let rb = self.dev.scalar_i64(row as i64);
-        let out = self.dev.op("bdc_row", &[("n", self.n as i64)], &[self.v_buf(), rb]);
+        let out = self
+            .dev
+            .op_t::<S>("bdc_row", &[("n", self.n as i64)], &[self.v_buf(), rb]);
         self.dev.free(rb);
         // free before unwrapping so a failed read does not strand the
         // buffer on the (possibly long-lived pool-worker) device
-        let full = self.dev.read(out);
+        let full = self.dev.read_t::<S>(out);
         self.dev.free(out);
         let full = full.expect("v_row read");
-        let row = full[c0..c0 + len].to_vec();
-        self.dev.recycle(full);
+        let row = S::vec_to_f64(&full[c0..c0 + len]);
+        self.dev.recycle_t(full);
         row
     }
 
@@ -183,10 +198,10 @@ impl BdcEngine for DeviceEngine {
                 table[r * 4 + 2] = pr.c;
                 table[r * 4 + 3] = pr.s;
             }
-            let tb = self.dev.upload(table, &[rmax, 4]);
+            let tb = self.dev.upload_f64_as::<S>(table, &[rmax, 4]);
             let nb = self.dev.scalar_i64(chunk.len() as i64);
             let cur = self.mat(which);
-            let out = self.dev.op(
+            let out = self.dev.op_t::<S>(
                 "bdc_rots",
                 &[("n", n), ("rmax", rmax as i64)],
                 &[cur, tb, nb],
@@ -208,7 +223,7 @@ impl BdcEngine for DeviceEngine {
         let cur = self.mat(which);
         let out = self
             .dev
-            .op("bdc_permute_cols", &[("n", n as i64)], &[cur, pb]);
+            .op_t::<S>("bdc_permute_cols", &[("n", n as i64)], &[cur, pb]);
         self.dev.free(cur);
         self.dev.free(pb);
         self.set_mat(which, out);
@@ -239,15 +254,15 @@ impl BdcEngine for DeviceEngine {
         let mut taup = vec![0.25; kb];
         let mut signs = vec![1.0; kb];
         pack_secular_lane(&mut dp, &mut basep, &mut taup, &mut signs, d, roots, z_live);
-        let db = self.dev.upload(dp, &[kb]);
-        let bb = self.dev.upload(basep, &[kb]);
-        let tb = self.dev.upload(taup, &[kb]);
-        let sb = self.dev.upload(signs, &[kb]);
+        let db = self.dev.upload_f64_as::<S>(dp, &[kb]);
+        let bb = self.dev.upload_f64_as::<S>(basep, &[kb]);
+        let tb = self.dev.upload_f64_as::<S>(taup, &[kb]);
+        let sb = self.dev.upload_f64_as::<S>(signs, &[kb]);
         let kb_i = self.dev.scalar_i64(k as i64);
         // fused kernel: [zhat | S_U | S_V] packed
         let packed = self
             .dev
-            .op("bdc_secular", &[("nb", kb as i64)], &[db, bb, tb, sb, kb_i]);
+            .op_t::<S>("bdc_secular", &[("nb", kb as i64)], &[db, bb, tb, sb, kb_i]);
         for b in [db, bb, tb, sb, kb_i] {
             self.dev.free(b);
         }
@@ -256,15 +271,15 @@ impl BdcEngine for DeviceEngine {
         // Window anchor for blocks near the matrix edge:
         let woff = lo.min(n - kb);
         let loc = lo - woff;
-        let su = self.dev.op("bdc_secular_u", &[("nb", kb as i64)], &[packed]);
-        let sv = self.dev.op("bdc_secular_v", &[("nb", kb as i64)], &[packed]);
+        let su = self.dev.op_t::<S>("bdc_secular_u", &[("nb", kb as i64)], &[packed]);
+        let sv = self.dev.op_t::<S>("bdc_secular_v", &[("nb", kb as i64)], &[packed]);
         self.dev.free(packed);
         for (which, s) in [(Mat::U, su), (Mat::V, sv)] {
             let woffb = self.dev.scalar_i64(woff as i64);
             let locb = self.dev.scalar_i64(loc as i64);
             let lenb = self.dev.scalar_i64(k as i64);
             let cur = self.mat(which);
-            let out = self.dev.op(
+            let out = self.dev.op_t::<S>(
                 "bdc_block_gemm",
                 &[("n", n as i64), ("kb", kb as i64)],
                 &[cur, s, woffb, locb, lenb],

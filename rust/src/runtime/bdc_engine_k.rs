@@ -13,6 +13,11 @@
 //!
 //! Host traffic per node stays vector-level: rotation tables, index
 //! vectors, padded secular inputs, and the two coupling-row reads.
+//!
+//! Generic over [`Scalar`] exactly like the scalar engine: device
+//! stacks at `S`, host tree in f64, one elementwise conversion at the
+//! upload boundary shared with `DeviceEngine` (so fused lane `l` stays
+//! bit-identical to a scalar solve of lane `l` at the same dtype).
 
 use crate::bdc::driver::Mat;
 use crate::bdc::driver_k::{BdcEngineK, LaneSecular};
@@ -21,18 +26,20 @@ use crate::matrix::Matrix;
 use crate::runtime::bdc_engine::{pack_secular_lane, LEAF_TILE, ROT_BATCH, ROT_BUCKETS};
 use crate::runtime::registry::bucket_for;
 use crate::runtime::{BufId, Device};
+use crate::scalar::Scalar;
 
-pub struct DeviceEngineK {
+pub struct DeviceEngineK<S = f64> {
     dev: Device,
     lanes: usize,
     n: usize,
     u: Option<BufId>,
     v: Option<BufId>,
+    _dtype: std::marker::PhantomData<S>,
 }
 
-impl DeviceEngineK {
+impl<S: Scalar> DeviceEngineK<S> {
     pub fn new(dev: Device) -> Self {
-        DeviceEngineK { dev, lanes: 0, n: 0, u: None, v: None }
+        DeviceEngineK { dev, lanes: 0, n: 0, u: None, v: None, _dtype: std::marker::PhantomData }
     }
 
     pub fn lanes(&self) -> usize {
@@ -85,12 +92,12 @@ impl DeviceEngineK {
                 }
             }
         }
-        let tb = self.dev.upload(tiles, &[k, bs, bs]);
+        let tb = self.dev.upload_f64_as::<S>(tiles, &[k, bs, bs]);
         let woffb = self.dev.scalar_i64(woff as i64);
         let locb = self.dev.scalar_i64(loc as i64);
         let lenb = self.dev.scalar_i64(len as i64);
         let cur = self.mat(which);
-        let out = self.dev.op(
+        let out = self.dev.op_t::<S>(
             "set_block_k",
             &[("k", k as i64), ("n", n as i64), ("bs", bs as i64)],
             &[cur, tb, woffb, locb, lenb],
@@ -102,13 +109,13 @@ impl DeviceEngineK {
     }
 }
 
-impl BdcEngineK for DeviceEngineK {
+impl<S: Scalar> BdcEngineK for DeviceEngineK<S> {
     fn init(&mut self, lanes: usize, n: usize) {
         self.lanes = lanes;
         self.n = n;
         let kp = [("k", lanes as i64), ("n", n as i64)];
-        let e1 = self.dev.op("eye_k", &kp, &[]);
-        let e2 = self.dev.op("eye_k", &kp, &[]);
+        let e1 = self.dev.op_t::<S>("eye_k", &kp, &[]);
+        let e2 = self.dev.op_t::<S>("eye_k", &kp, &[]);
         if let Some(u) = self.u.take() {
             self.dev.free(u);
         }
@@ -129,17 +136,17 @@ impl BdcEngineK for DeviceEngineK {
         let rb = self.dev.scalar_i64(row as i64);
         let out = self
             .dev
-            .op("bdc_row_k", &[("k", k as i64), ("n", n as i64)], &[self.v_buf(), rb]);
+            .op_t::<S>("bdc_row_k", &[("k", k as i64), ("n", n as i64)], &[self.v_buf(), rb]);
         self.dev.free(rb);
         // free before unwrapping so a failed read does not strand the
         // buffer on the (possibly long-lived pool-worker) device
-        let full = self.dev.read(out);
+        let full = self.dev.read_t::<S>(out);
         self.dev.free(out);
         let full = full.expect("v_row_k read");
         let rows = (0..k)
-            .map(|l| full[l * n + c0..l * n + c0 + len].to_vec())
+            .map(|l| S::vec_to_f64(&full[l * n + c0..l * n + c0 + len]))
             .collect();
-        self.dev.recycle(full);
+        self.dev.recycle_t(full);
         rows
     }
 
@@ -177,10 +184,10 @@ impl BdcEngineK for DeviceEngineK {
                 }
                 counts[l] = (end - start) as i64;
             }
-            let tb = self.dev.upload(table, &[k, rmax, 4]);
+            let tb = self.dev.upload_f64_as::<S>(table, &[k, rmax, 4]);
             let cb = self.dev.upload_i64(counts, &[k]);
             let cur = self.mat(which);
-            let out = self.dev.op(
+            let out = self.dev.op_t::<S>(
                 "rot_cols_k",
                 &[("k", k as i64), ("n", n as i64), ("rmax", rmax as i64)],
                 &[cur, tb, cb],
@@ -209,7 +216,7 @@ impl BdcEngineK for DeviceEngineK {
         let cur = self.mat(which);
         let out = self
             .dev
-            .op("permute_k", &[("k", k as i64), ("n", n as i64)], &[cur, pb]);
+            .op_t::<S>("permute_k", &[("k", k as i64), ("n", n as i64)], &[cur, pb]);
         self.dev.free(cur);
         self.dev.free(pb);
         self.set_mat(which, out);
@@ -242,19 +249,19 @@ impl BdcEngineK for DeviceEngineK {
             );
             ks[l] = lane.d.len() as i64;
         }
-        let db = self.dev.upload(dp, &[k, kb]);
-        let bb = self.dev.upload(basep, &[k, kb]);
-        let tb = self.dev.upload(taup, &[k, kb]);
-        let sb = self.dev.upload(signs, &[k, kb]);
+        let db = self.dev.upload_f64_as::<S>(dp, &[k, kb]);
+        let bb = self.dev.upload_f64_as::<S>(basep, &[k, kb]);
+        let tb = self.dev.upload_f64_as::<S>(taup, &[k, kb]);
+        let sb = self.dev.upload_f64_as::<S>(signs, &[k, kb]);
         let kib = self.dev.upload_i64(ks.clone(), &[k]);
         let kp = [("k", k as i64), ("nb", kb as i64)];
         // fused kernel: per lane [zhat | S_U | S_V] packed
-        let packed = self.dev.op("secular_k", &kp, &[db, bb, tb, sb, kib]);
+        let packed = self.dev.op_t::<S>("secular_k", &kp, &[db, bb, tb, sb, kib]);
         for b in [db, bb, tb, sb, kib] {
             self.dev.free(b);
         }
-        let su = self.dev.op("secular_u_k", &kp, &[packed]);
-        let sv = self.dev.op("secular_v_k", &kp, &[packed]);
+        let su = self.dev.op_t::<S>("secular_u_k", &kp, &[packed]);
+        let sv = self.dev.op_t::<S>("secular_v_k", &kp, &[packed]);
         self.dev.free(packed);
         let woff = lo.min(n - kb);
         let loc = lo - woff;
@@ -263,7 +270,7 @@ impl BdcEngineK for DeviceEngineK {
             let locb = self.dev.scalar_i64(loc as i64);
             let lensb = self.dev.upload_i64(ks.clone(), &[k]);
             let cur = self.mat(which);
-            let out = self.dev.op(
+            let out = self.dev.op_t::<S>(
                 "merge_gemm_k",
                 &[("k", k as i64), ("n", n as i64), ("kb", kb as i64)],
                 &[cur, s, woffb, locb, lensb],
@@ -304,7 +311,7 @@ mod tests {
             })
             .collect();
         let dev = Device::host();
-        let mut engk = DeviceEngineK::new(dev.clone());
+        let mut engk = DeviceEngineK::<f64>::new(dev.clone());
         let (sigs, stats) = bdc_solve_k(&lanes, &mut engk, 4, 1);
         assert_eq!(stats.lanes, 3);
         assert!(stats.merges >= 1 && stats.leaves >= 2);
@@ -314,7 +321,7 @@ mod tests {
         for (l, bd) in lanes.iter().enumerate() {
             // scalar reference on its own device
             let sdev = Device::host();
-            let mut eng = DeviceEngine::new(sdev.clone());
+            let mut eng = DeviceEngine::<f64>::new(sdev.clone());
             let (sig, _) = bdc_solve(bd, &mut eng, 4, 1);
             assert_eq!(sigs[l], sig, "lane {l}: sigma");
             let (sdev2, u, v) = eng.take();

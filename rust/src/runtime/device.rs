@@ -35,6 +35,7 @@ use crate::runtime::registry::OpKey;
 use crate::runtime::stream::{EventId, SchedPolicy, StreamSched, COMPUTE, STREAM_COUNT, TRANSFER};
 use crate::runtime::transfer::{TransferModel, TransferStats};
 use crate::runtime::verify::{self, TraceCmd, Verifier};
+use crate::scalar::{DType, DynVec, Scalar};
 
 /// Which backend a [`Device`] executes on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,13 +111,13 @@ impl BufId {
 }
 
 enum Cmd {
-    UploadF64 { id: BufId, data: Vec<f64>, dims: Vec<usize> },
-    UploadI64 { id: BufId, data: Vec<i64>, dims: Vec<usize> },
+    /// Upload a dtype-tagged host array (f32/f64/i64).
+    Upload { id: BufId, data: DynVec, dims: Vec<usize> },
     Exec { op: OpKey, args: Vec<BufId>, out: BufId },
-    /// Read the full buffer (row-major f64).
-    Read { id: BufId, reply: Sender<Result<Vec<f64>>> },
+    /// Read the full buffer (row-major, in the buffer's dtype).
+    Read { id: BufId, reply: Sender<Result<DynVec>> },
     /// Read the first `len` elements without materialising the rest.
-    ReadPrefix { id: BufId, len: usize, reply: Sender<Result<Vec<f64>>> },
+    ReadPrefix { id: BufId, len: usize, reply: Sender<Result<DynVec>> },
     Free { id: BufId },
     /// Signal `ev` once everything queued before it on its stream ran.
     RecordEvent { ev: EventId },
@@ -151,6 +152,10 @@ pub struct DeviceStats {
     pub live_buffers: usize,
     /// Uploads served from the recycled staging pool (`Device::stage`).
     pub staging_hits: u64,
+    /// Bytes of recycled staging capacity those hits handed out —
+    /// allocation traffic the pool saved, in dtype-correct bytes (an
+    /// f32 buffer counts 4 per element, not a f64-element count).
+    pub staging_bytes: u64,
     /// Wall seconds executing transfer-stream commands (H2D uploads
     /// routed through [`Device::upload_on`]).
     pub transfer_sec: f64,
@@ -178,6 +183,7 @@ impl DeviceStats {
         self.compile_sec += o.compile_sec;
         self.live_buffers += o.live_buffers;
         self.staging_hits += o.staging_hits;
+        self.staging_bytes += o.staging_bytes;
         self.transfer_sec += o.transfer_sec;
         self.overlap_sec += o.overlap_sec;
         for (k, v) in &o.per_op_sec {
@@ -197,10 +203,13 @@ impl DeviceStats {
 const STAGING_CAP: usize = 32;
 const STAGING_CAP_BYTES: usize = 1 << 26; // 64 MiB
 
-/// Retain `v` for staging reuse if the pool bounds allow it.
-fn stash_staging(pool: &mut Vec<Vec<f64>>, v: Vec<f64>) {
-    let held: usize = pool.iter().map(|b| b.capacity() * 8).sum();
-    if pool.len() < STAGING_CAP && held + v.capacity() * 8 <= STAGING_CAP_BYTES {
+/// Retain `v` for staging reuse if the pool bounds allow it. The byte
+/// cap counts each entry's allocation at its own dtype width
+/// ([`DynVec::capacity_bytes`]), so an f32 vector costs half what an
+/// equal-length f64 one does.
+fn stash_staging(pool: &mut Vec<DynVec>, v: DynVec) {
+    let held: usize = pool.iter().map(DynVec::capacity_bytes).sum();
+    if pool.len() < STAGING_CAP && held + v.capacity_bytes() <= STAGING_CAP_BYTES {
         pool.push(v);
     }
 }
@@ -217,13 +226,14 @@ pub struct Device {
     backend: BackendKind,
     /// `Backend::max_parallelism` hint, captured at worker startup.
     max_par: usize,
-    /// Recycled upload staging: the worker pushes reclaimed f64 storage
-    /// of freed buffers here (`Backend::reclaim_f64`), and `stage`/
-    /// `stage_zeroed` pop from it — so back-to-back solves on one device
-    /// (a pool worker walking a bucket) stop allocating fresh staging
-    /// per solve.
-    staging: Arc<Mutex<Vec<Vec<f64>>>>,
+    /// Recycled upload staging: the worker pushes reclaimed host storage
+    /// of freed buffers here (`Backend::reclaim`), and `stage`/
+    /// `stage_zeroed` pop dtype-matching entries from it — so
+    /// back-to-back solves on one device (a pool worker walking a
+    /// bucket) stop allocating fresh staging per solve.
+    staging: Arc<Mutex<Vec<DynVec>>>,
     staging_hits: Arc<AtomicU64>,
+    staging_bytes: Arc<AtomicU64>,
     /// Transfer accounting + model charging for the *baseline* paths.
     pub model: TransferModel,
     pub tstats: Arc<Mutex<TransferStats>>,
@@ -311,7 +321,7 @@ impl Device {
     {
         let (tx, rx) = channel::<Submission>();
         let (ready_tx, ready_rx) = channel::<Result<usize>>();
-        let staging: Arc<Mutex<Vec<Vec<f64>>>> = Arc::new(Mutex::new(Vec::new()));
+        let staging: Arc<Mutex<Vec<DynVec>>> = Arc::new(Mutex::new(Vec::new()));
         let staging_w = staging.clone();
         std::thread::Builder::new()
             .name("gcsvd-device".into())
@@ -329,6 +339,7 @@ impl Device {
             max_par,
             staging,
             staging_hits: Arc::new(AtomicU64::new(0)),
+            staging_bytes: Arc::new(AtomicU64::new(0)),
             model,
             tstats: Arc::new(Mutex::new(TransferStats::default())),
             verifier: verify::enabled().then(|| Arc::new(Mutex::new(Verifier::new()))),
@@ -410,7 +421,14 @@ impl Device {
     /// charge — the GPU-centered path only ships vectors, which we
     /// account but do not penalise; baselines use `upload_charged`).
     pub fn upload(&self, data: Vec<f64>, dims: &[usize]) -> BufId {
-        self.upload_on(COMPUTE, data, dims)
+        self.upload_t_on(COMPUTE, data, dims)
+    }
+
+    /// Asynchronous upload of a `Vec<S>` on the compute stream — the
+    /// dtype-generic twin of [`upload`](Device::upload); the buffer's
+    /// element dtype is `S::DTYPE`.
+    pub fn upload_t<S: Scalar>(&self, data: Vec<S>, dims: &[usize]) -> BufId {
+        self.upload_t_on(COMPUTE, data, dims)
     }
 
     /// Asynchronous f64 upload on an explicit stream. On
@@ -422,9 +440,26 @@ impl Device {
     /// [`record_event`]: Device::record_event
     /// [`wait_event`]: Device::wait_event
     pub fn upload_on(&self, stream: usize, data: Vec<f64>, dims: &[usize]) -> BufId {
+        self.upload_t_on(stream, data, dims)
+    }
+
+    /// [`upload_on`](Device::upload_on), dtype-generic.
+    pub fn upload_t_on<S: Scalar>(&self, stream: usize, data: Vec<S>, dims: &[usize]) -> BufId {
+        self.upload_dyn_on(stream, S::wrap_vec(data), dims)
+    }
+
+    fn upload_dyn_on(&self, stream: usize, data: DynVec, dims: &[usize]) -> BufId {
         let id = self.fresh();
-        self.vcheck_on(stream, &TraceCmd::UploadF64 { id, len: data.len() });
-        self.send_on(stream, Cmd::UploadF64 { id, data, dims: dims.to_vec() });
+        let len = data.len();
+        self.vcheck_on(
+            stream,
+            &match data.dtype() {
+                DType::F32 => TraceCmd::UploadF32 { id, len },
+                DType::F64 => TraceCmd::UploadF64 { id, len },
+                DType::I64 => TraceCmd::UploadI64 { id, len },
+            },
+        );
+        self.send_on(stream, Cmd::Upload { id, data, dims: dims.to_vec() });
         id
     }
 
@@ -447,6 +482,31 @@ impl Device {
         self.send_on(stream, Cmd::WaitEvent { ev });
     }
 
+    /// Upload a host f64 vector as an `S`-typed device buffer: the f64
+    /// instantiation moves the vector straight through; narrower dtypes
+    /// convert elementwise (one rounding per element) and recycle the
+    /// f64 storage into the staging pool. This is how the generic SVD
+    /// pipeline feeds f64 host-tree data (rotation tables, secular
+    /// inputs, leaf tiles) to an f32 device stack.
+    pub fn upload_f64_as<S: Scalar>(&self, data: Vec<f64>, dims: &[usize]) -> BufId {
+        self.upload_f64_as_on(COMPUTE, data, dims)
+    }
+
+    /// [`upload_f64_as`](Device::upload_f64_as) on an explicit stream.
+    pub fn upload_f64_as_on<S: Scalar>(
+        &self,
+        stream: usize,
+        data: Vec<f64>,
+        dims: &[usize],
+    ) -> BufId {
+        if S::DTYPE == DType::F64 {
+            return self.upload_t_on(stream, data, dims);
+        }
+        let cast: Vec<S> = S::vec_from_f64(&data);
+        self.recycle(data);
+        self.upload_t_on(stream, cast, dims)
+    }
+
     /// Upload charging the PCIe model (baseline matrix traffic).
     pub fn upload_charged(&self, data: Vec<f64>, dims: &[usize]) -> BufId {
         let bytes = data.len() * 8;
@@ -458,29 +518,39 @@ impl Device {
         id
     }
 
-    /// Pop a recycled vector suitable for a `want`-element request: the
-    /// smallest retained vector that already fits (so a tiny request
-    /// does not pin a huge recycled allocation inside a long-lived
-    /// buffer), else the largest (least reallocation when growing).
-    fn stage_pick(&self, want: usize) -> Option<Vec<f64>> {
+    /// Pop a recycled vector suitable for a `want`-element request of
+    /// dtype `S`: the smallest dtype-matching retained vector that
+    /// already fits (so a tiny request does not pin a huge recycled
+    /// allocation inside a long-lived buffer), else the largest matching
+    /// one (least reallocation when growing). Allocations are never
+    /// reinterpreted across dtypes — an f32 request only sees f32
+    /// entries.
+    fn stage_pick_t<S: Scalar>(&self, want: usize) -> Option<Vec<S>> {
         let mut pool = self.staging.lock().unwrap();
         let idx = pool
             .iter()
             .enumerate()
-            .filter(|(_, v)| v.capacity() >= want)
+            .filter(|(_, v)| v.dtype() == S::DTYPE && v.capacity() >= want)
             .min_by_key(|(_, v)| v.capacity())
             .map(|(i, _)| i)
             .or_else(|| {
                 pool.iter()
                     .enumerate()
+                    .filter(|(_, v)| v.dtype() == S::DTYPE)
                     .max_by_key(|(_, v)| v.capacity())
                     .map(|(i, _)| i)
             });
         let v = idx.map(|i| pool.swap_remove(i));
-        if v.is_some() {
-            self.staging_hits.fetch_add(1, Ordering::Relaxed);
+        drop(pool);
+        match v {
+            Some(v) => {
+                self.staging_hits.fetch_add(1, Ordering::Relaxed);
+                self.staging_bytes
+                    .fetch_add(v.capacity_bytes() as u64, Ordering::Relaxed);
+                Some(S::take_vec(v).expect("staging pick was dtype-filtered"))
+            }
+            None => None,
         }
-        v
     }
 
     /// A staging vector holding a copy of `data`, drawn from the recycled
@@ -489,7 +559,12 @@ impl Device {
     /// freed, the worker reclaims the storage and the next `stage` call
     /// on this device reuses it.
     pub fn stage(&self, data: &[f64]) -> Vec<f64> {
-        match self.stage_pick(data.len()) {
+        self.stage_t(data)
+    }
+
+    /// [`stage`](Device::stage), dtype-generic.
+    pub fn stage_t<S: Scalar>(&self, data: &[S]) -> Vec<S> {
+        match self.stage_pick_t::<S>(data.len()) {
             Some(mut v) => {
                 v.clear();
                 v.extend_from_slice(data);
@@ -502,27 +577,34 @@ impl Device {
     /// A zero-filled staging vector of length `len` from the recycled
     /// pool (see [`stage`](Device::stage)).
     pub fn stage_zeroed(&self, len: usize) -> Vec<f64> {
-        match self.stage_pick(len) {
+        self.stage_zeroed_t(len)
+    }
+
+    /// [`stage_zeroed`](Device::stage_zeroed), dtype-generic.
+    pub fn stage_zeroed_t<S: Scalar>(&self, len: usize) -> Vec<S> {
+        match self.stage_pick_t::<S>(len) {
             Some(mut v) => {
                 v.clear();
-                v.resize(len, 0.0);
+                v.resize(len, S::ZERO);
                 v
             }
-            None => vec![0.0; len],
+            None => vec![S::ZERO; len],
         }
     }
 
     /// Hand a host-side vector (e.g. a sliced read-back) to the staging
     /// pool so a later `stage` call reuses its allocation.
     pub fn recycle(&self, v: Vec<f64>) {
-        stash_staging(&mut self.staging.lock().unwrap(), v);
+        self.recycle_t(v);
+    }
+
+    /// [`recycle`](Device::recycle), dtype-generic.
+    pub fn recycle_t<S: Scalar>(&self, v: Vec<S>) {
+        stash_staging(&mut self.staging.lock().unwrap(), S::wrap_vec(v));
     }
 
     pub fn upload_i64(&self, data: Vec<i64>, dims: &[usize]) -> BufId {
-        let id = self.fresh();
-        self.vcheck(&TraceCmd::UploadI64 { id, len: data.len() });
-        self.send(Cmd::UploadI64 { id, data, dims: dims.to_vec() });
-        id
+        self.upload_dyn_on(COMPUTE, DynVec::I64(data), dims)
     }
 
     pub fn scalar_i64(&self, v: i64) -> BufId {
@@ -543,17 +625,40 @@ impl Device {
         self.exec(OpKey::new(name, params), args)
     }
 
+    /// [`op`](Device::op) instantiated at scalar type `S` — the key
+    /// carries `S::DTYPE`, so the backend runs the `S`-precision program.
+    pub fn op_t<S: Scalar>(&self, name: &str, params: &[(&str, i64)], args: &[BufId]) -> BufId {
+        self.exec(OpKey::new_t::<S>(name, params), args)
+    }
+
+    /// Unwrap a read-back payload as `Vec<S>`, failing loudly on a dtype
+    /// mismatch instead of reinterpreting or silently converting.
+    fn expect_dtype<S: Scalar>(id: BufId, d: DynVec) -> Result<Vec<S>> {
+        S::take_vec(d).map_err(|got| {
+            anyhow!(
+                "read {id:?}: buffer holds {} data but was read as {}",
+                got.dtype(),
+                S::DTYPE
+            )
+        })
+    }
+
     /// Blocking full read. A verifier violation latched since the last
     /// synchronising call surfaces here (and takes priority over the
     /// worker's own latched error — its diagnostic is richer).
     pub fn read(&self, id: BufId) -> Result<Vec<f64>> {
+        self.read_t(id)
+    }
+
+    /// [`read`](Device::read), dtype-generic: the buffer must hold `S`.
+    pub fn read_t<S: Scalar>(&self, id: BufId) -> Result<Vec<S>> {
         self.vcheck(&TraceCmd::Read { id });
         let (reply, rx) = channel();
         self.send(Cmd::Read { id, reply });
         let r = rx.recv().context("device worker gone")?;
         match self.vtake() {
             Some(e) => Err(e),
-            None => r,
+            None => Self::expect_dtype(id, r?),
         }
     }
 
@@ -569,13 +674,18 @@ impl Device {
 
     /// Blocking prefix read (offset-0 raw copy; used for packed headers).
     pub fn read_prefix(&self, id: BufId, len: usize) -> Result<Vec<f64>> {
+        self.read_prefix_t(id, len)
+    }
+
+    /// [`read_prefix`](Device::read_prefix), dtype-generic.
+    pub fn read_prefix_t<S: Scalar>(&self, id: BufId, len: usize) -> Result<Vec<S>> {
         self.vcheck(&TraceCmd::ReadPrefix { id, len });
         let (reply, rx) = channel();
         self.send(Cmd::ReadPrefix { id, len, reply });
         let r = rx.recv().context("device worker gone")?;
         match self.vtake() {
             Some(e) => Err(e),
-            None => r,
+            None => Self::expect_dtype(id, r?),
         }
     }
 
@@ -600,6 +710,7 @@ impl Device {
         self.send(Cmd::Stats { reply });
         let mut st = rx.recv().expect("device worker gone");
         st.staging_hits = self.staging_hits.load(Ordering::Relaxed);
+        st.staging_bytes = self.staging_bytes.load(Ordering::Relaxed);
         st
     }
 
@@ -638,7 +749,7 @@ struct WorkerState<B: Backend> {
     stats: DeviceStats,
     /// first error is latched and reported at the next synchronising call
     pending_err: Option<anyhow::Error>,
-    staging: Arc<Mutex<Vec<Vec<f64>>>>,
+    staging: Arc<Mutex<Vec<DynVec>>>,
 }
 
 impl<B: Backend> WorkerState<B> {
@@ -660,18 +771,9 @@ impl<B: Backend> WorkerState<B> {
 
     fn execute_inner(&mut self, cmd: Cmd) {
         match cmd {
-            Cmd::UploadF64 { id, data, dims } => {
-                self.stats.upload_bytes += (data.len() * 8) as u64;
-                match self.backend.upload_f64(data, &dims) {
-                    Ok(b) => {
-                        self.bufs.insert(id, b);
-                    }
-                    Err(e) => self.pending_err = self.pending_err.take().or(Some(e)),
-                }
-            }
-            Cmd::UploadI64 { id, data, dims } => {
-                self.stats.upload_bytes += (data.len() * 8) as u64;
-                match self.backend.upload_i64(data, &dims) {
+            Cmd::Upload { id, data, dims } => {
+                self.stats.upload_bytes += data.byte_len() as u64;
+                match self.backend.upload(data, &dims) {
                     Ok(b) => {
                         self.bufs.insert(id, b);
                     }
@@ -716,7 +818,7 @@ impl<B: Backend> WorkerState<B> {
                     }
                 };
                 if let Ok(v) = &r {
-                    self.stats.download_bytes += (v.len() * 8) as u64;
+                    self.stats.download_bytes += v.byte_len() as u64;
                 }
                 let _ = reply.send(r);
             }
@@ -730,13 +832,13 @@ impl<B: Backend> WorkerState<B> {
                     }
                 };
                 if let Ok(v) = &r {
-                    self.stats.download_bytes += (v.len() * 8) as u64;
+                    self.stats.download_bytes += v.byte_len() as u64;
                 }
                 let _ = reply.send(r);
             }
             Cmd::Free { id } => {
                 if let Some(buf) = self.bufs.remove(&id) {
-                    if let Some(v) = self.backend.reclaim_f64(buf) {
+                    if let Some(v) = self.backend.reclaim(buf) {
                         stash_staging(&mut self.staging.lock().unwrap(), v);
                     }
                 }
@@ -774,7 +876,7 @@ fn worker<B: Backend>(
     make: impl FnOnce() -> Result<B>,
     rx: Receiver<Submission>,
     ready: Sender<Result<usize>>,
-    staging: Arc<Mutex<Vec<Vec<f64>>>>,
+    staging: Arc<Mutex<Vec<DynVec>>>,
     policy: SchedPolicy,
 ) {
     let backend = match make() {
@@ -909,8 +1011,41 @@ mod tests {
         assert_eq!(v, vec![4.0, 5.0]);
         let st = dev.stats();
         assert!(st.staging_hits >= 1, "no staging reuse recorded");
+        assert!(st.staging_bytes >= 3 * 8, "hit bytes not accounted");
         dev.recycle(v);
         assert_eq!(dev.stage_zeroed(4), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn staging_pool_is_dtype_segregated() {
+        let dev = Device::host();
+        // park one f64 allocation in the pool
+        let b = dev.upload(vec![1.0f64; 8], &[8]);
+        dev.free(b);
+        dev.sync().unwrap();
+        let hits_before = dev.stats().staging_hits;
+        // an f32 request must NOT be served from the f64 allocation
+        let v32: Vec<f32> = dev.stage_t(&[1.0f32, 2.0]);
+        assert_eq!(v32, vec![1.0f32, 2.0]);
+        assert_eq!(dev.stats().staging_hits, hits_before, "f32 stage consumed an f64 entry");
+        // but recycling it makes the next f32 request a hit
+        dev.recycle_t(v32);
+        let z32: Vec<f32> = dev.stage_zeroed_t(2);
+        assert_eq!(z32, vec![0.0f32; 2]);
+        assert_eq!(dev.stats().staging_hits, hits_before + 1);
+        // and the f64 entry still serves f64 requests
+        assert_eq!(dev.stage_zeroed(8), vec![0.0f64; 8]);
+        assert_eq!(dev.stats().staging_hits, hits_before + 2);
+    }
+
+    #[test]
+    fn f32_upload_read_roundtrip_and_dtype_mismatch() {
+        let dev = Device::host();
+        let b = dev.upload_t(vec![1.0f32, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(dev.read_t::<f32>(b).unwrap(), vec![1.0f32, 2.0, 3.0, 4.0]);
+        // reading an f32 buffer as f64 is a loud error, not a cast
+        let err = dev.read_t::<f64>(b).unwrap_err().to_string();
+        assert!(err.contains("f32") && err.contains("f64"), "unhelpful dtype error: {err}");
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! the CPU linalg layer (`linalg::{gebrd_cpu, qr, blas}`) that the Python
 //! test-suite cross-checks against the same references.
 //!
+//! Every float op is generic over the op key's dtype (DESIGN.md §Scalar
+//! layer): `exec` dispatches on `op.dtype` into one generic interpreter
+//! (`exec_t::<S>`), so the f32 vocabulary is the f64 vocabulary at half
+//! width — same arms, same shared per-lane helpers, dtype-scaled guard
+//! constants. A buffer of the wrong dtype fails the typed accessor with
+//! the op named, mirroring the device worker's enqueue-time check.
+//!
 //! This backend is the default device substrate: it needs no artifacts
 //! directory, no Python, and no network, so the entire pipeline — tests,
 //! benches, CLI — runs hermetically. A real accelerator backend (PJRT
@@ -22,25 +29,33 @@ use crate::linalg::{blas, gebrd_cpu, qr};
 use crate::matrix::Matrix;
 use crate::runtime::backend::Backend;
 use crate::runtime::registry::OpKey;
+use crate::scalar::{DType, Scalar};
 
-/// A host buffer: f64 or i64 array (dims are implied by the op params).
-pub enum HostBuf {
-    F64(Vec<f64>),
-    I64(Vec<i64>),
+/// A host buffer IS a dtype-tagged host vector (dims are implied by the
+/// op params), so upload/read/reclaim are moves or clones, never copies
+/// through a conversion.
+pub use crate::scalar::DynVec as HostBuf;
+
+/// Typed views of a [`HostBuf`], local to the interpreter.
+trait BufExt {
+    /// The elements at dtype `S`, or an error naming both dtypes.
+    fn floats<S: Scalar>(&self) -> Result<&[S]>;
+    fn i64s(&self) -> Result<&[i64]>;
+    /// First element as a non-negative index (i64 or float buffer).
+    fn scalar(&self) -> Result<usize>;
+    fn matrix<S: Scalar>(&self, rows: usize, cols: usize) -> Result<Matrix<S>>;
 }
 
-impl HostBuf {
-    fn f64s(&self) -> Result<&[f64]> {
-        match self {
-            HostBuf::F64(v) => Ok(v),
-            HostBuf::I64(_) => Err(anyhow!("expected f64 buffer, found i64")),
-        }
+impl BufExt for HostBuf {
+    fn floats<S: Scalar>(&self) -> Result<&[S]> {
+        S::slice_of(self)
+            .ok_or_else(|| anyhow!("expected {} buffer, found {}", S::DTYPE, self.dtype()))
     }
 
     fn i64s(&self) -> Result<&[i64]> {
         match self {
             HostBuf::I64(v) => Ok(v),
-            HostBuf::F64(_) => Err(anyhow!("expected i64 buffer, found f64")),
+            other => Err(anyhow!("expected i64 buffer, found {}", other.dtype())),
         }
     }
 
@@ -48,13 +63,14 @@ impl HostBuf {
         let v = match self {
             HostBuf::I64(v) => v.first().copied().unwrap_or(0),
             HostBuf::F64(v) => v.first().copied().unwrap_or(0.0) as i64,
+            HostBuf::F32(v) => f64::from(v.first().copied().unwrap_or(0.0)) as i64,
         };
         ensure!(v >= 0, "negative scalar argument {v}");
         Ok(v as usize)
     }
 
-    fn matrix(&self, rows: usize, cols: usize) -> Result<Matrix> {
-        let d = self.f64s()?;
+    fn matrix<S: Scalar>(&self, rows: usize, cols: usize) -> Result<Matrix<S>> {
+        let d = self.floats::<S>()?;
         ensure!(
             d.len() == rows * cols,
             "buffer has {} elements, expected {rows}x{cols}",
@@ -68,7 +84,8 @@ impl HostBuf {
 #[derive(Default)]
 pub struct HostBackend {
     /// Distinct op keys executed — the analogue of a compile-cache fill,
-    /// surfaced through `DeviceStats::compile_count`.
+    /// surfaced through `DeviceStats::compile_count`. Keys carry their
+    /// dtype, so an f32 op and its f64 twin count as two "compiles".
     seen: HashSet<OpKey>,
 }
 
@@ -97,37 +114,28 @@ fn arg<'a>(op: &OpKey, args: &[&'a HostBuf], i: usize) -> Result<&'a HostBuf> {
 impl Backend for HostBackend {
     type Buf = HostBuf;
 
-    fn upload_f64(&mut self, data: Vec<f64>, _dims: &[usize]) -> Result<HostBuf> {
-        Ok(HostBuf::F64(data))
+    fn upload(&mut self, data: HostBuf, _dims: &[usize]) -> Result<HostBuf> {
+        Ok(data)
     }
 
-    fn upload_i64(&mut self, data: Vec<i64>, _dims: &[usize]) -> Result<HostBuf> {
-        Ok(HostBuf::I64(data))
+    fn read(&mut self, buf: &HostBuf) -> Result<HostBuf> {
+        Ok(buf.clone())
     }
 
-    fn read(&mut self, buf: &HostBuf) -> Result<Vec<f64>> {
-        match buf {
-            HostBuf::F64(v) => Ok(v.clone()),
-            HostBuf::I64(v) => Ok(v.iter().map(|&x| x as f64).collect()),
-        }
-    }
-
-    fn read_prefix(&mut self, buf: &HostBuf, len: usize) -> Result<Vec<f64>> {
-        match buf {
-            HostBuf::F64(v) => Ok(v[..len.min(v.len())].to_vec()),
-            HostBuf::I64(v) => Ok(v[..len.min(v.len())].iter().map(|&x| x as f64).collect()),
-        }
+    fn read_prefix(&mut self, buf: &HostBuf, len: usize) -> Result<HostBuf> {
+        Ok(match buf {
+            HostBuf::F32(v) => HostBuf::F32(v[..len.min(v.len())].to_vec()),
+            HostBuf::F64(v) => HostBuf::F64(v[..len.min(v.len())].to_vec()),
+            HostBuf::I64(v) => HostBuf::I64(v[..len.min(v.len())].to_vec()),
+        })
     }
 
     fn compile_stats(&self) -> (usize, f64) {
         (self.seen.len(), 0.0)
     }
 
-    fn reclaim_f64(&mut self, buf: HostBuf) -> Option<Vec<f64>> {
-        match buf {
-            HostBuf::F64(v) => Some(v),
-            HostBuf::I64(_) => None,
-        }
+    fn reclaim(&mut self, buf: HostBuf) -> Option<HostBuf> {
+        Some(buf)
     }
 
     fn name(&self) -> &'static str {
@@ -154,705 +162,732 @@ impl Backend for HostBackend {
         if !self.seen.contains(op) {
             self.seen.insert(op.clone());
         }
-        let out = match op.name.as_str() {
-            // ---- initialisers (model.op_eye / op_zeros) ----
-            "eye" => {
-                let (m, n) = (p(op, "m")?, p(op, "n")?);
-                Matrix::eye(m, n).data
-            }
-            "zeros" => {
-                let n = p(op, "n")?;
-                vec![0.0; n * n]
-            }
-
-            // ---- plain gemm (model.op_gemm) ----
-            "gemm" => {
-                let (m, k, n) = (p(op, "m")?, p(op, "k")?, p(op, "n")?);
-                let a = arg(op, args, 0)?.matrix(m, k)?;
-                let b = arg(op, args, 1)?.matrix(k, n)?;
-                blas::matmul(&a, &b).data
-            }
-
-            // ---- gebrd: panel + merged trailing update (Algorithm 1) ----
-            "labrd" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let t = arg(op, args, 1)?.scalar()?;
-                ensure!(t + b <= n, "labrd: panel [{t}, {}) exceeds n={n}", t + b);
-                let a = arg(op, args, 0)?.matrix(m, n)?;
-                labrd_ws(a, t, b)
-            }
-            // merged (gemm x1) and non-merged (gemm x2) trailing updates
-            // compute the same A - P Q^T on the trailing block
-            // (model.op_gebrd_update / op_gebrd_update2_ws)
-            "gebrd_update" | "gebrd_update_xla" | "gebrd_update2_ws" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let t = arg(op, args, 1)?.scalar()?;
-                let (mut a, pm, qm) = unpack_labrd_ws(op, arg(op, args, 0)?.f64s()?, m, n, b)?;
-                gebrd_cpu::trailing_update(&mut a, &pm, &qm, t, b);
-                a.data
-            }
-            // non-merged update from uploaded V/Y/X/U (model.op_gebrd_update2)
-            "gebrd_update2" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let mut a = arg(op, args, 0)?.matrix(m, n)?;
-                let v = arg(op, args, 1)?.matrix(m, b)?;
-                let y = arg(op, args, 2)?.matrix(n, b)?;
-                let x = arg(op, args, 3)?.matrix(m, b)?;
-                let u = arg(op, args, 4)?.matrix(n, b)?;
-                let t = arg(op, args, 5)?.scalar()?;
-                let s = t + b;
-                for r in s..m {
-                    for c in s..n {
-                        let mut acc = 0.0;
-                        for k in 0..b {
-                            acc += v.at(r, k) * y.at(c, k) + x.at(r, k) * u.at(c, k);
-                        }
-                        a[(r, c)] -= acc;
-                    }
-                }
-                a.data
-            }
-            "extract_a" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let ws = arg(op, args, 0)?.f64s()?;
-                let off = 4 * b;
-                ensure!(ws.len() >= off + m * n, "extract_a: short workspace");
-                ws[off..off + m * n].to_vec()
-            }
-            "ws_head" => {
-                let b = p(op, "b")?;
-                let ws = arg(op, args, 0)?.f64s()?;
-                ensure!(ws.len() >= 4 * b, "ws_head: short workspace");
-                ws[..4 * b].to_vec()
-            }
-
-            // ---- QR: modified-CWY steps (eqs. 24-32). The classic-CWY
-            // baselines compute the same product, so they share arms. ----
-            "geqrf_step" | "geqrf_step_classic" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let t = arg(op, args, 1)?.scalar()?;
-                ensure!(t + b <= n, "geqrf_step: panel [{t}, {}) exceeds n={n}", t + b);
-                let a = arg(op, args, 0)?.matrix(m, n)?;
-                geqrf_step_ws(a, t, b)
-            }
-            "qr_head" => {
-                let b = p(op, "b")?;
-                let ws = arg(op, args, 0)?.f64s()?;
-                ensure!(ws.len() >= b, "qr_head: short workspace");
-                ws[..b].to_vec()
-            }
-            "geqrf_extract_a" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let ws = arg(op, args, 0)?.f64s()?;
-                ensure!(ws.len() >= b + m * n, "geqrf_extract_a: short workspace");
-                ws[b..b + m * n].to_vec()
-            }
-            "orgqr_step" | "orgqr_step_classic" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let mut q = arg(op, args, 0)?.matrix(m, n)?;
-                let afac = arg(op, args, 1)?.matrix(m, n)?;
-                let tau = arg(op, args, 2)?.f64s()?;
-                let t = arg(op, args, 3)?.scalar()?;
-                ensure!(tau.len() == b, "orgqr_step: tau length");
-                // orgqr's panel product is the same (I - Y T^{-1} Y^T) C
-                // as ormqr's, so the arms share the helper
-                ormqr_panel_apply(&mut q, &afac, tau, t, b, n);
-                q.data
-            }
-            "ormqr_step" | "ormqr_step_classic" => {
-                let (m, n, k, b) = (p(op, "m")?, p(op, "n")?, p(op, "k")?, p(op, "b")?);
-                let mut c = arg(op, args, 0)?.matrix(m, k)?;
-                let afac = arg(op, args, 1)?.matrix(m, n)?;
-                let tau = arg(op, args, 2)?.f64s()?;
-                let t = arg(op, args, 3)?.scalar()?;
-                ensure!(tau.len() == b, "ormqr_step: tau length");
-                ormqr_panel_apply(&mut c, &afac, tau, t, b, k);
-                c.data
-            }
-            "ormlq_step" | "ormlq_step_classic" => {
-                let (m, n, k, b) = (p(op, "m")?, p(op, "n")?, p(op, "k")?, p(op, "b")?);
-                let mut c = arg(op, args, 0)?.matrix(n, k)?;
-                let afac = arg(op, args, 1)?.matrix(m, n)?;
-                let tau = arg(op, args, 2)?.f64s()?;
-                let t = arg(op, args, 3)?.scalar()?;
-                ensure!(tau.len() == b, "ormlq_step: tau length");
-                ormlq_panel_apply(&mut c, &afac, tau, t, b, n, k);
-                c.data
-            }
-
-            // ---- MAGMA-sim writebacks and uploaded-panel larfb ----
-            "set_cols" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let mut a = arg(op, args, 0)?.matrix(m, n)?;
-                let strip = arg(op, args, 1)?.matrix(m, b)?;
-                let t = arg(op, args, 2)?.scalar()?;
-                ensure!(t + b <= n, "set_cols: strip out of range");
-                for i in 0..m {
-                    for j in 0..b {
-                        a[(i, t + j)] = strip.at(i, j);
-                    }
-                }
-                a.data
-            }
-            "set_rows" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let mut a = arg(op, args, 0)?.matrix(m, n)?;
-                let strip = arg(op, args, 1)?.matrix(b, n)?;
-                let t = arg(op, args, 2)?.scalar()?;
-                ensure!(t + b <= m, "set_rows: strip out of range");
-                for i in 0..b {
-                    for j in 0..n {
-                        a[(t + i, j)] = strip.at(i, j);
-                    }
-                }
-                a.data
-            }
-            "larfb_up" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let mut a = arg(op, args, 0)?.matrix(m, n)?;
-                let y = arg(op, args, 1)?.matrix(m, b)?;
-                let ti = arg(op, args, 2)?.matrix(b, b)?;
-                let t = arg(op, args, 3)?.scalar()?;
-                if t + b < n {
-                    qr::larfb(&mut a, &y, &ti, t + b, n, true);
-                }
-                a.data
-            }
-            "larfb_full" => {
-                let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let mut c = arg(op, args, 0)?.matrix(m, n)?;
-                let y = arg(op, args, 1)?.matrix(m, b)?;
-                let ti = arg(op, args, 2)?.matrix(b, b)?;
-                qr::larfb(&mut c, &y, &ti, 0, n, false);
-                c.data
-            }
-
-            // ---- gemv micro-ops ----
-            "gemv_t" | "gemv_tall_t" => {
-                let m = p(op, "m")?;
-                let n = p(op, "n").or_else(|_| p(op, "k"))?;
-                let a = arg(op, args, 0)?.matrix(m, n)?;
-                let x = arg(op, args, 1)?.f64s()?;
-                ensure!(x.len() == m, "{}: vector length {} != m {m}", op.name, x.len());
-                let mut y = vec![0.0; n];
-                blas::gemv_t(&a, x, &mut y, 1.0);
-                y
-            }
-            "gemv_n" | "gemv_tall_n" => {
-                let m = p(op, "m")?;
-                let n = p(op, "n").or_else(|_| p(op, "k"))?;
-                let a = arg(op, args, 0)?.matrix(m, n)?;
-                let x = arg(op, args, 1)?.f64s()?;
-                ensure!(x.len() == n, "{}: vector length {} != n {n}", op.name, x.len());
-                let mut y = vec![0.0; m];
-                blas::gemv(&a, x, &mut y, 1.0);
-                y
-            }
-            "gemv_tall_n_acc" => {
-                let (m, k) = (p(op, "m")?, p(op, "k")?);
-                let a = arg(op, args, 0)?.matrix(m, k)?;
-                let w = arg(op, args, 1)?.f64s()?;
-                ensure!(w.len() == k, "gemv_tall_n_acc: vector length {} != k {k}", w.len());
-                let mut y = arg(op, args, 2)?.f64s()?.to_vec();
-                ensure!(y.len() == m, "gemv_tall_n_acc: acc length");
-                blas::gemv(&a, w, &mut y, 1.0);
-                y
-            }
-
-            // ---- Fig. 5 micro-ops (merged vs non-merged BLAS) ----
-            "rank_update" => {
-                let (m, k) = (p(op, "m")?, p(op, "k")?);
-                let mut a = arg(op, args, 0)?.matrix(m, m)?;
-                let v = arg(op, args, 1)?.matrix(m, k)?;
-                let y = arg(op, args, 2)?.matrix(m, k)?;
-                blas::gemm_nt(&v, &y, &mut a, -1.0);
-                a.data
-            }
-            "fig5_gemv4" => {
-                let (m, k) = (p(op, "m")?, p(op, "k")?);
-                let v = arg(op, args, 0)?.matrix(m, k)?;
-                let y = arg(op, args, 1)?.matrix(m, k)?;
-                let x = arg(op, args, 2)?.matrix(m, k)?;
-                let u4 = arg(op, args, 3)?.matrix(m, k)?;
-                let uvec = arg(op, args, 4)?.f64s()?;
-                ensure!(uvec.len() == m, "fig5_gemv4: vector length {} != m {m}", uvec.len());
-                let mut w1 = vec![0.0; k];
-                blas::gemv_t(&y, uvec, &mut w1, 1.0);
-                let mut w2 = vec![0.0; k];
-                blas::gemv_t(&u4, uvec, &mut w2, 1.0);
-                let mut out = vec![0.0; m];
-                blas::gemv(&v, &w1, &mut out, 1.0);
-                blas::gemv(&x, &w2, &mut out, 1.0);
-                out
-            }
-            "fig5_gemv2" => {
-                let (m, k) = (p(op, "m")?, p(op, "k")?);
-                let pm = arg(op, args, 0)?.matrix(m, 2 * k)?;
-                let qm = arg(op, args, 1)?.matrix(m, 2 * k)?;
-                let uvec = arg(op, args, 2)?.f64s()?;
-                ensure!(uvec.len() == m, "fig5_gemv2: vector length {} != m {m}", uvec.len());
-                let mut w = vec![0.0; 2 * k];
-                blas::gemv_t(&qm, uvec, &mut w, 1.0);
-                let mut out = vec![0.0; m];
-                blas::gemv(&pm, &w, &mut out, 1.0);
-                out
-            }
-            "fig5_gemm2" => {
-                let (m, k) = (p(op, "m")?, p(op, "k")?);
-                let mut a = arg(op, args, 0)?.matrix(m, m)?;
-                let v = arg(op, args, 1)?.matrix(m, k)?;
-                let y = arg(op, args, 2)?.matrix(m, k)?;
-                let x = arg(op, args, 3)?.matrix(m, k)?;
-                let u = arg(op, args, 4)?.matrix(m, k)?;
-                blas::gemm_nt(&v, &y, &mut a, -1.0);
-                blas::gemm_nt(&x, &u, &mut a, -1.0);
-                a.data
-            }
-            "fig5_gemm1" | "fig5_gemm1_xla" => {
-                let (m, k) = (p(op, "m")?, p(op, "k")?);
-                let mut a = arg(op, args, 0)?.matrix(m, m)?;
-                let pm = arg(op, args, 1)?.matrix(m, 2 * k)?;
-                let qm = arg(op, args, 2)?.matrix(m, 2 * k)?;
-                blas::gemm_nt(&pm, &qm, &mut a, -1.0);
-                a.data
-            }
-
-            // ---- BDC vector ops ----
-            "bdc_row" => {
-                let n = p(op, "n")?;
-                let m = arg(op, args, 0)?.f64s()?;
-                let g = arg(op, args, 1)?.scalar()?;
-                ensure!(g < n && m.len() == n * n, "bdc_row: row {g} of {n}");
-                m[g * n..(g + 1) * n].to_vec()
-            }
-            "bdc_rots" => {
-                let (n, rmax) = (p(op, "n")?, p(op, "rmax")?);
-                let mut m = arg(op, args, 0)?.f64s()?.to_vec();
-                let rots = arg(op, args, 1)?.f64s()?;
-                let nrot = arg(op, args, 2)?.scalar()?;
-                ensure!(m.len() == n * n, "bdc_rots: matrix size");
-                ensure!(rots.len() == rmax * 4, "bdc_rots: table size");
-                rots_apply(&mut m, n, rots, nrot.min(rmax))?;
-                m
-            }
-            "bdc_permute_cols" => {
-                let n = p(op, "n")?;
-                let m = arg(op, args, 0)?.f64s()?;
-                let perm = arg(op, args, 1)?.i64s()?;
-                ensure!(m.len() == n * n && perm.len() == n, "bdc_permute_cols: sizes");
-                let mut out = vec![0.0; n * n];
-                permute_into(&mut out, m, n, perm)?;
-                out
-            }
-            "bdc_secular" | "bdc_secular_xla" => {
-                let nb = p(op, "nb")?;
-                let d = arg(op, args, 0)?.f64s()?;
-                let dbase = arg(op, args, 1)?.f64s()?;
-                let tau = arg(op, args, 2)?.f64s()?;
-                let signs = arg(op, args, 3)?.f64s()?;
-                let k = arg(op, args, 4)?.scalar()?;
-                ensure!(
-                    d.len() == nb && dbase.len() == nb && tau.len() == nb && signs.len() == nb,
-                    "bdc_secular: vector lengths"
-                );
-                ensure!(k >= 1 && k <= nb, "bdc_secular: live count {k} of {nb}");
-                secular_fused(nb, d, dbase, tau, signs, k)
-            }
-            "bdc_secular_u" => {
-                let nb = p(op, "nb")?;
-                let packed = arg(op, args, 0)?.f64s()?;
-                ensure!(packed.len() == nb + 2 * nb * nb, "bdc_secular_u: packed size");
-                packed[nb..nb + nb * nb].to_vec()
-            }
-            "bdc_secular_v" => {
-                let nb = p(op, "nb")?;
-                let packed = arg(op, args, 0)?.f64s()?;
-                ensure!(packed.len() == nb + 2 * nb * nb, "bdc_secular_v: packed size");
-                packed[nb + nb * nb..].to_vec()
-            }
-            "bdc_block_gemm" => {
-                let (n, kb) = (p(op, "n")?, p(op, "kb")?);
-                ensure!(kb <= n, "bdc_block_gemm: window {kb} > n {n}");
-                let mut m = arg(op, args, 0)?.f64s()?.to_vec();
-                let s = arg(op, args, 1)?.f64s()?;
-                let woff = arg(op, args, 2)?.scalar()?;
-                let loc = arg(op, args, 3)?.scalar()?;
-                let len = arg(op, args, 4)?.scalar()?;
-                ensure!(m.len() == n * n && s.len() == kb * kb, "bdc_block_gemm: sizes");
-                ensure!(woff + kb <= n && loc + len <= kb, "bdc_block_gemm: window");
-                block_gemm_apply(&mut m, n, s, kb, woff, loc, len);
-                m
-            }
-            "set_block" => {
-                let (n, bs) = (p(op, "n")?, p(op, "bs")?);
-                ensure!(bs <= n, "set_block: tile {bs} > n {n}");
-                let mut m = arg(op, args, 0)?.f64s()?.to_vec();
-                let blk = arg(op, args, 1)?.f64s()?;
-                let woff = arg(op, args, 2)?.scalar()?;
-                let loc = arg(op, args, 3)?.scalar()?;
-                let len = arg(op, args, 4)?.scalar()?;
-                ensure!(m.len() == n * n && blk.len() == bs * bs, "set_block: sizes");
-                ensure!(woff + bs <= n && loc + len <= bs, "set_block: window");
-                set_block_apply(&mut m, n, blk, bs, woff, loc, len);
-                m
-            }
-
-            // ---- k-wide BDC vector ops (fused same-shape trees). One op
-            // processes all k lanes of a packed [k, n, n] U/V stack; the
-            // inner per-lane loops are the SAME helpers the scalar ops
-            // use, so a fused lane is bit-identical to a per-solve run.
-            // Per-lane counts (rotations, live prefixes) arrive as i64
-            // vectors and mask each lane's work to its own state. ----
-            "eye_k" => {
-                let (k, n) = (p(op, "k")?, p(op, "n")?);
-                // square [k, n, n] by default (the fused tree); the fused
-                // TS front end keys an explicit m for [k, m, n] stacks
-                let m = p(op, "m").unwrap_or(n);
-                ensure!(k >= 1, "eye_k: lanes");
-                let mut out = vec![0.0; k * m * n];
-                for l in 0..k {
-                    for i in 0..m.min(n) {
-                        out[l * m * n + i * n + i] = 1.0;
-                    }
-                }
-                out
-            }
-            "lane_slice" => {
-                let (k, n) = (p(op, "k")?, p(op, "n")?);
-                let m = arg(op, args, 0)?.f64s()?;
-                let lane = arg(op, args, 1)?.scalar()?;
-                ensure!(m.len() == k * n * n, "lane_slice: stack size");
-                ensure!(lane < k, "lane_slice: lane {lane} of {k}");
-                m[lane * n * n..(lane + 1) * n * n].to_vec()
-            }
-            "set_block_k" => {
-                let (k, n, bs) = (p(op, "k")?, p(op, "n")?, p(op, "bs")?);
-                ensure!(bs <= n, "set_block_k: tile {bs} > n {n}");
-                let mut m = arg(op, args, 0)?.f64s()?.to_vec();
-                let blk = arg(op, args, 1)?.f64s()?;
-                let woff = arg(op, args, 2)?.scalar()?;
-                let loc = arg(op, args, 3)?.scalar()?;
-                let len = arg(op, args, 4)?.scalar()?;
-                ensure!(m.len() == k * n * n && blk.len() == k * bs * bs, "set_block_k: sizes");
-                ensure!(woff + bs <= n && loc + len <= bs, "set_block_k: window");
-                for l in 0..k {
-                    set_block_apply(
-                        &mut m[l * n * n..(l + 1) * n * n],
-                        n,
-                        &blk[l * bs * bs..(l + 1) * bs * bs],
-                        bs,
-                        woff,
-                        loc,
-                        len,
-                    );
-                }
-                m
-            }
-            "bdc_row_k" => {
-                let (k, n) = (p(op, "k")?, p(op, "n")?);
-                let m = arg(op, args, 0)?.f64s()?;
-                let g = arg(op, args, 1)?.scalar()?;
-                ensure!(g < n && m.len() == k * n * n, "bdc_row_k: row {g} of {n}");
-                let mut out = Vec::with_capacity(k * n);
-                for l in 0..k {
-                    out.extend_from_slice(&m[l * n * n + g * n..l * n * n + (g + 1) * n]);
-                }
-                out
-            }
-            "rot_cols_k" => {
-                let (k, n, rmax) = (p(op, "k")?, p(op, "n")?, p(op, "rmax")?);
-                let mut m = arg(op, args, 0)?.f64s()?.to_vec();
-                let rots = arg(op, args, 1)?.f64s()?;
-                let counts = arg(op, args, 2)?.i64s()?;
-                ensure!(m.len() == k * n * n, "rot_cols_k: stack size");
-                ensure!(rots.len() == k * rmax * 4, "rot_cols_k: table size");
-                ensure!(counts.len() == k, "rot_cols_k: counts size");
-                for l in 0..k {
-                    ensure!(counts[l] >= 0, "rot_cols_k: negative count");
-                    let nrot = (counts[l] as usize).min(rmax);
-                    rots_apply(
-                        &mut m[l * n * n..(l + 1) * n * n],
-                        n,
-                        &rots[l * rmax * 4..(l + 1) * rmax * 4],
-                        nrot,
-                    )?;
-                }
-                m
-            }
-            "permute_k" => {
-                let (k, n) = (p(op, "k")?, p(op, "n")?);
-                let m = arg(op, args, 0)?.f64s()?;
-                let perms = arg(op, args, 1)?.i64s()?;
-                ensure!(m.len() == k * n * n && perms.len() == k * n, "permute_k: sizes");
-                let mut out = vec![0.0; k * n * n];
-                for l in 0..k {
-                    permute_into(
-                        &mut out[l * n * n..(l + 1) * n * n],
-                        &m[l * n * n..(l + 1) * n * n],
-                        n,
-                        &perms[l * n..(l + 1) * n],
-                    )?;
-                }
-                out
-            }
-            "secular_k" => {
-                let (k, nb) = (p(op, "k")?, p(op, "nb")?);
-                let d = arg(op, args, 0)?.f64s()?;
-                let dbase = arg(op, args, 1)?.f64s()?;
-                let tau = arg(op, args, 2)?.f64s()?;
-                let signs = arg(op, args, 3)?.f64s()?;
-                let ks = arg(op, args, 4)?.i64s()?;
-                ensure!(
-                    d.len() == k * nb
-                        && dbase.len() == k * nb
-                        && tau.len() == k * nb
-                        && signs.len() == k * nb
-                        && ks.len() == k,
-                    "secular_k: vector lengths"
-                );
-                let stride = nb + 2 * nb * nb;
-                let mut out = Vec::with_capacity(k * stride);
-                for l in 0..k {
-                    let kk = ks[l];
-                    ensure!(kk >= 1 && (kk as usize) <= nb, "secular_k: live count {kk} of {nb}");
-                    out.extend_from_slice(&secular_fused(
-                        nb,
-                        &d[l * nb..(l + 1) * nb],
-                        &dbase[l * nb..(l + 1) * nb],
-                        &tau[l * nb..(l + 1) * nb],
-                        &signs[l * nb..(l + 1) * nb],
-                        kk as usize,
-                    ));
-                }
-                out
-            }
-            "secular_u_k" | "secular_v_k" => {
-                let (k, nb) = (p(op, "k")?, p(op, "nb")?);
-                let packed = arg(op, args, 0)?.f64s()?;
-                let stride = nb + 2 * nb * nb;
-                ensure!(packed.len() == k * stride, "{}: packed size", op.name);
-                let off = if op.name == "secular_u_k" { nb } else { nb + nb * nb };
-                let mut out = Vec::with_capacity(k * nb * nb);
-                for l in 0..k {
-                    out.extend_from_slice(&packed[l * stride + off..l * stride + off + nb * nb]);
-                }
-                out
-            }
-            "merge_gemm_k" => {
-                let (k, n, kb) = (p(op, "k")?, p(op, "n")?, p(op, "kb")?);
-                ensure!(kb <= n, "merge_gemm_k: window {kb} > n {n}");
-                let mut m = arg(op, args, 0)?.f64s()?.to_vec();
-                let s = arg(op, args, 1)?.f64s()?;
-                let woff = arg(op, args, 2)?.scalar()?;
-                let loc = arg(op, args, 3)?.scalar()?;
-                let lens = arg(op, args, 4)?.i64s()?;
-                ensure!(m.len() == k * n * n && s.len() == k * kb * kb, "merge_gemm_k: sizes");
-                ensure!(lens.len() == k, "merge_gemm_k: lens size");
-                ensure!(woff + kb <= n, "merge_gemm_k: window");
-                for l in 0..k {
-                    ensure!(lens[l] >= 0, "merge_gemm_k: negative len");
-                    let len = lens[l] as usize;
-                    ensure!(loc + len <= kb, "merge_gemm_k: lane window");
-                    block_gemm_apply(
-                        &mut m[l * n * n..(l + 1) * n * n],
-                        n,
-                        &s[l * kb * kb..(l + 1) * kb * kb],
-                        kb,
-                        woff,
-                        loc,
-                        len,
-                    );
-                }
-                m
-            }
-
-            // ---- k-wide back-transforms (fused buckets, post-BDC). The
-            // shared tree leaves U/V packed as [k, n, n]; these ops keep
-            // the whole back-transform phase one op stream per panel
-            // step instead of per lane. Each lane applies a panel of its
-            // OWN factorization (the factors are packed by `stack_k`);
-            // the inner per-lane loops are the SAME helpers the scalar
-            // ormqr_step / ormlq_step / gemm arms use, so a fused lane
-            // stays bit-identical to a per-solve run. ----
-            "stack_k" => {
-                let (k, len) = (p(op, "k")?, p(op, "len")?);
-                ensure!(k >= 1 && args.len() == k, "stack_k: {} args for {k} lanes", args.len());
-                let mut out = Vec::with_capacity(k * len);
-                for (l, a) in args.iter().enumerate() {
-                    let d = a.f64s()?;
-                    ensure!(d.len() == len, "stack_k: lane {l} has {} of {len} elements", d.len());
-                    out.extend_from_slice(d);
-                }
-                out
-            }
-            "ormqr_step_k" | "ormlq_step_k" => {
-                let (k, n, b) = (p(op, "k")?, p(op, "n")?, p(op, "b")?);
-                let cs = arg(op, args, 0)?.f64s()?;
-                let afacs = arg(op, args, 1)?.f64s()?;
-                let tau = arg(op, args, 2)?.f64s()?;
-                let t = arg(op, args, 3)?.scalar()?;
-                ensure!(
-                    cs.len() == k * n * n && afacs.len() == k * n * n,
-                    "{}: stack sizes",
-                    op.name
-                );
-                ensure!(tau.len() == k * b, "{}: tau length", op.name);
-                let mut out = Vec::with_capacity(k * n * n);
-                for l in 0..k {
-                    let mut c = Matrix::from_rows(n, n, cs[l * n * n..(l + 1) * n * n].to_vec());
-                    let afac = Matrix::from_rows(n, n, afacs[l * n * n..(l + 1) * n * n].to_vec());
-                    let taul = &tau[l * b..(l + 1) * b];
-                    if op.name == "ormqr_step_k" {
-                        ormqr_panel_apply(&mut c, &afac, taul, t, b, n);
-                    } else {
-                        ormlq_panel_apply(&mut c, &afac, taul, t, b, n, n);
-                    }
-                    out.extend_from_slice(&c.data);
-                }
-                out
-            }
-            "q_gemm_k" => {
-                let (k, m, n) = (p(op, "k")?, p(op, "m")?, p(op, "n")?);
-                let qs = arg(op, args, 0)?.f64s()?;
-                let us = arg(op, args, 1)?.f64s()?;
-                ensure!(qs.len() == k * m * n && us.len() == k * n * n, "q_gemm_k: stack sizes");
-                let mut out = Vec::with_capacity(k * m * n);
-                for l in 0..k {
-                    let q = Matrix::from_rows(m, n, qs[l * m * n..(l + 1) * m * n].to_vec());
-                    let u = Matrix::from_rows(n, n, us[l * n * n..(l + 1) * n * n].to_vec());
-                    out.extend_from_slice(&blas::matmul(&q, &u).data);
-                }
-                out
-            }
-
-            // ---- k-wide front-end panel ops (fused buckets, pre-BDC).
-            // One op runs a gebrd/QR panel step for EVERY lane of a
-            // packed [k, m, n] stack, making the front end's op count
-            // lane-count-independent like the tree and back-transforms
-            // already are. The inner per-lane loops are the SAME helpers
-            // the scalar labrd / gebrd_update / geqrf_step / orgqr_step
-            // arms use, so a fused lane stays bit-identical to a
-            // per-solve run. ----
-            "labrd_k" => {
-                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let t = arg(op, args, 1)?.scalar()?;
-                ensure!(t + b <= n, "labrd_k: panel [{t}, {}) exceeds n={n}", t + b);
-                let stack = arg(op, args, 0)?.f64s()?;
-                ensure!(stack.len() == k * m * n, "labrd_k: stack size");
-                let wslen = 4 * b + m * n + (m + n) * 2 * b;
-                let mut out = Vec::with_capacity(k * wslen);
-                for l in 0..k {
-                    let a = Matrix::from_rows(m, n, stack[l * m * n..(l + 1) * m * n].to_vec());
-                    out.extend_from_slice(&labrd_ws(a, t, b));
-                }
-                out
-            }
-            "gebrd_update_k" | "gebrd_update_xla_k" => {
-                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let t = arg(op, args, 1)?.scalar()?;
-                let ws = arg(op, args, 0)?.f64s()?;
-                let wslen = 4 * b + m * n + (m + n) * 2 * b;
-                ensure!(ws.len() == k * wslen, "{}: stack size", op.name);
-                let mut out = Vec::with_capacity(k * m * n);
-                for l in 0..k {
-                    let (mut a, pm, qm) =
-                        unpack_labrd_ws(op, &ws[l * wslen..(l + 1) * wslen], m, n, b)?;
-                    gebrd_cpu::trailing_update(&mut a, &pm, &qm, t, b);
-                    out.extend_from_slice(&a.data);
-                }
-                out
-            }
-            "extract_a_k" => {
-                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let ws = arg(op, args, 0)?.f64s()?;
-                let wslen = 4 * b + m * n + (m + n) * 2 * b;
-                ensure!(ws.len() == k * wslen, "extract_a_k: stack size");
-                let off = 4 * b;
-                let mut out = Vec::with_capacity(k * m * n);
-                for l in 0..k {
-                    out.extend_from_slice(&ws[l * wslen + off..l * wslen + off + m * n]);
-                }
-                out
-            }
-            "ws_head_k" => {
-                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let ws = arg(op, args, 0)?.f64s()?;
-                let wslen = 4 * b + m * n + (m + n) * 2 * b;
-                ensure!(ws.len() == k * wslen, "ws_head_k: stack size");
-                let mut out = Vec::with_capacity(k * 4 * b);
-                for l in 0..k {
-                    out.extend_from_slice(&ws[l * wslen..l * wslen + 4 * b]);
-                }
-                out
-            }
-            "geqrf_step_k" => {
-                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let t = arg(op, args, 1)?.scalar()?;
-                ensure!(t + b <= n, "geqrf_step_k: panel [{t}, {}) exceeds n={n}", t + b);
-                let stack = arg(op, args, 0)?.f64s()?;
-                ensure!(stack.len() == k * m * n, "geqrf_step_k: stack size");
-                let mut out = Vec::with_capacity(k * (b + m * n));
-                for l in 0..k {
-                    let a = Matrix::from_rows(m, n, stack[l * m * n..(l + 1) * m * n].to_vec());
-                    out.extend_from_slice(&geqrf_step_ws(a, t, b));
-                }
-                out
-            }
-            "qr_head_k" => {
-                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let ws = arg(op, args, 0)?.f64s()?;
-                let wslen = b + m * n;
-                ensure!(ws.len() == k * wslen, "qr_head_k: stack size");
-                let mut out = Vec::with_capacity(k * b);
-                for l in 0..k {
-                    out.extend_from_slice(&ws[l * wslen..l * wslen + b]);
-                }
-                out
-            }
-            "geqrf_extract_a_k" => {
-                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let ws = arg(op, args, 0)?.f64s()?;
-                let wslen = b + m * n;
-                ensure!(ws.len() == k * wslen, "geqrf_extract_a_k: stack size");
-                let mut out = Vec::with_capacity(k * m * n);
-                for l in 0..k {
-                    out.extend_from_slice(&ws[l * wslen + b..(l + 1) * wslen]);
-                }
-                out
-            }
-            "orgqr_step_k" => {
-                let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
-                let qs = arg(op, args, 0)?.f64s()?;
-                let afacs = arg(op, args, 1)?.f64s()?;
-                let tau = arg(op, args, 2)?.f64s()?;
-                let t = arg(op, args, 3)?.scalar()?;
-                ensure!(
-                    qs.len() == k * m * n && afacs.len() == k * m * n,
-                    "orgqr_step_k: stack sizes"
-                );
-                ensure!(tau.len() == k * b, "orgqr_step_k: tau length");
-                let mut out = Vec::with_capacity(k * m * n);
-                for l in 0..k {
-                    let mut q = Matrix::from_rows(m, n, qs[l * m * n..(l + 1) * m * n].to_vec());
-                    let afac =
-                        Matrix::from_rows(m, n, afacs[l * m * n..(l + 1) * m * n].to_vec());
-                    ormqr_panel_apply(&mut q, &afac, &tau[l * b..(l + 1) * b], t, b, n);
-                    out.extend_from_slice(&q.data);
-                }
-                out
-            }
-
-            other => bail!("host backend: unknown op {other} ({op})"),
-        };
-        Ok(HostBuf::F64(out))
+        match op.dtype {
+            DType::F64 => exec_t::<f64>(op, args).map(HostBuf::F64),
+            DType::F32 => exec_t::<f32>(op, args).map(HostBuf::F32),
+            DType::I64 => bail!("host backend: op {op}: no i64-dtype ops in the vocabulary"),
+        }
     }
+}
+
+/// The interpreter body at element type `S` — one generic copy of every
+/// float-op arm. The scalar/k-wide pairs share the same inner helpers,
+/// so fused lanes stay bit-identical to per-solve runs *per dtype*.
+#[allow(clippy::too_many_lines)]
+fn exec_t<S: Scalar>(op: &OpKey, args: &[&HostBuf]) -> Result<Vec<S>> {
+    let out = match op.name.as_str() {
+        // ---- initialisers (model.op_eye / op_zeros) ----
+        "eye" => {
+            let (m, n) = (p(op, "m")?, p(op, "n")?);
+            Matrix::<S>::eye(m, n).data
+        }
+        "zeros" => {
+            let n = p(op, "n")?;
+            vec![S::ZERO; n * n]
+        }
+
+        // ---- dtype cast (model.op_cast): output dtype is the op key's
+        // dtype, input may be any float buffer. The mixed-precision
+        // pipeline's only conversion point on device data. ----
+        "cast" => {
+            let len = p(op, "len")?;
+            let out: Vec<S> = match arg(op, args, 0)? {
+                HostBuf::F32(v) => v.iter().map(|&x| S::from_f64(f64::from(x))).collect(),
+                HostBuf::F64(v) => v.iter().map(|&x| S::from_f64(x)).collect(),
+                HostBuf::I64(_) => bail!("op {op}: cast source must be a float buffer"),
+            };
+            ensure!(out.len() == len, "op {op}: cast length {} != {len}", out.len());
+            out
+        }
+
+        // ---- plain gemm (model.op_gemm) ----
+        "gemm" => {
+            let (m, k, n) = (p(op, "m")?, p(op, "k")?, p(op, "n")?);
+            let a = arg(op, args, 0)?.matrix::<S>(m, k)?;
+            let b = arg(op, args, 1)?.matrix::<S>(k, n)?;
+            blas::matmul(&a, &b).data
+        }
+
+        // ---- gebrd: panel + merged trailing update (Algorithm 1) ----
+        "labrd" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let t = arg(op, args, 1)?.scalar()?;
+            ensure!(t + b <= n, "labrd: panel [{t}, {}) exceeds n={n}", t + b);
+            let a = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            labrd_ws(a, t, b)
+        }
+        // merged (gemm x1) and non-merged (gemm x2) trailing updates
+        // compute the same A - P Q^T on the trailing block
+        // (model.op_gebrd_update / op_gebrd_update2_ws)
+        "gebrd_update" | "gebrd_update_xla" | "gebrd_update2_ws" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let t = arg(op, args, 1)?.scalar()?;
+            let (mut a, pm, qm) =
+                unpack_labrd_ws(op, arg(op, args, 0)?.floats::<S>()?, m, n, b)?;
+            gebrd_cpu::trailing_update(&mut a, &pm, &qm, t, b);
+            a.data
+        }
+        // non-merged update from uploaded V/Y/X/U (model.op_gebrd_update2)
+        "gebrd_update2" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let mut a = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            let v = arg(op, args, 1)?.matrix::<S>(m, b)?;
+            let y = arg(op, args, 2)?.matrix::<S>(n, b)?;
+            let x = arg(op, args, 3)?.matrix::<S>(m, b)?;
+            let u = arg(op, args, 4)?.matrix::<S>(n, b)?;
+            let t = arg(op, args, 5)?.scalar()?;
+            let s = t + b;
+            for r in s..m {
+                for c in s..n {
+                    let mut acc = S::ZERO;
+                    for k in 0..b {
+                        acc += v.at(r, k) * y.at(c, k) + x.at(r, k) * u.at(c, k);
+                    }
+                    a[(r, c)] -= acc;
+                }
+            }
+            a.data
+        }
+        "extract_a" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let ws = arg(op, args, 0)?.floats::<S>()?;
+            let off = 4 * b;
+            ensure!(ws.len() >= off + m * n, "extract_a: short workspace");
+            ws[off..off + m * n].to_vec()
+        }
+        "ws_head" => {
+            let b = p(op, "b")?;
+            let ws = arg(op, args, 0)?.floats::<S>()?;
+            ensure!(ws.len() >= 4 * b, "ws_head: short workspace");
+            ws[..4 * b].to_vec()
+        }
+
+        // ---- QR: modified-CWY steps (eqs. 24-32). The classic-CWY
+        // baselines compute the same product, so they share arms. ----
+        "geqrf_step" | "geqrf_step_classic" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let t = arg(op, args, 1)?.scalar()?;
+            ensure!(t + b <= n, "geqrf_step: panel [{t}, {}) exceeds n={n}", t + b);
+            let a = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            geqrf_step_ws(a, t, b)
+        }
+        "qr_head" => {
+            let b = p(op, "b")?;
+            let ws = arg(op, args, 0)?.floats::<S>()?;
+            ensure!(ws.len() >= b, "qr_head: short workspace");
+            ws[..b].to_vec()
+        }
+        "geqrf_extract_a" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let ws = arg(op, args, 0)?.floats::<S>()?;
+            ensure!(ws.len() >= b + m * n, "geqrf_extract_a: short workspace");
+            ws[b..b + m * n].to_vec()
+        }
+        "orgqr_step" | "orgqr_step_classic" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let mut q = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            let afac = arg(op, args, 1)?.matrix::<S>(m, n)?;
+            let tau = arg(op, args, 2)?.floats::<S>()?;
+            let t = arg(op, args, 3)?.scalar()?;
+            ensure!(tau.len() == b, "orgqr_step: tau length");
+            // orgqr's panel product is the same (I - Y T^{-1} Y^T) C
+            // as ormqr's, so the arms share the helper
+            ormqr_panel_apply(&mut q, &afac, tau, t, b, n);
+            q.data
+        }
+        "ormqr_step" | "ormqr_step_classic" => {
+            let (m, n, k, b) = (p(op, "m")?, p(op, "n")?, p(op, "k")?, p(op, "b")?);
+            let mut c = arg(op, args, 0)?.matrix::<S>(m, k)?;
+            let afac = arg(op, args, 1)?.matrix::<S>(m, n)?;
+            let tau = arg(op, args, 2)?.floats::<S>()?;
+            let t = arg(op, args, 3)?.scalar()?;
+            ensure!(tau.len() == b, "ormqr_step: tau length");
+            ormqr_panel_apply(&mut c, &afac, tau, t, b, k);
+            c.data
+        }
+        "ormlq_step" | "ormlq_step_classic" => {
+            let (m, n, k, b) = (p(op, "m")?, p(op, "n")?, p(op, "k")?, p(op, "b")?);
+            let mut c = arg(op, args, 0)?.matrix::<S>(n, k)?;
+            let afac = arg(op, args, 1)?.matrix::<S>(m, n)?;
+            let tau = arg(op, args, 2)?.floats::<S>()?;
+            let t = arg(op, args, 3)?.scalar()?;
+            ensure!(tau.len() == b, "ormlq_step: tau length");
+            ormlq_panel_apply(&mut c, &afac, tau, t, b, n, k);
+            c.data
+        }
+
+        // ---- MAGMA-sim writebacks and uploaded-panel larfb ----
+        "set_cols" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let mut a = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            let strip = arg(op, args, 1)?.matrix::<S>(m, b)?;
+            let t = arg(op, args, 2)?.scalar()?;
+            ensure!(t + b <= n, "set_cols: strip out of range");
+            for i in 0..m {
+                for j in 0..b {
+                    a[(i, t + j)] = strip.at(i, j);
+                }
+            }
+            a.data
+        }
+        "set_rows" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let mut a = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            let strip = arg(op, args, 1)?.matrix::<S>(b, n)?;
+            let t = arg(op, args, 2)?.scalar()?;
+            ensure!(t + b <= m, "set_rows: strip out of range");
+            for i in 0..b {
+                for j in 0..n {
+                    a[(t + i, j)] = strip.at(i, j);
+                }
+            }
+            a.data
+        }
+        "larfb_up" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let mut a = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            let y = arg(op, args, 1)?.matrix::<S>(m, b)?;
+            let ti = arg(op, args, 2)?.matrix::<S>(b, b)?;
+            let t = arg(op, args, 3)?.scalar()?;
+            if t + b < n {
+                qr::larfb(&mut a, &y, &ti, t + b, n, true);
+            }
+            a.data
+        }
+        "larfb_full" => {
+            let (m, n, b) = (p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let mut c = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            let y = arg(op, args, 1)?.matrix::<S>(m, b)?;
+            let ti = arg(op, args, 2)?.matrix::<S>(b, b)?;
+            qr::larfb(&mut c, &y, &ti, 0, n, false);
+            c.data
+        }
+
+        // ---- gemv micro-ops ----
+        "gemv_t" | "gemv_tall_t" => {
+            let m = p(op, "m")?;
+            let n = p(op, "n").or_else(|_| p(op, "k"))?;
+            let a = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            let x = arg(op, args, 1)?.floats::<S>()?;
+            ensure!(x.len() == m, "{}: vector length {} != m {m}", op.name, x.len());
+            let mut y = vec![S::ZERO; n];
+            blas::gemv_t(&a, x, &mut y, S::ONE);
+            y
+        }
+        "gemv_n" | "gemv_tall_n" => {
+            let m = p(op, "m")?;
+            let n = p(op, "n").or_else(|_| p(op, "k"))?;
+            let a = arg(op, args, 0)?.matrix::<S>(m, n)?;
+            let x = arg(op, args, 1)?.floats::<S>()?;
+            ensure!(x.len() == n, "{}: vector length {} != n {n}", op.name, x.len());
+            let mut y = vec![S::ZERO; m];
+            blas::gemv(&a, x, &mut y, S::ONE);
+            y
+        }
+        "gemv_tall_n_acc" => {
+            let (m, k) = (p(op, "m")?, p(op, "k")?);
+            let a = arg(op, args, 0)?.matrix::<S>(m, k)?;
+            let w = arg(op, args, 1)?.floats::<S>()?;
+            ensure!(w.len() == k, "gemv_tall_n_acc: vector length {} != k {k}", w.len());
+            let mut y = arg(op, args, 2)?.floats::<S>()?.to_vec();
+            ensure!(y.len() == m, "gemv_tall_n_acc: acc length");
+            blas::gemv(&a, w, &mut y, S::ONE);
+            y
+        }
+
+        // ---- Fig. 5 micro-ops (merged vs non-merged BLAS) ----
+        "rank_update" => {
+            let (m, k) = (p(op, "m")?, p(op, "k")?);
+            let mut a = arg(op, args, 0)?.matrix::<S>(m, m)?;
+            let v = arg(op, args, 1)?.matrix::<S>(m, k)?;
+            let y = arg(op, args, 2)?.matrix::<S>(m, k)?;
+            blas::gemm_nt(&v, &y, &mut a, -S::ONE);
+            a.data
+        }
+        "fig5_gemv4" => {
+            let (m, k) = (p(op, "m")?, p(op, "k")?);
+            let v = arg(op, args, 0)?.matrix::<S>(m, k)?;
+            let y = arg(op, args, 1)?.matrix::<S>(m, k)?;
+            let x = arg(op, args, 2)?.matrix::<S>(m, k)?;
+            let u4 = arg(op, args, 3)?.matrix::<S>(m, k)?;
+            let uvec = arg(op, args, 4)?.floats::<S>()?;
+            ensure!(uvec.len() == m, "fig5_gemv4: vector length {} != m {m}", uvec.len());
+            let mut w1 = vec![S::ZERO; k];
+            blas::gemv_t(&y, uvec, &mut w1, S::ONE);
+            let mut w2 = vec![S::ZERO; k];
+            blas::gemv_t(&u4, uvec, &mut w2, S::ONE);
+            let mut out = vec![S::ZERO; m];
+            blas::gemv(&v, &w1, &mut out, S::ONE);
+            blas::gemv(&x, &w2, &mut out, S::ONE);
+            out
+        }
+        "fig5_gemv2" => {
+            let (m, k) = (p(op, "m")?, p(op, "k")?);
+            let pm = arg(op, args, 0)?.matrix::<S>(m, 2 * k)?;
+            let qm = arg(op, args, 1)?.matrix::<S>(m, 2 * k)?;
+            let uvec = arg(op, args, 2)?.floats::<S>()?;
+            ensure!(uvec.len() == m, "fig5_gemv2: vector length {} != m {m}", uvec.len());
+            let mut w = vec![S::ZERO; 2 * k];
+            blas::gemv_t(&qm, uvec, &mut w, S::ONE);
+            let mut out = vec![S::ZERO; m];
+            blas::gemv(&pm, &w, &mut out, S::ONE);
+            out
+        }
+        "fig5_gemm2" => {
+            let (m, k) = (p(op, "m")?, p(op, "k")?);
+            let mut a = arg(op, args, 0)?.matrix::<S>(m, m)?;
+            let v = arg(op, args, 1)?.matrix::<S>(m, k)?;
+            let y = arg(op, args, 2)?.matrix::<S>(m, k)?;
+            let x = arg(op, args, 3)?.matrix::<S>(m, k)?;
+            let u = arg(op, args, 4)?.matrix::<S>(m, k)?;
+            blas::gemm_nt(&v, &y, &mut a, -S::ONE);
+            blas::gemm_nt(&x, &u, &mut a, -S::ONE);
+            a.data
+        }
+        "fig5_gemm1" | "fig5_gemm1_xla" => {
+            let (m, k) = (p(op, "m")?, p(op, "k")?);
+            let mut a = arg(op, args, 0)?.matrix::<S>(m, m)?;
+            let pm = arg(op, args, 1)?.matrix::<S>(m, 2 * k)?;
+            let qm = arg(op, args, 2)?.matrix::<S>(m, 2 * k)?;
+            blas::gemm_nt(&pm, &qm, &mut a, -S::ONE);
+            a.data
+        }
+
+        // ---- BDC vector ops ----
+        "bdc_row" => {
+            let n = p(op, "n")?;
+            let m = arg(op, args, 0)?.floats::<S>()?;
+            let g = arg(op, args, 1)?.scalar()?;
+            ensure!(g < n && m.len() == n * n, "bdc_row: row {g} of {n}");
+            m[g * n..(g + 1) * n].to_vec()
+        }
+        "bdc_rots" => {
+            let (n, rmax) = (p(op, "n")?, p(op, "rmax")?);
+            let mut m = arg(op, args, 0)?.floats::<S>()?.to_vec();
+            let rots = arg(op, args, 1)?.floats::<S>()?;
+            let nrot = arg(op, args, 2)?.scalar()?;
+            ensure!(m.len() == n * n, "bdc_rots: matrix size");
+            ensure!(rots.len() == rmax * 4, "bdc_rots: table size");
+            rots_apply(&mut m, n, rots, nrot.min(rmax))?;
+            m
+        }
+        "bdc_permute_cols" => {
+            let n = p(op, "n")?;
+            let m = arg(op, args, 0)?.floats::<S>()?;
+            let perm = arg(op, args, 1)?.i64s()?;
+            ensure!(m.len() == n * n && perm.len() == n, "bdc_permute_cols: sizes");
+            let mut out = vec![S::ZERO; n * n];
+            permute_into(&mut out, m, n, perm)?;
+            out
+        }
+        "bdc_secular" | "bdc_secular_xla" => {
+            let nb = p(op, "nb")?;
+            let d = arg(op, args, 0)?.floats::<S>()?;
+            let dbase = arg(op, args, 1)?.floats::<S>()?;
+            let tau = arg(op, args, 2)?.floats::<S>()?;
+            let signs = arg(op, args, 3)?.floats::<S>()?;
+            let k = arg(op, args, 4)?.scalar()?;
+            ensure!(
+                d.len() == nb && dbase.len() == nb && tau.len() == nb && signs.len() == nb,
+                "bdc_secular: vector lengths"
+            );
+            ensure!(k >= 1 && k <= nb, "bdc_secular: live count {k} of {nb}");
+            secular_fused(nb, d, dbase, tau, signs, k)
+        }
+        "bdc_secular_u" => {
+            let nb = p(op, "nb")?;
+            let packed = arg(op, args, 0)?.floats::<S>()?;
+            ensure!(packed.len() == nb + 2 * nb * nb, "bdc_secular_u: packed size");
+            packed[nb..nb + nb * nb].to_vec()
+        }
+        "bdc_secular_v" => {
+            let nb = p(op, "nb")?;
+            let packed = arg(op, args, 0)?.floats::<S>()?;
+            ensure!(packed.len() == nb + 2 * nb * nb, "bdc_secular_v: packed size");
+            packed[nb + nb * nb..].to_vec()
+        }
+        "bdc_block_gemm" => {
+            let (n, kb) = (p(op, "n")?, p(op, "kb")?);
+            ensure!(kb <= n, "bdc_block_gemm: window {kb} > n {n}");
+            let mut m = arg(op, args, 0)?.floats::<S>()?.to_vec();
+            let s = arg(op, args, 1)?.floats::<S>()?;
+            let woff = arg(op, args, 2)?.scalar()?;
+            let loc = arg(op, args, 3)?.scalar()?;
+            let len = arg(op, args, 4)?.scalar()?;
+            ensure!(m.len() == n * n && s.len() == kb * kb, "bdc_block_gemm: sizes");
+            ensure!(woff + kb <= n && loc + len <= kb, "bdc_block_gemm: window");
+            block_gemm_apply(&mut m, n, s, kb, woff, loc, len);
+            m
+        }
+        "set_block" => {
+            let (n, bs) = (p(op, "n")?, p(op, "bs")?);
+            ensure!(bs <= n, "set_block: tile {bs} > n {n}");
+            let mut m = arg(op, args, 0)?.floats::<S>()?.to_vec();
+            let blk = arg(op, args, 1)?.floats::<S>()?;
+            let woff = arg(op, args, 2)?.scalar()?;
+            let loc = arg(op, args, 3)?.scalar()?;
+            let len = arg(op, args, 4)?.scalar()?;
+            ensure!(m.len() == n * n && blk.len() == bs * bs, "set_block: sizes");
+            ensure!(woff + bs <= n && loc + len <= bs, "set_block: window");
+            set_block_apply(&mut m, n, blk, bs, woff, loc, len);
+            m
+        }
+
+        // ---- k-wide BDC vector ops (fused same-shape trees). One op
+        // processes all k lanes of a packed [k, n, n] U/V stack; the
+        // inner per-lane loops are the SAME helpers the scalar ops
+        // use, so a fused lane is bit-identical to a per-solve run.
+        // Per-lane counts (rotations, live prefixes) arrive as i64
+        // vectors and mask each lane's work to its own state. ----
+        "eye_k" => {
+            let (k, n) = (p(op, "k")?, p(op, "n")?);
+            // square [k, n, n] by default (the fused tree); the fused
+            // TS front end keys an explicit m for [k, m, n] stacks
+            let m = p(op, "m").unwrap_or(n);
+            ensure!(k >= 1, "eye_k: lanes");
+            let mut out = vec![S::ZERO; k * m * n];
+            for l in 0..k {
+                for i in 0..m.min(n) {
+                    out[l * m * n + i * n + i] = S::ONE;
+                }
+            }
+            out
+        }
+        "lane_slice" => {
+            let (k, n) = (p(op, "k")?, p(op, "n")?);
+            let m = arg(op, args, 0)?.floats::<S>()?;
+            let lane = arg(op, args, 1)?.scalar()?;
+            ensure!(m.len() == k * n * n, "lane_slice: stack size");
+            ensure!(lane < k, "lane_slice: lane {lane} of {k}");
+            m[lane * n * n..(lane + 1) * n * n].to_vec()
+        }
+        "set_block_k" => {
+            let (k, n, bs) = (p(op, "k")?, p(op, "n")?, p(op, "bs")?);
+            ensure!(bs <= n, "set_block_k: tile {bs} > n {n}");
+            let mut m = arg(op, args, 0)?.floats::<S>()?.to_vec();
+            let blk = arg(op, args, 1)?.floats::<S>()?;
+            let woff = arg(op, args, 2)?.scalar()?;
+            let loc = arg(op, args, 3)?.scalar()?;
+            let len = arg(op, args, 4)?.scalar()?;
+            ensure!(m.len() == k * n * n && blk.len() == k * bs * bs, "set_block_k: sizes");
+            ensure!(woff + bs <= n && loc + len <= bs, "set_block_k: window");
+            for l in 0..k {
+                set_block_apply(
+                    &mut m[l * n * n..(l + 1) * n * n],
+                    n,
+                    &blk[l * bs * bs..(l + 1) * bs * bs],
+                    bs,
+                    woff,
+                    loc,
+                    len,
+                );
+            }
+            m
+        }
+        "bdc_row_k" => {
+            let (k, n) = (p(op, "k")?, p(op, "n")?);
+            let m = arg(op, args, 0)?.floats::<S>()?;
+            let g = arg(op, args, 1)?.scalar()?;
+            ensure!(g < n && m.len() == k * n * n, "bdc_row_k: row {g} of {n}");
+            let mut out = Vec::with_capacity(k * n);
+            for l in 0..k {
+                out.extend_from_slice(&m[l * n * n + g * n..l * n * n + (g + 1) * n]);
+            }
+            out
+        }
+        "rot_cols_k" => {
+            let (k, n, rmax) = (p(op, "k")?, p(op, "n")?, p(op, "rmax")?);
+            let mut m = arg(op, args, 0)?.floats::<S>()?.to_vec();
+            let rots = arg(op, args, 1)?.floats::<S>()?;
+            let counts = arg(op, args, 2)?.i64s()?;
+            ensure!(m.len() == k * n * n, "rot_cols_k: stack size");
+            ensure!(rots.len() == k * rmax * 4, "rot_cols_k: table size");
+            ensure!(counts.len() == k, "rot_cols_k: counts size");
+            for l in 0..k {
+                ensure!(counts[l] >= 0, "rot_cols_k: negative count");
+                let nrot = (counts[l] as usize).min(rmax);
+                rots_apply(
+                    &mut m[l * n * n..(l + 1) * n * n],
+                    n,
+                    &rots[l * rmax * 4..(l + 1) * rmax * 4],
+                    nrot,
+                )?;
+            }
+            m
+        }
+        "permute_k" => {
+            let (k, n) = (p(op, "k")?, p(op, "n")?);
+            let m = arg(op, args, 0)?.floats::<S>()?;
+            let perms = arg(op, args, 1)?.i64s()?;
+            ensure!(m.len() == k * n * n && perms.len() == k * n, "permute_k: sizes");
+            let mut out = vec![S::ZERO; k * n * n];
+            for l in 0..k {
+                permute_into(
+                    &mut out[l * n * n..(l + 1) * n * n],
+                    &m[l * n * n..(l + 1) * n * n],
+                    n,
+                    &perms[l * n..(l + 1) * n],
+                )?;
+            }
+            out
+        }
+        "secular_k" => {
+            let (k, nb) = (p(op, "k")?, p(op, "nb")?);
+            let d = arg(op, args, 0)?.floats::<S>()?;
+            let dbase = arg(op, args, 1)?.floats::<S>()?;
+            let tau = arg(op, args, 2)?.floats::<S>()?;
+            let signs = arg(op, args, 3)?.floats::<S>()?;
+            let ks = arg(op, args, 4)?.i64s()?;
+            ensure!(
+                d.len() == k * nb
+                    && dbase.len() == k * nb
+                    && tau.len() == k * nb
+                    && signs.len() == k * nb
+                    && ks.len() == k,
+                "secular_k: vector lengths"
+            );
+            let stride = nb + 2 * nb * nb;
+            let mut out = Vec::with_capacity(k * stride);
+            for l in 0..k {
+                let kk = ks[l];
+                ensure!(kk >= 1 && (kk as usize) <= nb, "secular_k: live count {kk} of {nb}");
+                out.extend_from_slice(&secular_fused(
+                    nb,
+                    &d[l * nb..(l + 1) * nb],
+                    &dbase[l * nb..(l + 1) * nb],
+                    &tau[l * nb..(l + 1) * nb],
+                    &signs[l * nb..(l + 1) * nb],
+                    kk as usize,
+                ));
+            }
+            out
+        }
+        "secular_u_k" | "secular_v_k" => {
+            let (k, nb) = (p(op, "k")?, p(op, "nb")?);
+            let packed = arg(op, args, 0)?.floats::<S>()?;
+            let stride = nb + 2 * nb * nb;
+            ensure!(packed.len() == k * stride, "{}: packed size", op.name);
+            let off = if op.name == "secular_u_k" { nb } else { nb + nb * nb };
+            let mut out = Vec::with_capacity(k * nb * nb);
+            for l in 0..k {
+                out.extend_from_slice(&packed[l * stride + off..l * stride + off + nb * nb]);
+            }
+            out
+        }
+        "merge_gemm_k" => {
+            let (k, n, kb) = (p(op, "k")?, p(op, "n")?, p(op, "kb")?);
+            ensure!(kb <= n, "merge_gemm_k: window {kb} > n {n}");
+            let mut m = arg(op, args, 0)?.floats::<S>()?.to_vec();
+            let s = arg(op, args, 1)?.floats::<S>()?;
+            let woff = arg(op, args, 2)?.scalar()?;
+            let loc = arg(op, args, 3)?.scalar()?;
+            let lens = arg(op, args, 4)?.i64s()?;
+            ensure!(m.len() == k * n * n && s.len() == k * kb * kb, "merge_gemm_k: sizes");
+            ensure!(lens.len() == k, "merge_gemm_k: lens size");
+            ensure!(woff + kb <= n, "merge_gemm_k: window");
+            for l in 0..k {
+                ensure!(lens[l] >= 0, "merge_gemm_k: negative len");
+                let len = lens[l] as usize;
+                ensure!(loc + len <= kb, "merge_gemm_k: lane window");
+                block_gemm_apply(
+                    &mut m[l * n * n..(l + 1) * n * n],
+                    n,
+                    &s[l * kb * kb..(l + 1) * kb * kb],
+                    kb,
+                    woff,
+                    loc,
+                    len,
+                );
+            }
+            m
+        }
+
+        // ---- k-wide back-transforms (fused buckets, post-BDC). The
+        // shared tree leaves U/V packed as [k, n, n]; these ops keep
+        // the whole back-transform phase one op stream per panel
+        // step instead of per lane. Each lane applies a panel of its
+        // OWN factorization (the factors are packed by `stack_k`);
+        // the inner per-lane loops are the SAME helpers the scalar
+        // ormqr_step / ormlq_step / gemm arms use, so a fused lane
+        // stays bit-identical to a per-solve run. ----
+        "stack_k" => {
+            let (k, len) = (p(op, "k")?, p(op, "len")?);
+            ensure!(k >= 1 && args.len() == k, "stack_k: {} args for {k} lanes", args.len());
+            let mut out = Vec::with_capacity(k * len);
+            for (l, a) in args.iter().enumerate() {
+                let d = a.floats::<S>()?;
+                ensure!(d.len() == len, "stack_k: lane {l} has {} of {len} elements", d.len());
+                out.extend_from_slice(d);
+            }
+            out
+        }
+        "ormqr_step_k" | "ormlq_step_k" => {
+            let (k, n, b) = (p(op, "k")?, p(op, "n")?, p(op, "b")?);
+            let cs = arg(op, args, 0)?.floats::<S>()?;
+            let afacs = arg(op, args, 1)?.floats::<S>()?;
+            let tau = arg(op, args, 2)?.floats::<S>()?;
+            let t = arg(op, args, 3)?.scalar()?;
+            ensure!(
+                cs.len() == k * n * n && afacs.len() == k * n * n,
+                "{}: stack sizes",
+                op.name
+            );
+            ensure!(tau.len() == k * b, "{}: tau length", op.name);
+            let mut out = Vec::with_capacity(k * n * n);
+            for l in 0..k {
+                let mut c = Matrix::from_rows(n, n, cs[l * n * n..(l + 1) * n * n].to_vec());
+                let afac = Matrix::from_rows(n, n, afacs[l * n * n..(l + 1) * n * n].to_vec());
+                let taul = &tau[l * b..(l + 1) * b];
+                if op.name == "ormqr_step_k" {
+                    ormqr_panel_apply(&mut c, &afac, taul, t, b, n);
+                } else {
+                    ormlq_panel_apply(&mut c, &afac, taul, t, b, n, n);
+                }
+                out.extend_from_slice(&c.data);
+            }
+            out
+        }
+        "q_gemm_k" => {
+            let (k, m, n) = (p(op, "k")?, p(op, "m")?, p(op, "n")?);
+            let qs = arg(op, args, 0)?.floats::<S>()?;
+            let us = arg(op, args, 1)?.floats::<S>()?;
+            ensure!(qs.len() == k * m * n && us.len() == k * n * n, "q_gemm_k: stack sizes");
+            let mut out = Vec::with_capacity(k * m * n);
+            for l in 0..k {
+                let q = Matrix::from_rows(m, n, qs[l * m * n..(l + 1) * m * n].to_vec());
+                let u = Matrix::from_rows(n, n, us[l * n * n..(l + 1) * n * n].to_vec());
+                out.extend_from_slice(&blas::matmul(&q, &u).data);
+            }
+            out
+        }
+
+        // ---- k-wide front-end panel ops (fused buckets, pre-BDC).
+        // One op runs a gebrd/QR panel step for EVERY lane of a
+        // packed [k, m, n] stack, making the front end's op count
+        // lane-count-independent like the tree and back-transforms
+        // already are. The inner per-lane loops are the SAME helpers
+        // the scalar labrd / gebrd_update / geqrf_step / orgqr_step
+        // arms use, so a fused lane stays bit-identical to a
+        // per-solve run. ----
+        "labrd_k" => {
+            let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let t = arg(op, args, 1)?.scalar()?;
+            ensure!(t + b <= n, "labrd_k: panel [{t}, {}) exceeds n={n}", t + b);
+            let stack = arg(op, args, 0)?.floats::<S>()?;
+            ensure!(stack.len() == k * m * n, "labrd_k: stack size");
+            let wslen = 4 * b + m * n + (m + n) * 2 * b;
+            let mut out = Vec::with_capacity(k * wslen);
+            for l in 0..k {
+                let a = Matrix::from_rows(m, n, stack[l * m * n..(l + 1) * m * n].to_vec());
+                out.extend_from_slice(&labrd_ws(a, t, b));
+            }
+            out
+        }
+        "gebrd_update_k" | "gebrd_update_xla_k" => {
+            let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let t = arg(op, args, 1)?.scalar()?;
+            let ws = arg(op, args, 0)?.floats::<S>()?;
+            let wslen = 4 * b + m * n + (m + n) * 2 * b;
+            ensure!(ws.len() == k * wslen, "{}: stack size", op.name);
+            let mut out = Vec::with_capacity(k * m * n);
+            for l in 0..k {
+                let (mut a, pm, qm) =
+                    unpack_labrd_ws(op, &ws[l * wslen..(l + 1) * wslen], m, n, b)?;
+                gebrd_cpu::trailing_update(&mut a, &pm, &qm, t, b);
+                out.extend_from_slice(&a.data);
+            }
+            out
+        }
+        "extract_a_k" => {
+            let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let ws = arg(op, args, 0)?.floats::<S>()?;
+            let wslen = 4 * b + m * n + (m + n) * 2 * b;
+            ensure!(ws.len() == k * wslen, "extract_a_k: stack size");
+            let off = 4 * b;
+            let mut out = Vec::with_capacity(k * m * n);
+            for l in 0..k {
+                out.extend_from_slice(&ws[l * wslen + off..l * wslen + off + m * n]);
+            }
+            out
+        }
+        "ws_head_k" => {
+            let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let ws = arg(op, args, 0)?.floats::<S>()?;
+            let wslen = 4 * b + m * n + (m + n) * 2 * b;
+            ensure!(ws.len() == k * wslen, "ws_head_k: stack size");
+            let mut out = Vec::with_capacity(k * 4 * b);
+            for l in 0..k {
+                out.extend_from_slice(&ws[l * wslen..l * wslen + 4 * b]);
+            }
+            out
+        }
+        "geqrf_step_k" => {
+            let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let t = arg(op, args, 1)?.scalar()?;
+            ensure!(t + b <= n, "geqrf_step_k: panel [{t}, {}) exceeds n={n}", t + b);
+            let stack = arg(op, args, 0)?.floats::<S>()?;
+            ensure!(stack.len() == k * m * n, "geqrf_step_k: stack size");
+            let mut out = Vec::with_capacity(k * (b + m * n));
+            for l in 0..k {
+                let a = Matrix::from_rows(m, n, stack[l * m * n..(l + 1) * m * n].to_vec());
+                out.extend_from_slice(&geqrf_step_ws(a, t, b));
+            }
+            out
+        }
+        "qr_head_k" => {
+            let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let ws = arg(op, args, 0)?.floats::<S>()?;
+            let wslen = b + m * n;
+            ensure!(ws.len() == k * wslen, "qr_head_k: stack size");
+            let mut out = Vec::with_capacity(k * b);
+            for l in 0..k {
+                out.extend_from_slice(&ws[l * wslen..l * wslen + b]);
+            }
+            out
+        }
+        "geqrf_extract_a_k" => {
+            let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let ws = arg(op, args, 0)?.floats::<S>()?;
+            let wslen = b + m * n;
+            ensure!(ws.len() == k * wslen, "geqrf_extract_a_k: stack size");
+            let mut out = Vec::with_capacity(k * m * n);
+            for l in 0..k {
+                out.extend_from_slice(&ws[l * wslen + b..(l + 1) * wslen]);
+            }
+            out
+        }
+        "orgqr_step_k" => {
+            let (k, m, n, b) = (p(op, "k")?, p(op, "m")?, p(op, "n")?, p(op, "b")?);
+            let qs = arg(op, args, 0)?.floats::<S>()?;
+            let afacs = arg(op, args, 1)?.floats::<S>()?;
+            let tau = arg(op, args, 2)?.floats::<S>()?;
+            let t = arg(op, args, 3)?.scalar()?;
+            ensure!(
+                qs.len() == k * m * n && afacs.len() == k * m * n,
+                "orgqr_step_k: stack sizes"
+            );
+            ensure!(tau.len() == k * b, "orgqr_step_k: tau length");
+            let mut out = Vec::with_capacity(k * m * n);
+            for l in 0..k {
+                let mut q = Matrix::from_rows(m, n, qs[l * m * n..(l + 1) * m * n].to_vec());
+                let afac =
+                    Matrix::from_rows(m, n, afacs[l * m * n..(l + 1) * m * n].to_vec());
+                ormqr_panel_apply(&mut q, &afac, &tau[l * b..(l + 1) * b], t, b, n);
+                out.extend_from_slice(&q.data);
+            }
+            out
+        }
+
+        other => bail!("host backend: unknown op {other} ({op})"),
+    };
+    Ok(out)
 }
 
 /// One labrd panel: factor panel `t` of `a` (consumed) and pack the
 /// workspace [d e tauq taup | A | P(m x 2b) | Q(n x 2b)]. Shared by the
 /// scalar `labrd` op and each lane of `labrd_k`, so fused lanes
 /// reproduce the per-solve arithmetic exactly.
-fn labrd_ws(mut a: Matrix, t: usize, b: usize) -> Vec<f64> {
+fn labrd_ws<S: Scalar>(mut a: Matrix<S>, t: usize, b: usize) -> Vec<S> {
     let (m, n) = (a.rows, a.cols);
     let panel = gebrd_cpu::labrd(&mut a, t, b);
     let mut ws = Vec::with_capacity(4 * b + m * n + (m + n) * 2 * b);
@@ -869,7 +904,7 @@ fn labrd_ws(mut a: Matrix, t: usize, b: usize) -> Vec<f64> {
 /// One geqrf panel step: factor panel `t` of `a` (consumed), apply the
 /// block reflector to the trailing columns, pack [taus | A]. Shared by
 /// the scalar `geqrf_step` op and each lane of `geqrf_step_k`.
-fn geqrf_step_ws(mut a: Matrix, t: usize, b: usize) -> Vec<f64> {
+fn geqrf_step_ws<S: Scalar>(mut a: Matrix<S>, t: usize, b: usize) -> Vec<S> {
     let n = a.cols;
     let taus = qr::geqrf_panel(&mut a, t, b);
     if t + b < n {
@@ -886,13 +921,13 @@ fn geqrf_step_ws(mut a: Matrix, t: usize, b: usize) -> Vec<f64> {
 /// Unpack a labrd workspace into (A, P, Q) (model.labrd_ws_layout).
 /// Takes a plain slice so the `gebrd_update*` arms and each lane of
 /// `gebrd_update*_k` (a slice of the packed workspace stack) share it.
-fn unpack_labrd_ws(
+fn unpack_labrd_ws<S: Scalar>(
     op: &OpKey,
-    ws: &[f64],
+    ws: &[S],
     m: usize,
     n: usize,
     b: usize,
-) -> Result<(Matrix, Matrix, Matrix)> {
+) -> Result<(Matrix<S>, Matrix<S>, Matrix<S>)> {
     let total = 4 * b + m * n + (m + n) * 2 * b;
     ensure!(ws.len() == total, "op {op}: workspace {} != {total}", ws.len());
     let a0 = 4 * b;
@@ -909,10 +944,10 @@ fn unpack_labrd_ws(
 /// s per row) to the columns of the row-major n x n matrix `m`. Shared by
 /// the scalar `bdc_rots` op and each lane of `rot_cols_k`, so fused lanes
 /// reproduce the per-solve arithmetic exactly.
-fn rots_apply(m: &mut [f64], n: usize, rots: &[f64], nrot: usize) -> Result<()> {
+fn rots_apply<S: Scalar>(m: &mut [S], n: usize, rots: &[S], nrot: usize) -> Result<()> {
     for r in 0..nrot {
-        let j1 = rots[r * 4] as usize;
-        let j2 = rots[r * 4 + 1] as usize;
+        let j1 = rots[r * 4].to_f64() as usize;
+        let j2 = rots[r * 4 + 1].to_f64() as usize;
         let (c, s) = (rots[r * 4 + 2], rots[r * 4 + 3]);
         ensure!(j1 < n && j2 < n, "bdc_rots: column out of range");
         for i in 0..n {
@@ -928,7 +963,7 @@ fn rots_apply(m: &mut [f64], n: usize, rots: &[f64], nrot: usize) -> Result<()> 
 /// Gather columns of the row-major n x n matrix `m` into `out` by the
 /// full-length perm (new -> old). Shared by `bdc_permute_cols` and each
 /// lane of `permute_k`.
-fn permute_into(out: &mut [f64], m: &[f64], n: usize, perm: &[i64]) -> Result<()> {
+fn permute_into<S: Scalar>(out: &mut [S], m: &[S], n: usize, perm: &[i64]) -> Result<()> {
     for (newj, &oldj) in perm.iter().enumerate() {
         let oldj = oldj as usize;
         ensure!(oldj < n, "bdc_permute_cols: index {oldj} out of range");
@@ -942,21 +977,21 @@ fn permute_into(out: &mut [f64], m: &[f64], n: usize, perm: &[i64]) -> Result<()
 /// The lasd3 window gemm: only columns [woff+loc, woff+loc+len) change,
 ///   M[woff:woff+kb, block] <- M[woff:woff+kb, block] @ S[:len, :len].
 /// Shared by `bdc_block_gemm` and each lane of `merge_gemm_k`.
-fn block_gemm_apply(
-    m: &mut [f64],
+fn block_gemm_apply<S: Scalar>(
+    m: &mut [S],
     n: usize,
-    s: &[f64],
+    s: &[S],
     kb: usize,
     woff: usize,
     loc: usize,
     len: usize,
 ) {
     let o = woff + loc;
-    let mut row = vec![0.0; len];
+    let mut row = vec![S::ZERO; len];
     for i in 0..kb {
         let r = (woff + i) * n;
         for (jj, slot) in row.iter_mut().enumerate() {
-            let mut acc = 0.0;
+            let mut acc = S::ZERO;
             for tt in 0..len {
                 acc += m[r + o + tt] * s[tt * kb + jj];
             }
@@ -969,10 +1004,10 @@ fn block_gemm_apply(
 /// Write the live `len` x `len` block of a bs x bs tile into the matrix
 /// window anchored at `woff`. Shared by `set_block` and each lane of
 /// `set_block_k`.
-fn set_block_apply(
-    m: &mut [f64],
+fn set_block_apply<S: Scalar>(
+    m: &mut [S],
     n: usize,
-    blk: &[f64],
+    blk: &[S],
     bs: usize,
     woff: usize,
     loc: usize,
@@ -990,7 +1025,14 @@ fn set_block_apply(
 /// `ormqr_step` / `orgqr_step` ops and each lane of `ormqr_step_k` /
 /// `orgqr_step_k` (orgqr applies the same product to an identity), so
 /// fused lanes reproduce the per-solve arithmetic exactly.
-fn ormqr_panel_apply(c: &mut Matrix, afac: &Matrix, tau: &[f64], t: usize, b: usize, kcols: usize) {
+fn ormqr_panel_apply<S: Scalar>(
+    c: &mut Matrix<S>,
+    afac: &Matrix<S>,
+    tau: &[S],
+    t: usize,
+    b: usize,
+    kcols: usize,
+) {
     let y = qr::build_y(afac, t, b);
     let ti = qr::tinv(&y, tau);
     qr::larfb(c, &y, &ti, 0, kcols, false);
@@ -999,10 +1041,10 @@ fn ormqr_panel_apply(c: &mut Matrix, afac: &Matrix, tau: &[f64], t: usize, b: us
 /// One ormlq panel application. Y (n x b): row reflector t+i lives in
 /// Afac[t+i, t+i+2:], unit at t+i+1 (model.op_ormlq_step). Shared by the
 /// scalar `ormlq_step` op and each lane of `ormlq_step_k`.
-fn ormlq_panel_apply(
-    c: &mut Matrix,
-    afac: &Matrix,
-    tau: &[f64],
+fn ormlq_panel_apply<S: Scalar>(
+    c: &mut Matrix<S>,
+    afac: &Matrix<S>,
+    tau: &[S],
     t: usize,
     b: usize,
     n: usize,
@@ -1012,7 +1054,7 @@ fn ormlq_panel_apply(
     for i in 0..b {
         let g = t + i;
         if g + 1 < n {
-            y[(g + 1, i)] = 1.0;
+            y[(g + 1, i)] = S::ONE;
             for r in g + 2..n {
                 y[(r, i)] = afac.at(g, r);
             }
@@ -1027,14 +1069,23 @@ fn ormlq_panel_apply(
 /// Gu-Eisenstat z-hat (eq. 18) and the normalised singular-vector blocks
 /// (eq. 19). Every d_j^2 - omega_k^2 difference is formed in the
 /// cancellation-free factored form (d_j - dbase_k)(d_j + dbase_k) - tau_k.
+/// The zero-denominator guard is dtype-scaled ([`Scalar::TINY`] — an f32
+/// kernel with the f64 1e-300 guard would still divide by zero).
 /// Returns packed [zhat(nb) | U(nb*nb) | V(nb*nb)].
-fn secular_fused(nb: usize, d: &[f64], dbase: &[f64], tau: &[f64], signs: &[f64], k: usize) -> Vec<f64> {
+fn secular_fused<S: Scalar>(
+    nb: usize,
+    d: &[S],
+    dbase: &[S],
+    tau: &[S],
+    signs: &[S],
+    k: usize,
+) -> Vec<S> {
     let delta = |i: usize, kk: usize| (d[i] - dbase[kk]) * (d[i] + dbase[kk]) - tau[kk];
 
     // z-hat (eq. 18): |z_i|^2 = (w_{K-1}^2 - d_i^2)
     //   * prod_{t<i} (w_t^2 - d_i^2)/(d_t^2 - d_i^2)
     //   * prod_{i<=t<K-1} (w_t^2 - d_i^2)/(d_{t+1}^2 - d_i^2)
-    let mut zs = vec![0.0; nb];
+    let mut zs = vec![S::ZERO; nb];
     for i in 0..k {
         let mut acc = -delta(i, k - 1);
         for t in 0..k - 1 {
@@ -1043,33 +1094,33 @@ fn secular_fused(nb: usize, d: &[f64], dbase: &[f64], tau: &[f64], signs: &[f64]
             let den = (d[sig] - d[i]) * (d[sig] + d[i]);
             acc *= num / den;
         }
-        zs[i] = acc.max(0.0).sqrt() * signs[i];
+        zs[i] = acc.maxv(S::ZERO).sqrt() * signs[i];
     }
 
     // singular vectors (eq. 19), column kk = vectors for omega_kk
-    let mut u = vec![0.0; nb * nb];
-    let mut v = vec![0.0; nb * nb];
-    let mut vcol = vec![0.0; k];
-    let mut ucol = vec![0.0; k];
+    let mut u = vec![S::ZERO; nb * nb];
+    let mut v = vec![S::ZERO; nb * nb];
+    let mut vcol = vec![S::ZERO; k];
+    let mut ucol = vec![S::ZERO; k];
     for kk in 0..k {
         for i in 0..k {
             let mut den = delta(i, kk);
-            if den == 0.0 {
-                den = 1e-300;
+            if den == S::ZERO {
+                den = S::TINY;
             }
             vcol[i] = zs[i] / den;
         }
-        ucol[0] = -1.0;
+        ucol[0] = -S::ONE;
         for i in 1..k {
             ucol[i] = d[i] * vcol[i];
         }
         let mut vn = blas::nrm2(&vcol);
         let mut un = blas::nrm2(&ucol);
-        if vn == 0.0 {
-            vn = 1.0;
+        if vn == S::ZERO {
+            vn = S::ONE;
         }
-        if un == 0.0 {
-            un = 1.0;
+        if un == S::ZERO {
+            un = S::ONE;
         }
         for i in 0..k {
             u[i * nb + kk] = ucol[i] / un;
@@ -1078,8 +1129,8 @@ fn secular_fused(nb: usize, d: &[f64], dbase: &[f64], tau: &[f64], signs: &[f64]
     }
     // deflated / padded columns stay identity
     for kk in k..nb {
-        u[kk * nb + kk] = 1.0;
-        v[kk * nb + kk] = 1.0;
+        u[kk * nb + kk] = S::ONE;
+        v[kk * nb + kk] = S::ONE;
     }
 
     let mut out = Vec::with_capacity(nb + 2 * nb * nb);
@@ -1093,19 +1144,20 @@ fn secular_fused(nb: usize, d: &[f64], dbase: &[f64], tau: &[f64], signs: &[f64]
 mod tests {
     use super::*;
     use crate::linalg::{jacobi, secular};
+    use crate::scalar::DynVec;
     use crate::util::Rng;
 
     fn run(b: &mut HostBackend, name: &str, params: &[(&str, i64)], args: &[&HostBuf]) -> Vec<f64> {
         let key = OpKey::new(name, params);
         let out = b.exec(&key, args).unwrap_or_else(|e| panic!("{name}: {e:#}"));
-        b.read(&out).unwrap()
+        f64::take_vec(b.read(&out).unwrap()).unwrap()
     }
 
     #[test]
     fn eye_gemm_roundtrip() {
         let mut b = HostBackend::new();
         let e = run(&mut b, "eye", &[("m", 4), ("n", 4)], &[]);
-        assert_eq!(e, Matrix::eye(4, 4).data);
+        assert_eq!(e, Matrix::<f64>::eye(4, 4).data);
         let mut rng = Rng::new(1);
         let a = Matrix::from_fn(4, 4, |_, _| rng.gaussian());
         let ab = HostBuf::F64(a.data.clone());
@@ -1127,7 +1179,7 @@ mod tests {
         let tb = HostBuf::I64(vec![0]);
         let key = OpKey::new("labrd", &p);
         let ws = b.exec(&key, &[&ab, &tb]).unwrap();
-        let head = b.read_prefix(&ws, 4 * bsz).unwrap();
+        let head = f64::take_vec(b.read_prefix(&ws, 4 * bsz).unwrap()).unwrap();
         let upd = run(&mut b, "gebrd_update_xla", &p, &[&ws, &tb]);
 
         let mut ac = a.clone();
@@ -1150,23 +1202,23 @@ mod tests {
         for t in (0..n).step_by(bsz) {
             let tb = HostBuf::I64(vec![t as i64]);
             let ws = b.exec(&OpKey::new("geqrf_step", &p), &[&cur, &tb]).unwrap();
-            let head = b.read_prefix(&ws, bsz).unwrap();
+            let head = f64::take_vec(b.read_prefix(&ws, bsz).unwrap()).unwrap();
             taus[t..t + bsz].copy_from_slice(&head);
             let anew = run(&mut b, "geqrf_extract_a", &p, &[&ws]);
             cur = HostBuf::F64(anew);
         }
         // accumulate Q in block-reverse order
-        let mut q = HostBuf::F64(Matrix::eye(m, n).data);
+        let mut q = HostBuf::F64(Matrix::<f64>::eye(m, n).data);
         for t in [bsz, 0] {
             let tb = HostBuf::I64(vec![t as i64]);
             let taub = HostBuf::F64(taus[t..t + bsz].to_vec());
             let qn = run(&mut b, "orgqr_step", &p, &[&q, &cur, &taub, &tb]);
             q = HostBuf::F64(qn);
         }
-        let qm = Matrix::from_rows(m, n, b.read(&q).unwrap());
+        let qm = Matrix::from_rows(m, n, f64::take_vec(b.read(&q).unwrap()).unwrap());
         assert!(qm.orthonormality_defect() < 1e-12);
         // Q R == A
-        let afac = Matrix::from_rows(m, n, b.read(&cur).unwrap());
+        let afac = Matrix::from_rows(m, n, f64::take_vec(b.read(&cur).unwrap()).unwrap());
         let mut r = Matrix::zeros(n, n);
         for i in 0..n {
             for j in i..n {
@@ -1233,7 +1285,7 @@ mod tests {
     fn set_block_and_permute() {
         let n = 5usize;
         let mut b = HostBackend::new();
-        let m0 = HostBuf::F64(Matrix::eye(n, n).data);
+        let m0 = HostBuf::F64(Matrix::<f64>::eye(n, n).data);
         let bs = 3usize;
         let mut blk = vec![0.0; bs * bs];
         for (i, v) in blk.iter_mut().enumerate() {
@@ -1735,7 +1787,7 @@ mod tests {
         // identity window times S embeds S at the block offset
         let (n, kb) = (6usize, 4usize);
         let mut b = HostBackend::new();
-        let m0 = HostBuf::F64(Matrix::eye(n, n).data);
+        let m0 = HostBuf::F64(Matrix::<f64>::eye(n, n).data);
         let mut s = Matrix::eye(kb, kb);
         s[(0, 0)] = 2.0;
         s[(0, 1)] = 3.0;
@@ -1789,5 +1841,89 @@ mod tests {
         for s in sv {
             assert!((s - 1.0).abs() < 1e-12);
         }
+    }
+
+    // ---- dtype-generic interpreter ----
+
+    #[test]
+    fn f32_ops_execute_and_track_f64() {
+        // the same gemm arm at f32: result dtype follows the op key, and
+        // the f32 twin of an f64 key counts as its own "compile"
+        let mut rng = Rng::new(21);
+        let a = Matrix::from_fn(6, 6, |_, _| rng.gaussian());
+        let c = Matrix::from_fn(6, 6, |_, _| rng.gaussian());
+        let mut b = HostBackend::new();
+        let p = [("m", 6), ("k", 6), ("n", 6)];
+        let args64 = [HostBuf::F64(a.data.clone()), HostBuf::F64(c.data.clone())];
+        let argrefs64: Vec<&HostBuf> = args64.iter().collect();
+        let want = run(&mut b, "gemm", &p, &argrefs64);
+        let args32 = [
+            HostBuf::F32(a.cast::<f32>().data),
+            HostBuf::F32(c.cast::<f32>().data),
+        ];
+        let argrefs32: Vec<&HostBuf> = args32.iter().collect();
+        let out = b.exec(&OpKey::new_t::<f32>("gemm", &p), &argrefs32).unwrap();
+        assert_eq!(out.dtype(), DType::F32);
+        let got = f32::take_vec(b.read(&out).unwrap()).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((f64::from(*g) - w).abs() < 1e-4, "f32 gemm drift: {g} vs {w}");
+        }
+        assert_eq!(b.compile_stats().0, 2, "f32/f64 keys are distinct compiles");
+    }
+
+    #[test]
+    fn cast_op_converts_between_dtypes() {
+        let mut b = HostBackend::new();
+        let src = HostBuf::F64(vec![1.5, -2.25, 3.0]);
+        // demote: the output dtype is the op key's dtype
+        let down = b.exec(&OpKey::new_t::<f32>("cast", &[("len", 3)]), &[&src]).unwrap();
+        assert_eq!(down.dtype(), DType::F32);
+        assert_eq!(f32::take_vec(b.read(&down).unwrap()).unwrap(), vec![1.5f32, -2.25, 3.0]);
+        // promote back (exact for these values)
+        let up = b.exec(&OpKey::new("cast", &[("len", 3)]), &[&down]).unwrap();
+        assert_eq!(up.dtype(), DType::F64);
+        assert_eq!(f64::take_vec(b.read(&up).unwrap()).unwrap(), vec![1.5, -2.25, 3.0]);
+        // an i64 source is rejected
+        let idx = HostBuf::I64(vec![1, 2, 3]);
+        assert!(b.exec(&OpKey::new("cast", &[("len", 3)]), &[&idx]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_is_reported_at_exec() {
+        // an f32-keyed op fed f64 buffers fails loudly, naming both sides
+        let mut b = HostBackend::new();
+        let a = HostBuf::F64(Matrix::<f64>::eye(3, 3).data);
+        let e = b
+            .exec(&OpKey::new_t::<f32>("gemm", &[("m", 3), ("k", 3), ("n", 3)]), &[&a, &a])
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("expected f32"), "{msg}");
+        assert!(msg.contains("found f64"), "{msg}");
+        // and the converse: an f64 key over f32 buffers
+        let a32 = HostBuf::F32(vec![1.0; 9]);
+        let e2 = b
+            .exec(&OpKey::new("gemm", &[("m", 3), ("k", 3), ("n", 3)]), &[&a32, &a32])
+            .unwrap_err();
+        let msg2 = format!("{e2:#}");
+        assert!(msg2.contains("expected f64") && msg2.contains("found f32"), "{msg2}");
+    }
+
+    #[test]
+    fn reclaim_returns_buffers_for_staging_reuse() {
+        let mut b = HostBackend::new();
+        for buf in [
+            HostBuf::F64(vec![1.0, 2.0]),
+            HostBuf::F32(vec![1.0, 2.0]),
+            HostBuf::I64(vec![1, 2]),
+        ] {
+            let dt = buf.dtype();
+            let got = b.reclaim(buf).unwrap();
+            assert_eq!(got.dtype(), dt, "reclaim preserves dtype");
+            assert_eq!(got.len(), 2);
+        }
+        // read_prefix keeps the buffer's own dtype too
+        let f32buf = HostBuf::F32(vec![5.0, 6.0, 7.0]);
+        let pre = b.read_prefix(&f32buf, 2).unwrap();
+        assert_eq!(pre, DynVec::F32(vec![5.0, 6.0]));
     }
 }

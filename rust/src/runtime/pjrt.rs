@@ -8,9 +8,19 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::backend::Backend;
 use crate::runtime::registry::{ExeCache, Manifest, OpKey};
+use crate::scalar::{DType, DynVec};
 
 pub struct PjrtBackend {
     cache: ExeCache,
+}
+
+/// A PJRT buffer tagged with its element dtype: PJRT literals are read
+/// back through a typed `to_vec::<T>`, so the worker must remember which
+/// T the buffer holds (uploads record the payload dtype; exec outputs
+/// record the op key's dtype).
+pub struct TypedBuf {
+    buf: xla::PjRtBuffer,
+    dtype: DType,
 }
 
 impl PjrtBackend {
@@ -29,35 +39,38 @@ impl PjrtBackend {
 }
 
 impl Backend for PjrtBackend {
-    type Buf = xla::PjRtBuffer;
+    type Buf = TypedBuf;
 
-    fn upload_f64(&mut self, data: Vec<f64>, dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.cache
-            .client()
-            .buffer_from_host_buffer(&data, dims, None)
-            .map_err(|e| anyhow!("upload: {e:?}"))
+    fn upload(&mut self, data: DynVec, dims: &[usize]) -> Result<TypedBuf> {
+        let dtype = data.dtype();
+        let buf = match &data {
+            DynVec::F32(v) => self.cache.client().buffer_from_host_buffer(v, dims, None),
+            DynVec::F64(v) => self.cache.client().buffer_from_host_buffer(v, dims, None),
+            DynVec::I64(v) => self.cache.client().buffer_from_host_buffer(v, dims, None),
+        }
+        .map_err(|e| anyhow!("upload {dtype}: {e:?}"))?;
+        Ok(TypedBuf { buf, dtype })
     }
 
-    fn upload_i64(&mut self, data: Vec<i64>, dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.cache
-            .client()
-            .buffer_from_host_buffer(&data, dims, None)
-            .map_err(|e| anyhow!("upload i64: {e:?}"))
-    }
-
-    fn exec(&mut self, op: &OpKey, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+    fn exec(&mut self, op: &OpKey, args: &[&TypedBuf]) -> Result<TypedBuf> {
         let exe = self.cache.get(op)?;
+        let argrefs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| &a.buf).collect();
         let mut res = exe
-            .execute_b(args)
+            .execute_b(&argrefs)
             .map_err(|e| anyhow!("exec {op}: {e:?}"))?;
-        Ok(res.remove(0).remove(0))
+        Ok(TypedBuf { buf: res.remove(0).remove(0), dtype: op.dtype })
     }
 
-    fn read(&mut self, buf: &xla::PjRtBuffer) -> Result<Vec<f64>> {
-        buf.to_literal_sync()
-            .map_err(|e| anyhow!("read literal: {e:?}"))?
-            .to_vec::<f64>()
-            .map_err(|e| anyhow!("to_vec: {e:?}"))
+    fn read(&mut self, buf: &TypedBuf) -> Result<DynVec> {
+        let lit = buf
+            .buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("read literal: {e:?}"))?;
+        Ok(match buf.dtype {
+            DType::F32 => DynVec::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?),
+            DType::F64 => DynVec::F64(lit.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?),
+            DType::I64 => DynVec::I64(lit.to_vec::<i64>().map_err(|e| anyhow!("to_vec: {e:?}"))?),
+        })
     }
 
     // TFRT CPU PJRT lacks CopyRawToHost, so the prefix read falls back to

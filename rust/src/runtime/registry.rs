@@ -4,15 +4,23 @@
 //!
 //! Manifest line format: `<op> <k>=<v> ... file=<relpath>`.
 
+use crate::scalar::{DType, Scalar};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 
-/// Fully-qualified op key: name + sorted integer params.
+/// Fully-qualified op key: name + sorted integer params + compute dtype.
+///
+/// The dtype is part of the key identity: an f32 `labrd` is a different
+/// compiled program than its f64 twin, and the op-stream verifier
+/// resolves operand dtypes from it. It defaults to [`DType::F64`]
+/// (the original hard-wired precision) so pre-existing constructors,
+/// manifests and pinned `Display` strings are unchanged.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct OpKey {
     pub name: String,
     pub params: BTreeMap<String, i64>,
+    pub dtype: DType,
 }
 
 impl OpKey {
@@ -20,7 +28,18 @@ impl OpKey {
         OpKey {
             name: name.to_string(),
             params: params.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            dtype: DType::F64,
         }
+    }
+
+    /// Key for the same op instantiated at scalar type `S`.
+    pub fn new_t<S: Scalar>(name: &str, params: &[(&str, i64)]) -> Self {
+        OpKey { dtype: S::DTYPE, ..OpKey::new(name, params) }
+    }
+
+    pub fn with_dtype(mut self, dtype: DType) -> Self {
+        self.dtype = dtype;
+        self
     }
 }
 
@@ -29,6 +48,11 @@ impl std::fmt::Display for OpKey {
         write!(f, "{}", self.name)?;
         for (k, v) in &self.params {
             write!(f, " {k}={v}")?;
+        }
+        // f64 is the default and is omitted so pre-dtype op strings
+        // (bench op maps, pinned tests) render byte-identically.
+        if self.dtype != DType::F64 {
+            write!(f, " dtype={}", self.dtype)?;
         }
         Ok(())
     }
@@ -58,12 +82,19 @@ impl Manifest {
                 .to_string();
             let mut params = BTreeMap::new();
             let mut file = None;
+            let mut dtype = DType::F64;
             for kv in parts {
                 let (k, v) = kv
                     .split_once('=')
                     .ok_or_else(|| anyhow!("manifest line {}: bad token {kv}", lineno + 1))?;
                 if k == "file" {
                     file = Some(v.to_string());
+                } else if k == "dtype" {
+                    dtype = match v {
+                        "f32" => DType::F32,
+                        "f64" => DType::F64,
+                        other => bail!("manifest line {}: bad dtype {other}", lineno + 1),
+                    };
                 } else {
                     params.insert(
                         k.to_string(),
@@ -73,7 +104,7 @@ impl Manifest {
                 }
             }
             let file = file.ok_or_else(|| anyhow!("manifest line {}: no file=", lineno + 1))?;
-            files.insert(OpKey { name, params }, dir.join(file));
+            files.insert(OpKey { name, params, dtype }, dir.join(file));
         }
         Ok(Manifest { dir: dir.to_path_buf(), files })
     }
@@ -365,6 +396,35 @@ mod tests {
     fn opkey_display_and_order() {
         let k = OpKey::new("labrd", &[("n", 128), ("m", 128), ("b", 32)]);
         assert_eq!(format!("{k}"), "labrd b=32 m=128 n=128");
+    }
+
+    #[test]
+    fn opkey_dtype_identity_and_display() {
+        let k64 = OpKey::new("labrd", &[("m", 128), ("n", 128), ("b", 32)]);
+        let k32 = OpKey::new_t::<f32>("labrd", &[("m", 128), ("n", 128), ("b", 32)]);
+        assert_eq!(OpKey::new_t::<f64>("labrd", &[("m", 128), ("n", 128), ("b", 32)]), k64);
+        assert_ne!(k32, k64, "dtype is part of op-key identity");
+        // f64 display is byte-identical to the pre-dtype format; f32 appends
+        assert_eq!(format!("{k64}"), "labrd b=32 m=128 n=128");
+        assert_eq!(format!("{k32}"), "labrd b=32 m=128 n=128 dtype=f32");
+        assert_eq!(k64.clone().with_dtype(DType::F32), k32);
+    }
+
+    #[test]
+    fn manifest_parse_dtype_token() {
+        let dir =
+            std::env::temp_dir().join(format!("gcsvd_manifest_dtype_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "labrd b=32 m=128 n=128 dtype=f32 file=slabrd_b32_m128_n128.hlo.txt\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let k32 = OpKey::new_t::<f32>("labrd", &[("m", 128), ("n", 128), ("b", 32)]);
+        assert!(m.contains(&k32));
+        assert!(!m.contains(&k32.clone().with_dtype(DType::F64)));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

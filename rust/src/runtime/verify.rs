@@ -51,6 +51,7 @@ use std::sync::OnceLock;
 
 use crate::runtime::device::BufId;
 use crate::runtime::registry::OpKey;
+use crate::scalar::DType;
 
 // ---------------------------------------------------------------------------
 // enablement
@@ -166,30 +167,23 @@ impl fmt::Display for Dim {
 // signature table
 // ---------------------------------------------------------------------------
 
-/// Element dtype of a device buffer.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum DType {
-    F64,
-    I64,
-}
-
-impl fmt::Display for DType {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            DType::F64 => write!(f, "f64"),
-            DType::I64 => write!(f, "i64"),
-        }
-    }
-}
-
-/// One operand's declared dtype and symbolic length.
+/// One operand's declared dtype and symbolic length. Buffer dtypes are
+/// the runtime's [`DType`] (f32/f64/i64); float specs resolve against
+/// the op key's compute dtype, so one table entry covers an op and its
+/// f32 twin — and an f32 stack fed to an f64-keyed op (or vice versa)
+/// is caught at enqueue time.
 #[derive(Clone, Debug)]
 pub enum ArgSpec {
-    /// f64 array of the given element count.
-    F64(Dim),
+    /// Float array of the op's compute dtype (`OpKey::dtype`) with the
+    /// given element count: an f32-keyed op declares f32 operands, its
+    /// f64 twin f64 operands.
+    Float(Dim),
+    /// Float array of either width (`cast`'s source, whose dtype is
+    /// deliberately not the op's output dtype).
+    AnyFloat(Dim),
     /// i64 array of the given element count.
     I64(Dim),
-    /// Length-1 index/count operand; either dtype is accepted (the host
+    /// Length-1 index/count operand; any dtype is accepted (the host
     /// backend's `.scalar()` does the same).
     Scalar,
 }
@@ -205,7 +199,7 @@ pub enum Arity {
 }
 
 /// Full signature of one op family: operands plus output element count.
-/// Every output of the host op set is f64.
+/// The output dtype of every op is its key's compute dtype.
 #[derive(Clone, Debug)]
 pub struct Sig {
     pub args: Arity,
@@ -235,7 +229,7 @@ fn fixed(args: Vec<ArgSpec>, out: Dim) -> Sig {
 fn table() -> &'static HashMap<&'static str, Sig> {
     static TABLE: OnceLock<HashMap<&'static str, Sig>> = OnceLock::new();
     TABLE.get_or_init(|| {
-        use ArgSpec::{Scalar, F64, I64};
+        use ArgSpec::{AnyFloat, Float as F64, Scalar, I64};
         let mut t: HashMap<&'static str, Sig> = HashMap::new();
         let mut put = |name: &'static str, sig: Sig| {
             t.insert(name, sig);
@@ -251,6 +245,9 @@ fn table() -> &'static HashMap<&'static str, Sig> {
         put("eye", fixed(vec![], mn()));
         put("zeros", fixed(vec![], p("n") * p("n")));
         put("gemm", fixed(vec![F64(p("m") * p("k")), F64(p("k") * p("n"))], mn()));
+        // dtype cast: the source is a float buffer of the *other* width
+        // (the mixed-precision pipeline's only on-device conversion)
+        put("cast", fixed(vec![AnyFloat(p("len"))], p("len")));
 
         // ---- gebrd: panel + trailing update ----
         put("labrd", fixed(vec![F64(mn()), Scalar], ws()));
@@ -482,6 +479,7 @@ fn table() -> &'static HashMap<&'static str, Sig> {
 /// counts matter for checking).
 #[derive(Clone, Debug)]
 pub enum TraceCmd {
+    UploadF32 { id: BufId, len: usize },
     UploadF64 { id: BufId, len: usize },
     UploadI64 { id: BufId, len: usize },
     Exec { op: OpKey, args: Vec<BufId>, out: BufId },
@@ -754,6 +752,9 @@ impl Verifier {
         self.cur_stream = stream;
         self.clocks[stream][stream] += 1;
         match cmd {
+            TraceCmd::UploadF32 { id, len } => {
+                self.define(*id, DType::F32, Some(*len), "upload".to_string());
+            }
             TraceCmd::UploadF64 { id, len } => {
                 self.define(*id, DType::F64, Some(*len), "upload".to_string());
             }
@@ -842,7 +843,7 @@ impl Verifier {
                 ViolationKind::UnknownOp,
                 format!("exec `{op}` (output {out:?}): no signature table entry"),
             );
-            self.define(out, DType::F64, None, format!("{op}"));
+            self.define(out, op.dtype, None, format!("{op}"));
             return;
         };
 
@@ -850,7 +851,7 @@ impl Verifier {
         let specs: Vec<ArgSpec> = match &sig.args {
             Arity::Fixed(v) => v.clone(),
             Arity::PerLane { count, each } => match count.eval(op) {
-                Ok(k) => vec![ArgSpec::F64(each.clone()); k.max(0) as usize],
+                Ok(k) => vec![ArgSpec::Float(each.clone()); k.max(0) as usize],
                 Err(e) => {
                     self.flag(ViolationKind::BadParams, format!("exec `{op}`: {e}"));
                     vec![]
@@ -869,6 +870,7 @@ impl Verifier {
                 continue;
             };
             let (dtype, len) = (buf.dtype, buf.len);
+            let (origin, born) = (buf.origin.clone(), buf.born);
             match spec {
                 ArgSpec::Scalar => {
                     if len.is_some_and(|l| l != 1) {
@@ -882,15 +884,23 @@ impl Verifier {
                         );
                     }
                 }
-                ArgSpec::F64(dim) | ArgSpec::I64(dim) => {
-                    let want_dtype =
-                        if matches!(spec, ArgSpec::F64(_)) { DType::F64 } else { DType::I64 };
-                    if dtype != want_dtype {
+                ArgSpec::Float(dim) | ArgSpec::AnyFloat(dim) | ArgSpec::I64(dim) => {
+                    // float specs resolve against the op key's compute
+                    // dtype, so an f32 stack fed to an f64-keyed op (or
+                    // the converse) is flagged before anything executes
+                    let (ok, want) = match spec {
+                        ArgSpec::Float(_) => (dtype == op.dtype, op.dtype.name()),
+                        ArgSpec::AnyFloat(_) => {
+                            (matches!(dtype, DType::F32 | DType::F64), "f32 or f64")
+                        }
+                        _ => (dtype == DType::I64, DType::I64.name()),
+                    };
+                    if !ok {
                         self.flag(
                             ViolationKind::Dtype,
                             format!(
-                                "exec `{op}` operand {i}: buffer {id:?} is {dtype}, \
-                                 signature declares {want_dtype}"
+                                "exec `{op}` operand {i}: buffer {id:?} (from `{origin}`, \
+                                 cmd #{born}) is {dtype}, signature declares {want}"
                             ),
                         );
                     }
@@ -923,7 +933,7 @@ impl Verifier {
                 None
             }
         };
-        self.define(out, DType::F64, out_len, format!("{op}"));
+        self.define(out, op.dtype, out_len, format!("{op}"));
     }
 
     /// End-of-stream audit: flag every live buffer that was never read —
@@ -1019,11 +1029,11 @@ mod tests {
                 Arity::PerLane { count, each } => {
                     let k = count.eval(&key).unwrap_or_else(|e| panic!("`{key}`: {e}"));
                     assert!(k >= 1, "`{key}`: non-positive lane count {k}");
-                    vec![ArgSpec::F64(each.clone()); k as usize]
+                    vec![ArgSpec::Float(each.clone()); k as usize]
                 }
             };
             for (i, spec) in specs.iter().enumerate() {
-                if let ArgSpec::F64(d) | ArgSpec::I64(d) = spec {
+                if let ArgSpec::Float(d) | ArgSpec::AnyFloat(d) | ArgSpec::I64(d) = spec {
                     let v = d
                         .eval(&key)
                         .unwrap_or_else(|e| panic!("`{key}` operand {i}: {e}"));
@@ -1184,5 +1194,112 @@ mod tests {
             (0, TraceCmd::Free { id: b }),
         ];
         verify_tagged_stream(&cmds).expect("barrier-ordered trace is clean");
+    }
+
+    /// Float operand slots resolve against the op key's compute dtype:
+    /// an f32 stack read as f64 (or the converse) is caught at enqueue
+    /// time, with the message naming the op and the allocating site.
+    #[test]
+    fn dtype_mismatches_are_flagged_per_compute_dtype() {
+        let (a, b, out, perm) =
+            (BufId::from_raw(1), BufId::from_raw(2), BufId::from_raw(3), BufId::from_raw(4));
+        let gemm = &[("m", 3), ("k", 4), ("n", 3)];
+        // (trace, op name expected in the violation message)
+        let cases: Vec<(Vec<TraceCmd>, &str)> = vec![
+            // f64 buffers fed to an f32-keyed op
+            (
+                vec![
+                    TraceCmd::UploadF64 { id: a, len: 12 },
+                    TraceCmd::UploadF64 { id: b, len: 12 },
+                    TraceCmd::Exec {
+                        op: OpKey::new_t::<f32>("gemm", gemm),
+                        args: vec![a, b],
+                        out,
+                    },
+                ],
+                "gemm",
+            ),
+            // f32 buffers fed to an f64-keyed op
+            (
+                vec![
+                    TraceCmd::UploadF32 { id: a, len: 12 },
+                    TraceCmd::UploadF32 { id: b, len: 12 },
+                    TraceCmd::Exec { op: OpKey::new("gemm", gemm), args: vec![a, b], out },
+                ],
+                "gemm",
+            ),
+            // a float buffer in an i64 index slot
+            (
+                vec![
+                    TraceCmd::UploadF64 { id: a, len: 9 },
+                    TraceCmd::UploadF64 { id: perm, len: 3 },
+                    TraceCmd::Exec {
+                        op: OpKey::new("bdc_permute_cols", &[("n", 3)]),
+                        args: vec![a, perm],
+                        out,
+                    },
+                ],
+                "bdc_permute_cols",
+            ),
+        ];
+        for (mut cmds, opname) in cases {
+            cmds.push(TraceCmd::Read { id: out });
+            for id in [a, b, out, perm] {
+                cmds.push(TraceCmd::Free { id });
+            }
+            let errs = verify_stream(&cmds).expect_err("dtype mismatch must be flagged");
+            let hit = errs
+                .iter()
+                .find(|v| v.kind == ViolationKind::Dtype)
+                .unwrap_or_else(|| panic!("no Dtype violation in: {}", render(&errs)));
+            assert!(hit.msg.contains(opname), "op name missing: {}", hit.msg);
+            assert!(hit.msg.contains("upload"), "allocating site missing: {}", hit.msg);
+        }
+        // and the matched-dtype stream is clean: f32 key over f32 uploads
+        let cmds = vec![
+            TraceCmd::UploadF32 { id: a, len: 12 },
+            TraceCmd::UploadF32 { id: b, len: 12 },
+            TraceCmd::Exec { op: OpKey::new_t::<f32>("gemm", gemm), args: vec![a, b], out },
+            TraceCmd::Read { id: out },
+            TraceCmd::Free { id: a },
+            TraceCmd::Free { id: b },
+            TraceCmd::Free { id: out },
+        ];
+        let rep = verify_stream(&cmds).expect("matched f32 stream is clean");
+        assert_eq!(rep.checked_ops, 1);
+    }
+
+    /// `cast` is the one op whose source dtype differs from its key's
+    /// compute dtype: either float width passes, i64 does not.
+    #[test]
+    fn cast_signature_accepts_either_float_source() {
+        let (src, out) = (BufId::from_raw(1), BufId::from_raw(2));
+        let key = OpKey::new_t::<f32>("cast", &[("len", 6)]);
+        for up in [
+            TraceCmd::UploadF64 { id: src, len: 6 },
+            TraceCmd::UploadF32 { id: src, len: 6 },
+        ] {
+            let cmds = vec![
+                up,
+                TraceCmd::Exec { op: key.clone(), args: vec![src], out },
+                TraceCmd::Read { id: out },
+                TraceCmd::Free { id: src },
+                TraceCmd::Free { id: out },
+            ];
+            verify_stream(&cmds).expect("float-sourced cast is clean");
+        }
+        let cmds = vec![
+            TraceCmd::UploadI64 { id: src, len: 6 },
+            TraceCmd::Exec { op: key.clone(), args: vec![src], out },
+            TraceCmd::Read { id: out },
+            TraceCmd::Free { id: src },
+            TraceCmd::Free { id: out },
+        ];
+        let errs = verify_stream(&cmds).expect_err("i64-sourced cast must be flagged");
+        assert!(
+            errs.iter().any(|v| v.kind == ViolationKind::Dtype),
+            "no Dtype violation in: {}",
+            render(&errs)
+        );
     }
 }

@@ -1,0 +1,399 @@
+//! The generic scalar layer (DESIGN.md §Scalar layer).
+//!
+//! Every layer of the stack — [`Matrix`](crate::matrix::Matrix) storage,
+//! the [`Backend`](crate::runtime::Backend)/`Device` buffer layer, the
+//! host-backend op arms, the BDC engines and the batch planner — is
+//! parameterised over one [`Scalar`] trait (f32/f64 to start), the way
+//! ndarray-linalg's `SVDDC_` macro covers sgesdd/dgesdd. Three pieces:
+//!
+//! * [`DType`] — the runtime tag of a device buffer's element type. Op
+//!   keys carry one (default [`DType::F64`]), so an f32 op stream is a
+//!   different compiled program than its f64 twin and the op-stream
+//!   verifier can check operand dtypes at enqueue time.
+//! * [`DynVec`] — a dtype-tagged host vector, the payload of uploads,
+//!   downloads and the (byte-accounted) staging pool. Monomorphic code
+//!   wraps/unwraps through the `Scalar` plumbing methods.
+//! * [`Precision`] — the *request-level* mode a solve runs in: pure f32,
+//!   pure f64, or the mixed f32-front-end/f64-core pipeline. It joins
+//!   the batch planner's bucket key so requests of different precision
+//!   never fuse into one `[k, m, n]` stack.
+//!
+//! Numeric-code conventions: generic kernels spell literals as
+//! `S::ZERO` / `S::ONE` / `S::from_f64(c)`, compare with `maxv`/`minv`
+//! (floats are only `PartialOrd`), and use the per-dtype guard
+//! constants (`EPSILON`, `SAFE_MIN`, `TINY`, `BIG`) instead of
+//! hard-coded f64 magnitudes — an f32 kernel with a 1e-300 underflow
+//! guard would never trigger it.
+
+use std::fmt;
+
+// ---------------------------------------------------------------------------
+// DType — runtime element-type tag
+// ---------------------------------------------------------------------------
+
+/// Element dtype of a device buffer / host payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    F32,
+    F64,
+    I64,
+}
+
+impl DType {
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I64 => "i64",
+        }
+    }
+
+    /// Bytes per element — the unit every pool/transfer counter uses.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 | DType::I64 => 8,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Precision — request-level solve mode
+// ---------------------------------------------------------------------------
+
+/// The precision mode of one SVD request (`svd-batch --dtype ...`).
+///
+/// `F32`/`F64` run the whole pipeline in that dtype. `Mixed` runs the
+/// bandwidth-bound phases (QR + bidiagonalisation front end, ormqr/ormlq
+/// back-transforms) in f32 and promotes the BDC core (secular solve +
+/// singular-vector assembly) to f64, then applies one f64 Newton-type
+/// refinement of the computed triplets against the original f64 input —
+/// near-f64 residuals at f32 bandwidth (DESIGN.md §Scalar layer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    F32,
+    #[default]
+    F64,
+    Mixed,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" | "F32" | "single" => Some(Precision::F32),
+            "f64" | "F64" | "double" => Some(Precision::F64),
+            "mixed" | "Mixed" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DynVec — dtype-tagged host payload
+// ---------------------------------------------------------------------------
+
+/// A host vector with its dtype attached — the payload of device
+/// uploads/downloads and the staging pool (which is capped in *bytes*,
+/// so f32 and f64 buffers account correctly side by side).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DynVec {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I64(Vec<i64>),
+}
+
+impl DynVec {
+    pub fn dtype(&self) -> DType {
+        match self {
+            DynVec::F32(_) => DType::F32,
+            DynVec::F64(_) => DType::F64,
+            DynVec::I64(_) => DType::I64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DynVec::F32(v) => v.len(),
+            DynVec::F64(v) => v.len(),
+            DynVec::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload size in bytes (length, not capacity).
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    /// Allocated size in bytes — what the staging-pool cap counts.
+    pub fn capacity_bytes(&self) -> usize {
+        let cap = match self {
+            DynVec::F32(v) => v.capacity(),
+            DynVec::F64(v) => v.capacity(),
+            DynVec::I64(v) => v.capacity(),
+        };
+        cap * self.dtype().size_bytes()
+    }
+
+    /// Element capacity of the underlying allocation.
+    pub fn capacity(&self) -> usize {
+        match self {
+            DynVec::F32(v) => v.capacity(),
+            DynVec::F64(v) => v.capacity(),
+            DynVec::I64(v) => v.capacity(),
+        }
+    }
+
+    /// The elements as f64 (converting f32/i64) — diagnostics only; the
+    /// hot paths unwrap through [`Scalar::take_vec`] without copies.
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            DynVec::F32(v) => v.iter().map(|&x| f64::from(x)).collect(),
+            DynVec::F64(v) => v.clone(),
+            #[allow(clippy::cast_precision_loss)]
+            DynVec::I64(v) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Consuming [`to_f64_vec`](DynVec::to_f64_vec): the f64 arm moves
+    /// the vector through without copying.
+    pub fn into_f64_vec(self) -> Vec<f64> {
+        match self {
+            DynVec::F64(v) => v,
+            other => other.to_f64_vec(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar — the generic element trait
+// ---------------------------------------------------------------------------
+
+/// A real scalar the whole stack can be instantiated over (f32/f64).
+///
+/// The arithmetic super-traits let generic kernels read like their f64
+/// originals; the associated constants replace the hard-coded f64
+/// epsilons/guards; the `DynVec` plumbing lets monomorphic device code
+/// carry generic payloads without one enum match per call site.
+pub trait Scalar:
+    Copy
+    + Clone
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + fmt::Debug
+    + fmt::Display
+    + fmt::LowerExp
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + std::ops::DivAssign
+    + std::iter::Sum
+{
+    const DTYPE: DType;
+    const ZERO: Self;
+    const ONE: Self;
+    /// Machine epsilon of the dtype (distance 1.0 -> next float).
+    const EPSILON: Self;
+    /// Smallest positive normal (LAPACK's safe minimum analogue).
+    const SAFE_MIN: Self;
+    /// Underflow guard for denominators (the f64 code's `1e-300`).
+    const TINY: Self;
+    /// Overflow stand-in for 1/0 style sentinels (the f64 code's `1e300`).
+    const BIG: Self;
+
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn hypot(self, other: Self) -> Self;
+    /// `max` under the float total-order convention LAPACK uses
+    /// (NaN-propagation is irrelevant here; named to avoid clashing
+    /// with `Ord::max`).
+    fn maxv(self, other: Self) -> Self;
+    fn minv(self, other: Self) -> Self;
+    fn recip(self) -> Self;
+    fn is_finite(self) -> bool;
+
+    // ---- DynVec plumbing ----
+    fn wrap_vec(v: Vec<Self>) -> DynVec;
+    fn slice_of(d: &DynVec) -> Option<&[Self]>;
+    fn take_vec(d: DynVec) -> Result<Vec<Self>, DynVec>;
+
+    fn vec_to_f64(v: &[Self]) -> Vec<f64> {
+        v.iter().map(|&x| x.to_f64()).collect()
+    }
+
+    fn vec_from_f64(v: &[f64]) -> Vec<Self> {
+        v.iter().map(|&x| Self::from_f64(x)).collect()
+    }
+}
+
+macro_rules! impl_scalar {
+    ($t:ty, $dtype:expr, $variant:ident, $eps:expr, $safe_min:expr, $tiny:expr, $big:expr) => {
+        impl Scalar for $t {
+            const DTYPE: DType = $dtype;
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const EPSILON: Self = $eps;
+            const SAFE_MIN: Self = $safe_min;
+            const TINY: Self = $tiny;
+            const BIG: Self = $big;
+
+            #[inline]
+            #[allow(clippy::cast_possible_truncation)]
+            fn from_f64(x: f64) -> Self {
+                x as $t
+            }
+            #[inline]
+            fn to_f64(self) -> f64 {
+                f64::from(self)
+            }
+            #[inline]
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            #[inline]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline]
+            fn hypot(self, other: Self) -> Self {
+                <$t>::hypot(self, other)
+            }
+            #[inline]
+            fn maxv(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            #[inline]
+            fn minv(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+            #[inline]
+            fn recip(self) -> Self {
+                <$t>::recip(self)
+            }
+            #[inline]
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+
+            fn wrap_vec(v: Vec<Self>) -> DynVec {
+                DynVec::$variant(v)
+            }
+            fn slice_of(d: &DynVec) -> Option<&[Self]> {
+                match d {
+                    DynVec::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+            fn take_vec(d: DynVec) -> Result<Vec<Self>, DynVec> {
+                match d {
+                    DynVec::$variant(v) => Ok(v),
+                    other => Err(other),
+                }
+            }
+        }
+    };
+}
+
+impl_scalar!(f32, DType::F32, F32, f32::EPSILON, f32::MIN_POSITIVE, 1e-30, 1e30);
+impl_scalar!(f64, DType::F64, F64, f64::EPSILON, f64::MIN_POSITIVE, 1e-300, 1e300);
+
+/// Element-wise dtype cast (one rounding per element when narrowing).
+pub fn cast_vec<A: Scalar, B: Scalar>(v: &[A]) -> Vec<B> {
+    v.iter().map(|&x| B::from_f64(x.to_f64())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes_and_names() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F64.size_bytes(), 8);
+        assert_eq!(DType::I64.size_bytes(), 8);
+        assert_eq!(DType::F32.name(), "f32");
+        assert_eq!(format!("{}", DType::F64), "f64");
+    }
+
+    #[test]
+    fn precision_parse_roundtrips() {
+        for p in [Precision::F32, Precision::F64, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn dynvec_byte_accounting() {
+        let v = DynVec::F32(Vec::with_capacity(10));
+        assert_eq!(v.len(), 0);
+        assert_eq!(v.byte_len(), 0);
+        assert_eq!(v.capacity_bytes(), 40);
+        let v = DynVec::F64(vec![0.0; 6]);
+        assert_eq!(v.byte_len(), 48);
+        let v = DynVec::I64(vec![0; 3]);
+        assert_eq!(v.byte_len(), 24);
+    }
+
+    #[test]
+    fn scalar_plumbing_roundtrips() {
+        fn roundtrip<S: Scalar>() {
+            let v: Vec<S> = S::vec_from_f64(&[1.0, 2.5, -3.0]);
+            let d = S::wrap_vec(v.clone());
+            assert_eq!(d.dtype(), S::DTYPE);
+            assert_eq!(S::slice_of(&d).unwrap(), &v[..]);
+            assert_eq!(S::take_vec(d).unwrap(), v);
+            assert_eq!(S::vec_to_f64(&v), vec![1.0, 2.5, -3.0]);
+        }
+        roundtrip::<f32>();
+        roundtrip::<f64>();
+        // cross-dtype unwrap fails instead of transmuting
+        assert!(f32::slice_of(&DynVec::F64(vec![1.0])).is_none());
+        assert!(f64::take_vec(DynVec::F32(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn guards_are_dtype_scaled() {
+        assert!(f32::TINY.to_f64() > f64::TINY.to_f64());
+        assert!(f32::BIG.to_f64() < f64::BIG.to_f64());
+        assert!(f32::EPSILON.to_f64() > f64::EPSILON.to_f64());
+        let c: Vec<f32> = cast_vec::<f64, f32>(&[1.0, 0.5]);
+        assert_eq!(c, vec![1.0f32, 0.5f32]);
+    }
+}

@@ -26,7 +26,7 @@ pub fn gesvd_bdc_v1(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult>
     let a_dev = dev.upload(a.data.clone(), &[m, n]);
     let (r_or_a, q_thin) = if m > n {
         let t0 = std::time::Instant::now();
-        let f = crate::svd::qr::geqrf_device(dev, a_dev, m, n, b)?;
+        let f = crate::svd::qr::geqrf_device::<f64>(dev, a_dev, m, n, b)?;
         dev.sync()?;
         profile.record("geqrf", t0.elapsed().as_secs_f64(), "gpu");
         let t1 = std::time::Instant::now();
@@ -47,7 +47,7 @@ pub fn gesvd_bdc_v1(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult>
     };
 
     let t2 = std::time::Instant::now();
-    let fac = crate::svd::gebrd::gebrd_device(dev, r_or_a, n, n, b, &cfg.kernel)?;
+    let fac = crate::svd::gebrd::gebrd_device::<f64>(dev, r_or_a, n, n, b, &cfg.kernel)?;
     dev.sync()?;
     profile.record("gebrd", t2.elapsed().as_secs_f64(), "gpu");
 
@@ -104,7 +104,7 @@ pub fn gesvd_bdc_v1(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult>
 pub fn gesvd(dev: &Device, a: &Matrix, cfg: &Config, solver: Solver) -> Result<SvdResult> {
     dev.reset_transfer_stats();
     match solver {
-        Solver::Ours => crate::svd::gesdd::gesdd_ours(dev, a, cfg),
+        Solver::Ours => crate::svd::gesdd::gesdd_ours_prec(dev, a, cfg),
         Solver::RocSolverSim => rocsolver_sim::gesvd_rocsolver_sim(dev, a, cfg),
         Solver::MagmaSim => magma_sim::gesvd_magma_sim(dev, a, cfg),
         Solver::BdcV1 => gesvd_bdc_v1(dev, a, cfg),

@@ -4,21 +4,27 @@
 //! merged-rank-(2b) trailing update (gemm x1) — runs on the device with A
 //! resident in one chained buffer; only the 4b-element bidiagonal/tau
 //! header crosses to the host per panel.
+//!
+//! Generic over [`Scalar`] (DESIGN.md §Scalar layer): the reduction runs
+//! at the caller's compute dtype; [`DeviceGebrd::bidiagonal`] promotes
+//! the d/e scalars to f64, because the BDC tree on the host always
+//! solves the secular equations in double precision.
 
 use anyhow::Result;
 
 use crate::matrix::Bidiagonal;
 use crate::runtime::{BufId, Device};
+use crate::scalar::Scalar;
 
 /// Device-resident gebrd result.
-pub struct DeviceGebrd {
+pub struct DeviceGebrd<S = f64> {
     /// Packed factor (reflectors in A, LAPACK layout) — stays on device
     /// for the ormqr/ormlq back-transforms.
     pub afac: BufId,
-    pub d: Vec<f64>,
-    pub e: Vec<f64>,
-    pub tauq: Vec<f64>,
-    pub taup: Vec<f64>,
+    pub d: Vec<S>,
+    pub e: Vec<S>,
+    pub tauq: Vec<S>,
+    pub taup: Vec<S>,
 }
 
 /// Run gebrd on the device. `a` must already be a device buffer (m x n);
@@ -26,14 +32,14 @@ pub struct DeviceGebrd {
 ///
 /// `kernel`: "pallas" uses the L1 merged-update kernel, "xla" the XLA-dot
 /// vendor-BLAS analogue (same math — see Fig. 5 benches).
-pub fn gebrd_device(
+pub fn gebrd_device<S: Scalar>(
     dev: &Device,
     a: BufId,
     m: usize,
     n: usize,
     b: usize,
     kernel: &str,
-) -> Result<DeviceGebrd> {
+) -> Result<DeviceGebrd<S>> {
     let update_op = if kernel == "pallas" { "gebrd_update" } else { "gebrd_update_xla" };
     gebrd_device_with(dev, a, m, n, b, update_op)
 }
@@ -42,20 +48,20 @@ pub fn gebrd_device(
 /// * `gebrd_update`      — merged gemm x1 via the L1 Pallas kernel
 /// * `gebrd_update_xla`  — merged gemm x1 via XLA dot (vendor BLAS analogue)
 /// * `gebrd_update2_ws`  — NON-merged gemm x2 (rocSOLVER/LAPACK baseline)
-pub fn gebrd_device_with(
+pub fn gebrd_device_with<S: Scalar>(
     dev: &Device,
     a: BufId,
     m: usize,
     n: usize,
     b: usize,
     update_op: &str,
-) -> Result<DeviceGebrd> {
+) -> Result<DeviceGebrd<S>> {
     assert!(m >= n && b >= 1 && b <= n, "gebrd_device needs m>=n, 1<=b<=n");
 
-    let mut d = vec![0.0; n];
-    let mut e = vec![0.0; n.saturating_sub(1)];
-    let mut tauq = vec![0.0; n];
-    let mut taup = vec![0.0; n];
+    let mut d = vec![S::ZERO; n];
+    let mut e = vec![S::ZERO; n.saturating_sub(1)];
+    let mut tauq = vec![S::ZERO; n];
+    let mut taup = vec![S::ZERO; n];
 
     // Enqueue the whole panel chain without a single host synchronisation
     // (the command queue pipelines every panel); the 4b-element headers
@@ -69,13 +75,13 @@ pub fn gebrd_device_with(
         let bb = b.min(n - t);
         let p = [("m", m as i64), ("n", n as i64), ("b", bb as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let ws = dev.op("labrd", &p, &[a_cur, tb]);
+        let ws = dev.op_t::<S>("labrd", &p, &[a_cur, tb]);
         dev.free(a_cur);
-        heads.push((t, bb, dev.op("ws_head", &p, &[ws])));
+        heads.push((t, bb, dev.op_t::<S>("ws_head", &p, &[ws])));
         if t + bb < n {
-            a_cur = dev.op(update_op, &p, &[ws, tb]);
+            a_cur = dev.op_t::<S>(update_op, &p, &[ws, tb]);
         } else {
-            a_cur = dev.op("extract_a", &p, &[ws]);
+            a_cur = dev.op_t::<S>("extract_a", &p, &[ws]);
         }
         dev.free(ws);
         dev.free(tb);
@@ -87,7 +93,7 @@ pub fn gebrd_device_with(
     let mut fail: Option<anyhow::Error> = None;
     let mut parsed = Vec::with_capacity(heads.len());
     for (t, bb, head) in heads {
-        let r = dev.read(head);
+        let r = dev.read_t::<S>(head);
         dev.free(head);
         match r {
             Ok(h) => parsed.push((t, bb, h)),
@@ -107,38 +113,41 @@ pub fn gebrd_device_with(
         }
         tauq[t..t + bb].copy_from_slice(&h[2 * bb..3 * bb]);
         taup[t..t + bb].copy_from_slice(&h[3 * bb..4 * bb]);
-        dev.recycle(h);
+        dev.recycle_t(h);
     }
 
     Ok(DeviceGebrd { afac: a_cur, d, e, tauq, taup })
 }
 
-impl DeviceGebrd {
+impl<S: Scalar> DeviceGebrd<S> {
+    /// The bidiagonal in f64 — the BDC host tree always runs in double
+    /// precision, whatever dtype produced d/e.
     pub fn bidiagonal(&self) -> Bidiagonal {
-        Bidiagonal::new(self.d.clone(), self.e.clone())
+        Bidiagonal::new(S::vec_to_f64(&self.d), S::vec_to_f64(&self.e))
     }
 }
 
 /// Host-side scalars of one lane of a fused gebrd run (the packed
 /// factor stack stays on device — see [`DeviceGebrdK`]).
-pub struct GebrdFactors {
-    pub d: Vec<f64>,
-    pub e: Vec<f64>,
-    pub tauq: Vec<f64>,
-    pub taup: Vec<f64>,
+pub struct GebrdFactors<S = f64> {
+    pub d: Vec<S>,
+    pub e: Vec<S>,
+    pub tauq: Vec<S>,
+    pub taup: Vec<S>,
 }
 
-impl GebrdFactors {
+impl<S: Scalar> GebrdFactors<S> {
+    /// See [`DeviceGebrd::bidiagonal`]: always f64 for the host tree.
     pub fn bidiagonal(&self) -> Bidiagonal {
-        Bidiagonal::new(self.d.clone(), self.e.clone())
+        Bidiagonal::new(S::vec_to_f64(&self.d), S::vec_to_f64(&self.e))
     }
 }
 
 /// Device-resident result of a fused k-wide gebrd: ONE packed
 /// `[k, m, n]` factor stack plus each lane's bidiagonal/tau scalars.
-pub struct DeviceGebrdK {
+pub struct DeviceGebrdK<S = f64> {
     pub afacs: BufId,
-    pub facs: Vec<GebrdFactors>,
+    pub facs: Vec<GebrdFactors<S>>,
 }
 
 /// Fused gebrd over a packed `[lanes, m, n]` stack `a` (consumed). The
@@ -148,7 +157,7 @@ pub struct DeviceGebrdK {
 /// the op count is lane-count-independent. The host arms share their
 /// inner loops with the scalar ops, making lane `l` bit-identical to
 /// [`gebrd_device`] on lane `l` alone.
-pub fn gebrd_device_k(
+pub fn gebrd_device_k<S: Scalar>(
     dev: &Device,
     a: BufId,
     lanes: usize,
@@ -156,7 +165,7 @@ pub fn gebrd_device_k(
     n: usize,
     b: usize,
     kernel: &str,
-) -> Result<DeviceGebrdK> {
+) -> Result<DeviceGebrdK<S>> {
     assert!(m >= n && b >= 1 && b <= n, "gebrd_device_k needs m>=n, 1<=b<=n");
     let update_op = if kernel == "pallas" { "gebrd_update_k" } else { "gebrd_update_xla_k" };
 
@@ -167,13 +176,13 @@ pub fn gebrd_device_k(
         let bb = b.min(n - t);
         let p = [("b", bb as i64), ("k", lanes as i64), ("m", m as i64), ("n", n as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let ws = dev.op("labrd_k", &p, &[a_cur, tb]);
+        let ws = dev.op_t::<S>("labrd_k", &p, &[a_cur, tb]);
         dev.free(a_cur);
-        heads.push((t, bb, dev.op("ws_head_k", &p, &[ws])));
+        heads.push((t, bb, dev.op_t::<S>("ws_head_k", &p, &[ws])));
         if t + bb < n {
-            a_cur = dev.op(update_op, &p, &[ws, tb]);
+            a_cur = dev.op_t::<S>(update_op, &p, &[ws, tb]);
         } else {
-            a_cur = dev.op("extract_a_k", &p, &[ws]);
+            a_cur = dev.op_t::<S>("extract_a_k", &p, &[ws]);
         }
         dev.free(ws);
         dev.free(tb);
@@ -185,7 +194,7 @@ pub fn gebrd_device_k(
     let mut fail: Option<anyhow::Error> = None;
     let mut parsed = Vec::with_capacity(heads.len());
     for (t, bb, head) in heads {
-        let r = dev.read(head);
+        let r = dev.read_t::<S>(head);
         dev.free(head);
         match r {
             Ok(h) => parsed.push((t, bb, h)),
@@ -196,12 +205,12 @@ pub fn gebrd_device_k(
         dev.free(a_cur);
         return Err(err);
     }
-    let mut facs: Vec<GebrdFactors> = (0..lanes)
+    let mut facs: Vec<GebrdFactors<S>> = (0..lanes)
         .map(|_| GebrdFactors {
-            d: vec![0.0; n],
-            e: vec![0.0; n.saturating_sub(1)],
-            tauq: vec![0.0; n],
-            taup: vec![0.0; n],
+            d: vec![S::ZERO; n],
+            e: vec![S::ZERO; n.saturating_sub(1)],
+            tauq: vec![S::ZERO; n],
+            taup: vec![S::ZERO; n],
         })
         .collect();
     for (t, bb, h) in parsed {
@@ -216,7 +225,7 @@ pub fn gebrd_device_k(
             fac.tauq[t..t + bb].copy_from_slice(&hl[2 * bb..3 * bb]);
             fac.taup[t..t + bb].copy_from_slice(&hl[3 * bb..4 * bb]);
         }
-        dev.recycle(h);
+        dev.recycle_t(h);
     }
 
     Ok(DeviceGebrdK { afacs: a_cur, facs })

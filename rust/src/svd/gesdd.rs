@@ -6,6 +6,21 @@
 //!
 //! with every phase device-resident and the BDC running hybrid
 //! (CPU deflation/secular roots, device vectors) — Fig. 1's "our" row.
+//!
+//! Generic over [`Scalar`] (DESIGN.md §Scalar layer): `gesdd_ours_t::<S>`
+//! runs the whole device pipeline at dtype `S` (the host BDC tree always
+//! solves in f64 — `DeviceGebrd::bidiagonal` promotes, the engines
+//! convert once at the upload boundary). Three public entry points:
+//!
+//!   * [`gesdd_ours`]        — f64 (the original pipeline, a thin wrapper)
+//!   * [`gesdd_ours_t`]      — any `S`: f32 moves half the bytes everywhere
+//!   * [`gesdd_ours_mixed`]  — f32 front end + back-transforms around an
+//!     f64 BDC core, then one f64 refinement sweep of the computed
+//!     triplets against the original input ([`refine_mixed`]): near-f64
+//!     sigma at f32 bandwidth.
+//!
+//! plus [`gesdd_ours_prec`] / [`gesdd_ours_fused_prec`] dispatching on
+//! `cfg.precision` for the batch layer.
 
 use anyhow::{Context, Result};
 
@@ -16,13 +31,16 @@ use crate::matrix::{Bidiagonal, Matrix};
 use crate::runtime::bdc_engine::DeviceEngine;
 use crate::runtime::bdc_engine_k::DeviceEngineK;
 use crate::runtime::{BufId, Device, COMPUTE, TRANSFER};
+use crate::scalar::{Precision, Scalar};
 use crate::svd::gebrd::{gebrd_device, gebrd_device_k, DeviceGebrd, GebrdFactors};
 use crate::svd::qr::{
     geqrf_device, geqrf_device_k, orgqr_device, orgqr_device_k, ormlq_device, ormlq_device_k,
     ormqr_device, ormqr_device_k,
 };
 
-/// Full SVD result: A = U diag(sigma) V^T, sigma DESCENDING.
+/// Full SVD result: A = U diag(sigma) V^T, sigma DESCENDING. Always
+/// f64 on the host whatever dtype computed it (the compute dtype shows
+/// up only in the residual, not the API).
 pub struct SvdResult {
     pub sigma: Vec<f64>,
     pub u: Matrix,
@@ -33,14 +51,16 @@ pub struct SvdResult {
 /// Device-resident state after the pre-BDC phases of one solve: the
 /// gebrd factor (plus, on the TS path, the thin Q) and the phase times
 /// recorded so far. Shared by the per-solve and fused drivers.
-struct FrontEnd {
-    fac: DeviceGebrd,
+struct FrontEnd<S = f64> {
+    fac: DeviceGebrd<S>,
     q_thin: Option<BufId>,
     profile: PhaseProfile,
 }
 
-/// Upload + (TS: geqrf/orgqr + R re-upload) + gebrd for one input.
-fn front_end(dev: &Device, a: &Matrix, cfg: &Config) -> Result<FrontEnd> {
+/// Upload + (TS: geqrf/orgqr + R re-upload) + gebrd for one input. The
+/// f64 host input is converted to `S` exactly once, at the upload
+/// boundary; everything after is dtype-`S` device traffic.
+fn front_end<S: Scalar>(dev: &Device, a: &Matrix, cfg: &Config) -> Result<FrontEnd<S>> {
     let (m, n) = (a.rows, a.cols);
     let mut profile = PhaseProfile::default();
     // clamp the block to the problem; the phase drivers handle the ragged
@@ -50,14 +70,14 @@ fn front_end(dev: &Device, a: &Matrix, cfg: &Config) -> Result<FrontEnd> {
     // initial upload: input handoff, not a pipeline transfer. The copy
     // lives in a staged vector so back-to-back solves on one device (a
     // pool worker walking a bucket) recycle the allocation.
-    let a_dev = dev.upload(dev.stage(&a.data), &[m, n]);
+    let a_dev = dev.upload_f64_as::<S>(dev.stage(&a.data), &[m, n]);
 
     let (r_or_a, q_thin): (BufId, Option<BufId>) = if m > n {
         // ---- TS path: QR first (Chan). Error paths free whatever is
         // still device-resident — the device is a persistent pool
         // worker, not a per-solve throwaway. ----
         let t0 = std::time::Instant::now();
-        let f = geqrf_device(dev, a_dev, m, n, b)?;
+        let f = geqrf_device::<S>(dev, a_dev, m, n, b)?;
         if let Err(e) = dev.sync() {
             dev.free(f.afac);
             return Err(e);
@@ -74,8 +94,9 @@ fn front_end(dev: &Device, a: &Matrix, cfg: &Config) -> Result<FrontEnd> {
         profile.record("orgqr", t1.elapsed().as_secs_f64(), "gpu");
 
         // R = triu of the factor's top n x n — materialise on host (n^2,
-        // small next to A) and re-upload as the square SVD input.
-        let afac_host = dev.read(f.afac);
+        // small next to A) and re-upload as the square SVD input. The
+        // triangle stays in `S` end to end (no round-trip through f64).
+        let afac_host = dev.read_t::<S>(f.afac);
         dev.free(f.afac);
         let afac_host = match afac_host {
             Ok(h) => h,
@@ -84,14 +105,14 @@ fn front_end(dev: &Device, a: &Matrix, cfg: &Config) -> Result<FrontEnd> {
                 return Err(e);
             }
         };
-        let mut r = dev.stage_zeroed(n * n);
+        let mut r = dev.stage_zeroed_t::<S>(n * n);
         for i in 0..n {
             for j in i..n {
                 r[i * n + j] = afac_host[i * n + j];
             }
         }
-        dev.recycle(afac_host);
-        let r_dev = dev.upload(r, &[n, n]);
+        dev.recycle_t(afac_host);
+        let r_dev = dev.upload_t(r, &[n, n]);
         (r_dev, Some(q))
     } else {
         (a_dev, None)
@@ -99,7 +120,7 @@ fn front_end(dev: &Device, a: &Matrix, cfg: &Config) -> Result<FrontEnd> {
 
     // ---- bidiagonalisation (square n x n now) ----
     let t2 = std::time::Instant::now();
-    let fac = match gebrd_device(dev, r_or_a, n, n, b, &cfg.kernel) {
+    let fac = match gebrd_device::<S>(dev, r_or_a, n, n, b, &cfg.kernel) {
         Ok(fac) => fac,
         Err(e) => {
             if let Some(q) = q_thin {
@@ -120,11 +141,12 @@ fn front_end(dev: &Device, a: &Matrix, cfg: &Config) -> Result<FrontEnd> {
 }
 
 /// Back-transforms + the TS final gemm + result download for one solve
-/// whose BDC output (U2, V2) is already on the device. Consumes the
-/// gebrd factor buffer and `q_thin`.
-fn back_end(
+/// whose BDC output (U2, V2) is already on the device **at dtype `S`**.
+/// Consumes the gebrd factor buffer and `q_thin`.
+#[allow(clippy::too_many_arguments)]
+fn back_end<S: Scalar>(
     dev: &Device,
-    fac: &DeviceGebrd,
+    fac: &DeviceGebrd<S>,
     q_thin: Option<BufId>,
     u2: BufId,
     v2: BufId,
@@ -151,7 +173,7 @@ fn back_end(
     // ---- TS final gemm: U = Q U0 (device) ----
     let (u_final, v_final) = if let Some(q) = q_thin {
         let t5 = std::time::Instant::now();
-        let u = dev.op(
+        let u = dev.op_t::<S>(
             "gemm",
             &[("m", m as i64), ("k", n as i64), ("n", n as i64)],
             &[q, u2],
@@ -171,11 +193,14 @@ fn back_end(
 
     // ---- result download (the unavoidable final handoff); the buffers
     // are released whether or not the reads succeed ----
-    let u_host = dev.read(u_final);
-    let v_host = dev.read(v_final);
+    let u_host = dev.read_t::<S>(u_final);
+    let v_host = dev.read_t::<S>(v_final);
     dev.free(u_final);
     dev.free(v_final);
-    Ok((Matrix::from_rows(m, n, u_host?), Matrix::from_rows(n, n, v_host?)))
+    Ok((
+        Matrix::from_rows(m, n, S::wrap_vec(u_host?).into_f64_vec()),
+        Matrix::from_rows(n, n, S::wrap_vec(v_host?).into_f64_vec()),
+    ))
 }
 
 /// Charge a shared k-wide phase wall to lane 0's profile (the
@@ -191,10 +216,10 @@ fn record_shared(profiles: &mut [PhaseProfile], phase: &str, dt: f64, loc: &str)
 /// ONE packed `[k, n, n]` gebrd factor stack (plus, on the TS path, the
 /// packed `[k, m, n]` thin-Q stack), each lane's bidiagonal/tau
 /// scalars, and the per-lane phase profiles (shared walls on lane 0).
-struct FrontEndK {
+struct FrontEndK<S = f64> {
     afacs: BufId,
     q_thin: Option<BufId>,
-    facs: Vec<GebrdFactors>,
+    facs: Vec<GebrdFactors<S>>,
     profiles: Vec<PhaseProfile>,
 }
 
@@ -206,8 +231,9 @@ struct FrontEndK {
 /// extraction is ONE stacked D2H read (recycled into the staging pool)
 /// and ONE re-upload of the packed `[k, n, n]` R stack. Lane `l` stays
 /// bit-identical to [`front_end`] on input `l` alone because the k-wide
-/// host arms share their inner loops with the scalar ops.
-fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEndK> {
+/// host arms share their inner loops with the scalar ops — and because
+/// both paths convert f64 -> `S` at the same (upload) boundary.
+fn front_end_k<S: Scalar>(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEndK<S>> {
     let lanes = inputs.len();
     let (m, n) = (inputs[0].rows, inputs[0].cols);
     let b = cfg.block.clamp(1, n);
@@ -226,7 +252,7 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
         let staged: Vec<Vec<f64>> = inputs.iter().map(|a| dev.stage(&a.data)).collect();
         let ids: Vec<BufId> = staged
             .into_iter()
-            .map(|s| dev.upload_on(TRANSFER, s, &[m, n]))
+            .map(|s| dev.upload_f64_as_on::<S>(TRANSFER, s, &[m, n]))
             .collect();
         let ev = dev.record_event(TRANSFER);
         dev.wait_event(COMPUTE, ev);
@@ -234,10 +260,10 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
     } else {
         inputs
             .iter()
-            .map(|a| dev.upload(dev.stage(&a.data), &[m, n]))
+            .map(|a| dev.upload_f64_as::<S>(dev.stage(&a.data), &[m, n]))
             .collect()
     };
-    let astack = dev.op(
+    let astack = dev.op_t::<S>(
         "stack_k",
         &[("k", lanes as i64), ("len", (m * n) as i64)],
         &ids,
@@ -251,7 +277,7 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
         // whatever is still device-resident — the device is a
         // persistent pool worker, not a per-solve throwaway. ----
         let t0 = std::time::Instant::now();
-        let f = geqrf_device_k(dev, astack, lanes, m, n, b)?;
+        let f = geqrf_device_k::<S>(dev, astack, lanes, m, n, b)?;
         if let Err(e) = dev.sync() {
             dev.free(f.afacs);
             return Err(e);
@@ -275,8 +301,9 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
 
         // R_l = triu of lane l's factor top n x n — ONE stacked D2H
         // read for the bucket; the big readback vector goes back to the
-        // staging pool once the triangles are extracted
-        let afac_host = dev.read(f.afacs);
+        // staging pool once the triangles are extracted. The triangles
+        // stay in `S` end to end (no round-trip through f64).
+        let afac_host = dev.read_t::<S>(f.afacs);
         dev.free(f.afacs);
         let afac_host = match afac_host {
             Ok(h) => h,
@@ -285,7 +312,7 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
                 return Err(e);
             }
         };
-        let mut r = dev.stage_zeroed(lanes * n * n);
+        let mut r = dev.stage_zeroed_t::<S>(lanes * n * n);
         for l in 0..lanes {
             for i in 0..n {
                 for j in i..n {
@@ -293,16 +320,16 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
                 }
             }
         }
-        dev.recycle(afac_host);
+        dev.recycle_t(afac_host);
         // the packed R stack re-upload likewise rides the transfer
         // stream, overlapping whatever gebrd work gets queued next
         let r_dev = if cfg.streams {
-            let id = dev.upload_on(TRANSFER, r, &[lanes, n, n]);
+            let id = dev.upload_t_on(TRANSFER, r, &[lanes, n, n]);
             let ev = dev.record_event(TRANSFER);
             dev.wait_event(COMPUTE, ev);
             id
         } else {
-            dev.upload(r, &[lanes, n, n])
+            dev.upload_t(r, &[lanes, n, n])
         };
         (r_dev, Some(q))
     } else {
@@ -311,7 +338,7 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
 
     // ---- k-wide bidiagonalisation (square [k, n, n] stack now) ----
     let t2 = std::time::Instant::now();
-    let fk = match gebrd_device_k(dev, r_or_a, lanes, n, n, b, &cfg.kernel) {
+    let fk = match gebrd_device_k::<S>(dev, r_or_a, lanes, n, n, b, &cfg.kernel) {
         Ok(fk) => fk,
         Err(e) => {
             if let Some(q) = q_thin {
@@ -333,20 +360,21 @@ fn front_end_k(dev: &Device, inputs: &[&Matrix], cfg: &Config) -> Result<FrontEn
 
 /// k-wide back-transforms + the TS final gemm + ONE stacked download per
 /// matrix family for a fused bucket whose packed BDC output (`pu`, `pv`,
-/// both `[k, n, n]`) is already on the device. The gebrd factors arrive
-/// pre-packed from the fused front end (`afacs`, `[k, n, n]`; the TS
-/// thin Qs likewise as `q_thin`, `[k, m, n]`) and every panel step is a
-/// single k-wide op (`ormqr_step_k` / `ormlq_step_k`, then `q_gemm_k` on
-/// the TS path), so the whole post-BDC phase issues one op stream per
-/// panel instead of per lane. Consumes `pu`/`pv`/`afacs`/`q_thin` on all
-/// paths; the shared phase walls are charged to lane 0's profile.
-/// Returns per-lane (U, V) in lane order.
+/// both `[k, n, n]` **at dtype `S`**) is already on the device. The
+/// gebrd factors arrive pre-packed from the fused front end (`afacs`,
+/// `[k, n, n]`; the TS thin Qs likewise as `q_thin`, `[k, m, n]`) and
+/// every panel step is a single k-wide op (`ormqr_step_k` /
+/// `ormlq_step_k`, then `q_gemm_k` on the TS path), so the whole
+/// post-BDC phase issues one op stream per panel instead of per lane.
+/// Consumes `pu`/`pv`/`afacs`/`q_thin` on all paths; the shared phase
+/// walls are charged to lane 0's profile. Returns per-lane (U, V) in
+/// lane order.
 #[allow(clippy::too_many_arguments)]
-fn back_end_k(
+fn back_end_k<S: Scalar>(
     dev: &Device,
     afacs: BufId,
     q_thin: Option<BufId>,
-    facs: &[GebrdFactors],
+    facs: &[GebrdFactors<S>],
     profiles: &mut [PhaseProfile],
     pu: BufId,
     pv: BufId,
@@ -361,8 +389,8 @@ fn back_end_k(
     // The chain drivers are currently infallible, but a failure must
     // still release everything the solve owns (the device is a
     // persistent pool worker — the "on all paths" contract above). ----
-    let tauqs: Vec<&[f64]> = facs.iter().map(|f| f.tauq.as_slice()).collect();
-    let taups: Vec<&[f64]> = facs.iter().map(|f| f.taup.as_slice()).collect();
+    let tauqs: Vec<&[S]> = facs.iter().map(|f| f.tauq.as_slice()).collect();
+    let taups: Vec<&[S]> = facs.iter().map(|f| f.taup.as_slice()).collect();
     let u2 = match ormqr_device_k(dev, afacs, &tauqs, pu, n, b) {
         Ok(u2) => u2,
         Err(e) => {
@@ -395,7 +423,7 @@ fn back_end_k(
     // either the bucket has a Q stack or none does) ----
     let (u_final, urows) = if let Some(qs) = q_thin {
         let t5 = std::time::Instant::now();
-        let u = dev.op(
+        let u = dev.op_t::<S>(
             "q_gemm_k",
             &[("k", lanes as i64), ("m", m as i64), ("n", n as i64)],
             &[qs, u2],
@@ -416,8 +444,8 @@ fn back_end_k(
     // ---- stacked result download: one D2H read per matrix family for
     // the whole bucket (the per-lane reads collapse too); the buffers
     // are released whether or not the reads succeed ----
-    let u_host = dev.read(u_final);
-    let v_host = dev.read(v2);
+    let u_host = dev.read_t::<S>(u_final);
+    let v_host = dev.read_t::<S>(v2);
     dev.free(u_final);
     dev.free(v2);
     let (u_host, v_host) = (u_host?, v_host?);
@@ -427,29 +455,44 @@ fn back_end_k(
     );
     let mut out = Vec::with_capacity(lanes);
     for l in 0..lanes {
-        let u = Matrix::from_rows(urows, n, u_host[l * urows * n..(l + 1) * urows * n].to_vec());
-        let v = Matrix::from_rows(n, n, v_host[l * n * n..(l + 1) * n * n].to_vec());
+        let u = Matrix::from_rows(
+            urows,
+            n,
+            S::vec_to_f64(&u_host[l * urows * n..(l + 1) * urows * n]),
+        );
+        let v = Matrix::from_rows(n, n, S::vec_to_f64(&v_host[l * n * n..(l + 1) * n * n]));
         out.push((u, v));
     }
     // the large stacked D2H vectors go back to the staging pool: the
     // next fused bucket on this worker reuses them instead of
     // reallocating per result family (hits surface in `staging_hits`)
-    dev.recycle(u_host);
-    dev.recycle(v_host);
+    dev.recycle_t(u_host);
+    dev.recycle_t(v_host);
     Ok(out)
 }
 
 /// The paper's solver ("ours"). `a` is the host input (m x n, m >= n).
+/// f64 end to end — a thin wrapper over [`gesdd_ours_t`].
 pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
+    gesdd_ours_t::<f64>(dev, a, cfg)
+}
+
+/// The paper's solver at compute dtype `S`: the whole device pipeline
+/// (upload, QR, gebrd, BDC vector stacks, back-transforms, download)
+/// moves dtype-`S` bytes — f32 halves the traffic on every
+/// bandwidth-bound phase. The host BDC tree (deflation, secular roots)
+/// always solves in f64; dtype conversion happens exactly once, at the
+/// upload boundary.
+pub fn gesdd_ours_t<S: Scalar>(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
     let (m, n) = (a.rows, a.cols);
     anyhow::ensure!(m >= n, "gesdd requires m >= n (transpose first)");
     anyhow::ensure!(n >= 1, "gesdd requires a non-empty matrix");
     let b = cfg.block.clamp(1, n);
-    let FrontEnd { fac, q_thin, mut profile } = front_end(dev, a, cfg)?;
+    let FrontEnd { fac, q_thin, mut profile } = front_end::<S>(dev, a, cfg)?;
 
     // ---- BDC diagonalisation (hybrid, no matrix transfers) ----
     let t3 = std::time::Instant::now();
-    let mut engine = DeviceEngine::new(dev.clone());
+    let mut engine = DeviceEngine::<S>::new(dev.clone());
     let (sig_asc, _stats) = bdc_solve(&fac.bidiagonal(), &mut engine, cfg.leaf, cfg.threads);
     // a device error latched during the tree surfaces here — release
     // everything the solve still owns (the device is a persistent pool
@@ -473,6 +516,61 @@ pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
     finalize(sig_asc, u, v, profile)
 }
 
+/// Mixed-precision solve (DESIGN.md §Scalar layer): the bandwidth-bound
+/// phases (upload, QR, gebrd, back-transforms, download) run in f32 —
+/// half the bytes — while the accuracy-critical BDC core (secular
+/// solves + singular-vector assembly) runs in f64 on the promoted
+/// bidiagonal. The f64 U2/V2 stacks are demoted ON DEVICE by one `cast`
+/// op each (the mixed pipeline's only on-device dtype conversion), then
+/// the f32 back-transforms finish the solve and [`refine_mixed`]
+/// recomputes (sigma_j, u_j) in f64 against the original input: sigma
+/// comes back near-f64 at f32 front-end bandwidth.
+pub fn gesdd_ours_mixed(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
+    let (m, n) = (a.rows, a.cols);
+    anyhow::ensure!(m >= n, "gesdd requires m >= n (transpose first)");
+    anyhow::ensure!(n >= 1, "gesdd requires a non-empty matrix");
+    let b = cfg.block.clamp(1, n);
+    let FrontEnd { fac, q_thin, mut profile } = front_end::<f32>(dev, a, cfg)?;
+
+    // ---- BDC diagonalisation in f64 on the promoted bidiagonal ----
+    let t3 = std::time::Instant::now();
+    let mut engine = DeviceEngine::<f64>::new(dev.clone());
+    let (sig_asc, _stats) = bdc_solve(&fac.bidiagonal(), &mut engine, cfg.leaf, cfg.threads);
+    if let Err(e) = dev.sync() {
+        let (_, u2, v2) = engine.take();
+        dev.free(u2);
+        dev.free(v2);
+        dev.free(fac.afac);
+        if let Some(q) = q_thin {
+            dev.free(q);
+        }
+        return Err(e);
+    }
+    profile.record("bdcdc", t3.elapsed().as_secs_f64(), "hybrid");
+
+    // ---- demote U2/V2 to f32 on device, then f32 back-transforms ----
+    let (_, u2, v2) = engine.take();
+    let cp = [("len", (n * n) as i64)];
+    let u2c = dev.op_t::<f32>("cast", &cp, &[u2]);
+    let v2c = dev.op_t::<f32>("cast", &cp, &[v2]);
+    dev.free(u2);
+    dev.free(v2);
+    let (u, v) = back_end(dev, &fac, q_thin, u2c, v2c, m, n, b, &mut profile)?;
+
+    let mut res = finalize(sig_asc, u, v, profile)?;
+    refine_mixed(a, &mut res);
+    Ok(res)
+}
+
+/// Dispatch one solve on `cfg.precision` — the batch layer's entry.
+pub fn gesdd_ours_prec(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
+    match cfg.precision {
+        Precision::F64 => gesdd_ours_t::<f64>(dev, a, cfg),
+        Precision::F32 => gesdd_ours_t::<f32>(dev, a, cfg),
+        Precision::Mixed => gesdd_ours_mixed(dev, a, cfg),
+    }
+}
+
 /// The fused bucket solver: one call solves k same-shape inputs with a
 /// lane-count-independent device op stream end to end. The k-wide front
 /// end ([`front_end_k`]) packs the inputs into one `[k, m, n]` stack and
@@ -484,11 +582,17 @@ pub fn gesdd_ours(dev: &Device, a: &Matrix, cfg: &Config) -> Result<SvdResult> {
 /// stream per panel step for the whole bucket. Lane `l`'s result is
 /// bit-identical to `gesdd_ours` on input `l` alone. Returns the
 /// per-lane results in input order plus the fused-tree counters.
+/// f64 end to end — a thin wrapper over [`gesdd_ours_fused_t`].
 pub fn gesdd_ours_fused(
     dev: &Device,
     inputs: &[&Matrix],
     cfg: &Config,
 ) -> Result<(Vec<SvdResult>, BdcStatsK)> {
+    gesdd_ours_fused_t::<f64>(dev, inputs, cfg)
+}
+
+/// Bucket-shape checks shared by the fused drivers.
+fn check_bucket(inputs: &[&Matrix]) -> Result<(usize, usize)> {
     anyhow::ensure!(!inputs.is_empty(), "fused solve needs at least one input");
     let (m, n) = (inputs[0].rows, inputs[0].cols);
     for (i, a) in inputs.iter().enumerate() {
@@ -500,16 +604,29 @@ pub fn gesdd_ours_fused(
         );
     }
     anyhow::ensure!(m >= n && n >= 1, "gesdd requires m >= n >= 1");
+    Ok((m, n))
+}
+
+/// [`gesdd_ours_fused`] at compute dtype `S`: the packed stacks, every
+/// k-wide op and both stacked downloads move dtype-`S` bytes. Lane `l`
+/// stays bit-identical to `gesdd_ours_t::<S>` on input `l` alone — the
+/// fused/serial contract is per dtype.
+pub fn gesdd_ours_fused_t<S: Scalar>(
+    dev: &Device,
+    inputs: &[&Matrix],
+    cfg: &Config,
+) -> Result<(Vec<SvdResult>, BdcStatsK)> {
+    let (m, n) = check_bucket(inputs)?;
     let lanes = inputs.len();
     let b = cfg.block.clamp(1, n);
 
     // ---- k-wide front end: one op per panel step for the bucket ----
-    let mut fk = front_end_k(dev, inputs, cfg).context("fused front end")?;
+    let mut fk = front_end_k::<S>(dev, inputs, cfg).context("fused front end")?;
 
     // ---- ONE shared BDC tree for all lanes ----
     let t3 = std::time::Instant::now();
     let bds: Vec<Bidiagonal> = fk.facs.iter().map(GebrdFactors::bidiagonal).collect();
-    let mut engine = DeviceEngineK::new(dev.clone());
+    let mut engine = DeviceEngineK::<S>::new(dev.clone());
     let (sigs, kstats) = bdc_solve_k(&bds, &mut engine, cfg.leaf, cfg.threads);
     // DeviceEngineK defers its flush to this fallible sync, so a device
     // error latched during the tree surfaces as an Err here (not a
@@ -547,6 +664,131 @@ pub fn gesdd_ours_fused(
         results.push(finalize(sig_asc, u, v, profile)?);
     }
     Ok((results, kstats))
+}
+
+/// Mixed-precision fused bucket solve: f32 k-wide front end and
+/// back-transforms around the shared f64 BDC tree, ONE `cast` op per
+/// packed stack at the seam, then a per-lane [`refine_mixed`] sweep.
+/// Lane `l` matches [`gesdd_ours_mixed`] on input `l` alone.
+pub fn gesdd_ours_fused_mixed(
+    dev: &Device,
+    inputs: &[&Matrix],
+    cfg: &Config,
+) -> Result<(Vec<SvdResult>, BdcStatsK)> {
+    let (m, n) = check_bucket(inputs)?;
+    let lanes = inputs.len();
+    let b = cfg.block.clamp(1, n);
+
+    // ---- f32 k-wide front end: half the H2D + panel bytes ----
+    let mut fk = front_end_k::<f32>(dev, inputs, cfg).context("fused front end")?;
+
+    // ---- ONE shared f64 BDC tree on the promoted bidiagonals ----
+    let t3 = std::time::Instant::now();
+    let bds: Vec<Bidiagonal> = fk.facs.iter().map(GebrdFactors::bidiagonal).collect();
+    let mut engine = DeviceEngineK::<f64>::new(dev.clone());
+    let (sigs, kstats) = bdc_solve_k(&bds, &mut engine, cfg.leaf, cfg.threads);
+    if let Err(e) = dev.sync() {
+        let (_, pu, pv) = engine.take();
+        for id in [Some(pu), Some(pv), Some(fk.afacs), fk.q_thin].into_iter().flatten() {
+            dev.free(id);
+        }
+        return Err(e);
+    }
+    record_shared(&mut fk.profiles, "bdcdc", t3.elapsed().as_secs_f64(), "hybrid");
+
+    // ---- demote the packed U2/V2 stacks to f32 on device (one cast op
+    // per stack — still lane-count-independent), f32 back end ----
+    let (_, pu, pv) = engine.take();
+    let cp = [("len", (lanes * n * n) as i64)];
+    let puc = dev.op_t::<f32>("cast", &cp, &[pu]);
+    let pvc = dev.op_t::<f32>("cast", &cp, &[pv]);
+    dev.free(pu);
+    dev.free(pv);
+    let uvs = back_end_k(
+        dev,
+        fk.afacs,
+        fk.q_thin,
+        &fk.facs,
+        &mut fk.profiles,
+        puc,
+        pvc,
+        m,
+        n,
+        b,
+    )
+    .context("fused back end")?;
+    let mut results = Vec::with_capacity(lanes);
+    for ((profile, (u, v)), sig_asc) in fk.profiles.into_iter().zip(uvs).zip(sigs) {
+        results.push(finalize(sig_asc, u, v, profile)?);
+    }
+    for (l, res) in results.iter_mut().enumerate() {
+        refine_mixed(inputs[l], res);
+    }
+    Ok((results, kstats))
+}
+
+/// Dispatch one fused bucket on `cfg.precision` — the batch layer's entry.
+pub fn gesdd_ours_fused_prec(
+    dev: &Device,
+    inputs: &[&Matrix],
+    cfg: &Config,
+) -> Result<(Vec<SvdResult>, BdcStatsK)> {
+    match cfg.precision {
+        Precision::F64 => gesdd_ours_fused_t::<f64>(dev, inputs, cfg),
+        Precision::F32 => gesdd_ours_fused_t::<f32>(dev, inputs, cfg),
+        Precision::Mixed => gesdd_ours_fused_mixed(dev, inputs, cfg),
+    }
+}
+
+/// The mixed-precision refinement sweep (host, f64): with V fixed from
+/// the f32 pipeline, each refined pair is the exact 1D least-squares
+/// optimum for its column — w_j = A v_j, sigma_j = ||w_j||,
+/// u_j = w_j / sigma_j — so sigma inherits f64 accuracy from the
+/// original input even though every matrix transfer ran at f32. One
+/// host gemm (m x n x n, same order as the TS final gemm) plus n column
+/// norms; zero-norm columns (exactly singular input) keep their f32
+/// pair. Refined sigmas can perturb the f32 ordering, so the triplets
+/// are re-sorted descending at the end.
+fn refine_mixed(a: &Matrix, r: &mut SvdResult) {
+    let t0 = std::time::Instant::now();
+    let (m, n) = (a.rows, a.cols);
+    // W = A V  (v_j = column j of V = row j of V^T)
+    let v = r.vt.transpose();
+    let mut w = Matrix::zeros(m, n);
+    crate::linalg::blas::gemm(a, &v, &mut w, 1.0);
+    for j in 0..n {
+        let mut s = 0.0f64;
+        for i in 0..m {
+            s += w[(i, j)] * w[(i, j)];
+        }
+        let nrm = s.sqrt();
+        if nrm > 0.0 {
+            r.sigma[j] = nrm;
+            for i in 0..m {
+                r.u[(i, j)] = w[(i, j)] / nrm;
+            }
+        }
+    }
+    // stable descending re-sort; new slot p takes old triplet idx[p]
+    // (the same convention `finalize` uses with its reversal perm)
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| {
+        r.sigma[j]
+            .partial_cmp(&r.sigma[i])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    if idx.iter().enumerate().any(|(p, &i)| p != i) {
+        r.sigma = idx.iter().map(|&i| r.sigma[i]).collect();
+        crate::linalg::bdsqr::permute_cols(&mut r.u, &idx);
+        let mut vt = Matrix::zeros(n, n);
+        for (p, &i) in idx.iter().enumerate() {
+            for k in 0..n {
+                vt[(p, k)] = r.vt[(i, k)];
+            }
+        }
+        r.vt = vt;
+    }
+    r.profile.record("refine", t0.elapsed().as_secs_f64(), "cpu");
 }
 
 /// Shared tail: flip ascending (sigma, U cols, V cols) to descending and

@@ -1,48 +1,59 @@
 //! GPU-centered QR factorisation and Q generation (paper Section 4.3.2):
 //! panel factorisation on device, modified-CWY T^{-1} (gemm, eq. 28),
 //! trsm-based trailing update (eqs. 30-32), all BLAS3.
+//!
+//! Generic over [`Scalar`]: every op is keyed with the caller's compute
+//! dtype (`Device::op_t`), so the same panel walk drives the f32 and
+//! f64 pipelines — DESIGN.md §Scalar layer.
 
 use anyhow::Result;
 
 use crate::runtime::{BufId, Device};
+use crate::scalar::Scalar;
 
 /// Device-resident QR factor.
-pub struct DeviceQr {
+pub struct DeviceQr<S = f64> {
     /// Packed factor (R above diagonal, reflectors below).
     pub afac: BufId,
-    pub tau: Vec<f64>,
+    pub tau: Vec<S>,
 }
 
 /// Blocked QR of the device matrix `a` (consumed). m >= n, b | n.
-pub fn geqrf_device(dev: &Device, a: BufId, m: usize, n: usize, b: usize) -> Result<DeviceQr> {
+pub fn geqrf_device<S: Scalar>(
+    dev: &Device,
+    a: BufId,
+    m: usize,
+    n: usize,
+    b: usize,
+) -> Result<DeviceQr<S>> {
     geqrf_device_with(dev, a, m, n, b, "geqrf_step")
 }
 
 /// geqrf with an explicit step op ("geqrf_step" = modified CWY / trsm,
 /// "geqrf_step_classic" = classic larft recurrence baseline).
-pub fn geqrf_device_with(
+pub fn geqrf_device_with<S: Scalar>(
     dev: &Device,
     a: BufId,
     m: usize,
     n: usize,
     b: usize,
     step_op: &str,
-) -> Result<DeviceQr> {
+) -> Result<DeviceQr<S>> {
     assert!(m >= n && b >= 1 && b <= n);
-    let mut tau = vec![0.0; n];
+    let mut tau = vec![S::ZERO; n];
     let mut a_cur = a;
     let mut t = 0usize;
     while t < n {
         let bb = b.min(n - t);
         let p = [("m", m as i64), ("n", n as i64), ("b", bb as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let ws = dev.op(step_op, &p, &[a_cur, tb]);
+        let ws = dev.op_t::<S>(step_op, &p, &[a_cur, tb]);
         dev.free(a_cur);
         dev.free(tb);
-        let head = dev.op("qr_head", &p, &[ws]);
-        a_cur = dev.op("geqrf_extract_a", &p, &[ws]);
+        let head = dev.op_t::<S>("qr_head", &p, &[ws]);
+        a_cur = dev.op_t::<S>("geqrf_extract_a", &p, &[ws]);
         dev.free(ws);
-        let h = dev.read(head);
+        let h = dev.read_t::<S>(head);
         dev.free(head);
         // free the in-flight factor before surfacing a latched error —
         // the device may be a persistent pool worker
@@ -54,7 +65,7 @@ pub fn geqrf_device_with(
             }
         };
         tau[t..t + bb].copy_from_slice(&h[..bb]);
-        dev.recycle(h);
+        dev.recycle_t(h);
         t += bb;
     }
     Ok(DeviceQr { afac: a_cur, tau })
@@ -63,29 +74,35 @@ pub fn geqrf_device_with(
 /// Thin Q (m x n) from a device QR factor — block-reverse application of
 /// (I - Y T Y^T) with T^{-1} recomputed on device per panel (the paper
 /// recomputes so orgqr can use its own optimal block size).
-pub fn orgqr_device(dev: &Device, f: &DeviceQr, m: usize, n: usize, b: usize) -> Result<BufId> {
+pub fn orgqr_device<S: Scalar>(
+    dev: &Device,
+    f: &DeviceQr<S>,
+    m: usize,
+    n: usize,
+    b: usize,
+) -> Result<BufId> {
     orgqr_device_with(dev, f, m, n, b, "orgqr_step")
 }
 
 /// orgqr with an explicit step op (classic vs modified CWY).
-pub fn orgqr_device_with(
+pub fn orgqr_device_with<S: Scalar>(
     dev: &Device,
-    f: &DeviceQr,
+    f: &DeviceQr<S>,
     m: usize,
     n: usize,
     b: usize,
     step_op: &str,
 ) -> Result<BufId> {
     assert!(b >= 1 && b <= n);
-    let mut q = dev.op("eye", &[("m", m as i64), ("n", n as i64)], &[]);
+    let mut q = dev.op_t::<S>("eye", &[("m", m as i64), ("n", n as i64)], &[]);
     // block-reverse application; the first (rightmost) panel may be ragged
     let mut t = ((n - 1) / b) * b;
     loop {
         let bb = b.min(n - t);
         let p = [("m", m as i64), ("n", n as i64), ("b", bb as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let taub = dev.upload(f.tau[t..t + bb].to_vec(), &[bb]);
-        let q2 = dev.op(step_op, &p, &[q, f.afac, taub, tb]);
+        let taub = dev.upload_t(f.tau[t..t + bb].to_vec(), &[bb]);
+        let q2 = dev.op_t::<S>(step_op, &p, &[q, f.afac, taub, tb]);
         dev.free(q);
         dev.free(tb);
         dev.free(taub);
@@ -100,9 +117,9 @@ pub fn orgqr_device_with(
 
 /// Device-resident k-wide QR factor: ONE packed `[k, m, n]` stack of
 /// the per-lane factors plus each lane's taus.
-pub struct DeviceQrK {
+pub struct DeviceQrK<S = f64> {
     pub afacs: BufId,
-    pub taus: Vec<Vec<f64>>,
+    pub taus: Vec<Vec<S>>,
 }
 
 /// Fused blocked QR of the packed `[lanes, m, n]` stack `a` (consumed).
@@ -111,29 +128,29 @@ pub struct DeviceQrK {
 /// read) with ONE k-wide op per step; the host arm shares its inner
 /// loop with the scalar `geqrf_step`, so lane `l` is bit-identical to
 /// [`geqrf_device`] on lane `l` alone.
-pub fn geqrf_device_k(
+pub fn geqrf_device_k<S: Scalar>(
     dev: &Device,
     a: BufId,
     lanes: usize,
     m: usize,
     n: usize,
     b: usize,
-) -> Result<DeviceQrK> {
+) -> Result<DeviceQrK<S>> {
     assert!(m >= n && b >= 1 && b <= n);
-    let mut taus = vec![vec![0.0; n]; lanes];
+    let mut taus = vec![vec![S::ZERO; n]; lanes];
     let mut a_cur = a;
     let mut t = 0usize;
     while t < n {
         let bb = b.min(n - t);
         let p = [("b", bb as i64), ("k", lanes as i64), ("m", m as i64), ("n", n as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let ws = dev.op("geqrf_step_k", &p, &[a_cur, tb]);
+        let ws = dev.op_t::<S>("geqrf_step_k", &p, &[a_cur, tb]);
         dev.free(a_cur);
         dev.free(tb);
-        let head = dev.op("qr_head_k", &p, &[ws]);
-        a_cur = dev.op("geqrf_extract_a_k", &p, &[ws]);
+        let head = dev.op_t::<S>("qr_head_k", &p, &[ws]);
+        a_cur = dev.op_t::<S>("geqrf_extract_a_k", &p, &[ws]);
         dev.free(ws);
-        let h = dev.read(head);
+        let h = dev.read_t::<S>(head);
         dev.free(head);
         // free the in-flight factor stack before surfacing a latched
         // error — the device may be a persistent pool worker
@@ -147,7 +164,7 @@ pub fn geqrf_device_k(
         for (l, tl) in taus.iter_mut().enumerate() {
             tl[t..t + bb].copy_from_slice(&h[l * bb..(l + 1) * bb]);
         }
-        dev.recycle(h);
+        dev.recycle_t(h);
         t += bb;
     }
     Ok(DeviceQrK { afacs: a_cur, taus })
@@ -157,10 +174,16 @@ pub fn geqrf_device_k(
 /// walk of [`orgqr_device`] (ragged first panel, per-panel packed tau
 /// upload) over a `[k, m, n]` identity stack (`eye_k` keyed with an
 /// explicit m), one `orgqr_step_k` per panel for all lanes.
-pub fn orgqr_device_k(dev: &Device, f: &DeviceQrK, m: usize, n: usize, b: usize) -> Result<BufId> {
+pub fn orgqr_device_k<S: Scalar>(
+    dev: &Device,
+    f: &DeviceQrK<S>,
+    m: usize,
+    n: usize,
+    b: usize,
+) -> Result<BufId> {
     assert!(b >= 1 && b <= n);
     let lanes = f.taus.len();
-    let mut q = dev.op(
+    let mut q = dev.op_t::<S>(
         "eye_k",
         &[("k", lanes as i64), ("m", m as i64), ("n", n as i64)],
         &[],
@@ -171,12 +194,12 @@ pub fn orgqr_device_k(dev: &Device, f: &DeviceQrK, m: usize, n: usize, b: usize)
         let bb = b.min(n - t);
         let p = [("b", bb as i64), ("k", lanes as i64), ("m", m as i64), ("n", n as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let mut taub_v = dev.stage_zeroed(lanes * bb);
+        let mut taub_v = dev.stage_zeroed_t::<S>(lanes * bb);
         for (l, tl) in f.taus.iter().enumerate() {
             taub_v[l * bb..(l + 1) * bb].copy_from_slice(&tl[t..t + bb]);
         }
-        let taub = dev.upload(taub_v, &[lanes, bb]);
-        let q2 = dev.op("orgqr_step_k", &p, &[q, f.afacs, taub, tb]);
+        let taub = dev.upload_t(taub_v, &[lanes, bb]);
+        let q2 = dev.op_t::<S>("orgqr_step_k", &p, &[q, f.afacs, taub, tb]);
         dev.free(q);
         dev.free(tb);
         dev.free(taub);
@@ -191,10 +214,10 @@ pub fn orgqr_device_k(dev: &Device, f: &DeviceQrK, m: usize, n: usize, b: usize)
 
 /// Back-transform C <- U1 C with gebrd's column reflectors (ormqr),
 /// all on device. C is (m x k) with k == n in our pipelines.
-pub fn ormqr_device(
+pub fn ormqr_device<S: Scalar>(
     dev: &Device,
     afac: BufId,
-    tauq: &[f64],
+    tauq: &[S],
     c: BufId,
     m: usize,
     n: usize,
@@ -205,10 +228,10 @@ pub fn ormqr_device(
 
 /// ormqr with an explicit step op (classic vs modified CWY).
 #[allow(clippy::too_many_arguments)]
-pub fn ormqr_device_with(
+pub fn ormqr_device_with<S: Scalar>(
     dev: &Device,
     afac: BufId,
-    tauq: &[f64],
+    tauq: &[S],
     c: BufId,
     m: usize,
     n: usize,
@@ -223,8 +246,8 @@ pub fn ormqr_device_with(
         let bb = b.min(n - t);
         let p = [("b", bb as i64), ("k", n as i64), ("m", m as i64), ("n", n as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let taub = dev.upload(tauq[t..t + bb].to_vec(), &[bb]);
-        let c2 = dev.op(step_op, &p, &[cur, afac, taub, tb]);
+        let taub = dev.upload_t(tauq[t..t + bb].to_vec(), &[bb]);
+        let c2 = dev.op_t::<S>(step_op, &p, &[cur, afac, taub, tb]);
         dev.free(cur);
         dev.free(tb);
         dev.free(taub);
@@ -245,10 +268,10 @@ pub fn ormqr_device_with(
 /// mirrors [`ormqr_device`] exactly (block-reverse, ragged first panel)
 /// and the host op shares its inner loop with the scalar step, so lane
 /// `l` is bit-identical to `ormqr_device` on lane `l` alone.
-pub fn ormqr_device_k(
+pub fn ormqr_device_k<S: Scalar>(
     dev: &Device,
     afacs: BufId,
-    tauqs: &[&[f64]],
+    tauqs: &[&[S]],
     c: BufId,
     n: usize,
     b: usize,
@@ -262,12 +285,12 @@ pub fn ormqr_device_k(
         let bb = b.min(n - t);
         let p = [("b", bb as i64), ("k", lanes as i64), ("n", n as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let mut taus = dev.stage_zeroed(lanes * bb);
+        let mut taus = dev.stage_zeroed_t::<S>(lanes * bb);
         for (l, tq) in tauqs.iter().enumerate() {
             taus[l * bb..(l + 1) * bb].copy_from_slice(&tq[t..t + bb]);
         }
-        let taub = dev.upload(taus, &[lanes, bb]);
-        let c2 = dev.op("ormqr_step_k", &p, &[cur, afacs, taub, tb]);
+        let taub = dev.upload_t(taus, &[lanes, bb]);
+        let c2 = dev.op_t::<S>("ormqr_step_k", &p, &[cur, afacs, taub, tb]);
         dev.free(cur);
         dev.free(tb);
         dev.free(taub);
@@ -283,10 +306,10 @@ pub fn ormqr_device_k(
 /// k-wide ormlq for a fused bucket (see [`ormqr_device_k`]); mirrors the
 /// [`ormlq_device`] panel walk, including the tau masking of reflectors
 /// past n-2 (tau == 0, identity) and the n == 1 early return.
-pub fn ormlq_device_k(
+pub fn ormlq_device_k<S: Scalar>(
     dev: &Device,
     afacs: BufId,
-    taups: &[&[f64]],
+    taups: &[&[S]],
     c: BufId,
     n: usize,
     b: usize,
@@ -303,7 +326,7 @@ pub fn ormlq_device_k(
         let bb = b.min(n - t);
         let p = [("b", bb as i64), ("k", lanes as i64), ("n", n as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let mut taus = dev.stage_zeroed(lanes * bb);
+        let mut taus = dev.stage_zeroed_t::<S>(lanes * bb);
         for (l, tp) in taups.iter().enumerate() {
             for i in 0..bb {
                 if t + i < n - 1 {
@@ -311,8 +334,8 @@ pub fn ormlq_device_k(
                 }
             }
         }
-        let taub = dev.upload(taus, &[lanes, bb]);
-        let c2 = dev.op("ormlq_step_k", &p, &[cur, afacs, taub, tb]);
+        let taub = dev.upload_t(taus, &[lanes, bb]);
+        let c2 = dev.op_t::<S>("ormlq_step_k", &p, &[cur, afacs, taub, tb]);
         dev.free(cur);
         dev.free(tb);
         dev.free(taub);
@@ -326,10 +349,10 @@ pub fn ormlq_device_k(
 }
 
 /// Back-transform C <- V1 C with gebrd's row reflectors (ormlq). C (n x k).
-pub fn ormlq_device(
+pub fn ormlq_device<S: Scalar>(
     dev: &Device,
     afac: BufId,
-    taup: &[f64],
+    taup: &[S],
     c: BufId,
     m: usize,
     n: usize,
@@ -340,10 +363,10 @@ pub fn ormlq_device(
 
 /// ormlq with an explicit step op (classic vs modified CWY).
 #[allow(clippy::too_many_arguments)]
-pub fn ormlq_device_with(
+pub fn ormlq_device_with<S: Scalar>(
     dev: &Device,
     afac: BufId,
-    taup: &[f64],
+    taup: &[S],
     c: BufId,
     m: usize,
     n: usize,
@@ -364,14 +387,14 @@ pub fn ormlq_device_with(
         let bb = b.min(n - t);
         let p = [("b", bb as i64), ("k", n as i64), ("m", m as i64), ("n", n as i64)];
         let tb = dev.scalar_i64(t as i64);
-        let mut taus = vec![0.0; bb];
+        let mut taus = vec![S::ZERO; bb];
         for (i, slot) in taus.iter_mut().enumerate() {
             if t + i < n - 1 {
                 *slot = taup[t + i];
             }
         }
-        let taub = dev.upload(taus, &[bb]);
-        let c2 = dev.op(step_op, &p, &[cur, afac, taub, tb]);
+        let taub = dev.upload_t(taus, &[bb]);
+        let c2 = dev.op_t::<S>(step_op, &p, &[cur, afac, taub, tb]);
         dev.free(cur);
         dev.free(tb);
         dev.free(taub);

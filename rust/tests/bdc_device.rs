@@ -16,7 +16,7 @@ fn run_dual(d: Vec<f64>, e: Vec<f64>, leaf: usize) {
     let b = Bidiagonal::new(d, e);
     let mut dual = DualEngine {
         a: CpuEngine::new(),
-        b: DeviceEngine::new(dev),
+        b: DeviceEngine::<f64>::new(dev),
         check: |name: &str, a: &mut CpuEngine, bb: &mut DeviceEngine| {
             let u = bb.download(Mat::U).unwrap();
             let v = bb.download(Mat::V).unwrap();

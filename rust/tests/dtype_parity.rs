@@ -1,0 +1,180 @@
+//! Scalar-layer guarantees (DESIGN.md §Scalar layer): per-dtype
+//! accuracy pins and fused/serial parity.
+//!
+//! * the f32 pipeline hits f32-class accuracy on square, tall-skinny,
+//!   n = 1 and heavy-deflation inputs;
+//! * the mixed pipeline (f32 front end + f64 secular core + f64
+//!   refinement) brings sigma back to near-f64 accuracy;
+//! * the fused k-wide path stays BIT-identical to the serial solver at
+//!   every dtype — the fused/serial contract is per dtype, not
+//!   f64-only;
+//! * the batch layer routes `cfg.precision` end to end (dtype joins the
+//!   bucket key, so a fused bucket runs at the requested dtype).
+
+use gcsvd::config::Config;
+use gcsvd::gen::{generate, MatrixKind};
+use gcsvd::linalg::jacobi;
+use gcsvd::matrix::Matrix;
+use gcsvd::runtime::transfer::TransferModel;
+use gcsvd::runtime::Device;
+use gcsvd::scalar::{Precision, Scalar};
+use gcsvd::svd::e_svd;
+use gcsvd::svd::gesdd::{
+    gesdd_ours_fused_mixed, gesdd_ours_fused_t, gesdd_ours_mixed, gesdd_ours_prec, gesdd_ours_t,
+};
+use gcsvd::util::Rng;
+
+fn cfg_at(prec: Precision) -> Config {
+    Config {
+        precision: prec,
+        transfer: TransferModel { enabled: false, ..Default::default() },
+        ..Config::default()
+    }
+}
+
+/// The pinned shapes: square, tall-skinny (QR front end), n = 1 (single
+/// 1x1 BDC leaf), and a repeated-diagonal matrix whose merges deflate
+/// almost everything.
+fn pinned_inputs() -> Vec<(Matrix, &'static str)> {
+    let mut rng = Rng::new(515);
+    let n = 36usize;
+    vec![
+        (generate(MatrixKind::Random, 48, 48, 1.0, 11), "square"),
+        (generate(MatrixKind::SvdGeo, 96, 48, 1e3, 12), "tall-skinny"),
+        (Matrix::from_fn(9, 1, |_, _| rng.gaussian()), "n=1"),
+        (
+            Matrix::from_fn(n, n, |i, j| if i == j { (i / 3 + 1) as f64 } else { 0.0 }),
+            "heavy-deflation",
+        ),
+    ]
+}
+
+/// Solve at `prec` and pin reconstruction error and sigma agreement
+/// with the f64 Jacobi oracle.
+fn pin(a: &Matrix, prec: Precision, tol_rec: f64, tol_sig: f64, tag: &str) {
+    let dev = Device::host();
+    let cfg = cfg_at(prec);
+    let r = gesdd_ours_prec(&dev, a, &cfg).unwrap_or_else(|e| panic!("{tag} {prec:?}: {e:#}"));
+    let rec = e_svd(a, &r);
+    assert!(rec < tol_rec, "{tag} {prec:?}: E_svd {rec:e} (pin {tol_rec:e})");
+    let sv = jacobi::singular_values(a);
+    let scale = sv[0].max(1.0);
+    for i in 0..a.cols {
+        let d = (r.sigma[i] - sv[i]).abs();
+        assert!(
+            d < tol_sig * scale,
+            "{tag} {prec:?}: sigma[{i}] off by {d:e} (pin {tol_sig:e} x {scale:e})"
+        );
+    }
+}
+
+#[test]
+fn f64_accuracy_pins() {
+    for (a, tag) in &pinned_inputs() {
+        pin(a, Precision::F64, 1e-8, 1e-8, tag);
+    }
+}
+
+#[test]
+fn f32_accuracy_pins() {
+    // f32-class: eps ~ 1.2e-7 accumulated over the panel walks; the pin
+    // is deliberately loose (2e-3) — it guards the dtype plumbing (an
+    // accidental f64 truncation to zero, a wrong stride) rather than
+    // chasing the rounding constant
+    for (a, tag) in &pinned_inputs() {
+        pin(a, Precision::F32, 2e-3, 2e-3, tag);
+    }
+}
+
+#[test]
+fn mixed_sigma_recovers_near_f64() {
+    // the f64 refinement recomputes sigma_j = ||A v_j|| against the
+    // original input, so sigma lands orders of magnitude inside f32
+    // accuracy even though the front end moved f32 bytes; U/V stay
+    // f32-class, so the reconstruction pin is looser than sigma's
+    for (a, tag) in &pinned_inputs() {
+        pin(a, Precision::Mixed, 5e-4, 5e-6, tag);
+    }
+}
+
+/// Fused bucket vs the serial solver at dtype `S`, bit-for-bit. The
+/// `_t` entry points take the dtype as a type parameter, so
+/// `cfg.precision` is irrelevant here.
+fn check_fused_parity_t<S: Scalar>(inputs: &[Matrix], tag: &str) {
+    let dev = Device::host();
+    let cfg = cfg_at(Precision::default());
+    let refs: Vec<&Matrix> = inputs.iter().collect();
+    let (fused, _) = gesdd_ours_fused_t::<S>(&dev, &refs, &cfg).expect("fused solve");
+    for (l, a) in inputs.iter().enumerate() {
+        let serial = gesdd_ours_t::<S>(&dev, a, &cfg).expect("serial solve");
+        assert_eq!(fused[l].sigma, serial.sigma, "{tag} lane {l}: sigma");
+        assert_eq!(fused[l].u.data, serial.u.data, "{tag} lane {l}: U");
+        assert_eq!(fused[l].vt.data, serial.vt.data, "{tag} lane {l}: V^T");
+    }
+}
+
+#[test]
+fn fused_matches_serial_bitexactly_per_dtype() {
+    // n = 40 > leaf 32: the shared tree has real merges and every lane
+    // deflates differently
+    let mut rng = Rng::new(616);
+    let inputs: Vec<Matrix> = (0..3)
+        .map(|_| Matrix::from_fn(40, 40, |_, _| rng.gaussian()))
+        .collect();
+    check_fused_parity_t::<f64>(&inputs, "f64");
+    check_fused_parity_t::<f32>(&inputs, "f32");
+}
+
+#[test]
+fn fused_matches_serial_bitexactly_tall_skinny_f32() {
+    // the k-wide QR front end + U = Q U0 back-transform, all in f32
+    let mut rng = Rng::new(626);
+    let inputs: Vec<Matrix> = (0..3)
+        .map(|_| Matrix::from_fn(70, 35, |_, _| rng.gaussian()))
+        .collect();
+    check_fused_parity_t::<f32>(&inputs, "ts-f32");
+}
+
+#[test]
+fn fused_mixed_matches_serial_mixed_bitexactly() {
+    // both sides run the same f32 front end, the same f64 tree on the
+    // same promoted bidiagonal, the same on-device casts and the same
+    // f64 refinement — lane l must be bit-identical
+    let mut rng = Rng::new(636);
+    let cfg = cfg_at(Precision::Mixed);
+    let dev = Device::host();
+    let inputs: Vec<Matrix> = (0..3)
+        .map(|_| Matrix::from_fn(40, 40, |_, _| rng.gaussian()))
+        .collect();
+    let refs: Vec<&Matrix> = inputs.iter().collect();
+    let (fused, _) = gesdd_ours_fused_mixed(&dev, &refs, &cfg).expect("fused mixed");
+    for (l, a) in inputs.iter().enumerate() {
+        let serial = gesdd_ours_mixed(&dev, a, &cfg).expect("serial mixed");
+        assert_eq!(fused[l].sigma, serial.sigma, "mixed lane {l}: sigma");
+        assert_eq!(fused[l].u.data, serial.u.data, "mixed lane {l}: U");
+        assert_eq!(fused[l].vt.data, serial.vt.data, "mixed lane {l}: V^T");
+    }
+}
+
+#[test]
+fn batch_layer_routes_precision_end_to_end() {
+    // the batched + fused driver at f32 must equal a serial f32 loop
+    // bit-for-bit: cfg.precision reaches the bucket solver through the
+    // planner (dtype is part of the bucket key) and the pool
+    let mut rng = Rng::new(646);
+    let inputs: Vec<Matrix> = (0..4)
+        .map(|_| Matrix::from_fn(33, 33, |_, _| rng.gaussian()))
+        .collect();
+    let mut cfg = cfg_at(Precision::F32);
+    cfg.fuse = true;
+    cfg.threads = 2;
+    let batched = gcsvd::batch::gesvd_batched(&inputs, &cfg, gcsvd::config::Solver::Ours)
+        .expect("batched f32");
+    let dev = Device::host();
+    for (l, a) in inputs.iter().enumerate() {
+        let serial = gesdd_ours_t::<f32>(&dev, a, &cfg).expect("serial f32");
+        assert_eq!(batched[l].sigma, serial.sigma, "batched f32 lane {l}: sigma");
+        assert_eq!(batched[l].u.data, serial.u.data, "batched f32 lane {l}: U");
+        assert_eq!(batched[l].vt.data, serial.vt.data, "batched f32 lane {l}: V^T");
+    }
+}

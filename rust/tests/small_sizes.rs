@@ -74,7 +74,7 @@ fn device_bdc_all_small_sizes_no_panic() {
             (sig, eng.u, eng.v)
         };
         let dev = Device::host();
-        let mut eng = DeviceEngine::new(dev);
+        let mut eng = DeviceEngine::<f64>::new(dev);
         let (sig_dev, _) = bdc_solve(&b, &mut eng, 3, 1);
         assert_eq!(sig_dev.len(), n);
         for i in 0..n {
@@ -99,7 +99,7 @@ fn device_bdc_larger_leaves_cross_leaf_tile() {
     for n in [63usize, 64, 65, 70] {
         let b = random_bidiagonal(n, &mut rng);
         let dev = Device::host();
-        let mut eng = DeviceEngine::new(dev);
+        let mut eng = DeviceEngine::<f64>::new(dev);
         let (sig, _) = bdc_solve(&b, &mut eng, 32, 1);
         let u = eng.download(Mat::U).unwrap();
         let v = eng.download(Mat::V).unwrap();
