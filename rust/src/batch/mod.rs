@@ -51,6 +51,7 @@
 //! [`Backend::max_parallelism`]: crate::runtime::Backend::max_parallelism
 
 pub mod plan;
+pub mod serve;
 
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};

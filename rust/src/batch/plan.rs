@@ -19,7 +19,9 @@
 //! leaks into the other — a unit never observes which slot it ran on,
 //! which is what keeps results schedule-independent.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
+
+use anyhow::{Context as _, Result};
 
 use crate::config::Config;
 use crate::matrix::Matrix;
@@ -58,6 +60,12 @@ impl SolvePlan {
             flops: svd_flops(m, n),
         }
     }
+
+    /// Rebuild the plan facts from a bucket key (the key fully determines
+    /// them — this is what lets [`PlannerState`] store only keys).
+    pub fn from_key(key: ShapeKey) -> SolvePlan {
+        SolvePlan { key, flops: svd_flops(key.m, key.n) }
+    }
 }
 
 /// One shape bucket: the shared plan plus the batch indices it covers.
@@ -68,44 +76,151 @@ pub struct Bucket {
     pub items: Vec<usize>,
 }
 
+/// Incremental planner: the shared planning core of the one-shot
+/// batched path ([`bucket_inputs`] / [`fused_plan`] are thin wrappers
+/// that insert every input and snapshot) and the `svd-serve` admission
+/// queues (which insert on arrival, evict on cancel/deadline, and
+/// [`take`](PlannerState::take) oldest-first at dispatch time).
+///
+/// Requests are keyed by [`ShapeKey`] — which carries the dtype, so an
+/// f32 request can never co-bucket with an f64 one at the same shape —
+/// and each mutation is O(log buckets + bucket len): nothing replans the
+/// whole set. A [`plan`](PlannerState::plan) snapshot over any pending
+/// set is identical to a from-scratch plan over the same requests in the
+/// same arrival order (`tests/serve.rs` asserts this property under
+/// seeded insert/evict sequences).
+#[derive(Clone, Debug, Default)]
+pub struct PlannerState {
+    /// Pending request ids per bucket, in arrival order (deterministic
+    /// iteration: `ShapeKey: Ord`).
+    groups: BTreeMap<ShapeKey, Vec<usize>>,
+    /// id -> its bucket key, so evict needs no shape lookup.
+    members: BTreeMap<usize, ShapeKey>,
+}
+
+impl PlannerState {
+    pub fn new() -> PlannerState {
+        PlannerState::default()
+    }
+
+    /// Pending requests across all buckets.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Admit one request at `cfg`'s dtype. Fails (before anything is
+    /// queued) on shapes the solvers reject and on id reuse.
+    pub fn insert(&mut self, id: usize, m: usize, n: usize, cfg: &Config) -> Result<ShapeKey> {
+        self.insert_prec(id, m, n, cfg, cfg.precision)
+    }
+
+    /// [`insert`](PlannerState::insert) with an explicit per-request
+    /// dtype (the server's requests carry their own precision).
+    pub fn insert_prec(
+        &mut self,
+        id: usize,
+        m: usize,
+        n: usize,
+        cfg: &Config,
+        precision: Precision,
+    ) -> Result<ShapeKey> {
+        anyhow::ensure!(
+            m >= n && n >= 1,
+            "{m}x{n} — batched SVD requires m >= n >= 1 (transpose wide inputs first)"
+        );
+        anyhow::ensure!(!self.members.contains_key(&id), "planner id {id} inserted twice");
+        let block = cfg.block.clamp(1, n.max(1));
+        let key = ShapeKey { m, n, block, precision };
+        self.members.insert(id, key);
+        self.groups.entry(key).or_default().push(id);
+        Ok(key)
+    }
+
+    /// Remove a pending request (cancellation / deadline expiry).
+    /// Returns its bucket key, or `None` if the id is not pending (never
+    /// admitted, already taken for dispatch, or already evicted).
+    pub fn evict(&mut self, id: usize) -> Option<ShapeKey> {
+        let key = self.members.remove(&id)?;
+        let g = self.groups.get_mut(&key).expect("member implies its group exists");
+        let pos = g.iter().position(|&x| x == id).expect("member listed in its group");
+        g.remove(pos);
+        if g.is_empty() {
+            self.groups.remove(&key);
+        }
+        Some(key)
+    }
+
+    /// Pending buckets, deterministic key order; ids in arrival order.
+    pub fn buckets_iter(&self) -> impl Iterator<Item = (&ShapeKey, &[usize])> {
+        self.groups.iter().map(|(k, v)| (k, v.as_slice()))
+    }
+
+    /// Pop up to `max` oldest members of `key`'s bucket for dispatch.
+    /// The returned ids are no longer pending (evict on them is a no-op,
+    /// which is exactly the "in-flight work cannot be cancelled" rule).
+    pub fn take(&mut self, key: &ShapeKey, max: usize) -> Vec<usize> {
+        let Some(g) = self.groups.get_mut(key) else {
+            return Vec::new();
+        };
+        let take = g.len().min(max.max(1));
+        let ids: Vec<usize> = g.drain(..take).collect();
+        if g.is_empty() {
+            self.groups.remove(key);
+        }
+        for id in &ids {
+            self.members.remove(id);
+        }
+        ids
+    }
+
+    /// Snapshot the pending set as ordered buckets, heaviest per-matrix
+    /// plan first (the one-shot schedule order — heavy work is dealt
+    /// before the cheap steal tail).
+    pub fn buckets(&self) -> Vec<Bucket> {
+        let mut buckets: Vec<Bucket> = self
+            .groups
+            .iter()
+            .map(|(&key, items)| Bucket { plan: SolvePlan::from_key(key), items: items.clone() })
+            .collect();
+        buckets.sort_by(|a, b| {
+            b.plan
+                .flops
+                .partial_cmp(&a.plan.flops)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.plan.key.cmp(&b.plan.key))
+        });
+        buckets
+    }
+
+    /// From-scratch-equivalent executable plan over the pending set.
+    pub fn plan(&self, fuse: bool) -> FusedPlan {
+        let buckets = self.buckets();
+        let units = chunk_units(&buckets, fuse);
+        FusedPlan { buckets, units }
+    }
+}
+
 /// Group batch indices by [`ShapeKey`], heaviest per-matrix plan first.
 ///
 /// Fails fast (before any solve starts) on inputs the solvers reject:
 /// `m < n` or empty matrices, reported with their batch index.
 pub fn bucket_inputs(inputs: &[Matrix], cfg: &Config) -> Result<Vec<Bucket>> {
+    Ok(planner_over(inputs, cfg)?.buckets())
+}
+
+/// Feed a whole input slice through the incremental planner (ids are the
+/// batch indices) — the one-shot paths' entry into the shared core.
+fn planner_over(inputs: &[Matrix], cfg: &Config) -> Result<PlannerState> {
+    let mut st = PlannerState::new();
     for (i, a) in inputs.iter().enumerate() {
-        anyhow::ensure!(
-            a.rows >= a.cols && a.cols >= 1,
-            "batch item {i}: {}x{} — batched SVD requires m >= n >= 1 \
-             (transpose wide inputs first)",
-            a.rows,
-            a.cols
-        );
+        st.insert(i, a.rows, a.cols, cfg)
+            .with_context(|| format!("batch item {i}: rejected at planning"))?;
     }
-    // group via an ordered map: O(n log buckets), deterministic iteration
-    let mut groups: std::collections::BTreeMap<ShapeKey, Vec<usize>> =
-        std::collections::BTreeMap::new();
-    for (i, a) in inputs.iter().enumerate() {
-        let key = SolvePlan::for_shape(a.rows, a.cols, cfg).key;
-        groups.entry(key).or_default().push(i);
-    }
-    let mut buckets: Vec<Bucket> = groups
-        .into_iter()
-        .map(|(key, items)| Bucket {
-            plan: SolvePlan::for_shape(key.m, key.n, cfg),
-            items,
-        })
-        .collect();
-    // heavy buckets first: the pool deals these chunks before the cheap
-    // tail, so stealing rebalances small items instead of large ones
-    buckets.sort_by(|a, b| {
-        b.plan
-            .flops
-            .partial_cmp(&a.plan.flops)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.plan.key.cmp(&b.plan.key))
-    });
-    Ok(buckets)
+    Ok(st)
 }
 
 /// Largest lane count one fused unit may carry. Bounds the packed
@@ -157,8 +272,14 @@ impl FusedPlan {
 
 /// Build the unit schedule over [`bucket_inputs`]'s buckets.
 pub fn fused_plan(inputs: &[Matrix], cfg: &Config, fuse: bool) -> Result<FusedPlan> {
-    let buckets = bucket_inputs(inputs, cfg)?;
-    let mut units = Vec::with_capacity(inputs.len());
+    Ok(planner_over(inputs, cfg)?.plan(fuse))
+}
+
+/// The bucket -> unit chunking rule shared by the one-shot plan and the
+/// planner snapshot: fused runs of at most [`MAX_FUSE_LANES`], trailing
+/// singletons fall back to the per-solve path.
+fn chunk_units(buckets: &[Bucket], fuse: bool) -> Vec<WorkUnit> {
+    let mut units = Vec::with_capacity(buckets.iter().map(|b| b.items.len()).sum());
     for (bi, b) in buckets.iter().enumerate() {
         if fuse && b.items.len() >= 2 {
             let mut start = 0usize;
@@ -175,7 +296,7 @@ pub fn fused_plan(inputs: &[Matrix], cfg: &Config, fuse: bool) -> Result<FusedPl
             units.extend(b.items.iter().map(|&i| WorkUnit::Single(i)));
         }
     }
-    Ok(FusedPlan { buckets, units })
+    units
 }
 
 /// Per-matrix flop estimate for the full pipeline (paper conventions:
@@ -325,5 +446,60 @@ mod tests {
     fn ts_flops_exceed_square() {
         assert!(svd_flops(256, 64) > svd_flops(64, 64));
         assert!(svd_flops(64, 64) > 0.0);
+    }
+
+    #[test]
+    fn planner_insert_evict_take_roundtrip() {
+        let cfg = Config::default();
+        let mut st = PlannerState::new();
+        for (id, (m, n)) in [(8usize, 8usize), (8, 8), (16, 8), (8, 8)].iter().enumerate() {
+            st.insert(id, *m, *n, &cfg).unwrap();
+        }
+        assert_eq!(st.len(), 4);
+        // evict a middle member: arrival order of the rest is preserved
+        let k = st.evict(1).unwrap();
+        assert_eq!((k.m, k.n), (8, 8));
+        assert_eq!(st.evict(1), None, "double evict is a no-op");
+        assert_eq!(st.len(), 3);
+        let key88 = st.insert(9, 8, 8, &cfg).unwrap();
+        let got: Vec<usize> = st
+            .buckets_iter()
+            .find(|(k, _)| **k == key88)
+            .map(|(_, ids)| ids.to_vec())
+            .unwrap();
+        assert_eq!(got, vec![0, 3, 9], "arrival order survives evict + insert");
+        // take pops oldest-first and caps at max
+        assert_eq!(st.take(&key88, 2), vec![0, 3]);
+        assert_eq!(st.len(), 2);
+        assert_eq!(st.evict(0), None, "taken ids are no longer pending");
+        assert_eq!(st.take(&key88, 8), vec![9]);
+        assert_eq!(st.take(&key88, 8), Vec::<usize>::new());
+        assert_eq!(st.len(), 1, "the 16x8 request remains");
+    }
+
+    #[test]
+    fn planner_rejects_bad_shapes_and_id_reuse() {
+        let cfg = Config::default();
+        let mut st = PlannerState::new();
+        assert!(st.insert(0, 3, 5, &cfg).is_err(), "wide input");
+        assert!(st.insert(0, 4, 0, &cfg).is_err(), "empty input");
+        assert!(st.is_empty(), "rejected inserts leave no trace");
+        st.insert(0, 4, 4, &cfg).unwrap();
+        assert!(st.insert(0, 4, 4, &cfg).is_err(), "id reuse");
+        assert_eq!(st.len(), 1);
+    }
+
+    #[test]
+    fn planner_keeps_dtypes_in_separate_buckets() {
+        let cfg = Config::default();
+        let mut st = PlannerState::new();
+        let a = st.insert_prec(0, 8, 8, &cfg, Precision::F64).unwrap();
+        let b = st.insert_prec(1, 8, 8, &cfg, Precision::F32).unwrap();
+        let c = st.insert_prec(2, 8, 8, &cfg, Precision::Mixed).unwrap();
+        assert!(a != b && b != c && a != c);
+        assert_eq!(st.buckets_iter().count(), 3);
+        // taking one dtype's bucket never drags another dtype along
+        assert_eq!(st.take(&b, 16), vec![1]);
+        assert_eq!(st.len(), 2);
     }
 }

@@ -1,0 +1,679 @@
+//! Continuous-batching SVD service (`svd-serve`).
+//!
+//! The one-shot batched path (`batch::gesvd_batched`) assumes the whole
+//! batch exists up front; production traffic is a *stream* of
+//! independent solve requests. This module closes that gap with the
+//! dynamic-aggregation trick inference servers use (DESIGN.md
+//! §Continuous batching):
+//!
+//!   * requests are admitted into the shared incremental planner
+//!     ([`PlannerState`]) — shape-bucketed queues keyed by
+//!     `(m, n, block, dtype)`, so a request joins the bucket whose fused
+//!     op sequence it can ride;
+//!   * a dispatcher thread turns due buckets into solve jobs: a bucket
+//!     dispatches when it reaches `ServeOpts::max_lanes` lanes (capped
+//!     at [`MAX_FUSE_LANES`]) OR when its oldest member has spent half
+//!     its latency deadline — so light traffic still makes its deadline
+//!     and heavy traffic fuses wide;
+//!   * jobs are injected into a live [`StealPool::run_stream`] whose
+//!     workers lease devices from a strict-FIFO [`DeviceMux`], exactly
+//!     like the one-shot path — fused lanes stay bit-identical to
+//!     per-solve runs, so serving changes *when* work runs, never *what*
+//!     it computes;
+//!   * admission is bounded: at most `ServeOpts::max_queue` requests may
+//!     be open (queued + in-flight); beyond that a submission returns
+//!     the typed [`ServeError::QueueFull`] backpressure error instead of
+//!     growing the queue without bound;
+//!   * a request still *pending* at its full deadline is evicted with
+//!     [`ServeError::DeadlineExpired`]; a pending request can be
+//!     [`cancel`]led and never reaches a device. Work already dispatched
+//!     is past the point of no return — its bucket completes.
+//!
+//! Closing the server drains: admissions stop, every queued bucket
+//! dispatches immediately (no half-deadline wait), in-flight work
+//! finishes, and only then do the workers exit — accepted work is never
+//! dropped.
+//!
+//! [`cancel`]: ServeHandle::cancel
+//! [`StealPool::run_stream`]: crate::runtime::StealPool::run_stream
+//! [`DeviceMux`]: crate::runtime::DeviceMux
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::bench_harness::percentile;
+use crate::config::{Config, ServeOpts, Solver};
+use crate::matrix::Matrix;
+use crate::runtime::pool::{Injector, StealPool};
+use crate::runtime::{Device, DeviceMux, DeviceStats};
+use crate::scalar::Precision;
+use crate::svd::gesdd::gesdd_ours_fused_prec;
+use crate::svd::{gesvd, SvdResult};
+
+use super::plan::{PlannerState, ShapeKey, MAX_FUSE_LANES};
+
+/// Why a request did not produce an [`SvdResult`]. Every variant is a
+/// *service* outcome — solver errors are carried through as
+/// [`Solver`](ServeError::Solver) so a lane failure in a fused bucket
+/// reports per-request, not per-process.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Rejected at admission: the open-request bound was hit. This is
+    /// the backpressure contract — the caller sheds load or retries
+    /// later; the server never queues unboundedly.
+    QueueFull { depth: usize, limit: usize },
+    /// Rejected at admission: the solvers require `m >= n >= 1`
+    /// (transpose wide inputs first, exactly like the batched path).
+    BadShape { m: usize, n: usize },
+    /// The request was cancelled while still queued; it never reached a
+    /// device.
+    Cancelled,
+    /// Still queued when the full latency deadline elapsed; evicted
+    /// without touching a device.
+    DeadlineExpired { waited_ms: u64, deadline_ms: u64 },
+    /// The solve itself failed (or panicked) after dispatch.
+    Solver(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull { depth, limit } => {
+                write!(f, "queue full: {depth} open requests at limit {limit}")
+            }
+            ServeError::BadShape { m, n } => {
+                write!(f, "{m}x{n} — SVD service requires m >= n >= 1 (transpose wide inputs)")
+            }
+            ServeError::Cancelled => write!(f, "cancelled before dispatch"),
+            ServeError::DeadlineExpired { waited_ms, deadline_ms } => {
+                write!(f, "deadline expired: waited {waited_ms}ms of a {deadline_ms}ms budget")
+            }
+            ServeError::Solver(e) => write!(f, "solver failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-request outcome: the solve, or the typed service error.
+pub type ServeResult = std::result::Result<SvdResult, ServeError>;
+
+/// Service counters for one [`serve`] run — the `BENCH_serve.json` row.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Submissions attempted (admitted + rejected).
+    pub submitted: u64,
+    /// Requests that entered the queue.
+    pub admitted: u64,
+    /// Submissions bounced at admission (backpressure or bad shape).
+    pub rejected: u64,
+    /// Admitted requests that finished with a result.
+    pub completed: u64,
+    /// Admitted requests cancelled before dispatch.
+    pub cancelled: u64,
+    /// Admitted requests evicted at their full deadline before dispatch.
+    pub expired: u64,
+    /// Admitted requests whose solve failed after dispatch.
+    pub failed: u64,
+    /// Solve jobs dispatched (fused buckets + singletons).
+    pub units: u64,
+    /// Dispatched jobs that ran the fused k-wide path (k >= 2).
+    pub fused_units: u64,
+    /// Total lanes across fused jobs.
+    pub fused_lanes: u64,
+    /// The lane cap dispatches ran under (clamped `ServeOpts::max_lanes`).
+    pub max_lanes: usize,
+    /// Mean fill of fused dispatches: `fused_lanes / (fused_units *
+    /// max_lanes)`; 0.0 when nothing fused (distinct from the batch
+    /// stat of the same name, which measures masked-kernel fill).
+    pub lane_occupancy: f64,
+    /// Highest number of simultaneously open requests observed.
+    pub queue_peak: usize,
+    /// Wall seconds of the whole run (serve setup to drain).
+    pub wall: f64,
+    /// Median request latency (submit -> result), milliseconds. `None`
+    /// when nothing completed — see [`percentile`].
+    pub p50_ms: Option<f64>,
+    /// 99th-percentile request latency, milliseconds.
+    pub p99_ms: Option<f64>,
+    /// The default per-request deadline the run was configured with.
+    pub deadline_ms: u64,
+    /// Pool workers serving the stream.
+    pub threads: usize,
+    /// Device slots the workers multiplexed over.
+    pub device_slots: usize,
+    /// Device counters aggregated over every mux slot.
+    pub device: DeviceStats,
+    /// Op-stream verifier command count (0 when verification is off).
+    pub verified_ops: u64,
+    /// Wall seconds inside the verifier.
+    pub verify_sec: f64,
+    /// Admitted requests per compute dtype (`f32` / `f64` / `mixed`).
+    pub dtype_counts: BTreeMap<String, u64>,
+}
+
+/// Everything a [`serve`] run produced: the service counters plus the
+/// outcome of every admitted request the client did not [`wait`] for
+/// (waiting claims a result; unclaimed ones are returned here,
+/// id-ascending).
+///
+/// [`wait`]: ServeHandle::wait
+pub struct ServeReport {
+    pub metrics: ServeMetrics,
+    pub results: Vec<(usize, ServeResult)>,
+}
+
+/// A queued request: its payload plus its admission clock.
+struct Pending {
+    mat: Matrix,
+    submitted: Instant,
+    deadline: Duration,
+}
+
+/// One dispatched lane: the request and its latency clock.
+struct Lane {
+    id: usize,
+    mat: Matrix,
+    submitted: Instant,
+}
+
+/// One solve job for the worker pool: a bucket's dispatched lanes.
+struct Job {
+    key: ShapeKey,
+    lanes: Vec<Lane>,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: u64,
+    admitted: u64,
+    rejected: u64,
+    completed: u64,
+    cancelled: u64,
+    expired: u64,
+    failed: u64,
+    units: u64,
+    fused_units: u64,
+    fused_lanes: u64,
+    queue_peak: usize,
+}
+
+/// The mutex-guarded server state. `planner` and `pending` are kept in
+/// lockstep: every pending id is in the planner and vice versa, so
+/// cancel/expiry evict both or neither.
+#[derive(Default)]
+struct State {
+    planner: PlannerState,
+    pending: BTreeMap<usize, Pending>,
+    /// Requests dispatched to a worker and not yet resolved.
+    inflight: usize,
+    /// Resolved requests awaiting a `wait` (or the final report).
+    done: BTreeMap<usize, ServeResult>,
+    /// Completed-request latencies, milliseconds, resolution order.
+    latencies_ms: Vec<f64>,
+    next_id: usize,
+    closed: bool,
+    counters: Counters,
+    dtype_counts: BTreeMap<String, u64>,
+}
+
+struct Shared {
+    st: Mutex<State>,
+    /// Wakes the dispatcher: new admission, cancellation, lane retired,
+    /// or close.
+    dispatch: Condvar,
+    /// Wakes `wait`ers: a request resolved.
+    done_cv: Condvar,
+}
+
+/// The client's face of a running server: submit, cancel, wait.
+/// Borrowed — it cannot outlive the [`serve`] call that owns the queue.
+pub struct ServeHandle<'a> {
+    sh: &'a Shared,
+    cfg: &'a Config,
+    opts: &'a ServeOpts,
+}
+
+impl ServeHandle<'_> {
+    /// Submit one solve request at `precision`, under the run's default
+    /// deadline. Returns the request id to [`wait`](ServeHandle::wait)
+    /// on, or the typed admission error ([`ServeError::QueueFull`] /
+    /// [`ServeError::BadShape`]) — admission never blocks.
+    pub fn submit(
+        &self,
+        mat: Matrix,
+        precision: Precision,
+    ) -> std::result::Result<usize, ServeError> {
+        self.submit_with_deadline(mat, precision, self.opts.deadline)
+    }
+
+    /// [`submit`](ServeHandle::submit) with a per-request deadline.
+    pub fn submit_with_deadline(
+        &self,
+        mat: Matrix,
+        precision: Precision,
+        deadline: Duration,
+    ) -> std::result::Result<usize, ServeError> {
+        let mut st = self.sh.st.lock().unwrap();
+        st.counters.submitted += 1;
+        if mat.rows < mat.cols || mat.cols == 0 {
+            st.counters.rejected += 1;
+            return Err(ServeError::BadShape { m: mat.rows, n: mat.cols });
+        }
+        let limit = self.opts.max_queue.max(1);
+        let depth = st.pending.len() + st.inflight;
+        if depth >= limit {
+            st.counters.rejected += 1;
+            return Err(ServeError::QueueFull { depth, limit });
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.planner
+            .insert_prec(id, mat.rows, mat.cols, self.cfg, precision)
+            .expect("shape pre-validated and id fresh");
+        st.pending.insert(id, Pending { mat, submitted: Instant::now(), deadline });
+        st.counters.admitted += 1;
+        *st.dtype_counts.entry(precision.name().to_string()).or_insert(0) += 1;
+        let open = st.pending.len() + st.inflight;
+        st.counters.queue_peak = st.counters.queue_peak.max(open);
+        drop(st);
+        self.sh.dispatch.notify_one();
+        Ok(id)
+    }
+
+    /// Cancel a request that has not been dispatched yet. Returns `true`
+    /// if it was still pending — it is evicted, never reaches a device,
+    /// and its [`wait`](ServeHandle::wait) resolves to
+    /// [`ServeError::Cancelled`]. Returns `false` when the request is
+    /// already dispatched, resolved, or unknown (in-flight work cannot
+    /// be recalled; its bucket completes).
+    pub fn cancel(&self, id: usize) -> bool {
+        let mut st = self.sh.st.lock().unwrap();
+        if st.planner.evict(id).is_none() {
+            return false;
+        }
+        st.pending.remove(&id).expect("planner and pending move in lockstep");
+        st.counters.cancelled += 1;
+        st.done.insert(id, Err(ServeError::Cancelled));
+        drop(st);
+        self.sh.done_cv.notify_all();
+        self.sh.dispatch.notify_one();
+        true
+    }
+
+    /// Block until request `id` resolves and claim its outcome. One
+    /// claim per admitted id — a second `wait` on the same id (or a
+    /// never-admitted id) would block forever, so don't.
+    pub fn wait(&self, id: usize) -> ServeResult {
+        let mut st = self.sh.st.lock().unwrap();
+        loop {
+            if let Some(r) = st.done.remove(&id) {
+                return r;
+            }
+            st = self.sh.done_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Open requests right now (queued + in-flight) — the quantity the
+    /// admission bound compares against.
+    pub fn depth(&self) -> usize {
+        let st = self.sh.st.lock().unwrap();
+        st.pending.len() + st.inflight
+    }
+}
+
+/// Sets `closed` when the client returns *or unwinds* — either way the
+/// dispatcher drains and the pool shuts down instead of deadlocking the
+/// scope join.
+struct CloseGuard<'a>(&'a Shared);
+
+impl Drop for CloseGuard<'_> {
+    fn drop(&mut self) {
+        self.0.st.lock().unwrap().closed = true;
+        self.0.dispatch.notify_all();
+    }
+}
+
+/// Run a continuous-batching server for the duration of `client`.
+///
+/// The client drives traffic through the [`ServeHandle`]; when it
+/// returns, the server drains (queued buckets dispatch immediately,
+/// in-flight work completes) and the report is built from the final
+/// state. Worker/device topology matches the one-shot batched path:
+/// `cfg.threads` pool workers multiplexing `min(threads, backend
+/// fan-out hint)` devices through a strict-FIFO [`DeviceMux`], with the
+/// host thread budget divided across workers.
+///
+/// [`DeviceMux`]: crate::runtime::DeviceMux
+pub fn serve<F>(cfg: &Config, opts: &ServeOpts, client: F) -> Result<ServeReport>
+where
+    F: FnOnce(&ServeHandle<'_>),
+{
+    let t0 = Instant::now();
+    let width = cfg.threads.max(1);
+    let max_lanes = opts.max_lanes.clamp(1, MAX_FUSE_LANES);
+
+    // same device topology as the one-shot path: eager construction (so
+    // errors surface before any thread spins up), strict-FIFO mux
+    let slots = width.min(cfg.backend.max_parallelism_hint()).max(1);
+    let mut devices = Vec::with_capacity(slots);
+    for _ in 0..slots {
+        devices.push(Device::with_backend_sched(
+            cfg.backend,
+            &cfg.artifacts,
+            cfg.transfer,
+            cfg.sched_policy(),
+        )?);
+    }
+    let mux = DeviceMux::new(devices, width);
+    let mut solve_cfg = cfg.clone();
+    solve_cfg.threads = (cfg.threads / width).max(1);
+
+    let sh = Shared {
+        st: Mutex::new(State::default()),
+        dispatch: Condvar::new(),
+        done_cv: Condvar::new(),
+    };
+    let inj: Injector<Job> = Injector::new();
+    let pool = StealPool::new(width);
+
+    std::thread::scope(|scope| {
+        let dispatcher = scope.spawn(|| run_dispatcher(&sh, &inj, max_lanes));
+        let workers = scope.spawn(|| {
+            pool.run_stream(
+                &inj,
+                |w| w,
+                |w, job| run_job(&sh, &mux, &solve_cfg, *w, job),
+            );
+        });
+        {
+            let _close = CloseGuard(&sh);
+            let handle = ServeHandle { sh: &sh, cfg, opts };
+            client(&handle);
+        }
+        dispatcher.join().expect("serve dispatcher panicked");
+        workers.join().expect("serve worker pool panicked");
+    });
+
+    let wall = t0.elapsed().as_secs_f64();
+    let mut device = DeviceStats::default();
+    let (mut verified_ops, mut verify_sec) = (0u64, 0.0f64);
+    for d in mux.devices() {
+        device.absorb(&d.stats());
+        if let Some((ops, sec)) = d.verify_counters() {
+            verified_ops += ops;
+            verify_sec += sec;
+        }
+    }
+
+    let st = sh.st.into_inner().unwrap();
+    let c = st.counters;
+    let lane_occupancy = if c.fused_units > 0 {
+        c.fused_lanes as f64 / (c.fused_units * max_lanes as u64) as f64
+    } else {
+        0.0
+    };
+    let metrics = ServeMetrics {
+        submitted: c.submitted,
+        admitted: c.admitted,
+        rejected: c.rejected,
+        completed: c.completed,
+        cancelled: c.cancelled,
+        expired: c.expired,
+        failed: c.failed,
+        units: c.units,
+        fused_units: c.fused_units,
+        fused_lanes: c.fused_lanes,
+        max_lanes,
+        lane_occupancy,
+        queue_peak: c.queue_peak,
+        wall,
+        p50_ms: percentile(&st.latencies_ms, 50.0),
+        p99_ms: percentile(&st.latencies_ms, 99.0),
+        deadline_ms: opts.deadline.as_millis() as u64,
+        threads: width,
+        device_slots: mux.slots(),
+        device,
+        verified_ops,
+        verify_sec,
+        dtype_counts: st.dtype_counts,
+    };
+    Ok(ServeReport { metrics, results: st.done.into_iter().collect() })
+}
+
+/// The dispatcher loop: expire overdue pending requests, turn due
+/// buckets into jobs, sleep until the next dispatch point. Exits (and
+/// closes the injector, releasing the workers) once the server is
+/// closed and fully drained.
+fn run_dispatcher(sh: &Shared, inj: &Injector<Job>, max_lanes: usize) {
+    let mut st = sh.st.lock().unwrap();
+    loop {
+        let now = Instant::now();
+
+        // 1) evict pending requests past their FULL deadline
+        let overdue: Vec<usize> = st
+            .pending
+            .iter()
+            .filter(|(_, p)| now.duration_since(p.submitted) >= p.deadline)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in overdue {
+            st.planner.evict(id).expect("pending implies planned");
+            let p = st.pending.remove(&id).expect("just observed pending");
+            st.counters.expired += 1;
+            st.done.insert(
+                id,
+                Err(ServeError::DeadlineExpired {
+                    waited_ms: now.duration_since(p.submitted).as_millis() as u64,
+                    deadline_ms: p.deadline.as_millis() as u64,
+                }),
+            );
+            sh.done_cv.notify_all();
+        }
+
+        // the next instant anything could become actionable without a
+        // state change: a pending request's full-deadline expiry...
+        let mut next_due: Option<Instant> =
+            st.pending.values().map(|p| p.submitted + p.deadline).min();
+
+        // 2) find a due bucket: full, drain-on-close, or oldest member
+        //    halfway through its deadline budget
+        let mut due: Option<ShapeKey> = None;
+        for (key, ids) in st.planner.buckets_iter() {
+            if ids.len() >= max_lanes || st.closed {
+                due = Some(*key);
+                break;
+            }
+            let oldest = &st.pending[&ids[0]];
+            let fire_at = oldest.submitted + oldest.deadline / 2;
+            if fire_at <= now {
+                due = Some(*key);
+                break;
+            }
+            // ...or a bucket's half-deadline dispatch point
+            next_due = Some(next_due.map_or(fire_at, |t| t.min(fire_at)));
+        }
+
+        if let Some(key) = due {
+            let ids = st.planner.take(&key, max_lanes);
+            let lanes: Vec<Lane> = ids
+                .iter()
+                .map(|&id| {
+                    let p = st.pending.remove(&id).expect("taken implies pending");
+                    Lane { id, mat: p.mat, submitted: p.submitted }
+                })
+                .collect();
+            st.inflight += lanes.len();
+            st.counters.units += 1;
+            if lanes.len() >= 2 {
+                st.counters.fused_units += 1;
+                st.counters.fused_lanes += lanes.len() as u64;
+            }
+            inj.push(Job { key, lanes });
+            continue; // rescan: more buckets may be due right now
+        }
+
+        // 3) closed and fully drained: release the workers and exit
+        if st.closed && st.pending.is_empty() && st.inflight == 0 {
+            inj.close();
+            return;
+        }
+
+        // 4) sleep until the next dispatch point or a state change
+        st = match next_due {
+            Some(t) => {
+                let wait = t.saturating_duration_since(Instant::now());
+                sh.dispatch.wait_timeout(st, wait).unwrap().0
+            }
+            None => sh.dispatch.wait(st).unwrap(),
+        };
+    }
+}
+
+/// Execute one dispatched job on a leased device and resolve its lanes.
+/// Mirrors the one-shot unit runner: panic containment at the job
+/// boundary, per-job dtype from the bucket key, buffer-leak audit after
+/// a clean solve.
+fn run_job(sh: &Shared, mux: &DeviceMux, solve_cfg: &Config, worker: usize, job: Job) {
+    let mut cfg = solve_cfg.clone();
+    cfg.precision = job.key.precision;
+    let k = job.lanes.len();
+    let solved: std::result::Result<Vec<SvdResult>, String> =
+        catch_unwind(AssertUnwindSafe(|| {
+            mux.with_device(worker, |d| {
+                let out = if k >= 2 {
+                    let mats: Vec<&Matrix> = job.lanes.iter().map(|l| &l.mat).collect();
+                    gesdd_ours_fused_prec(d, &mats, &cfg).map(|(rs, _)| rs)
+                } else {
+                    gesvd(d, &job.lanes[0].mat, &cfg, Solver::Ours).map(|r| vec![r])
+                };
+                match out {
+                    Ok(rs) => match d.verify_leaks() {
+                        Ok(()) => Ok(rs),
+                        Err(e) => Err(format!("{e:#}")),
+                    },
+                    Err(e) => Err(format!("{e:#}")),
+                }
+            })
+        }))
+        .unwrap_or_else(|p| {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic".to_string());
+            Err(format!("solver panicked: {msg}"))
+        });
+
+    let mut st = sh.st.lock().unwrap();
+    match solved {
+        Ok(rs) => {
+            for (lane, r) in job.lanes.into_iter().zip(rs) {
+                let ms = lane.submitted.elapsed().as_secs_f64() * 1e3;
+                st.latencies_ms.push(ms);
+                st.done.insert(lane.id, Ok(r));
+                st.counters.completed += 1;
+            }
+        }
+        Err(e) => {
+            for lane in job.lanes {
+                st.done.insert(lane.id, Err(ServeError::Solver(e.clone())));
+                st.counters.failed += 1;
+            }
+        }
+    }
+    st.inflight -= k;
+    drop(st);
+    sh.done_cv.notify_all();
+    sh.dispatch.notify_one();
+}
+
+/// One request of the seeded synthetic traffic process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SynthReq {
+    pub m: usize,
+    pub n: usize,
+    pub precision: Precision,
+    /// Inter-arrival gap to wait *before* submitting this request.
+    pub gap: Duration,
+}
+
+/// Deterministic synthetic traffic: a seeded mix of shapes (the base
+/// `m x n`, its square `n x n`, a taller `2n x n`, and an `m x 1`
+/// column) and dtypes (f64-heavy with f32/mixed minorities, unless
+/// `dtype` pins one), with uniformly jittered inter-arrival gaps of
+/// mean `mean_gap`. Same arguments, same trace — CI replays are exact.
+pub fn synth_traffic(
+    requests: usize,
+    seed: u64,
+    m: usize,
+    n: usize,
+    mean_gap: Duration,
+    dtype: Option<Precision>,
+) -> Vec<SynthReq> {
+    let mut rng = crate::util::Rng::new(seed ^ 0x5eed_5e12);
+    let n = n.max(1);
+    let m = m.max(n);
+    (0..requests)
+        .map(|_| {
+            let (rm, rn) = match rng.below(4) {
+                0 => (m, n),
+                1 => (n, n),
+                2 => (2 * n, n),
+                _ => (m, 1),
+            };
+            let precision = dtype.unwrap_or(match rng.below(8) {
+                0..=4 => Precision::F64,
+                5 | 6 => Precision::F32,
+                _ => Precision::Mixed,
+            });
+            let gap = mean_gap.mul_f64(2.0 * rng.uniform());
+            SynthReq { m: rm, n: rn, precision, gap }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_traffic_is_seed_deterministic_and_well_shaped() {
+        let a = synth_traffic(64, 7, 48, 32, Duration::from_micros(100), None);
+        let b = synth_traffic(64, 7, 48, 32, Duration::from_micros(100), None);
+        assert_eq!(a, b, "same seed, same trace");
+        let c = synth_traffic(64, 8, 48, 32, Duration::from_micros(100), None);
+        assert_ne!(a, c, "different seed, different trace");
+        for r in &a {
+            assert!(r.m >= r.n && r.n >= 1, "{}x{}", r.m, r.n);
+            assert!(r.gap <= Duration::from_micros(200));
+        }
+        // the mix covers >1 shape and >1 dtype at this length
+        let shapes: std::collections::BTreeSet<_> = a.iter().map(|r| (r.m, r.n)).collect();
+        let dtypes: std::collections::BTreeSet<_> = a.iter().map(|r| r.precision).collect();
+        assert!(shapes.len() > 1, "shape mix");
+        assert!(dtypes.len() > 1, "dtype mix");
+        // pinning a dtype pins every request
+        let pinned = synth_traffic(16, 7, 48, 32, Duration::ZERO, Some(Precision::F32));
+        assert!(pinned.iter().all(|r| r.precision == Precision::F32));
+    }
+
+    #[test]
+    fn serve_error_messages_name_their_cause() {
+        let cases = [
+            (ServeError::QueueFull { depth: 9, limit: 8 }, "queue full"),
+            (ServeError::BadShape { m: 2, n: 5 }, "2x5"),
+            (ServeError::Cancelled, "cancelled"),
+            (ServeError::DeadlineExpired { waited_ms: 12, deadline_ms: 10 }, "deadline"),
+            (ServeError::Solver("boom".into()), "boom"),
+        ];
+        for (e, needle) in cases {
+            let msg = format!("{e}");
+            assert!(msg.contains(needle), "{msg:?} should contain {needle:?}");
+        }
+    }
+}

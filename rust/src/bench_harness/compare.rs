@@ -44,6 +44,11 @@
 //! A baseline with no rows (the committed seed before the first
 //! CI-generated refresh) skips checks 4-5 with a notice; checks 1-3
 //! always gate.
+//!
+//! [`check_serve_artifact`] is the serve-mode sibling (`svd-serve
+//! --gate`): machine-free invariants over a fresh `BENCH_serve.json` —
+//! rows present, request conservation, p99 latency under the configured
+//! deadline, fused lane occupancy above a floor.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -356,6 +361,105 @@ pub fn compare_batch_baseline(baseline: &Path, fresh: &Path, tol: f64) -> Result
             );
         }
     }
+    Ok(())
+}
+
+/// The serve gate (`svd-serve --gate`). Machine-free invariants over a
+/// `BENCH_serve.json` artifact, per row:
+///
+/// 1. **Rows present.** A missing file, missing `rows` array, or empty
+///    row list fails loudly — a serve smoke that produced nothing to
+///    gate is a broken smoke, not a pass.
+/// 2. **Request conservation.** `submitted == admitted + rejected` and
+///    `admitted == completed + cancelled + expired + failed` — every
+///    request resolves exactly once; none vanish, none double-count.
+/// 3. **p99 under the deadline.** `p99_ms` must be present (with >= 1
+///    completed request the percentile guard can't return null) and at
+///    most the configured `deadline_ms`: admitted requests made their
+///    latency contract.
+/// 4. **Fused dispatch happened, wide enough.** `fused_units >= 1` and
+///    `lane_occupancy >= occupancy_floor` — the continuous batcher
+///    actually aggregated traffic instead of degenerating to per-solve
+///    serving or near-empty buckets.
+pub fn check_serve_artifact(path: &Path, occupancy_floor: f64) -> Result<()> {
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&occupancy_floor),
+        "--occupancy-floor must be in [0, 1] (got {occupancy_floor})"
+    );
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading serve artifact {}", path.display()))?;
+    let doc = Value::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    let rows = doc
+        .get("rows")
+        .and_then(Value::as_arr)
+        .with_context(|| format!("{}: no \"rows\" array", path.display()))?;
+    anyhow::ensure!(
+        !rows.is_empty(),
+        "{}: serve artifact has no rows — the serve smoke produced nothing to gate",
+        path.display()
+    );
+    for (i, row) in rows.iter().enumerate() {
+        let num = |key: &str| -> Result<f64> {
+            row.get(key)
+                .and_then(Value::as_f64)
+                .with_context(|| format!("{} row {i}: missing number {key:?}", path.display()))
+        };
+        let submitted = num("submitted")? as u64;
+        let admitted = num("admitted")? as u64;
+        let rejected = num("rejected")? as u64;
+        let completed = num("completed")? as u64;
+        let cancelled = num("cancelled")? as u64;
+        let expired = num("expired")? as u64;
+        let failed = num("failed")? as u64;
+        if submitted != admitted + rejected {
+            bail!(
+                "row {i}: admission accounting leaks: submitted {submitted} != \
+                 admitted {admitted} + rejected {rejected}"
+            );
+        }
+        if admitted != completed + cancelled + expired + failed {
+            bail!(
+                "row {i}: requests vanished: admitted {admitted} != completed {completed} \
+                 + cancelled {cancelled} + expired {expired} + failed {failed}"
+            );
+        }
+        anyhow::ensure!(
+            completed >= 1,
+            "row {i}: zero completed requests — the server served nothing"
+        );
+        let deadline_ms = num("deadline_ms")?;
+        let Some(p99) = row.get("p99_ms").and_then(Value::as_f64) else {
+            bail!(
+                "row {i}: p99_ms is null with {completed} completed requests — \
+                 the latency percentiles are broken"
+            );
+        };
+        if p99 > deadline_ms {
+            bail!(
+                "row {i}: p99 latency {p99:.2}ms exceeds the configured \
+                 {deadline_ms:.0}ms deadline for admitted requests"
+            );
+        }
+        println!("  p99 OK: {p99:.2}ms within the {deadline_ms:.0}ms deadline");
+        let fused_units = num("fused_units")? as u64;
+        anyhow::ensure!(
+            fused_units >= 1,
+            "row {i}: no fused bucket dispatched — continuous batching degenerated \
+             to per-solve serving"
+        );
+        let occ = num("lane_occupancy")?;
+        if occ < occupancy_floor {
+            bail!(
+                "row {i}: fused lane occupancy {occ:.3} below the {occupancy_floor:.3} \
+                 floor — buckets dispatch near-empty"
+            );
+        }
+        println!(
+            "  occupancy OK: {occ:.3} across {fused_units} fused dispatch(es) \
+             (floor {occupancy_floor:.3})"
+        );
+    }
+    println!("  serve gate OK: {} row(s) checked", rows.len());
     Ok(())
 }
 
@@ -698,5 +802,121 @@ mod tests {
         std::fs::remove_file(&base).ok();
         std::fs::remove_file(&fresh).ok();
         std::fs::remove_file(&bad).ok();
+    }
+
+    /// One serve row with conservation holding by construction:
+    /// submitted = admitted + 1 rejected; admitted = completed + 1
+    /// cancelled (+ 0 expired/failed).
+    fn serve_row(
+        completed: u64,
+        p99: Option<f64>,
+        deadline_ms: f64,
+        fused_units: u64,
+        occ: f64,
+    ) -> Json {
+        Json::obj([
+            ("submitted", Json::uint(completed + 2)),
+            ("admitted", Json::uint(completed + 1)),
+            ("rejected", Json::uint(1)),
+            ("completed", Json::uint(completed)),
+            ("cancelled", Json::uint(1)),
+            ("expired", Json::uint(0)),
+            ("failed", Json::uint(0)),
+            ("deadline_ms", Json::num(deadline_ms)),
+            ("p50_ms", p99.map_or(Json::null(), |v| Json::num(v / 2.0))),
+            ("p99_ms", p99.map_or(Json::null(), Json::num)),
+            ("fused_units", Json::uint(fused_units)),
+            ("lane_occupancy", Json::num(occ)),
+        ])
+    }
+
+    fn serve_doc(rows: Vec<Json>) -> Json {
+        Json::obj([("bench", Json::str("serve")), ("rows", Json::arr(rows))])
+    }
+
+    #[test]
+    fn serve_gate_accepts_a_healthy_artifact() {
+        let rows = vec![serve_row(40, Some(82.0), 10_000.0, 5, 0.7)];
+        let p = write_tmp("serve-ok", &serve_doc(rows));
+        check_serve_artifact(&p, 0.25).expect("healthy serve row must gate clean");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn serve_gate_fails_loudly_on_missing_or_empty_rows() {
+        let none = write_tmp("serve-norows", &Json::obj([("bench", Json::str("serve"))]));
+        let err = check_serve_artifact(&none, 0.25).unwrap_err();
+        assert!(format!("{err:#}").contains("no \"rows\""), "{err:#}");
+        let empty = write_tmp("serve-empty", &serve_doc(vec![]));
+        let err = check_serve_artifact(&empty, 0.25).unwrap_err();
+        assert!(format!("{err:#}").contains("no rows"), "{err:#}");
+        std::fs::remove_file(&none).ok();
+        std::fs::remove_file(&empty).ok();
+    }
+
+    #[test]
+    fn serve_gate_rejects_p99_over_deadline_or_null() {
+        let late = write_tmp(
+            "serve-late",
+            &serve_doc(vec![serve_row(40, Some(12_000.0), 10_000.0, 5, 0.7)]),
+        );
+        let err = check_serve_artifact(&late, 0.25).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds the configured"), "{err:#}");
+        let null =
+            write_tmp("serve-nullp99", &serve_doc(vec![serve_row(40, None, 10_000.0, 5, 0.7)]));
+        let err = check_serve_artifact(&null, 0.25).unwrap_err();
+        assert!(format!("{err:#}").contains("p99_ms is null"), "{err:#}");
+        std::fs::remove_file(&late).ok();
+        std::fs::remove_file(&null).ok();
+    }
+
+    #[test]
+    fn serve_gate_enforces_fusion_and_the_occupancy_floor() {
+        let thin = write_tmp(
+            "serve-thin",
+            &serve_doc(vec![serve_row(40, Some(82.0), 10_000.0, 5, 0.1)]),
+        );
+        let err = check_serve_artifact(&thin, 0.25).unwrap_err();
+        assert!(format!("{err:#}").contains("below the"), "{err:#}");
+        check_serve_artifact(&thin, 0.05).expect("a lower floor absorbs thin occupancy");
+        let unfused = write_tmp(
+            "serve-unfused",
+            &serve_doc(vec![serve_row(40, Some(82.0), 10_000.0, 0, 0.0)]),
+        );
+        let err = check_serve_artifact(&unfused, 0.0).unwrap_err();
+        assert!(format!("{err:#}").contains("no fused bucket"), "{err:#}");
+        std::fs::remove_file(&thin).ok();
+        std::fs::remove_file(&unfused).ok();
+    }
+
+    #[test]
+    fn serve_gate_catches_request_leaks() {
+        // admitted 41 but outcomes only sum to 40: one request vanished
+        let leak = Json::obj([
+            ("submitted", Json::uint(42)),
+            ("admitted", Json::uint(41)),
+            ("rejected", Json::uint(1)),
+            ("completed", Json::uint(40)),
+            ("cancelled", Json::uint(0)),
+            ("expired", Json::uint(0)),
+            ("failed", Json::uint(0)),
+            ("deadline_ms", Json::num(10_000.0)),
+            ("p99_ms", Json::num(82.0)),
+            ("fused_units", Json::uint(5)),
+            ("lane_occupancy", Json::num(0.7)),
+        ]);
+        let p = write_tmp("serve-leak", &serve_doc(vec![leak]));
+        let err = check_serve_artifact(&p, 0.25).unwrap_err();
+        assert!(format!("{err:#}").contains("requests vanished"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn serve_gate_validates_the_floor_argument() {
+        let rows = vec![serve_row(40, Some(82.0), 10_000.0, 5, 0.7)];
+        let p = write_tmp("serve-floorarg", &serve_doc(rows));
+        assert!(check_serve_artifact(&p, 1.5).is_err());
+        assert!(check_serve_artifact(&p, -0.1).is_err());
+        std::fs::remove_file(&p).ok();
     }
 }

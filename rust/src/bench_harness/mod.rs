@@ -63,6 +63,30 @@ pub fn overlap_split(transfer_sec: f64, overlap_sec: f64) -> Option<f64> {
     Some(overlap_sec.clamp(0.0, transfer_sec))
 }
 
+/// Guarded nearest-rank percentile for the serve-mode latency figures
+/// (`ServeMetrics::p50_ms` / `p99_ms`, `BENCH_serve.json`).
+///
+/// `None` on an empty sample — a run that completed zero requests has no
+/// latency distribution, and reporting `0.0` would read as "measured,
+/// instant" to the p99-deadline CI gate instead of "nothing to measure"
+/// (the same discipline as [`time_median`]'s reps clamp and
+/// [`overlap_split`]'s empty-phase guard). A singleton sample is that
+/// value at every percentile; `p` is clamped into `[0, 100]` and `p = 0`
+/// returns the minimum.
+pub fn percentile(samples: &[f64], p: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = p.clamp(0.0, 100.0);
+    // nearest-rank: the smallest sample with at least p% of the mass at
+    // or below it; ceil keeps p50 of [1, 2] at 1 (the lower middle) and
+    // p100 at the max for every sample size
+    let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
+    Some(xs[rank.saturating_sub(1).min(xs.len() - 1)])
+}
+
 /// 8/3 n^3 — the gebrd / BDC flop convention the paper uses.
 pub fn gebrd_flops(m: usize, n: usize) -> f64 {
     let (m, n) = (m as f64, n as f64);
@@ -262,6 +286,35 @@ mod tests {
         // distinguishes median from min (1.0), mean (4.25) and max (9.0)
         assert_eq!(median_of(vec![9.0, 1.0, 2.0, 5.0]), 5.0);
         assert_eq!(median_of(vec![0.0, 0.0, 0.0, 6.0, 6.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_guards_empty_and_singleton_samples() {
+        // 0 completed requests: no distribution, not a 0ms one
+        assert_eq!(percentile(&[], 50.0), None);
+        assert_eq!(percentile(&[], 99.0), None);
+        // 1 completed request: that value at every percentile
+        assert_eq!(percentile(&[7.5], 0.0), Some(7.5));
+        assert_eq!(percentile(&[7.5], 50.0), Some(7.5));
+        assert_eq!(percentile(&[7.5], 99.0), Some(7.5));
+        assert_eq!(percentile(&[7.5], 100.0), Some(7.5));
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_over_the_sorted_sample() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0]; // unsorted on purpose
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 20.0), Some(1.0));
+        assert_eq!(percentile(&xs, 50.0), Some(3.0));
+        assert_eq!(percentile(&xs, 99.0), Some(5.0));
+        assert_eq!(percentile(&xs, 100.0), Some(5.0));
+        // out-of-range p clamps instead of indexing out of bounds
+        assert_eq!(percentile(&xs, -5.0), Some(1.0));
+        assert_eq!(percentile(&xs, 250.0), Some(5.0));
+        // even count: p50 is the lower middle (nearest-rank, not interp)
+        assert_eq!(percentile(&[1.0, 2.0], 50.0), Some(1.0));
+        // p99 of a small sample is the max, never past it
+        assert_eq!(percentile(&[3.0, 1.0], 99.0), Some(3.0));
     }
 
     #[test]

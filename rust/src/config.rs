@@ -103,6 +103,36 @@ impl Config {
     }
 }
 
+/// Knobs for the continuous-batching server mode (`svd-serve`,
+/// `batch::serve`). The [`Config`] carries the *solver* knobs; this
+/// carries the *service* contract — how long a request may wait, how
+/// much may be open at once, and how wide a dispatched bucket may fuse.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Per-request latency deadline. A bucket dispatches when its oldest
+    /// member has spent half of this budget (or the bucket is full); a
+    /// request still pending at the full deadline is evicted with a
+    /// typed `DeadlineExpired` error.
+    pub deadline: std::time::Duration,
+    /// Admission bound on *open* requests (queued + in-flight). A
+    /// submission beyond this is rejected with the typed backpressure
+    /// error (`ServeError::QueueFull`) instead of growing the queue.
+    pub max_queue: usize,
+    /// Widest fused bucket one dispatch may take, clamped into
+    /// `[1, MAX_FUSE_LANES]` by the server.
+    pub max_lanes: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            deadline: std::time::Duration::from_secs(10),
+            max_queue: 512,
+            max_lanes: crate::batch::plan::MAX_FUSE_LANES,
+        }
+    }
+}
+
 impl Default for Config {
     fn default() -> Self {
         Config {

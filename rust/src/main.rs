@@ -19,6 +19,22 @@
 //!             growth, scalar ops in fused streams, or a fused/serial
 //!             throughput ratio beyond T x baseline (default 3) — the CI
 //!             perf-regression gate
+//!   svd-serve [--requests N] [--seed S] [--m M] [--n N] [--kind K]
+//!             [--deadline-ms D] [--arrival-us A] [--max-queue Q]
+//!             [--max-lanes L] [--threads T] [--dtype f32|f64|mixed]
+//!             [--check] [--verify] [--json FILE]
+//!             continuous-batching server over a seeded synthetic
+//!             traffic mix (shapes + dtypes): requests aggregate into
+//!             fused k-wide buckets under the latency deadline
+//!             (DESIGN.md §Continuous batching); prints admission /
+//!             dispatch / latency metrics; --check replays every request
+//!             serially and fails on any divergence; --json writes the
+//!             `BENCH_serve.json` metrics row
+//!   svd-serve --gate FILE [--occupancy-floor F]
+//!             no solves: validate a `BENCH_serve.json` artifact — rows
+//!             present, request conservation, p99 under the configured
+//!             deadline, fused lane occupancy above the floor — the CI
+//!             serve gate
 //!   bench     <fig4|fig5a|fig5b|fig6..fig20|batch|all> [--reps R]
 //!             [--json FILE]
 //!             regenerate a paper figure (see DESIGN.md experiment
@@ -42,9 +58,12 @@
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+use std::time::Duration;
 
+use gcsvd::batch::plan::MAX_FUSE_LANES;
+use gcsvd::batch::serve::{serve, synth_traffic, ServeHandle};
 use gcsvd::bench_harness::{self, figs_batch, json::Json, Ctx};
-use gcsvd::config::{Config, Solver};
+use gcsvd::config::{Config, ServeOpts, Solver};
 use gcsvd::gen::{generate, MatrixKind};
 use gcsvd::runtime::transfer::TransferModel;
 use gcsvd::runtime::Device;
@@ -396,6 +415,202 @@ fn cmd_svd_batch(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_svd_serve(args: &Args) -> Result<()> {
+    // gate mode: no solves — validate a BENCH_serve.json artifact
+    // against the service invariants (rows present, request
+    // conservation, p99 under the configured deadline, fused lane
+    // occupancy above the floor); the CI serve gate
+    if let Some(path) = args.get("gate") {
+        let floor = args.get_f64("occupancy-floor", 0.25)?;
+        println!("gating serve artifact {path} (occupancy floor {floor})");
+        return gcsvd::bench_harness::compare::check_serve_artifact(
+            std::path::Path::new(path),
+            floor,
+        );
+    }
+
+    let cfg = build_config(args)?;
+    let requests = args.get_usize("requests", 64)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let m = args.get_usize("m", 64)?;
+    let n = args.get_usize("n", 48)?;
+    anyhow::ensure!(m >= n && n >= 1, "--m must be >= --n >= 1");
+    let theta = args.get_f64("theta", 100.0)?;
+    let kind = MatrixKind::parse(args.get("kind").unwrap_or("random"))
+        .ok_or_else(|| anyhow!("unknown --kind (random|logrand|arith|geo)"))?;
+    let opts = ServeOpts {
+        deadline: Duration::from_millis(args.get_usize("deadline-ms", 10_000)? as u64),
+        max_queue: args.get_usize("max-queue", 512)?,
+        max_lanes: args.get_usize("max-lanes", MAX_FUSE_LANES)?,
+    };
+    let arrival = Duration::from_micros(args.get_usize("arrival-us", 200)? as u64);
+    // --dtype pins every request to cfg.precision; the default traffic
+    // mixes dtypes (which can never co-bucket)
+    let dtype = args.get("dtype").map(|_| cfg.precision);
+
+    let traffic = synth_traffic(requests, seed, m, n, arrival, dtype);
+    let inputs: Vec<gcsvd::Matrix> = traffic
+        .iter()
+        .enumerate()
+        .map(|(i, r)| generate(kind, r.m, r.n, theta, seed + i as u64))
+        .collect();
+
+    println!(
+        "serving {requests} seeded {} requests (base {m}x{n}, mean gap {arrival:?}, \
+         deadline {:?}, {} dtypes)",
+        kind.name(),
+        opts.deadline,
+        if dtype.is_some() { "pinned" } else { "mixed" }
+    );
+
+    // (request id -> traffic index) for every admitted request; ids only
+    // advance on admission, so the map is exact under rejections too
+    let mut admitted_map: Vec<(usize, usize)> = Vec::with_capacity(requests);
+    let report = serve(&cfg, &opts, |h: &ServeHandle| {
+        for (i, (req, mat)) in traffic.iter().zip(&inputs).enumerate() {
+            if !req.gap.is_zero() {
+                std::thread::sleep(req.gap);
+            }
+            match h.submit(mat.clone(), req.precision) {
+                Ok(id) => admitted_map.push((id, i)),
+                Err(e) => eprintln!("request {i} rejected: {e}"),
+            }
+        }
+    })?;
+    let mt = &report.metrics;
+
+    println!(
+        "admission: {} submitted, {} admitted, {} rejected | queue peak {}",
+        mt.submitted, mt.admitted, mt.rejected, mt.queue_peak
+    );
+    println!(
+        "outcomes: {} completed, {} cancelled, {} expired, {} failed",
+        mt.completed, mt.cancelled, mt.expired, mt.failed
+    );
+    println!(
+        "dispatch: {} units ({} fused carrying {} lanes, occupancy {:.2} of {}-lane cap)",
+        mt.units, mt.fused_units, mt.fused_lanes, mt.lane_occupancy, mt.max_lanes
+    );
+    let fmt_ms = |x: Option<f64>| x.map_or("n/a".to_string(), |v| format!("{v:.2}ms"));
+    println!(
+        "latency: p50 {} p99 {} (deadline {}ms) | wall {:.3}s | {:.1} req/s",
+        fmt_ms(mt.p50_ms),
+        fmt_ms(mt.p99_ms),
+        mt.deadline_ms,
+        mt.wall,
+        mt.completed as f64 / mt.wall.max(1e-12)
+    );
+    println!(
+        "pool: {} workers over {} device slot(s) | dtypes {:?}",
+        mt.threads, mt.device_slots, mt.dtype_counts
+    );
+    if mt.verified_ops > 0 {
+        println!(
+            "verify: {} ops checked in {:.3}s (op-stream verifier clean)",
+            mt.verified_ops, mt.verify_sec
+        );
+    }
+
+    if args.get("check").is_some() {
+        anyhow::ensure!(
+            mt.failed == 0 && mt.expired == 0,
+            "check FAILED: {} failed, {} expired under a generous deadline",
+            mt.failed,
+            mt.expired
+        );
+        anyhow::ensure!(
+            mt.completed == mt.admitted,
+            "check FAILED: {} of {} admitted requests completed",
+            mt.completed,
+            mt.admitted
+        );
+        anyhow::ensure!(
+            mt.fused_units >= 1,
+            "check FAILED: no fused bucket dispatched (continuous batching inert)"
+        );
+        let by_id: HashMap<usize, &gcsvd::batch::serve::ServeResult> =
+            report.results.iter().map(|(id, r)| (*id, r)).collect();
+        let dev = make_device(&cfg)?;
+        let mut worst = 0.0f64;
+        let mut scale = 1.0f64;
+        for &(id, i) in &admitted_map {
+            let r = match by_id.get(&id).map(|r| r.as_ref()) {
+                Some(Ok(r)) => r,
+                Some(Err(e)) => bail!("check FAILED: request {i} (id {id}) errored: {e}"),
+                None => bail!("check FAILED: request {i} (id {id}) has no resolution"),
+            };
+            // serial reference at the request's own dtype — the served
+            // result must be bit-identical to the per-solve path
+            let mut scfg = cfg.clone();
+            scfg.precision = traffic[i].precision;
+            let s = gesvd(&dev, &inputs[i], &scfg, Solver::Ours)?;
+            worst = worst.max(gcsvd::util::max_abs_diff(&r.sigma, &s.sigma));
+            worst = worst.max(gcsvd::util::max_abs_diff(&r.u.data, &s.u.data));
+            worst = worst.max(gcsvd::util::max_abs_diff(&r.vt.data, &s.vt.data));
+            scale = scale.max(s.sigma.first().copied().unwrap_or(0.0));
+        }
+        println!(
+            "check: {} served results vs serial solves, max |serve - serial| {worst:.1e}",
+            admitted_map.len()
+        );
+        anyhow::ensure!(
+            worst <= 1e-10 * scale,
+            "parity check FAILED: served results diverge from serial by {worst:.3e}"
+        );
+    }
+
+    // machine-readable metrics row — CI uploads BENCH_serve.json and
+    // re-validates it through `svd-serve --gate`
+    if let Some(path) = args.get("json") {
+        let row = Json::obj([
+            ("cmd", Json::str("svd-serve")),
+            ("backend", Json::str(cfg.backend.name())),
+            ("kind", Json::str(kind.name())),
+            ("requests", Json::int(requests as i64)),
+            ("seed", Json::uint(seed)),
+            ("m", Json::int(m as i64)),
+            ("n", Json::int(n as i64)),
+            ("deadline_ms", Json::uint(mt.deadline_ms)),
+            ("arrival_us", Json::uint(arrival.as_micros() as u64)),
+            ("max_queue", Json::int(opts.max_queue as i64)),
+            ("max_lanes", Json::int(mt.max_lanes as i64)),
+            ("threads", Json::int(mt.threads as i64)),
+            ("device_slots", Json::int(mt.device_slots as i64)),
+            ("submitted", Json::uint(mt.submitted)),
+            ("admitted", Json::uint(mt.admitted)),
+            ("rejected", Json::uint(mt.rejected)),
+            ("completed", Json::uint(mt.completed)),
+            ("cancelled", Json::uint(mt.cancelled)),
+            ("expired", Json::uint(mt.expired)),
+            ("failed", Json::uint(mt.failed)),
+            ("units", Json::uint(mt.units)),
+            ("fused_units", Json::uint(mt.fused_units)),
+            ("fused_lanes", Json::uint(mt.fused_lanes)),
+            ("lane_occupancy", Json::num(mt.lane_occupancy)),
+            ("queue_peak", Json::int(mt.queue_peak as i64)),
+            ("wall_sec", Json::num(mt.wall)),
+            (
+                "throughput_rps",
+                Json::num(mt.completed as f64 / mt.wall.max(1e-12)),
+            ),
+            ("p50_ms", mt.p50_ms.map_or(Json::null(), Json::num)),
+            ("p99_ms", mt.p99_ms.map_or(Json::null(), Json::num)),
+            ("device_exec_count", Json::uint(mt.device.exec_count)),
+            ("live_buffers", Json::int(mt.device.live_buffers as i64)),
+            ("verified_ops", Json::uint(mt.verified_ops)),
+            ("verify_sec", Json::num(mt.verify_sec)),
+            (
+                "dtype_counts",
+                Json::obj(mt.dtype_counts.iter().map(|(k, v)| (k.as_str(), Json::uint(*v)))),
+            ),
+        ]);
+        let doc = Json::obj([("rows", Json::arr([row]))]);
+        doc.write_to(std::path::Path::new(path))?;
+        println!("wrote serve metrics row to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     let which = args
@@ -444,7 +659,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: gcsvd <svd|svd-batch|bench|profile|info> [flags]\n\
+        "usage: gcsvd <svd|svd-batch|svd-serve|bench|profile|info> [flags]\n\
          see rust/src/main.rs header or README.md for flag lists"
     );
     std::process::exit(2);
@@ -460,6 +675,7 @@ fn main() {
     let out = match cmd {
         "svd" => cmd_svd(&args),
         "svd-batch" | "svd_batch" => cmd_svd_batch(&args),
+        "svd-serve" | "svd_serve" => cmd_svd_serve(&args),
         "bench" => cmd_bench(&args),
         "profile" => cmd_profile(&args),
         "info" => cmd_info(&args),

@@ -17,7 +17,7 @@ pub mod verify;
 
 pub use backend::Backend;
 pub use device::{BackendKind, BufId, Device, DeviceStats};
-pub use pool::StealPool;
+pub use pool::{Injector, StealPool};
 pub use registry::OpKey;
 pub use stream::{DeviceMux, EventId, SchedPolicy, COMPUTE, TRANSFER};
 pub use verify::{verify_stream, verify_tagged_stream, TraceCmd, Verifier, Violation, ViolationKind};

@@ -29,7 +29,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Fixed-width work-stealing pool. Workers are scoped to each [`run`]
 /// call (`std::thread::scope`), so borrowed inputs need no `'static`
@@ -139,6 +139,116 @@ impl StealPool {
             .collect();
         (out, stats, states)
     }
+
+    /// Stream-mode execution for live work: every worker blocks on
+    /// `source` and runs jobs as they are injected, returning only once
+    /// the injector is closed *and* drained. This is the long-running
+    /// server's engine — the fixed-item [`run_with`](StealPool::run_with)
+    /// deals a known slice up front, while `run_stream` accepts work that
+    /// does not exist yet.
+    ///
+    /// Per-worker state is built lazily on the worker's first job,
+    /// exactly like `run_with`. There is no stealing — the shared
+    /// injector is the single queue every worker feeds from — so the
+    /// returned [`PoolStats::steals`] is always 0 and `workers` is the
+    /// full pool width.
+    pub fn run_stream<J, S, I, F>(&self, source: &Injector<J>, init: I, f: F) -> PoolStats
+    where
+        J: Send,
+        I: Fn(usize) -> S + Sync,
+        F: Fn(&mut S, J) + Sync,
+    {
+        std::thread::scope(|scope| {
+            for w in 0..self.threads {
+                let init = &init;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut state: Option<S> = None;
+                    while let Some(job) = source.pop_blocking() {
+                        f(state.get_or_insert_with(|| init(w)), job);
+                    }
+                });
+            }
+        });
+        PoolStats { workers: self.threads, steals: 0 }
+    }
+}
+
+/// Blocking multi-producer/multi-consumer injection queue: the live-work
+/// front door of [`StealPool::run_stream`]. Producers [`push`] jobs at
+/// any time; blocked consumers wake as jobs (or [`close`]) arrive.
+/// Closing *drains*: jobs already queued are still handed out, and only
+/// an empty closed queue returns `None` to a consumer — so a server can
+/// stop admissions, flush its backlog, and shut the pool down without
+/// dropping accepted work.
+///
+/// [`push`]: Injector::push
+/// [`close`]: Injector::close
+#[derive(Debug)]
+pub struct Injector<J> {
+    state: Mutex<InjectorState<J>>,
+    ready: Condvar,
+}
+
+#[derive(Debug)]
+struct InjectorState<J> {
+    jobs: VecDeque<J>,
+    closed: bool,
+}
+
+impl<J> Default for Injector<J> {
+    fn default() -> Self {
+        Injector::new()
+    }
+}
+
+impl<J> Injector<J> {
+    pub fn new() -> Injector<J> {
+        Injector {
+            state: Mutex::new(InjectorState { jobs: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job for the next free worker. Returns `false` (dropping
+    /// the job) if the queue is already closed.
+    pub fn push(&self, job: J) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Jobs queued and not yet claimed by a worker.
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    /// Stop accepting new jobs and wake every blocked consumer; queued
+    /// jobs still drain (see the type docs).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Block until a job arrives (`Some`) or the queue is closed *and*
+    /// drained (`None`).
+    fn pop_blocking(&self) -> Option<J> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(j) = st.jobs.pop_front() {
+                return Some(j);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
 }
 
 /// Pop the front of worker `me`'s deque, else steal from the back of the
@@ -237,5 +347,46 @@ mod tests {
         let pool = StealPool::new(0);
         assert_eq!(pool.threads(), 1);
         assert_eq!(pool.run(3, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn stream_runs_injected_jobs_and_drains_on_close() {
+        let pool = StealPool::new(4);
+        let inj = Injector::new();
+        let done = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                for i in 0..50usize {
+                    assert!(inj.push(i));
+                }
+                inj.close();
+                assert!(!inj.push(99), "closed queue rejects new jobs");
+            });
+            let stats = pool.run_stream(&inj, |w| w, |_w, i| done.lock().unwrap().push(i));
+            assert_eq!(stats.workers, 4);
+            assert_eq!(stats.steals, 0);
+        });
+        let mut got = done.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..50).collect::<Vec<_>>(), "close drains, it does not drop");
+        assert_eq!(inj.depth(), 0);
+    }
+
+    #[test]
+    fn stream_on_a_closed_empty_queue_exits_without_init() {
+        let inits = AtomicUsize::new(0);
+        let inj: Injector<usize> = Injector::new();
+        inj.close();
+        let pool = StealPool::new(3);
+        let stats = pool.run_stream(
+            &inj,
+            |w| {
+                inits.fetch_add(1, Ordering::Relaxed);
+                w
+            },
+            |_s, _j| {},
+        );
+        assert_eq!(stats.workers, 3);
+        assert_eq!(inits.load(Ordering::Relaxed), 0, "no job, no state built");
     }
 }

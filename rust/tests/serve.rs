@@ -1,0 +1,300 @@
+//! Continuous-batching service guarantees: the incremental planner is
+//! equivalent to from-scratch planning under seeded insert/evict
+//! sequences, dtypes never co-bucket even at the same shape, admission
+//! bounds reject with the typed backpressure error (and cancellation
+//! frees the slot), a cancelled request never touches a device, full
+//! buckets dispatch at the lane cap while in-flight work cannot be
+//! recalled, close drains queued work into fused units, zero-deadline
+//! requests expire without disturbing bucket neighbours, and a seeded
+//! mixed-shape/mixed-dtype soak resolves every request bit-identical to
+//! serial solves of the same inputs.
+//!
+//! This file is the CI ThreadSanitizer soak target (`--test serve` with
+//! `GCSVD_VERIFY=1 GCSVD_HOST_PAR=1`): shapes stay small and deadlines
+//! generous so the client/dispatcher/worker interleavings — not solve
+//! wall time — dominate.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use gcsvd::batch::plan::{PlannerState, MAX_FUSE_LANES};
+use gcsvd::batch::serve::{serve, synth_traffic, ServeError, ServeHandle};
+use gcsvd::config::{Config, ServeOpts, Solver};
+use gcsvd::matrix::Matrix;
+use gcsvd::runtime::transfer::TransferModel;
+use gcsvd::runtime::Device;
+use gcsvd::scalar::Precision;
+use gcsvd::svd::gesvd;
+use gcsvd::util::Rng;
+
+fn cfg_with_threads(threads: usize) -> Config {
+    Config {
+        threads,
+        transfer: TransferModel { enabled: false, ..Default::default() },
+        ..Config::default()
+    }
+}
+
+/// ServeOpts with a deadline far beyond the test's wall time: the only
+/// dispatch triggers left are "bucket full" and "drain on close", so
+/// every assertion below is schedule-independent.
+fn far_deadline() -> ServeOpts {
+    ServeOpts { deadline: Duration::from_secs(60), ..ServeOpts::default() }
+}
+
+fn gen(m: usize, n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(0x7e57 + seed);
+    Matrix::from_fn(m, n, |_, _| rng.gaussian())
+}
+
+/// The property `PlannerState`'s doc promises: a snapshot over any
+/// pending set equals a from-scratch plan over the survivors in arrival
+/// order — bucket keys, member order, and executable unit count all
+/// agree, under seeded random insert/evict traffic.
+#[test]
+fn incremental_planner_matches_from_scratch_planning() {
+    let cfg = Config::default();
+    let precs = [Precision::F64, Precision::F32, Precision::Mixed];
+    for round in 0..8u64 {
+        let mut rng = Rng::new(1000 + round);
+        let mut inc = PlannerState::new();
+        // (id, m, n, prec) of every still-pending request, arrival order
+        let mut live: Vec<(usize, usize, usize, Precision)> = Vec::new();
+        let mut next_id = 0usize;
+        for _ in 0..60 {
+            if !live.is_empty() && rng.below(4) == 0 {
+                let (id, ..) = live.remove(rng.below(live.len()));
+                assert!(inc.evict(id).is_some(), "live implies pending");
+            } else {
+                let n = 1 + rng.below(6);
+                let m = n + rng.below(6);
+                let p = precs[rng.below(3)];
+                inc.insert_prec(next_id, m, n, &cfg, p).expect("valid shape");
+                live.push((next_id, m, n, p));
+                next_id += 1;
+            }
+        }
+        // ids ascend on admission, so `live` IS the arrival order; a
+        // from-scratch planner sees the survivors as batch indices
+        let mut scratch = PlannerState::new();
+        for (rank, &(_, m, n, p)) in live.iter().enumerate() {
+            scratch.insert_prec(rank, m, n, &cfg, p).expect("valid shape");
+        }
+        let rank_of: BTreeMap<usize, usize> =
+            live.iter().enumerate().map(|(rank, r)| (r.0, rank)).collect();
+        let (a, b) = (inc.buckets(), scratch.buckets());
+        assert_eq!(a.len(), b.len(), "round {round}: bucket count");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.plan.key, y.plan.key, "round {round}: bucket order");
+            let mapped: Vec<usize> = x.items.iter().map(|id| rank_of[id]).collect();
+            assert_eq!(mapped, y.items, "round {round}: member arrival order");
+        }
+        let (ua, ub) = (inc.plan(true), scratch.plan(true));
+        assert_eq!(ua.units.len(), ub.units.len(), "round {round}: unit count");
+    }
+}
+
+#[test]
+fn same_shape_different_dtype_requests_never_fuse() {
+    let cfg = cfg_with_threads(2);
+    let opts = far_deadline();
+    let mat = gen(12, 8, 0);
+    let report = serve(&cfg, &opts, |h: &ServeHandle| {
+        h.submit(mat.clone(), Precision::F64).expect("admit f64");
+        h.submit(mat.clone(), Precision::F32).expect("admit f32");
+        h.submit(mat.clone(), Precision::Mixed).expect("admit mixed");
+    })
+    .expect("serve");
+    let m = &report.metrics;
+    assert_eq!(m.units, 3, "three dtypes at one shape are three dispatches");
+    assert_eq!(m.fused_units, 0, "dtypes must never co-bucket");
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.dtype_counts.len(), 3);
+    assert!(report.results.iter().all(|(_, r)| r.is_ok()));
+}
+
+#[test]
+fn admission_bounds_reject_and_cancel_frees_a_slot() {
+    let cfg = cfg_with_threads(1);
+    let opts = ServeOpts { max_queue: 2, ..far_deadline() };
+    // distinct shapes: every request is its own (not-full) bucket, so
+    // nothing dispatches while the client drives and depth stays exact
+    let report = serve(&cfg, &opts, |h: &ServeHandle| {
+        let a = h.submit(gen(8, 8, 1), Precision::F64).expect("first fits");
+        let _b = h.submit(gen(9, 9, 2), Precision::F64).expect("second fits");
+        assert_eq!(h.depth(), 2);
+        match h.submit(gen(10, 10, 3), Precision::F64) {
+            Err(ServeError::QueueFull { depth, limit }) => assert_eq!((depth, limit), (2, 2)),
+            _ => panic!("third submission must hit backpressure"),
+        }
+        match h.submit(gen(3, 5, 4), Precision::F64) {
+            Err(ServeError::BadShape { m, n }) => assert_eq!((m, n), (3, 5)),
+            _ => panic!("wide inputs must be rejected at admission"),
+        }
+        assert!(h.cancel(a), "pending work cancels");
+        assert!(!h.cancel(a), "a second cancel is a no-op");
+        h.submit(gen(10, 10, 3), Precision::F64).expect("cancel freed a slot");
+        assert!(matches!(h.wait(a), Err(ServeError::Cancelled)));
+    })
+    .expect("serve");
+    let m = &report.metrics;
+    assert_eq!(m.submitted, 5);
+    assert_eq!(m.admitted, 3);
+    assert_eq!(m.rejected, 2, "queue-full + bad-shape");
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.completed, 2, "the drain solves both survivors");
+    assert_eq!(m.queue_peak, 2, "the bound was the observed ceiling");
+    assert!(report.results.iter().all(|(_, r)| r.is_ok()));
+}
+
+#[test]
+fn a_cancelled_request_never_touches_a_device() {
+    let cfg = cfg_with_threads(1);
+    let opts = far_deadline();
+    let report = serve(&cfg, &opts, |h: &ServeHandle| {
+        let id = h.submit(gen(8, 8, 5), Precision::F64).expect("admit");
+        assert!(h.cancel(id));
+        assert!(matches!(h.wait(id), Err(ServeError::Cancelled)));
+    })
+    .expect("serve");
+    let m = &report.metrics;
+    assert_eq!(m.units, 0, "nothing dispatched");
+    assert_eq!(m.device.exec_count, 0, "no device command ran");
+    assert_eq!((m.completed, m.cancelled), (0, 1));
+    assert!(report.results.is_empty(), "wait() claimed the only outcome");
+}
+
+#[test]
+fn a_full_bucket_dispatches_wide_and_inflight_work_cannot_be_recalled() {
+    let cfg = cfg_with_threads(2);
+    let opts = ServeOpts { max_lanes: 4, ..far_deadline() };
+    let mat = gen(10, 6, 6);
+    let report = serve(&cfg, &opts, |h: &ServeHandle| {
+        let ids: Vec<usize> =
+            (0..4).map(|_| h.submit(mat.clone(), Precision::F64).expect("admit")).collect();
+        // the bucket hit max_lanes, so it dispatches now — these waits
+        // resolve long before the 30s half-deadline could fire
+        for &id in &ids {
+            assert!(h.wait(id).is_ok(), "fused lane solves");
+        }
+        for &id in &ids {
+            assert!(!h.cancel(id), "resolved work cannot be recalled");
+        }
+    })
+    .expect("serve");
+    let m = &report.metrics;
+    assert_eq!((m.units, m.fused_units, m.fused_lanes), (1, 1, 4));
+    assert!((m.lane_occupancy - 1.0).abs() < 1e-12, "full bucket fill");
+    assert_eq!(m.completed, 4);
+    assert!(m.p50_ms.is_some() && m.p99_ms.is_some());
+}
+
+#[test]
+fn close_drains_queued_work_into_a_fused_unit() {
+    let cfg = cfg_with_threads(1);
+    let opts = far_deadline();
+    let mat = gen(9, 7, 8);
+    let mut ids = Vec::new();
+    let report = serve(&cfg, &opts, |h: &ServeHandle| {
+        for _ in 0..3 {
+            ids.push(h.submit(mat.clone(), Precision::F64).expect("admit"));
+        }
+        // return without waiting: accepted work must still run
+    })
+    .expect("serve");
+    let m = &report.metrics;
+    assert_eq!((m.units, m.fused_units, m.fused_lanes), (1, 1, 3));
+    assert_eq!(m.completed, 3);
+    assert_eq!(report.results.len(), 3, "unclaimed outcomes return in the report");
+    for (id, r) in &report.results {
+        assert!(ids.contains(id) && r.is_ok());
+    }
+}
+
+#[test]
+fn lane_cap_splits_an_oversized_bucket() {
+    let cfg = cfg_with_threads(2);
+    let opts = ServeOpts { max_lanes: 2, ..far_deadline() };
+    let mat = gen(8, 6, 9);
+    let report = serve(&cfg, &opts, |h: &ServeHandle| {
+        for _ in 0..5 {
+            h.submit(mat.clone(), Precision::F64).expect("admit");
+        }
+    })
+    .expect("serve");
+    // whatever the dispatch interleaving, a due bucket is taken in
+    // cap-sized bites: 5 lanes under a cap of 2 is always 2 + 2 + 1
+    let m = &report.metrics;
+    assert_eq!((m.units, m.fused_units, m.fused_lanes), (3, 2, 4));
+    assert_eq!(m.max_lanes, 2);
+    assert_eq!(m.completed, 5);
+}
+
+#[test]
+fn deadline_zero_expires_before_dispatch_without_disturbing_neighbours() {
+    let cfg = cfg_with_threads(1);
+    let opts = far_deadline();
+    let mat = gen(8, 8, 10);
+    let report = serve(&cfg, &opts, |h: &ServeHandle| {
+        // same shape + dtype: both land in ONE bucket, yet the expiry
+        // must only ever evict the zero-deadline member
+        let doomed = h
+            .submit_with_deadline(mat.clone(), Precision::F64, Duration::ZERO)
+            .expect("admission precedes the deadline check");
+        h.submit(mat.clone(), Precision::F64).expect("admit");
+        match h.wait(doomed) {
+            Err(ServeError::DeadlineExpired { deadline_ms, .. }) => assert_eq!(deadline_ms, 0),
+            _ => panic!("a zero-deadline request must expire, not solve"),
+        }
+    })
+    .expect("serve");
+    let m = &report.metrics;
+    assert_eq!((m.expired, m.completed), (1, 1));
+    assert_eq!((m.units, m.fused_units), (1, 0), "the survivor solves alone");
+    assert!(report.results.iter().all(|(_, r)| r.is_ok()));
+}
+
+/// The headline contract, in-process: seeded mixed-shape/mixed-dtype
+/// traffic through the live server resolves every request bit-identical
+/// to a serial solve of the same input at the same dtype — continuous
+/// batching changes *when* work runs, never *what* it computes.
+#[test]
+fn serve_soak_matches_serial_solves_bit_for_bit() {
+    let cfg = cfg_with_threads(2);
+    let opts = ServeOpts::default();
+    assert_eq!(opts.max_lanes, MAX_FUSE_LANES);
+    let traffic = synth_traffic(24, 3, 24, 16, Duration::ZERO, None);
+    let inputs: Vec<Matrix> = traffic
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut rng = Rng::new(900 + i as u64);
+            Matrix::from_fn(r.m, r.n, |_, _| rng.gaussian())
+        })
+        .collect();
+    let mut admitted: Vec<(usize, usize)> = Vec::new();
+    let report = serve(&cfg, &opts, |h: &ServeHandle| {
+        for (i, mat) in inputs.iter().enumerate() {
+            let id = h.submit(mat.clone(), traffic[i].precision).expect("bound is far away");
+            admitted.push((id, i));
+        }
+    })
+    .expect("serve");
+    let m = &report.metrics;
+    assert_eq!(m.admitted, 24);
+    assert_eq!(m.completed, 24, "dispatched work never expires; nothing failed");
+    assert!(m.fused_units >= 1, "24 requests over <= 12 buckets must fuse somewhere");
+
+    let by_id: BTreeMap<usize, &Result<gcsvd::svd::SvdResult, ServeError>> =
+        report.results.iter().map(|(id, r)| (*id, r)).collect();
+    let dev = Device::host();
+    for &(id, i) in &admitted {
+        let Ok(served) = by_id[&id] else { panic!("request {i} did not complete") };
+        let mut scfg = cfg_with_threads(1);
+        scfg.precision = traffic[i].precision;
+        let serial = gesvd(&dev, &inputs[i], &scfg, Solver::Ours).expect("serial reference");
+        assert_eq!(served.sigma, serial.sigma, "request {i}: sigma");
+        assert_eq!(served.u.data, serial.u.data, "request {i}: U");
+        assert_eq!(served.vt.data, serial.vt.data, "request {i}: Vt");
+    }
+}
